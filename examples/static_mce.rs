@@ -1,0 +1,98 @@
+//! End-to-end driver over the full three-layer stack (the repository's
+//! headline example; its output is recorded in EXPERIMENTS.md):
+//!
+//!   1. build the five static dataset analogs (graph substrate),
+//!   2. compute the ParMCETri vertex ranking on the **AOT Pallas kernel
+//!      via PJRT** (L1/L2 artifacts — falls back to CPU if absent),
+//!   3. enumerate with ParMCE on the work-stealing pool (L3),
+//!   4. verify the count against sequential TTT,
+//!   5. replay the measured task trace through the scheduler simulator
+//!      and print Table-4-shaped rows (TTT vs ParTTT vs ParMCE @ 32).
+//!
+//!     make artifacts && cargo run --release --example static_mce
+
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::experiments::fixtures;
+use parmce::graph::datasets::{Scale, STATIC_DATASETS};
+use parmce::mce::parmce::parmce;
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::mce::sink::{CliqueSink, CountSink};
+use parmce::mce::ParMceConfig;
+use parmce::runtime::engine::Engine;
+use parmce::runtime::tri_rank::PjrtTriangleBackend;
+use parmce::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
+
+fn main() {
+    let scale = match std::env::args().nth(1).as_deref() {
+        Some("tiny") => Scale::Tiny,
+        Some("full") => Scale::Full,
+        _ => Scale::Small,
+    };
+    let engine = Engine::load_default();
+    match &engine {
+        Ok(_) => println!("PJRT engine loaded — triangle ranking runs on the Pallas kernel"),
+        Err(e) => println!("artifacts unavailable ({e}); CPU triangle ranking fallback"),
+    }
+
+    let pool = ThreadPool::new(4);
+    let mut table = Table::new(
+        "End-to-end: TTT vs ParTTT vs ParMCETri (PJRT-ranked), 32 simulated workers",
+        &[
+            "Dataset", "cliques", "TTT(s)", "ParTTT@32", "ParMCETri@32",
+            "speedup", "rank backend", "rank(s)",
+        ],
+    );
+
+    for d in STATIC_DATASETS {
+        let g = d.graph(scale);
+
+        // L1/L2: triangle ranking on the AOT kernel
+        let (ranking, backend_name, rank_secs) = match &engine {
+            Ok(e) => {
+                let backend = PjrtTriangleBackend::new(e);
+                let t0 = std::time::Instant::now();
+                let r = Ranking::compute_with(&g, RankStrategy::Triangle, &backend)
+                    .expect("PJRT ranking");
+                (r, "pjrt-pallas", t0.elapsed().as_secs_f64())
+            }
+            Err(_) => {
+                let t0 = std::time::Instant::now();
+                let r = Ranking::compute(&g, RankStrategy::Triangle);
+                (r, "cpu-forward", t0.elapsed().as_secs_f64())
+            }
+        };
+
+        // L3 baseline + parallel runs
+        let (seq_count, ttt_s) = fixtures::run_ttt(&g);
+        let (c1, parttt_s) = fixtures::parttt_sim_secs(&g, 32);
+        let (c2, parmce_s) = fixtures::parmce_sim_secs(&g, &ranking, 32);
+        assert_eq!(seq_count, c1, "{}: ParTTT count mismatch", d.name());
+        assert_eq!(seq_count, c2, "{}: ParMCE count mismatch", d.name());
+
+        // real pool execution must agree too (wall clock on 1 core)
+        let ga = Arc::new(g.clone());
+        let sink = Arc::new(CountSink::new());
+        let ds: Arc<dyn CliqueSink> = sink.clone();
+        let ranking = Arc::new(ranking);
+        parmce(&pool, &ga, &ranking, &ds, ParMceConfig::default());
+        assert_eq!(seq_count, sink.count(), "{}: pool run mismatch", d.name());
+
+        table.row(vec![
+            d.name().into(),
+            fmt_count(seq_count),
+            fmt_secs(ttt_s),
+            fmt_secs(parttt_s),
+            fmt_secs(parmce_s),
+            fmt_speedup(ttt_s / parmce_s),
+            backend_name.into(),
+            fmt_secs(rank_secs),
+        ]);
+        println!("✓ {}: {} maximal cliques verified across all layers", d.name(), fmt_count(seq_count));
+    }
+
+    println!("\n{}", table.render());
+    let (spawned, steals) = pool.scheduler_counters();
+    println!("scheduler counters: {spawned} tasks, {steals} steals");
+}

@@ -1,0 +1,79 @@
+"""AOT compile path: lower the L2 model functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the Rust binary is self-contained
+afterwards — Python never runs on the enumeration path.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file output (model.hlo.txt)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example_args) in model.export_specs().items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "arg_shapes": [list(a.shape) for a in example_args],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest["constants"] = {
+        "FULL_N": model.FULL_N,
+        "TILE_B": model.TILE_B,
+        "PIVOT_N": model.PIVOT_N,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+    if args.out:  # legacy Makefile target compatibility
+        import shutil
+
+        shutil.copy(os.path.join(out_dir, "rank_tri_tile.hlo.txt"), args.out)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+match these to float tolerance across a shape/density sweep, and the Rust
+CPU implementation (`graph/triangles.rs`) is separately cross-checked
+against the AOT artifact in `rust/tests/`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tri_count_full_ref(adj: jax.Array) -> jax.Array:
+    """tri(v) = ½ Σ_j ((A @ A) ⊙ A)[v, j] — per-vertex triangle counts."""
+    prod = jnp.matmul(adj, adj, preferred_element_type=jnp.float32)
+    return 0.5 * jnp.sum(prod * adj, axis=1)
+
+
+def tri_count_tile_ref(a_ik: jax.Array, a_kj: jax.Array, a_ij: jax.Array) -> jax.Array:
+    """Partial (unmasked-by-½) row counts for one (i, j, k) tile triple."""
+    prod = jnp.matmul(a_ik, a_kj, preferred_element_type=jnp.float32)
+    return jnp.sum(prod * a_ij, axis=1)
+
+
+def common_neighbor_counts_ref(cand: jax.Array, adj: jax.Array) -> jax.Array:
+    """|cand ∩ Γ(w)| for every vertex w (ParPivot score vector)."""
+    return jnp.matmul(adj, cand.reshape(-1))
+
+
+def random_adjacency(key: jax.Array, n: int, p: float) -> jax.Array:
+    """Symmetric 0/1 adjacency with zero diagonal, edge probability p."""
+    upper = jax.random.bernoulli(key, p, (n, n)).astype(jnp.float32)
+    upper = jnp.triu(upper, k=1)
+    return upper + upper.T

@@ -1,0 +1,144 @@
+"""L1: Pallas triangle-count kernels.
+
+Per-vertex triangle counts from a dense 0/1 adjacency matrix:
+
+    tri(v) = 1/2 * sum_j ((A @ A) * A)[v, j]
+
+This is the compute hot-spot of the ParMCETri vertex ranking (paper §4.2,
+Table 5 "Ranking Time").  The paper computes it sequentially on a Xeon; here
+it is re-thought for TPU-shaped hardware (DESIGN.md §Hardware-Adaptation):
+
+  * the product is tiled into (B, B) VMEM blocks via BlockSpec (the TPU
+    analogue of the CUDA threadblock/shared-memory staging the GPU
+    literature uses for masked matmul),
+  * the inner `a_ik @ a_kj` contraction targets the MXU systolic array,
+  * the mask + row-reduction epilogue runs on the VPU,
+  * a VMEM scratch accumulator carries the partial product across the `k`
+    grid dimension (double-buffer-friendly revolving schedule).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+Rust runtime (xla crate, PJRT CPU) runs bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile edge. 256 keeps the VMEM working set at
+# (3 inputs + 1 scratch) * B^2 * 4B + B * 4B ≈ 1.05 MB — far under the
+# ~16 MB VMEM of a TPU core, leaving headroom for double buffering.
+DEFAULT_BLOCK = 256
+
+
+def _tri_tile_kernel(a_ik_ref, a_kj_ref, a_ij_ref, out_ref, acc_ref, *, nk: int):
+    """Grid (nI, nJ, nK) kernel body for blocked masked matmul + row reduce.
+
+    For a fixed (i, j) output tile, the k steps accumulate
+    ``acc += A[i,k] @ A[k,j]`` in the VMEM scratch; the final k step masks
+    with ``A[i,j]`` and folds the row sums into ``out[i]``.
+    """
+    # program_id must be read at kernel top level (not inside pl.when
+    # closures): the interpret-mode lowering only binds the primitive there.
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction: (B, B) @ (B, B) in f32 (0/1 entries are exact).
+    acc_ref[...] += jnp.dot(
+        a_ik_ref[...], a_kj_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        masked = acc_ref[...] * a_ij_ref[...]
+        partial = jnp.sum(masked, axis=1)
+
+        @pl.when(j == 0)
+        def _first():
+            out_ref[...] = partial
+
+        @pl.when(j != 0)
+        def _rest():
+            out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tri_count_full(adj: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Per-vertex triangle counts for a full dense adjacency matrix.
+
+    ``adj`` is an (n, n) f32 0/1 symmetric matrix with zero diagonal;
+    n must be a multiple of ``block`` (the Rust caller zero-pads).
+    Returns an (n,) f32 vector of triangle counts per vertex.
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n), "adjacency must be square"
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    nb = n // block
+    counts2 = pl.pallas_call(
+        functools.partial(_tri_tile_kernel, nk=nb),
+        grid=(nb, nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),  # A[i, k]
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),  # A[k, j]
+            pl.BlockSpec((block, block), lambda i, j, k: (i, j)),  # mask A[i, j]
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i, j, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        # (B, B) f32 VMEM accumulator carried across the k grid dimension.
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        interpret=True,
+    )(adj, adj, adj)
+    return counts2 * 0.5
+
+
+def _tri_tile_triple_kernel(a_ik_ref, a_kj_ref, a_ij_ref, out_ref):
+    """Single-tile-triple kernel: partial counts for one (i, j, k) block.
+
+    Used by the Rust tiled scheduler for graphs too large for a dense
+    matrix: the L3 side enumerates only the *non-empty* tile triples and
+    accumulates the returned (B,) partial row counts per row block.
+    """
+    prod = jnp.dot(a_ik_ref[...], a_kj_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.sum(prod * a_ij_ref[...], axis=1)
+
+
+@jax.jit
+def tri_count_tile(a_ik: jax.Array, a_kj: jax.Array, a_ij: jax.Array) -> jax.Array:
+    """Partial per-row triangle counts (×2, unmasked by ½) for one tile triple."""
+    b = a_ik.shape[0]
+    assert a_ik.shape == a_kj.shape == a_ij.shape == (b, b)
+    return pl.pallas_call(
+        _tri_tile_triple_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(a_ik, a_kj, a_ij)
+
+
+def _common_neighbors_kernel(cand_ref, adj_ref, out_ref):
+    """Pivot-scoring kernel: |cand ∩ Γ(w)| for every vertex w.
+
+    ``cand`` is a 0/1 indicator row (1, n); ``adj`` the dense adjacency.
+    out[w] = Σ_u cand[u] · A[w, u]  — one VPU-friendly matvec.
+    """
+    out_ref[...] = jnp.dot(adj_ref[...], cand_ref[...].reshape(-1))
+
+
+@jax.jit
+def common_neighbor_counts(cand: jax.Array, adj: jax.Array) -> jax.Array:
+    """|cand ∩ Γ(w)| for all w — the ParPivot score vector (paper Alg. 2)."""
+    n = adj.shape[0]
+    assert cand.shape == (1, n)
+    return pl.pallas_call(
+        _common_neighbors_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(cand, adj)

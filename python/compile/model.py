@@ -1,0 +1,60 @@
+"""L2: the JAX compute graph exported to the Rust coordinator.
+
+The paper's dense-tensor hot spot is the triangle-count vertex ranking of
+ParMCETri (§4.2; its cost is the "Ranking Time" column of Table 5).  This
+module wraps the L1 Pallas kernels in the exact computations the Rust side
+loads as AOT artifacts:
+
+  * ``rank_tri_full``  — whole-graph per-vertex triangle counts for dense
+    adjacencies (n ≤ FULL_N, zero-padded by the caller).  One PJRT call.
+  * ``rank_tri_tile``  — partial counts for one (i, j, k) adjacency tile
+    triple; the Rust scheduler (runtime/tri_rank.rs) iterates the non-empty
+    tile triples of a large sparse graph and accumulates.
+  * ``pivot_scores``   — |cand ∩ Γ(w)| for all w, the ParPivot score vector
+    over a dense subproblem adjacency (used by the GPU/TPU-offload ablation).
+
+Every function is shape-monomorphic (AOT requires static shapes); the
+constants below are the contract with the Rust side and are mirrored in
+``rust/src/runtime/tri_rank.rs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import tri_count as k
+
+# Contract with rust/src/runtime/tri_rank.rs — keep in sync.
+FULL_N = 512   # rank_tri_full operates on (FULL_N, FULL_N) dense adjacency
+TILE_B = 256   # rank_tri_tile operates on (TILE_B, TILE_B) tiles
+PIVOT_N = 512  # pivot_scores dense subproblem size
+
+
+def rank_tri_full(adj: jax.Array) -> tuple[jax.Array]:
+    """Per-vertex triangle counts of a (FULL_N, FULL_N) 0/1 adjacency."""
+    return (k.tri_count_full(adj, block=128),)
+
+
+def rank_tri_tile(a_ik: jax.Array, a_kj: jax.Array, a_ij: jax.Array) -> tuple[jax.Array]:
+    """Partial row counts (×2) for one (TILE_B, TILE_B) tile triple."""
+    return (k.tri_count_tile(a_ik, a_kj, a_ij),)
+
+
+def pivot_scores(cand: jax.Array, adj: jax.Array) -> tuple[jax.Array]:
+    """ParPivot score vector |cand ∩ Γ(w)| over a dense subproblem."""
+    return (k.common_neighbor_counts(cand, adj),)
+
+
+def export_specs() -> dict[str, tuple]:
+    """name -> (fn, example ShapeDtypeStructs); consumed by aot.py."""
+    f32 = jnp.float32
+    full = jax.ShapeDtypeStruct((FULL_N, FULL_N), f32)
+    tile = jax.ShapeDtypeStruct((TILE_B, TILE_B), f32)
+    cand = jax.ShapeDtypeStruct((1, PIVOT_N), f32)
+    padj = jax.ShapeDtypeStruct((PIVOT_N, PIVOT_N), f32)
+    return {
+        "rank_tri_full": (rank_tri_full, (full,)),
+        "rank_tri_tile": (rank_tri_tile, (tile, tile, tile)),
+        "pivot_scores": (pivot_scores, (cand, padj)),
+    }

@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the core correctness signal for the kernel layer: hypothesis sweeps
+shapes/densities/dtypes and asserts allclose against the reference.  The
+same oracle is cross-checked against the Rust CPU triangle counter through
+the AOT artifact in rust/tests/artifact_roundtrip.rs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.tri_count import (
+    common_neighbor_counts,
+    tri_count_full,
+    tri_count_tile,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def adjacency(seed: int, n: int, p: float) -> jax.Array:
+    return ref.random_adjacency(jax.random.PRNGKey(seed), n, p)
+
+
+# ---------------------------------------------------------------------------
+# tri_count_full: blocked masked matmul with VMEM accumulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(8, 4), (16, 8), (32, 8), (64, 16), (128, 32)])
+@pytest.mark.parametrize("p", [0.0, 0.1, 0.5, 1.0])
+def test_tri_full_matches_ref_grid(n: int, block: int, p: float) -> None:
+    adj = adjacency(n * 1000 + int(p * 10), n, p)
+    got = tri_count_full(adj, block=block)
+    want = ref.tri_count_full_ref(adj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nb=st.integers(1, 6),
+    block=st.sampled_from([4, 8, 16]),
+    p=st.floats(0.0, 1.0),
+)
+def test_tri_full_matches_ref_hypothesis(seed: int, nb: int, block: int, p: float) -> None:
+    n = nb * block
+    adj = adjacency(seed, n, p)
+    got = tri_count_full(adj, block=block)
+    want = ref.tri_count_full_ref(adj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+
+def test_tri_full_triangle_graph() -> None:
+    # K3 plus an isolated vertex: each K3 vertex is in exactly one triangle.
+    adj = jnp.zeros((4, 4), jnp.float32)
+    for u, v in [(0, 1), (1, 2), (0, 2)]:
+        adj = adj.at[u, v].set(1.0).at[v, u].set(1.0)
+    got = np.asarray(tri_count_full(adj, block=2))
+    np.testing.assert_allclose(got, [1.0, 1.0, 1.0, 0.0])
+
+
+def test_tri_full_complete_graph() -> None:
+    # K_n: every vertex is in C(n-1, 2) triangles.
+    n = 16
+    adj = jnp.ones((n, n), jnp.float32) - jnp.eye(n, dtype=jnp.float32)
+    got = np.asarray(tri_count_full(adj, block=8))
+    expect = (n - 1) * (n - 2) / 2
+    np.testing.assert_allclose(got, np.full(n, expect))
+
+
+def test_tri_full_rejects_non_multiple_block() -> None:
+    adj = jnp.zeros((10, 10), jnp.float32)
+    with pytest.raises(AssertionError):
+        tri_count_full(adj, block=4)
+
+
+# ---------------------------------------------------------------------------
+# tri_count_tile: single tile triple (driven by the Rust scheduler)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([4, 8, 16, 32]),
+    p=st.floats(0.0, 1.0),
+)
+def test_tri_tile_matches_ref(seed: int, b: int, p: float) -> None:
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a_ik = jax.random.bernoulli(k1, p, (b, b)).astype(jnp.float32)
+    a_kj = jax.random.bernoulli(k2, p, (b, b)).astype(jnp.float32)
+    a_ij = jax.random.bernoulli(k3, p, (b, b)).astype(jnp.float32)
+    got = tri_count_tile(a_ik, a_kj, a_ij)
+    want = ref.tri_count_tile_ref(a_ik, a_kj, a_ij)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_tile_decomposition_equals_full() -> None:
+    """Accumulating tile triples over all (i,j,k) must equal the full kernel.
+
+    This is exactly the contract rust/src/runtime/tri_rank.rs relies on.
+    """
+    n, b = 32, 8
+    nb = n // b
+    adj = adjacency(7, n, 0.4)
+    acc = np.zeros(n, np.float32)
+    a = np.asarray(adj)
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                t = tri_count_tile(
+                    jnp.asarray(a[i * b:(i + 1) * b, k * b:(k + 1) * b]),
+                    jnp.asarray(a[k * b:(k + 1) * b, j * b:(j + 1) * b]),
+                    jnp.asarray(a[i * b:(i + 1) * b, j * b:(j + 1) * b]),
+                )
+                acc[i * b:(i + 1) * b] += np.asarray(t)
+    want = np.asarray(ref.tri_count_full_ref(adj))
+    np.testing.assert_allclose(acc * 0.5, want, atol=1e-3)
+
+
+def test_tile_skipping_empty_triples_is_lossless() -> None:
+    """Zero tiles contribute zero — sparsity-aware skipping is exact."""
+    b = 8
+    zero = jnp.zeros((b, b), jnp.float32)
+    a = jax.random.bernoulli(jax.random.PRNGKey(3), 0.5, (b, b)).astype(jnp.float32)
+    for combo in [(zero, a, a), (a, zero, a), (a, a, zero)]:
+        np.testing.assert_allclose(np.asarray(tri_count_tile(*combo)), np.zeros(b))
+
+
+# ---------------------------------------------------------------------------
+# common_neighbor_counts: ParPivot score vector
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 16, 64]), p=st.floats(0.0, 1.0))
+def test_pivot_scores_match_ref(seed: int, n: int, p: float) -> None:
+    adj = adjacency(seed, n, p)
+    cand = jax.random.bernoulli(jax.random.PRNGKey(seed ^ 0xFF), 0.5, (1, n)).astype(
+        jnp.float32
+    )
+    got = common_neighbor_counts(cand, adj)
+    want = ref.common_neighbor_counts_ref(cand, adj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_pivot_scores_semantics() -> None:
+    """Hand-checked: score(w) = |cand ∩ Γ(w)| on a path graph 0-1-2-3."""
+    n = 4
+    adj = jnp.zeros((n, n), jnp.float32)
+    for u, v in [(0, 1), (1, 2), (2, 3)]:
+        adj = adj.at[u, v].set(1.0).at[v, u].set(1.0)
+    cand = jnp.zeros((1, n), jnp.float32).at[0, 1].set(1.0).at[0, 2].set(1.0)
+    got = np.asarray(common_neighbor_counts(cand, adj))
+    # Γ(0)={1}→1, Γ(1)={0,2}→1, Γ(2)={1,3}→1, Γ(3)={2}→1
+    np.testing.assert_allclose(got, [1.0, 1.0, 1.0, 1.0])

@@ -1,0 +1,26 @@
+//! Bench: Table 6 / Figures 8-9 — IMCE vs ParIMCE batch replay on the
+//! dynamic dataset analogs.  `cargo bench --bench dynamic_mce`
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::stream::{replay, EdgeStream, Engine};
+use parmce::graph::datasets::{Dataset, Scale, DYNAMIC_DATASETS};
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let fast = std::env::var("PARMCE_BENCH_FAST").as_deref() == Ok("1");
+    let scale = if fast { Scale::Tiny } else { Scale::Small };
+    let cap = Some(if fast { 8 } else { 25 });
+    let mut b = Bencher::from_env();
+    let pool = ThreadPool::new(4);
+    for d in DYNAMIC_DATASETS {
+        let stream = EdgeStream::permuted(&d.graph(scale), 3);
+        let bs = if d == Dataset::CaCitHepThLike { 10 } else { 100 };
+        b.bench(format!("table6/{}/imce_seq", d.name()), || {
+            replay(&stream, bs, Engine::Sequential, cap)
+        });
+        b.bench(format!("table6/{}/parimce_wall_t4", d.name()), || {
+            replay(&stream, bs, Engine::Parallel(&pool), cap)
+        });
+    }
+    b.dump_json("results/bench_dynamic_mce.json");
+}

@@ -1,0 +1,67 @@
+//! Bench: Table 5 ingredients — pivot selection and vertex-ranking costs,
+//! including the CPU-vs-PJRT triangle backends and the vset hot-path
+//! primitives the perf pass optimizes.  `cargo bench --bench pivots_and_ranking`
+
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::graph::generators;
+use parmce::mce::pivot::choose_pivot;
+use parmce::mce::ranking::{CpuTriangleBackend, RankStrategy, Ranking, TriangleBackend};
+use parmce::runtime::engine::Engine;
+use parmce::runtime::tri_rank::PjrtTriangleBackend;
+use parmce::util::bench::Bencher;
+use parmce::util::vset;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // --- vset primitives (the TTT inner loop) ---------------------------
+    let a: Vec<u32> = (0..4096).step_by(2).collect();
+    let c: Vec<u32> = (0..4096).step_by(3).collect();
+    let small: Vec<u32> = (0..4096).step_by(97).collect();
+    b.bench("vset/intersect_balanced_2k", || vset::intersect(&a, &c));
+    b.bench("vset/intersect_gallop_42_vs_2k", || vset::intersect(&small, &a));
+    b.bench("vset/intersection_count_balanced", || {
+        vset::intersection_count(&a, &c)
+    });
+    b.bench("vset/difference", || vset::difference(&a, &c));
+
+    // --- pivot selection --------------------------------------------------
+    for (name, g) in [
+        ("gnp2000_p01", generators::gnp(2000, 0.01, 1)),
+        ("wiki_talk_like", Dataset::WikiTalkLike.graph(Scale::Small)),
+    ] {
+        let cand: Vec<u32> = (0..g.n() as u32).collect();
+        b.bench(format!("pivot/seq/{name}"), || {
+            choose_pivot(&g, &cand, &[])
+        });
+    }
+
+    // --- ranking strategies (Table 5 RT column) ---------------------------
+    for d in [Dataset::AsSkitterLike, Dataset::WikipediaLike] {
+        let g = d.graph(Scale::Small);
+        b.bench(format!("rank/{}/degree", d.name()), || {
+            Ranking::compute(&g, RankStrategy::Degree)
+        });
+        b.bench(format!("rank/{}/degeneracy", d.name()), || {
+            Ranking::compute(&g, RankStrategy::Degeneracy)
+        });
+        b.bench(format!("rank/{}/tri_cpu", d.name()), || {
+            CpuTriangleBackend.per_vertex(&g).unwrap()
+        });
+    }
+
+    // --- PJRT kernel backend (L1 offload) ---------------------------------
+    if let Ok(engine) = Engine::load_default() {
+        for d in [Dataset::DblpLike, Dataset::AsSkitterLike] {
+            let g = d.graph(Scale::Tiny);
+            let backend = PjrtTriangleBackend::new(&engine);
+            b.bench(format!("rank/{}/tri_pjrt", d.name()), || {
+                backend.per_vertex(&g).unwrap()
+            });
+        }
+    } else {
+        eprintln!("artifacts missing — skipping PJRT benches");
+    }
+
+    b.dump_json("results/bench_pivots_and_ranking.json");
+}

@@ -1,0 +1,66 @@
+//! Bench: Figures 6/7/9 inputs — pool scheduling overhead (the
+//! SIM_OVERHEAD_NS calibration) and trace-simulation speedup curves.
+//! `cargo bench --bench scaling`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::coordinator::sim::simulate;
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::mce::parmce::trace;
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::mce::sink::CountSink;
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // --- pool overhead calibration: ns per spawned no-op task -------------
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        let n_tasks = 10_000u64;
+        let med = b.bench(format!("pool/spawn_noop_t{threads}_x10k"), || {
+            let c = Arc::new(AtomicU64::new(0));
+            pool.scope(|s| {
+                for _ in 0..n_tasks {
+                    let c = Arc::clone(&c);
+                    s.spawn(move |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(c.load(Ordering::Relaxed), n_tasks);
+        });
+        println!(
+            "  -> per-task overhead ≈ {}ns (SIM_OVERHEAD_NS = {})",
+            med / n_tasks,
+            parmce::experiments::SIM_OVERHEAD_NS
+        );
+    }
+
+    // --- simulated speedup curves (Figure 6 series) -----------------------
+    for d in [Dataset::WikiTalkLike, Dataset::WikipediaLike] {
+        let g = d.graph(Scale::Tiny);
+        let ranking = Ranking::compute(&g, RankStrategy::Degree);
+        let sink = CountSink::new();
+        let tr = trace(&g, &ranking, &sink);
+        let t1 = tr.work_ns();
+        for p in [1usize, 4, 16, 32] {
+            b.bench(format!("simcurve/{}/p{p}", d.name()), || {
+                simulate(&tr, p, parmce::experiments::SIM_OVERHEAD_NS)
+            });
+        }
+        let s32 = simulate(&tr, 32, parmce::experiments::SIM_OVERHEAD_NS);
+        println!(
+            "  -> {}: work {:.1}ms span {:.2}ms speedup@32 {:.1}x util {:.0}%",
+            d.name(),
+            t1 as f64 / 1e6,
+            tr.span_ns() as f64 / 1e6,
+            s32.speedup(),
+            100.0 * s32.utilization()
+        );
+    }
+
+    b.dump_json("results/bench_scaling.json");
+}

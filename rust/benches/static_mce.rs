@@ -1,0 +1,41 @@
+//! Bench: Table 4 — TTT vs ParTTT vs ParMCE variants on the five static
+//! dataset analogs.  `cargo bench --bench static_mce`
+//! (set PARMCE_BENCH_FAST=1 for a quick pass).
+
+use parmce::experiments::fixtures;
+use parmce::graph::datasets::{Scale, STATIC_DATASETS};
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let scale = if std::env::var("PARMCE_BENCH_FAST").as_deref() == Ok("1") {
+        Scale::Tiny
+    } else {
+        Scale::Small
+    };
+    let mut b = Bencher::from_env();
+    for d in STATIC_DATASETS {
+        let g = d.graph(scale);
+        b.bench(format!("table4/{}/ttt", d.name()), || fixtures::run_ttt(&g));
+        b.bench(format!("table4/{}/parttt_sim32", d.name()), || {
+            fixtures::parttt_sim_secs(&g, 32)
+        });
+        for strat in [
+            RankStrategy::Degree,
+            RankStrategy::Degeneracy,
+            RankStrategy::Triangle,
+        ] {
+            let ranking = Ranking::compute(&g, strat);
+            b.bench(
+                format!("table4/{}/parmce_{}_sim32", d.name(), strat.name()),
+                || fixtures::parmce_sim_secs(&g, &ranking, 32),
+            );
+        }
+        // real pool wall-clock (oversubscribed on this 1-core testbed):
+        // measures parallel-overhead, not speedup
+        b.bench(format!("table4/{}/parmce_degree_wall_t4", d.name()), || {
+            fixtures::parmce_wall_secs(&g, RankStrategy::Degree, 4)
+        });
+    }
+    b.dump_json("results/bench_static_mce.json");
+}

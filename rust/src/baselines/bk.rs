@@ -1,0 +1,173 @@
+//! Bron–Kerbosch family: the sequential comparators of Table 10.
+//!
+//! * [`bk_basic`] — Algorithm 457 (1973), no pivoting: the exponential
+//!   blow-up Peamc inherits.
+//! * [`bk_pivot`] — BK with max-degree-in-P pivoting (an independent
+//!   implementation, *not* the TTT module, so the two cross-validate).
+//! * [`bk_degeneracy`] — Eppstein–Löffler–Strash: outer level in
+//!   degeneracy order, inner levels pivoted; O(d·n·3^{d/3}).
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::degeneracy::core_decomposition;
+use crate::graph::Vertex;
+use crate::mce::sink::CliqueSink;
+use crate::util::vset;
+
+/// Plain Bron–Kerbosch, no pivot.
+pub fn bk_basic(g: &CsrGraph, sink: &dyn CliqueSink) {
+    let p: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    let mut r = Vec::new();
+    rec_basic(g, &mut r, p, Vec::new(), sink);
+}
+
+fn rec_basic(
+    g: &CsrGraph,
+    r: &mut Vec<Vertex>,
+    p: Vec<Vertex>,
+    x: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+) {
+    if p.is_empty() && x.is_empty() {
+        if !r.is_empty() {
+            sink.emit(r);
+        }
+        return;
+    }
+    let mut p_rest = p.clone();
+    let mut x_rest = x;
+    for v in p {
+        let nbrs = g.neighbors(v);
+        r.push(v);
+        rec_basic(
+            g,
+            r,
+            vset::intersect(&p_rest, nbrs),
+            vset::intersect(&x_rest, nbrs),
+            sink,
+        );
+        r.pop();
+        vset::remove_sorted(&mut p_rest, v);
+        vset::insert_sorted(&mut x_rest, v);
+    }
+}
+
+/// BK with pivoting (pivot = max |P ∩ Γ(u)| over u ∈ P ∪ X).
+pub fn bk_pivot(g: &CsrGraph, sink: &dyn CliqueSink) {
+    let p: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    let mut r = Vec::new();
+    rec_pivot(g, &mut r, p, Vec::new(), sink);
+}
+
+fn rec_pivot(
+    g: &CsrGraph,
+    r: &mut Vec<Vertex>,
+    mut p: Vec<Vertex>,
+    mut x: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+) {
+    if p.is_empty() {
+        if x.is_empty() && !r.is_empty() {
+            sink.emit(r);
+        }
+        return;
+    }
+    // independent pivot selection (no early-exit bound — deliberately a
+    // *different* implementation than mce::pivot, for cross-validation)
+    let pivot = p
+        .iter()
+        .chain(x.iter())
+        .copied()
+        .max_by_key(|&u| vset::intersection_count(&p, g.neighbors(u)))
+        .unwrap();
+    let ext = vset::difference(&p, g.neighbors(pivot));
+    for v in ext {
+        let nbrs = g.neighbors(v);
+        r.push(v);
+        rec_pivot(
+            g,
+            r,
+            vset::intersect(&p, nbrs),
+            vset::intersect(&x, nbrs),
+            sink,
+        );
+        r.pop();
+        vset::remove_sorted(&mut p, v);
+        vset::insert_sorted(&mut x, v);
+    }
+}
+
+/// Eppstein–Löffler–Strash degeneracy-ordered BK (Table 10's
+/// BKDegeneracy).
+pub fn bk_degeneracy(g: &CsrGraph, sink: &dyn CliqueSink) {
+    let decomp = core_decomposition(g);
+    let pos = &decomp.pos;
+    for &v in &decomp.order {
+        // P = later neighbours in degeneracy order, X = earlier ones
+        let mut p = Vec::new();
+        let mut x = Vec::new();
+        for &u in g.neighbors(v) {
+            if pos[u as usize] > pos[v as usize] {
+                p.push(u);
+            } else {
+                x.push(u);
+            }
+        }
+        let mut r = vec![v];
+        rec_pivot(g, &mut r, p, x, sink);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::mce::sink::CollectSink;
+
+    fn canon(f: impl Fn(&CsrGraph, &dyn CliqueSink), g: &CsrGraph) -> Vec<Vec<Vertex>> {
+        let sink = CollectSink::new();
+        f(g, &sink);
+        sink.into_canonical()
+    }
+
+    #[test]
+    fn all_variants_match_oracle() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 91, iters: 15 },
+            |rng, level| {
+                let n = 5 + rng.gen_usize(14 >> level.min(2));
+                generators::gnp(n, 0.3 + 0.5 * rng.gen_f64(), rng.next_u64())
+            },
+            |g| {
+                let want = oracle::maximal_cliques(g);
+                for (name, f) in [
+                    ("basic", bk_basic as fn(&CsrGraph, &dyn CliqueSink)),
+                    ("pivot", bk_pivot),
+                    ("degeneracy", bk_degeneracy),
+                ] {
+                    let got = canon(f, g);
+                    if got != want {
+                        return Err(format!("{name}: {} vs oracle {}", got.len(), want.len()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn degeneracy_handles_isolated_vertices() {
+        let g = CsrGraph::from_edges(4, &[(0, 1)]);
+        assert_eq!(
+            canon(bk_degeneracy, &g),
+            vec![vec![0, 1], vec![2], vec![3]]
+        );
+    }
+
+    #[test]
+    fn moon_moser_counts() {
+        let g = generators::moon_moser(3);
+        assert_eq!(canon(bk_pivot, &g).len(), 27);
+        assert_eq!(canon(bk_degeneracy, &g).len(), 27);
+    }
+}

@@ -1,0 +1,17 @@
+//! Prior-work comparison algorithms (paper §6.4, Tables 7–10).
+//!
+//! Reimplemented from their papers' core ideas at the fidelity the
+//! comparison's *shape* needs (DESIGN.md "Substitutions" item 4): the
+//! pruning-free searchers are slow, the iterative k→k+1 expanders are
+//! memory-bound (charged against `util::membudget` instead of actually
+//! exhausting RAM), PECO is the rank-partitioned ancestor of ParMCE
+//! without nested parallelism, and GP is a deterministic simulation of the
+//! MPI vertex-partitioned enumerator.
+
+pub mod bk;
+pub mod clique_enumerator;
+pub mod gp;
+pub mod greedybb;
+pub mod hashing;
+pub mod peamc;
+pub mod peco;

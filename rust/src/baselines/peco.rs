@@ -1,0 +1,72 @@
+//! PECO (Svendsen–Mukherjee–Tirthapura, JPDC 2015) adapted to
+//! shared-memory — the paper's own Table 7 comparator.
+//!
+//! PECO introduced the rank-ordered per-vertex subproblem construction
+//! that ParMCE inherits; the two differences (§4.2) are exactly what this
+//! module preserves: (1) PECO was distributed — here the subgraph copies
+//! are gone because the graph sits in shared memory (the paper's own
+//! modification for Table 7), and (2) each per-vertex subproblem runs a
+//! *sequential* TTT — no nested parallelism, so one monster subproblem
+//! pins a core while the rest idle.
+
+use std::sync::Arc;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+use crate::mce::ranking::Ranking;
+use crate::mce::sink::CliqueSink;
+use crate::mce::ttt;
+
+/// Shared-memory PECO with the given vertex ranking
+/// (PECODegree / PECODegen / PECOTri = Table 7 columns).
+pub fn peco(
+    pool: &ThreadPool,
+    g: &Arc<CsrGraph>,
+    ranking: &Arc<Ranking>,
+    sink: &Arc<dyn CliqueSink>,
+) {
+    pool.scope(|s| {
+        for v in 0..g.n() as Vertex {
+            let g = Arc::clone(g);
+            let ranking = Arc::clone(ranking);
+            let sink = Arc::clone(sink);
+            s.spawn(move |_| {
+                let (cand, fini) = ranking.split_neighbors(&g, v);
+                let mut k = vec![v];
+                // sequential inner enumeration — the PECO limitation
+                ttt::ttt_from(g.as_ref(), &mut k, cand, fini, sink.as_ref());
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::mce::ranking::RankStrategy;
+    use crate::mce::sink::CollectSink;
+
+    #[test]
+    fn matches_oracle_all_rankings() {
+        for strat in [
+            RankStrategy::Degree,
+            RankStrategy::Triangle,
+            RankStrategy::Degeneracy,
+        ] {
+            let g = generators::planted_cliques(80, 0.05, 4, 5, 8, 31);
+            let want = oracle::maximal_cliques(&g);
+            let pool = ThreadPool::new(3);
+            let ranking = Arc::new(Ranking::compute(&g, strat));
+            let g = Arc::new(g);
+            let sink = Arc::new(CollectSink::new());
+            let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+            peco(&pool, &g, &ranking, &dyn_sink);
+            drop(dyn_sink);
+            let got = Arc::try_unwrap(sink).ok().unwrap().into_canonical();
+            assert_eq!(got, want, "{strat:?}");
+        }
+    }
+}

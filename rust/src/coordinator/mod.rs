@@ -1,0 +1,7 @@
+//! L3 coordination: the work-stealing thread pool, per-subproblem
+//! instrumentation, and the trace-replay makespan simulator used to
+//! reproduce the paper's multi-core scaling figures on this 1-core testbed.
+
+pub mod pool;
+pub mod sim;
+pub mod stats;

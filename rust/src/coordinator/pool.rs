@@ -1,0 +1,425 @@
+//! Work-stealing thread pool.
+//!
+//! The paper delegates dynamic load balancing to TBB's work-stealing
+//! scheduler (§1, §6.2; Blumofe–Leiserson [3,4]).  TBB is unavailable here,
+//! so this is a faithful reimplementation of the scheduling discipline the
+//! paper relies on: per-worker deques (LIFO for the owner — depth-first
+//! execution order, small working sets), FIFO stealing from victims
+//! (breadth-first theft of the *largest* pending subproblems, exactly the
+//! property that makes recursive MCE splitting balance itself), and a
+//! global injector for external submissions.
+//!
+//! Deques are mutex-guarded rather than lock-free Chase–Lev; on this
+//! testbed (1 hardware thread) contention is nil and the scheduling
+//! *semantics* — which task runs where and when — are what the experiments
+//! measure.  The API mirrors what ParTTT/ParMCE need: fork-only tasks
+//! joined by a [`ScopeHandle`] wait-group (tasks never block, so pool
+//! threads cannot deadlock).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    /// per-worker deques: owner pushes/pops the back, thieves pop the front
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// submissions from non-worker threads
+    injector: Mutex<VecDeque<Job>>,
+    /// sleep/wake coordination
+    sleep_lock: Mutex<()>,
+    sleep_cv: Condvar,
+    shutdown: AtomicBool,
+    /// monotone count of pending jobs (approximate, for wakeup hygiene)
+    pending: AtomicUsize,
+    /// steal counter (scheduler observability, printed by experiments)
+    steals: AtomicU64,
+    spawned: AtomicU64,
+}
+
+thread_local! {
+    /// (pool address, worker index) when running on a pool thread
+    static WORKER: std::cell::Cell<Option<(usize, usize)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Cloneable handle to a work-stealing pool.
+#[derive(Clone)]
+pub struct ThreadPool {
+    state: Arc<PoolState>,
+    threads: Arc<Vec<std::thread::JoinHandle<()>>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Spin up `n` worker threads (n ≥ 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let state = Arc::new(PoolState {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            sleep_lock: Mutex::new(()),
+            sleep_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pending: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            spawned: AtomicU64::new(0),
+        });
+        let threads = (0..n)
+            .map(|idx| {
+                let st = Arc::clone(&state);
+                std::thread::Builder::new()
+                    .name(format!("parmce-worker-{idx}"))
+                    .spawn(move || worker_loop(st, idx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            state,
+            threads: Arc::new(threads),
+            n_threads: n,
+        }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Total tasks spawned and total successful steals since creation.
+    pub fn scheduler_counters(&self) -> (u64, u64) {
+        (
+            self.state.spawned.load(Ordering::Relaxed),
+            self.state.steals.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Submit a job. From a worker thread it lands on that worker's deque
+    /// (LIFO, depth-first); otherwise on the injector.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.spawn_internal(Box::new(job));
+    }
+
+    /// Worker index if the current thread belongs to this pool.
+    fn current_worker(&self) -> Option<usize> {
+        WORKER.with(|w| match w.get() {
+            Some((pool_addr, idx)) if pool_addr == Arc::as_ptr(&self.state) as usize => Some(idx),
+            _ => None,
+        })
+    }
+
+    /// Run `f` with a scope handle; returns when every task spawned through
+    /// the handle (transitively) has completed.
+    pub fn scope(&self, f: impl FnOnce(&ScopeHandle)) {
+        let handle = ScopeHandle {
+            pool: self.clone(),
+            wg: Arc::new(WaitGroup::new()),
+        };
+        f(&handle);
+        handle.wg.wait(|| self.try_run_one());
+    }
+
+    /// Try to execute one pending job on the current thread (used by the
+    /// scope waiter so a blocked caller contributes instead of idling).
+    fn try_run_one(&self) -> bool {
+        if let Some(job) = self.find_job(None) {
+            job();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn find_job(&self, own: Option<usize>) -> Option<Job> {
+        let st = &self.state;
+        // 1. own deque, LIFO
+        if let Some(idx) = own {
+            if let Some(j) = st.queues[idx].lock().unwrap().pop_back() {
+                st.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(j);
+            }
+        }
+        // 2. injector, FIFO
+        if let Some(j) = st.injector.lock().unwrap().pop_front() {
+            st.pending.fetch_sub(1, Ordering::AcqRel);
+            return Some(j);
+        }
+        // 3. steal: FIFO from victims, round-robin
+        let n = st.queues.len();
+        let start = own.unwrap_or(0);
+        for off in 1..=n {
+            let victim = (start + off) % n;
+            if Some(victim) == own {
+                continue;
+            }
+            if let Some(j) = st.queues[victim].lock().unwrap().pop_front() {
+                st.pending.fetch_sub(1, Ordering::AcqRel);
+                st.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(j);
+            }
+        }
+        None
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Shut down when the final handle drops. The final drop can happen
+        // ON a pool worker (tasks hold ScopeHandle → ThreadPool clones and
+        // may outlive the caller's handle by a beat); a worker must not
+        // join itself (EDEADLK), so in that case the threads are left to
+        // exit on the shutdown flag, detached.
+        if Arc::strong_count(&self.threads) == 1 {
+            self.state.shutdown.store(true, Ordering::SeqCst);
+            self.state.sleep_cv.notify_all();
+            if self.current_worker().is_none() {
+                if let Some(threads) = Arc::get_mut(&mut self.threads) {
+                    for t in threads.drain(..) {
+                        let _ = t.join();
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(state: Arc<PoolState>, idx: usize) {
+    WORKER.with(|w| w.set(Some((Arc::as_ptr(&state) as usize, idx))));
+    loop {
+        // fast path: find work
+        let job = find_job_worker(&state, idx);
+        match job {
+            Some(j) => j(),
+            None => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // sleep until notified (timeout guards lost wakeups)
+                let guard = state.sleep_lock.lock().unwrap();
+                if state.pending.load(Ordering::Acquire) == 0
+                    && !state.shutdown.load(Ordering::SeqCst)
+                {
+                    let _ = state
+                        .sleep_cv
+                        .wait_timeout(guard, std::time::Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
+    }
+}
+
+fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
+    // own deque LIFO
+    if let Some(j) = state.queues[idx].lock().unwrap().pop_back() {
+        state.pending.fetch_sub(1, Ordering::AcqRel);
+        return Some(j);
+    }
+    // injector
+    if let Some(j) = state.injector.lock().unwrap().pop_front() {
+        state.pending.fetch_sub(1, Ordering::AcqRel);
+        return Some(j);
+    }
+    // steal round-robin
+    let n = state.queues.len();
+    for off in 1..n {
+        let victim = (idx + off) % n;
+        if let Some(j) = state.queues[victim].lock().unwrap().pop_front() {
+            state.pending.fetch_sub(1, Ordering::AcqRel);
+            state.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(j);
+        }
+    }
+    None
+}
+
+/// Wait-group: counts outstanding tasks in a scope.
+struct WaitGroup {
+    count: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WaitGroup {
+    fn new() -> Self {
+        WaitGroup {
+            count: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn add(&self) {
+        self.count.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn done(&self) {
+        if self.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wait for zero; `help` is called to run pool jobs while waiting.
+    fn wait(&self, mut help: impl FnMut() -> bool) {
+        loop {
+            if self.count.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if help() {
+                continue; // made progress, re-check
+            }
+            let guard = self.lock.lock().unwrap();
+            if self.count.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            let _ = self
+                .cv
+                .wait_timeout(guard, std::time::Duration::from_millis(1))
+                .unwrap();
+        }
+    }
+}
+
+/// Handle for spawning tasks inside a [`ThreadPool::scope`]; cloneable and
+/// passable into tasks so they can spawn recursively.
+#[derive(Clone)]
+pub struct ScopeHandle {
+    pool: ThreadPool,
+    wg: Arc<WaitGroup>,
+}
+
+impl ScopeHandle {
+    /// Spawn a task tracked by this scope. The task receives a clone of the
+    /// handle so it can fork further subtasks into the same scope.
+    pub fn spawn(&self, f: impl FnOnce(&ScopeHandle) + Send + 'static) {
+        self.wg.add();
+        let child = self.clone();
+        self.pool.spawn_internal(Box::new(move || {
+            f(&child);
+            child.wg.done();
+        }));
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+impl ThreadPool {
+    fn spawn_internal(&self, job: Job) {
+        let state = &self.state;
+        state.spawned.fetch_add(1, Ordering::Relaxed);
+        match self.current_worker() {
+            Some(idx) => state.queues[idx].lock().unwrap().push_back(job),
+            None => state.injector.lock().unwrap().push_back(job),
+        }
+        state.pending.fetch_add(1, Ordering::Release);
+        state.sleep_cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_spawned_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                s.spawn(move |_| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn recursive_spawns_complete() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+
+        fn fanout(s: &ScopeHandle, depth: usize, counter: Arc<AtomicUsize>) {
+            counter.fetch_add(1, Ordering::Relaxed);
+            if depth > 0 {
+                for _ in 0..3 {
+                    let c = Arc::clone(&counter);
+                    s.spawn(move |s2| fanout(s2, depth - 1, c));
+                }
+            }
+        }
+
+        pool.scope(|s| {
+            let c = Arc::clone(&counter);
+            s.spawn(move |s2| fanout(s2, 4, c));
+        });
+        // 1 + 3 + 9 + 27 + 81 = 121
+        assert_eq!(counter.load(Ordering::Relaxed), 121);
+    }
+
+    #[test]
+    fn scope_waits_for_all() {
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicBool::new(false));
+        pool.scope(|s| {
+            let f = Arc::clone(&flag);
+            s.spawn(move |_| {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                f.store(true, Ordering::SeqCst);
+            });
+        });
+        assert!(flag.load(Ordering::SeqCst), "scope returned before task finished");
+    }
+
+    #[test]
+    fn multiple_scopes_sequential() {
+        let pool = ThreadPool::new(2);
+        for round in 0..5 {
+            let counter = Arc::new(AtomicUsize::new(0));
+            pool.scope(|s| {
+                for _ in 0..10 {
+                    let c = Arc::clone(&counter);
+                    s.spawn(move |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 10, "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                s.spawn(move |s2| {
+                    let c2 = Arc::clone(&c);
+                    c.fetch_add(1, Ordering::Relaxed);
+                    s2.spawn(move |_| {
+                        c2.fetch_add(1, Ordering::Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn counters_track_spawns() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            for _ in 0..20 {
+                s.spawn(|_| {});
+            }
+        });
+        let (spawned, _steals) = pool.scheduler_counters();
+        assert_eq!(spawned, 20);
+    }
+}

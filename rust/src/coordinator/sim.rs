@@ -1,0 +1,250 @@
+//! Trace-replay work-stealing makespan simulator.
+//!
+//! The paper evaluates speedup on a 32-core Xeon; this testbed has one
+//! hardware thread, so Figures 6/7/9 are reproduced by *measuring* the real
+//! task decomposition (every recursive MCE call records its exclusive time
+//! and parent) and *replaying* the trace through a deterministic greedy
+//! scheduler with p virtual workers.  speedup(p) = Σwork / makespan(p) —
+//! the quantity Brent's theorem bounds (paper §3, Corollary 1), including
+//! the critical-path ceiling that a real scheduler would also hit.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// One task in a recorded execution trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceTask {
+    /// parent task index (children become ready when the parent finishes)
+    pub parent: Option<u32>,
+    /// exclusive duration (excluding children), nanoseconds
+    pub excl_ns: u64,
+}
+
+/// A recorded task-decomposition trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub tasks: Vec<TraceTask>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { tasks: Vec::new() }
+    }
+
+    /// Record a task; returns its id for children to reference.
+    pub fn push(&mut self, parent: Option<u32>, excl_ns: u64) -> u32 {
+        let id = self.tasks.len() as u32;
+        if let Some(p) = parent {
+            debug_assert!((p as usize) < self.tasks.len(), "parent must precede child");
+        }
+        self.tasks.push(TraceTask { parent, excl_ns });
+        id
+    }
+
+    /// Total work T₁ = Σ exclusive durations.
+    pub fn work_ns(&self) -> u64 {
+        self.tasks.iter().map(|t| t.excl_ns).sum()
+    }
+
+    /// Critical path T∞ (span): longest root-to-leaf chain of exclusive
+    /// durations.  Children start only after the whole parent finishes.
+    pub fn span_ns(&self) -> u64 {
+        let mut finish = vec![0u64; self.tasks.len()];
+        let mut max = 0;
+        for (i, t) in self.tasks.iter().enumerate() {
+            let start = t.parent.map(|p| finish[p as usize]).unwrap_or(0);
+            finish[i] = start + t.excl_ns;
+            max = max.max(finish[i]);
+        }
+        max
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Result of simulating a trace on p workers.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    pub p: usize,
+    pub makespan_ns: u64,
+    pub work_ns: u64,
+    pub span_ns: u64,
+}
+
+impl SimResult {
+    /// Speedup over the 1-worker execution of the same trace.
+    pub fn speedup(&self) -> f64 {
+        self.work_ns as f64 / self.makespan_ns.max(1) as f64
+    }
+
+    /// Fraction of p·makespan actually spent working.
+    pub fn utilization(&self) -> f64 {
+        self.work_ns as f64 / (self.p as f64 * self.makespan_ns.max(1) as f64)
+    }
+}
+
+/// Greedy list scheduling of the trace on `p` identical workers.
+/// `overhead_ns` models per-task scheduling cost (spawn + steal), charged
+/// to every task — set from the measured pool overhead.
+pub fn simulate(trace: &Trace, p: usize, overhead_ns: u64) -> SimResult {
+    assert!(p >= 1);
+    let n = trace.tasks.len();
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut ready: VecDeque<u32> = VecDeque::new();
+    for (i, t) in trace.tasks.iter().enumerate() {
+        match t.parent {
+            Some(par) => children[par as usize].push(i as u32),
+            None => ready.push_back(i as u32),
+        }
+    }
+
+    // event-driven: (finish_time, task) min-heap
+    let mut running: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    let mut now = 0u64;
+    let mut busy = 0usize;
+    let mut makespan = 0u64;
+    let mut done = 0usize;
+
+    loop {
+        while busy < p {
+            let Some(t) = ready.pop_front() else { break };
+            let dur = trace.tasks[t as usize].excl_ns + overhead_ns;
+            running.push(Reverse((now + dur, t)));
+            busy += 1;
+        }
+        let Some(Reverse((finish, t))) = running.pop() else {
+            break;
+        };
+        now = finish;
+        makespan = makespan.max(finish);
+        busy -= 1;
+        done += 1;
+        for &c in &children[t as usize] {
+            ready.push_back(c);
+        }
+        // drain all tasks finishing at the same instant before refilling
+        while let Some(&Reverse((f2, _))) = running.peek() {
+            if f2 != now {
+                break;
+            }
+            let Reverse((_, t2)) = running.pop().unwrap();
+            busy -= 1;
+            done += 1;
+            for &c in &children[t2 as usize] {
+                ready.push_back(c);
+            }
+        }
+    }
+    assert_eq!(done, n, "simulator must complete every task");
+
+    SimResult {
+        p,
+        makespan_ns: makespan,
+        work_ns: trace.work_ns() + overhead_ns * n as u64,
+        span_ns: trace.span_ns(),
+    }
+}
+
+/// Speedup curve over the usual thread counts (paper Figures 6/9).
+pub fn speedup_curve(trace: &Trace, ps: &[usize], overhead_ns: u64) -> Vec<SimResult> {
+    ps.iter().map(|&p| simulate(trace, p, overhead_ns)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// trace: root with k independent equal children
+    fn flat_trace(k: usize, dur: u64) -> Trace {
+        let mut t = Trace::new();
+        let root = t.push(None, 1);
+        for _ in 0..k {
+            t.push(Some(root), dur);
+        }
+        t
+    }
+
+    #[test]
+    fn work_and_span() {
+        let t = flat_trace(4, 100);
+        assert_eq!(t.work_ns(), 401);
+        assert_eq!(t.span_ns(), 101);
+    }
+
+    #[test]
+    fn single_worker_equals_work() {
+        let t = flat_trace(8, 50);
+        let r = simulate(&t, 1, 0);
+        assert_eq!(r.makespan_ns, t.work_ns());
+        assert!((r.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_parallel_flat_trace() {
+        let t = flat_trace(16, 1000);
+        let r = simulate(&t, 16, 0);
+        // root (1ns) then all 16 children in parallel
+        assert_eq!(r.makespan_ns, 1001);
+        let s = r.speedup();
+        assert!(s > 15.0, "speedup {s}");
+    }
+
+    #[test]
+    fn speedup_bounded_by_span() {
+        // chain of 10 tasks: no parallelism available
+        let mut t = Trace::new();
+        let mut parent = None;
+        for _ in 0..10 {
+            parent = Some(t.push(parent, 100));
+        }
+        for p in [1, 2, 8, 32] {
+            let r = simulate(&t, p, 0);
+            assert_eq!(r.makespan_ns, 1000, "chain cannot go below span at p={p}");
+        }
+    }
+
+    #[test]
+    fn speedup_monotone_in_p() {
+        // imbalanced two-level tree
+        let mut t = Trace::new();
+        let root = t.push(None, 10);
+        for i in 0..32 {
+            let c = t.push(Some(root), 100 + i * 37);
+            for j in 0..(i % 5) {
+                t.push(Some(c), 50 + j * 11);
+            }
+        }
+        let mut last = 0.0;
+        for p in [1, 2, 4, 8, 16, 32] {
+            let s = simulate(&t, p, 0).speedup();
+            assert!(s + 1e-9 >= last, "speedup should not decrease: {s} < {last}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn overhead_reduces_speedup() {
+        let t = flat_trace(32, 1000);
+        let no = simulate(&t, 8, 0).speedup();
+        let hi = simulate(&t, 8, 0);
+        let with = simulate(&t, 8, 500);
+        // same p: utilization with overhead ≤ without
+        assert!(with.makespan_ns > hi.makespan_ns);
+        assert!(no > 0.0);
+    }
+
+    #[test]
+    fn utilization_at_most_one() {
+        let t = flat_trace(100, 10);
+        for p in [1, 3, 7] {
+            let r = simulate(&t, p, 1);
+            assert!(r.utilization() <= 1.0 + 1e-9);
+        }
+    }
+}

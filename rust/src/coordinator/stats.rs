@@ -1,0 +1,167 @@
+//! Per-subproblem instrumentation: the data behind Figure 2 (subproblem
+//! imbalance) and the load-balance diagnostics of §4.2.
+
+use crate::graph::Vertex;
+
+/// Measured cost of one per-vertex subproblem (all maximal cliques whose
+/// lowest-ranked member is `vertex`).
+#[derive(Clone, Copy, Debug)]
+pub struct Subproblem {
+    pub vertex: Vertex,
+    pub cliques: u64,
+    pub ns: u64,
+}
+
+/// Skew summary: what fraction of subproblems carries `share` of the total?
+#[derive(Clone, Copy, Debug)]
+pub struct SkewPoint {
+    /// target cumulative share of the metric (e.g. 0.9)
+    pub share: f64,
+    /// fraction of subproblems (sorted descending by metric) needed
+    pub subproblem_fraction: f64,
+}
+
+/// Fraction of subproblems (largest first) needed to reach `share` of the
+/// total of `metric`. Paper Fig. 2: As-Skitter needs 0.022% of subproblems
+/// for 90% of runtime.
+pub fn fraction_for_share(mut values: Vec<u64>, share: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&share));
+    let total: u128 = values.iter().map(|&v| v as u128).sum();
+    if total == 0 || values.is_empty() {
+        return 0.0;
+    }
+    values.sort_unstable_by(|a, b| b.cmp(a));
+    let target = (total as f64 * share).ceil() as u128;
+    let mut acc: u128 = 0;
+    for (i, &v) in values.iter().enumerate() {
+        acc += v as u128;
+        if acc >= target {
+            return (i + 1) as f64 / values.len() as f64;
+        }
+    }
+    1.0
+}
+
+/// Full cumulative-share curve (Lorenz-style, descending), sampled at the
+/// given subproblem fractions — the series plotted in Fig. 2.
+pub fn share_curve(mut values: Vec<u64>, fractions: &[f64]) -> Vec<(f64, f64)> {
+    values.sort_unstable_by(|a, b| b.cmp(a));
+    let total: u128 = values.iter().map(|&v| v as u128).sum();
+    let mut prefix: Vec<u128> = Vec::with_capacity(values.len() + 1);
+    prefix.push(0);
+    for &v in &values {
+        prefix.push(prefix.last().unwrap() + v as u128);
+    }
+    fractions
+        .iter()
+        .map(|&f| {
+            let k = ((values.len() as f64 * f).round() as usize).min(values.len());
+            let share = if total == 0 {
+                0.0
+            } else {
+                prefix[k] as f64 / total as f64
+            };
+            (f, share)
+        })
+        .collect()
+}
+
+/// Summary statistics of the subproblem cost distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct ImbalanceSummary {
+    pub count: usize,
+    pub total_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: f64,
+    /// coefficient of variation (σ/µ) — the paper's imbalance driver
+    pub cv: f64,
+    /// fraction of subproblems for 90% of runtime (Fig. 2c/2d)
+    pub frac_for_90_time: f64,
+    /// fraction of subproblems for 90% of cliques (Fig. 2a/2b)
+    pub frac_for_90_cliques: f64,
+}
+
+pub fn summarize(subs: &[Subproblem]) -> ImbalanceSummary {
+    let count = subs.len();
+    let total_ns: u64 = subs.iter().map(|s| s.ns).sum();
+    let max_ns = subs.iter().map(|s| s.ns).max().unwrap_or(0);
+    let mean = if count == 0 {
+        0.0
+    } else {
+        total_ns as f64 / count as f64
+    };
+    let var = if count == 0 {
+        0.0
+    } else {
+        subs.iter()
+            .map(|s| {
+                let d = s.ns as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / count as f64
+    };
+    ImbalanceSummary {
+        count,
+        total_ns,
+        max_ns,
+        mean_ns: mean,
+        cv: if mean > 0.0 { var.sqrt() / mean } else { 0.0 },
+        frac_for_90_time: fraction_for_share(subs.iter().map(|s| s.ns).collect(), 0.9),
+        frac_for_90_cliques: fraction_for_share(subs.iter().map(|s| s.cliques).collect(), 0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_values_need_ninety_percent() {
+        let f = fraction_for_share(vec![10; 100], 0.9);
+        assert!((f - 0.9).abs() < 0.011, "got {f}");
+    }
+
+    #[test]
+    fn extreme_skew_needs_few() {
+        // one subproblem carries ~all the work
+        let mut v = vec![1u64; 999];
+        v.push(1_000_000);
+        let f = fraction_for_share(v, 0.9);
+        assert!(f <= 0.002, "got {f}");
+    }
+
+    #[test]
+    fn zero_and_empty() {
+        assert_eq!(fraction_for_share(vec![], 0.9), 0.0);
+        assert_eq!(fraction_for_share(vec![0, 0], 0.9), 0.0);
+    }
+
+    #[test]
+    fn share_curve_monotone() {
+        let v: Vec<u64> = (1..=100).collect();
+        let curve = share_curve(v, &[0.0, 0.1, 0.5, 1.0]);
+        assert_eq!(curve[0].1, 0.0);
+        assert!((curve[3].1 - 1.0).abs() < 1e-12);
+        assert!(curve[1].1 > 0.1, "descending sort front-loads the share");
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn summary_on_skewed_input() {
+        let subs: Vec<Subproblem> = (0..100)
+            .map(|i| Subproblem {
+                vertex: i,
+                cliques: if i == 0 { 10_000 } else { 1 },
+                ns: if i == 0 { 1_000_000 } else { 10 },
+            })
+            .collect();
+        let s = summarize(&subs);
+        assert_eq!(s.count, 100);
+        assert!(s.cv > 5.0, "cv {}", s.cv);
+        assert!(s.frac_for_90_time <= 0.01);
+        assert!(s.frac_for_90_cliques <= 0.01);
+    }
+}

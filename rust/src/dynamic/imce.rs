@@ -1,0 +1,299 @@
+//! Sequential IMCE (Das–Svendsen–Tirthapura, VLDB 2019) — the baseline the
+//! paper's ParIMCE is measured against (Table 6, Figures 8/9).
+//!
+//! `FastIMCENewClq`: for each new edge eᵢ = (u,v) (in batch order), the new
+//! maximal cliques containing eᵢ — and no earlier new edge — are the
+//! maximal cliques of the common-neighbourhood subproblem
+//! (K = {u,v}, cand = Γ(u) ∩ Γ(v)) enumerated by TTTExcludeEdges with
+//! exclusion set {e₁…eᵢ₋₁}.
+//!
+//! `IMCESubClq`: every subsumed clique is a subset of some new maximal
+//! clique c, reachable by removing one endpoint of each new edge of c in
+//! all combinations; a candidate that is a *current* maximal clique (i.e.
+//! in the registry) is subsumed.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::dynamic::registry::{canonical, CliqueKey, CliqueRegistry};
+use crate::dynamic::ttt_exclude::{ttt_exclude_edges, EdgeSet};
+use crate::dynamic::BatchResult;
+use crate::graph::adj::DynGraph;
+use crate::graph::{Edge, Vertex};
+use crate::mce::sink::CollectSink;
+
+/// Phase timings, for the Table 6 / Fig. 8 accounting and the per-phase
+/// scheduler simulation (Fig. 9).
+#[derive(Clone, Debug, Default)]
+pub struct BatchTimings {
+    /// per-edge enumeration task durations (FastIMCENewClq inner loop)
+    pub new_task_ns: Vec<u64>,
+    /// per-new-clique subsumption task durations (IMCESubClq outer loop)
+    pub sub_task_ns: Vec<u64>,
+}
+
+impl BatchTimings {
+    pub fn new_ns(&self) -> u64 {
+        self.new_task_ns.iter().sum()
+    }
+
+    pub fn sub_ns(&self) -> u64 {
+        self.sub_task_ns.iter().sum()
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.new_ns() + self.sub_ns()
+    }
+}
+
+/// Apply one batch of edge insertions; returns the change set (canonical)
+/// and per-task timings. The registry is updated to C(G + H).
+pub fn imce_batch(
+    graph: &mut DynGraph,
+    registry: &CliqueRegistry,
+    batch: &[Edge],
+) -> (BatchResult, BatchTimings) {
+    // Figure 4 step 1: apply the batch to the shared graph (dedup).
+    let added = graph.insert_batch(batch);
+    let mut timings = BatchTimings::default();
+
+    // --- FastIMCENewClq ---------------------------------------------------
+    let mut new_cliques: Vec<Vec<Vertex>> = Vec::new();
+    let mut excl = EdgeSet::new();
+    for &(u, v) in &added {
+        let t0 = Instant::now();
+        let sink = CollectSink::new();
+        let cand = graph.common_neighbors(u, v);
+        let mut k = vec![u.min(v), u.max(v)];
+        k.sort_unstable();
+        ttt_exclude_edges(graph, &mut k, cand, Vec::new(), &excl, &sink);
+        new_cliques.extend(sink.into_canonical());
+        excl.insert(u, v);
+        timings.new_task_ns.push(t0.elapsed().as_nanos() as u64);
+    }
+
+    // --- IMCESubClq --------------------------------------------------------
+    let mut subsumed: Vec<Vec<Vertex>> = Vec::new();
+    for c in &new_cliques {
+        let t0 = Instant::now();
+        for cand in subsumption_candidates(c, &added) {
+            if registry.remove(&cand) {
+                subsumed.push(cand.into_vec());
+            }
+        }
+        timings.sub_task_ns.push(t0.elapsed().as_nanos() as u64);
+    }
+
+    // update C(G): subsumed already removed; add the new cliques
+    for c in &new_cliques {
+        registry.insert(c);
+    }
+
+    let mut result = BatchResult {
+        new_cliques,
+        subsumed,
+    };
+    result.canonicalize();
+    (result, timings)
+}
+
+/// Candidate subsumed cliques derivable from new maximal clique `c`
+/// (Alg. 7 lines 3–12): for each new edge inside c, split every current
+/// candidate containing both endpoints into the two endpoint-removals.
+/// Candidates are deduplicated; none contains a complete new edge.
+pub fn subsumption_candidates(c: &[Vertex], new_edges: &[Edge]) -> Vec<CliqueKey> {
+    let members: HashSet<Vertex> = c.iter().copied().collect();
+    // E(c) ∩ H — new edges with both endpoints in c (O(ρ) per clique,
+    // the min{M², ρ} bound of Lemma 4)
+    let inner: Vec<Edge> = new_edges
+        .iter()
+        .copied()
+        .filter(|&(u, v)| members.contains(&u) && members.contains(&v))
+        .collect();
+    if inner.is_empty() {
+        return Vec::new();
+    }
+    let mut s: HashSet<CliqueKey> = HashSet::new();
+    s.insert(canonical(c));
+    for &(u, v) in &inner {
+        let mut next: HashSet<CliqueKey> = HashSet::with_capacity(s.len() * 2);
+        for c_prime in s {
+            let has_u = c_prime.binary_search(&u).is_ok();
+            let has_v = c_prime.binary_search(&v).is_ok();
+            if has_u && has_v {
+                let c1: CliqueKey = c_prime
+                    .iter()
+                    .copied()
+                    .filter(|&x| x != u)
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice();
+                let c2: CliqueKey = c_prime
+                    .iter()
+                    .copied()
+                    .filter(|&x| x != v)
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice();
+                next.insert(c1);
+                next.insert(c2);
+            } else {
+                next.insert(c_prime);
+            }
+        }
+        s = next;
+    }
+    // the original clique c contains its own new edges, so it never
+    // survives; all survivors are G-cliques (no complete new edge).
+    let mut out: Vec<CliqueKey> = s.into_iter().filter(|k| !k.is_empty()).collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+
+    /// Cross-check: registry after the batch must equal C(G+H) from scratch.
+    fn check_batch(n: usize, initial: &[Edge], batch: &[Edge]) -> BatchResult {
+        let g0 = CsrGraph::from_edges(n, initial);
+        let mut graph = DynGraph::from_csr(&g0);
+        let registry = CliqueRegistry::from_graph(&g0);
+        let before = oracle::maximal_cliques(&g0);
+
+        let (result, _t) = imce_batch(&mut graph, &registry, batch);
+
+        let after = oracle::maximal_cliques(&graph.to_csr());
+        // 1. registry state matches from-scratch enumeration
+        assert_eq!(registry.len(), after.len());
+        for c in &after {
+            assert!(registry.contains(c), "missing {c:?}");
+        }
+        // 2. new = after \ before, subsumed = before \ after
+        let before_set: std::collections::BTreeSet<_> = before.iter().cloned().collect();
+        let after_set: std::collections::BTreeSet<_> = after.iter().cloned().collect();
+        let want_new: Vec<Vec<Vertex>> =
+            after_set.difference(&before_set).cloned().collect();
+        let want_sub: Vec<Vec<Vertex>> =
+            before_set.difference(&after_set).cloned().collect();
+        assert_eq!(result.new_cliques, want_new, "Λnew mismatch");
+        assert_eq!(result.subsumed, want_sub, "Λdel mismatch");
+        result
+    }
+
+    #[test]
+    fn paper_figure3_example() {
+        // Fig. 3: G has maximal cliques {a,b,e}, {b,c,d}; adding (e,d)
+        // creates {b,d,e}. (a=0 b=1 c=2 d=3 e=4)
+        let initial = [(0, 1), (0, 4), (1, 4), (1, 2), (1, 3), (2, 3)];
+        let r = check_batch(5, &initial, &[(4, 3)]);
+        assert_eq!(r.new_cliques, vec![vec![1, 3, 4]]);
+        assert!(r.subsumed.is_empty());
+    }
+
+    #[test]
+    fn paper_figure3_completion() {
+        // Fig. 3(c): adding (a,c),(a,d),(c,e) too turns the whole graph
+        // into one maximal clique subsuming everything.
+        let initial = [(0, 1), (0, 4), (1, 4), (1, 2), (1, 3), (2, 3), (3, 4)];
+        let r = check_batch(5, &initial, &[(0, 2), (0, 3), (2, 4)]);
+        assert_eq!(r.new_cliques, vec![vec![0, 1, 2, 3, 4]]);
+        assert!(!r.subsumed.is_empty());
+    }
+
+    #[test]
+    fn missing_edge_completion_is_small_change() {
+        // §5: K_n minus one edge + that edge = 1 new clique, 2 subsumed.
+        let g = generators::complete_minus_edge(8);
+        let r = check_batch(8, &g.edges(), &[(0, 1)]);
+        assert_eq!(r.new_cliques.len(), 1);
+        assert_eq!(r.subsumed.len(), 2);
+        assert_eq!(r.change_size(), 3);
+    }
+
+    #[test]
+    fn duplicate_and_existing_edges_are_noops() {
+        let initial = [(0, 1), (1, 2)];
+        let g0 = CsrGraph::from_edges(4, &initial);
+        let mut graph = DynGraph::from_csr(&g0);
+        let registry = CliqueRegistry::from_graph(&g0);
+        let (r, _) = imce_batch(&mut graph, &registry, &[(0, 1), (1, 0)]);
+        assert_eq!(r.change_size(), 0);
+    }
+
+    #[test]
+    fn batch_from_empty_graph() {
+        // the §6 methodology: start from an edgeless graph, add everything
+        let target = generators::gnp(12, 0.5, 3);
+        let mut graph = DynGraph::new(12);
+        let registry = CliqueRegistry::new();
+        for v in 0..12u32 {
+            registry.insert(&[v]); // C(empty graph) = singletons
+        }
+        let (_, _) = imce_batch(&mut graph, &registry, &target.edges());
+        let after = oracle::maximal_cliques(&target);
+        assert_eq!(registry.len(), after.len());
+    }
+
+    #[test]
+    fn randomized_incremental_equals_from_scratch() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 61, iters: 20 },
+            |rng, level| {
+                let n = 6 + rng.gen_usize(12 >> level.min(2));
+                let g = generators::gnp(n, 0.5, rng.next_u64());
+                let mut edges = g.edges();
+                rng.shuffle(&mut edges);
+                let cut = edges.len() / 2;
+                (n, edges.clone(), cut)
+            },
+            |(n, edges, cut)| {
+                let initial = &edges[..*cut];
+                let batch = &edges[*cut..];
+                let g0 = CsrGraph::from_edges(*n, initial);
+                let mut graph = DynGraph::from_csr(&g0);
+                let registry = CliqueRegistry::from_graph(&g0);
+                imce_batch(&mut graph, &registry, batch);
+                let after = oracle::maximal_cliques(&graph.to_csr());
+                if registry.len() != after.len() {
+                    return Err(format!(
+                        "registry {} vs from-scratch {}",
+                        registry.len(),
+                        after.len()
+                    ));
+                }
+                for c in &after {
+                    if !registry.contains(c) {
+                        return Err(format!("missing {c:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn candidates_never_contain_new_edges() {
+        let c: Vec<Vertex> = (0..6).collect();
+        let new_edges = [(0, 1), (2, 3)];
+        for cand in subsumption_candidates(&c, &new_edges) {
+            for &(u, v) in &new_edges {
+                assert!(
+                    !(cand.binary_search(&u).is_ok() && cand.binary_search(&v).is_ok()),
+                    "candidate {cand:?} contains new edge ({u},{v})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_count_bounded() {
+        // k new edges → ≤ 2^k candidates
+        let c: Vec<Vertex> = (0..8).collect();
+        let new_edges = [(0, 1), (2, 3), (4, 5)];
+        let cands = subsumption_candidates(&c, &new_edges);
+        assert!(cands.len() <= 8);
+        assert!(!cands.is_empty());
+    }
+}

@@ -1,0 +1,45 @@
+//! Dynamic (incremental) maximal clique maintenance — paper §5.
+//!
+//! When a batch H of edges is added to G, the set of maximal cliques
+//! changes by Λⁿᵉʷ = C(G+H) \ C(G) (new cliques) and Λᵈᵉˡ = C(G) \ C(G+H)
+//! (subsumed cliques).  [`imce`] is the sequential baseline (Das–Svendsen–
+//! Tirthapura, VLDB 2019: FastIMCENewClq + IMCESubClq); [`par_imce`] is the
+//! paper's parallel version (Algorithms 5–7).  [`registry`] maintains C(G)
+//! in a concurrent canonical-form set; [`stream`] replays timestamped or
+//! permuted edge streams in batches (the §6 methodology).
+
+pub mod imce;
+pub mod par_imce;
+pub mod registry;
+pub mod stream;
+pub mod ttt_exclude;
+
+pub use imce::imce_batch;
+pub use par_imce::par_imce_batch;
+pub use registry::CliqueRegistry;
+
+/// The change set produced by one batch, canonical form
+/// (each clique sorted; lists sorted) so algorithm variants compare equal.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BatchResult {
+    pub new_cliques: Vec<Vec<crate::graph::Vertex>>,
+    pub subsumed: Vec<Vec<crate::graph::Vertex>>,
+}
+
+impl BatchResult {
+    /// |Λⁿᵉʷ| + |Λᵈᵉˡ| — the paper's "size of change" (Fig. 8 x-axis).
+    pub fn change_size(&self) -> usize {
+        self.new_cliques.len() + self.subsumed.len()
+    }
+
+    pub fn canonicalize(&mut self) {
+        for c in self.new_cliques.iter_mut() {
+            c.sort_unstable();
+        }
+        for c in self.subsumed.iter_mut() {
+            c.sort_unstable();
+        }
+        self.new_cliques.sort();
+        self.subsumed.sort();
+    }
+}

@@ -1,0 +1,144 @@
+//! Concurrent registry of the current maximal clique set C(G).
+//!
+//! Cliques are stored in canonical form (sorted vertex list) inside the
+//! sharded concurrent set (`util::chashmap`), standing in for the TBB
+//! `concurrent_hash_map` the paper uses.  ParIMCESub's candidacy check
+//! (Alg. 7 line 14) and removal (line 16) are single concurrent calls, so
+//! a clique subsumed via several new cliques is reported exactly once.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+use crate::mce::sink::{CallbackSink, CliqueSink};
+use crate::mce::ttt;
+use crate::util::chashmap::ConcurrentSet;
+use std::sync::Mutex;
+
+/// Canonical clique key: sorted, boxed.
+pub type CliqueKey = Box<[Vertex]>;
+
+pub fn canonical(clique: &[Vertex]) -> CliqueKey {
+    let mut v = clique.to_vec();
+    v.sort_unstable();
+    v.into_boxed_slice()
+}
+
+#[derive(Default)]
+pub struct CliqueRegistry {
+    set: ConcurrentSet<CliqueKey>,
+}
+
+impl CliqueRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bootstrap from a static graph: C(G) via sequential TTT.
+    pub fn from_graph(g: &CsrGraph) -> Self {
+        let reg = CliqueRegistry::new();
+        let sink = CallbackSink::new(|c: &[Vertex]| {
+            reg.insert(c);
+        });
+        ttt::ttt(g, &sink);
+        drop(sink);
+        reg
+    }
+
+    /// Insert (canonicalized); true if newly added.
+    pub fn insert(&self, clique: &[Vertex]) -> bool {
+        self.set.insert(canonical(clique))
+    }
+
+    /// Remove; true if it was present (at most one caller wins).
+    pub fn remove(&self, clique: &[Vertex]) -> bool {
+        self.set.remove(&canonical(clique))
+    }
+
+    pub fn contains(&self, clique: &[Vertex]) -> bool {
+        self.set.contains(&canonical(clique))
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Snapshot as canonical sorted list (drains the registry).
+    pub fn drain_canonical(&self) -> Vec<Vec<Vertex>> {
+        let mut all: Vec<Vec<Vertex>> = self
+            .set
+            .drain_all()
+            .into_iter()
+            .map(|k| k.into_vec())
+            .collect();
+        all.sort();
+        all
+    }
+}
+
+/// A sink that records cliques into a mutex'd vector AND the registry —
+/// used when bootstrapping while also wanting the list.
+pub struct RegistryCollectSink<'a> {
+    pub registry: &'a CliqueRegistry,
+    pub collected: Mutex<Vec<Vec<Vertex>>>,
+}
+
+impl CliqueSink for RegistryCollectSink<'_> {
+    fn emit(&self, clique: &[Vertex]) {
+        self.registry.insert(clique);
+        self.collected.lock().unwrap().push(clique.to_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn canonicalization_is_order_insensitive() {
+        let r = CliqueRegistry::new();
+        assert!(r.insert(&[3, 1, 2]));
+        assert!(!r.insert(&[1, 2, 3]), "same clique, different order");
+        assert!(r.contains(&[2, 3, 1]));
+        assert!(r.remove(&[1, 3, 2]));
+        assert!(!r.remove(&[1, 2, 3]), "second remove loses");
+    }
+
+    #[test]
+    fn from_graph_matches_oracle() {
+        let g = generators::gnp(20, 0.4, 3);
+        let reg = CliqueRegistry::from_graph(&g);
+        let want = crate::mce::oracle::maximal_cliques(&g);
+        assert_eq!(reg.len(), want.len());
+        for c in &want {
+            assert!(reg.contains(c));
+        }
+        assert_eq!(reg.drain_canonical(), want);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn concurrent_removal_single_winner() {
+        let reg = std::sync::Arc::new(CliqueRegistry::new());
+        reg.insert(&[1, 2, 3]);
+        let wins = std::sync::Arc::new(std::sync::atomic::AtomicU32::new(0));
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let reg = reg.clone();
+                let wins = wins.clone();
+                std::thread::spawn(move || {
+                    if reg.remove(&[1, 2, 3]) {
+                        wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,292 @@
+//! Batched edge-stream replay — the §6 dynamic-graph methodology:
+//! "start with an empty graph that contains all vertices but no edges and
+//! add a set of edges in increasing order of timestamps" (batch size 1000,
+//! or 10 for the dense Ca-Cit-HepTh), measuring per-batch change sizes and
+//! cumulative runtimes (Table 6, Figures 8/9).  Static graphs are converted
+//! by randomly permuting their edges (LiveJournal).
+//!
+//! Also implements the decremental case (§5.3) by reduction: deleted
+//! cliques are those containing a removed edge; replacement maximal cliques
+//! are recovered from endpoint-removal candidates plus an explicit
+//! maximality check.
+
+use std::time::Instant;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::dynamic::imce::{imce_batch, subsumption_candidates};
+use crate::dynamic::par_imce::par_imce_batch;
+use crate::dynamic::registry::CliqueRegistry;
+use crate::dynamic::BatchResult;
+use crate::graph::adj::DynGraph;
+use crate::graph::csr::CsrGraph;
+use crate::graph::edgelist::TimedEdge;
+use crate::graph::{Edge, Vertex};
+use crate::util::rng::Rng;
+use crate::util::vset;
+
+/// An ordered edge stream over a fixed vertex set.
+#[derive(Clone, Debug)]
+pub struct EdgeStream {
+    pub n: usize,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeStream {
+    /// From a static graph by random edge permutation (the paper's
+    /// LiveJournal treatment).
+    pub fn permuted(g: &CsrGraph, seed: u64) -> Self {
+        let mut edges = g.edges();
+        Rng::new(seed).shuffle(&mut edges);
+        EdgeStream { n: g.n(), edges }
+    }
+
+    /// From timestamped edges (sorted by timestamp, stable).
+    pub fn from_timed(mut timed: Vec<TimedEdge>, n: usize) -> Self {
+        timed.sort_by_key(|e| e.t);
+        EdgeStream {
+            n,
+            edges: timed.iter().map(|e| (e.u, e.v)).collect(),
+        }
+    }
+
+    pub fn batches(&self, batch_size: usize) -> impl Iterator<Item = &[Edge]> {
+        self.edges.chunks(batch_size.max(1))
+    }
+}
+
+/// Per-batch record of a replay run.
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    pub batch_index: usize,
+    pub new_cliques: usize,
+    pub subsumed: usize,
+    pub ns: u64,
+    /// per-task durations for the scheduler simulation (Fig. 9)
+    pub new_task_ns: Vec<u64>,
+    pub sub_task_ns: Vec<u64>,
+}
+
+impl BatchRecord {
+    pub fn change_size(&self) -> usize {
+        self.new_cliques + self.subsumed
+    }
+}
+
+/// Which incremental engine a replay uses.
+#[derive(Clone, Copy)]
+pub enum Engine<'p> {
+    Sequential,
+    Parallel(&'p ThreadPool),
+}
+
+/// Replay `stream` in batches from the empty graph, maintaining C(G).
+/// Returns per-batch records; `max_batches` truncates long streams.
+pub fn replay(
+    stream: &EdgeStream,
+    batch_size: usize,
+    engine: Engine<'_>,
+    max_batches: Option<usize>,
+) -> (Vec<BatchRecord>, DynGraph, CliqueRegistry) {
+    let mut graph = DynGraph::new(stream.n);
+    let registry = CliqueRegistry::new();
+    // C(edgeless graph) = singleton cliques
+    for v in 0..stream.n as Vertex {
+        registry.insert(&[v]);
+    }
+    let mut records = Vec::new();
+    for (i, batch) in stream.batches(batch_size).enumerate() {
+        if let Some(cap) = max_batches {
+            if i >= cap {
+                break;
+            }
+        }
+        let t0 = Instant::now();
+        let (result, timings) = match engine {
+            Engine::Sequential => imce_batch(&mut graph, &registry, batch),
+            Engine::Parallel(pool) => par_imce_batch(pool, &mut graph, &registry, batch),
+        };
+        records.push(BatchRecord {
+            batch_index: i,
+            new_cliques: result.new_cliques.len(),
+            subsumed: result.subsumed.len(),
+            ns: t0.elapsed().as_nanos() as u64,
+            new_task_ns: timings.new_task_ns,
+            sub_task_ns: timings.sub_task_ns,
+        });
+    }
+    (records, graph, registry)
+}
+
+/// Decremental case (§5.3): remove a batch of edges, maintaining C(G).
+pub fn imce_remove_batch(
+    graph: &mut DynGraph,
+    registry: &CliqueRegistry,
+    batch: &[Edge],
+) -> BatchResult {
+    // apply removals (dedup)
+    let removed: Vec<Edge> = batch
+        .iter()
+        .filter(|&&(u, v)| graph.remove_edge(u, v))
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .collect();
+
+    // Λdel = old maximal cliques containing ≥1 removed edge: collect by
+    // scanning the registry once per removed edge's endpoints' cliques —
+    // registry has no per-vertex index, so generate candidates from the
+    // graph side instead: a clique is affected iff it contains some (u,v).
+    // We drain-and-filter: cheaper structures are possible, but removals
+    // are the paper's secondary path (§5.3 defers to [13]).
+    let all = registry.drain_canonical();
+    let mut deleted: Vec<Vec<Vertex>> = Vec::new();
+    for c in all {
+        let contains_removed = removed.iter().any(|&(u, v)| {
+            c.binary_search(&u).is_ok() && c.binary_search(&v).is_ok()
+        });
+        if contains_removed {
+            deleted.push(c);
+        } else {
+            registry.insert(&c);
+        }
+    }
+
+    // Λnew: endpoint-removal candidates of each deleted clique that are
+    // (a) cliques of G−H [by construction], (b) maximal in G−H, and
+    // (c) not already registered.
+    let mut new_cliques: Vec<Vec<Vertex>> = Vec::new();
+    for c in &deleted {
+        for cand in subsumption_candidates(c, &removed) {
+            if cand.is_empty() {
+                continue;
+            }
+            if is_maximal(graph, &cand) && registry.insert(&cand) {
+                new_cliques.push(cand.into_vec());
+            }
+        }
+    }
+
+    let mut result = BatchResult {
+        new_cliques,
+        subsumed: deleted,
+    };
+    result.canonicalize();
+    result
+}
+
+/// Explicit maximality check of a clique in the dynamic graph.
+fn is_maximal(g: &DynGraph, clique: &[Vertex]) -> bool {
+    let seed = clique
+        .iter()
+        .copied()
+        .min_by_key(|&v| g.degree(v))
+        .expect("non-empty clique");
+    let mut common: Vec<Vertex> = g.neighbors(seed).to_vec();
+    for &u in clique {
+        if u != seed {
+            common = vset::intersect(&common, g.neighbors(u));
+        }
+    }
+    common.iter().all(|w| clique.binary_search(w).is_ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+
+    #[test]
+    fn replay_reaches_from_scratch_state() {
+        let g = generators::gnp(30, 0.25, 7);
+        let stream = EdgeStream::permuted(&g, 42);
+        let (records, graph, registry) = replay(&stream, 10, Engine::Sequential, None);
+        assert!(!records.is_empty());
+        let want = oracle::maximal_cliques(&graph.to_csr());
+        assert_eq!(registry.len(), want.len());
+        // final graph is the original graph
+        assert_eq!(graph.m(), g.m());
+    }
+
+    #[test]
+    fn parallel_replay_equals_sequential() {
+        let g = generators::planted_cliques(40, 0.05, 3, 5, 7, 5);
+        let stream = EdgeStream::permuted(&g, 9);
+        let (seq, _, reg_s) = replay(&stream, 25, Engine::Sequential, None);
+        let pool = ThreadPool::new(3);
+        let (par, _, reg_p) = replay(&stream, 25, Engine::Parallel(&pool), None);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.new_cliques, b.new_cliques, "batch {}", a.batch_index);
+            assert_eq!(a.subsumed, b.subsumed, "batch {}", a.batch_index);
+        }
+        assert_eq!(reg_s.drain_canonical(), reg_p.drain_canonical());
+    }
+
+    #[test]
+    fn max_batches_truncates() {
+        let g = generators::gnp(20, 0.3, 1);
+        let stream = EdgeStream::permuted(&g, 2);
+        let (records, _, _) = replay(&stream, 5, Engine::Sequential, Some(3));
+        assert_eq!(records.len(), 3);
+    }
+
+    #[test]
+    fn timed_stream_ordering() {
+        let timed = vec![
+            TimedEdge { u: 0, v: 1, t: 30 },
+            TimedEdge { u: 1, v: 2, t: 10 },
+            TimedEdge { u: 2, v: 3, t: 20 },
+        ];
+        let s = EdgeStream::from_timed(timed, 4);
+        assert_eq!(s.edges, vec![(1, 2), (2, 3), (0, 1)]);
+    }
+
+    #[test]
+    fn removal_restores_from_scratch_state() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 81, iters: 15 },
+            |rng, level| {
+                let n = 6 + rng.gen_usize(12 >> level.min(2));
+                let g = generators::gnp(n, 0.5, rng.next_u64());
+                let mut edges = g.edges();
+                rng.shuffle(&mut edges);
+                let k = 1 + rng.gen_usize(edges.len().max(2) - 1);
+                (n, edges, k)
+            },
+            |(n, edges, k)| {
+                let g = CsrGraph::from_edges(*n, edges);
+                let mut graph = DynGraph::from_csr(&g);
+                let registry = CliqueRegistry::from_graph(&g);
+                imce_remove_batch(&mut graph, &registry, &edges[..*k]);
+                let want = oracle::maximal_cliques(&graph.to_csr());
+                if registry.len() != want.len() {
+                    return Err(format!(
+                        "registry {} vs scratch {} after removing {k} edges",
+                        registry.len(),
+                        want.len()
+                    ));
+                }
+                for c in &want {
+                    if !registry.contains(c) {
+                        return Err(format!("missing {c:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn remove_then_add_roundtrip() {
+        let g = generators::complete(6);
+        let mut graph = DynGraph::from_csr(&g);
+        let registry = CliqueRegistry::from_graph(&g);
+        assert_eq!(registry.len(), 1);
+        let r = imce_remove_batch(&mut graph, &registry, &[(0, 1)]);
+        assert_eq!(r.subsumed.len(), 1);
+        assert_eq!(r.new_cliques.len(), 2); // K6\{0}, K6\{1}
+        // add it back
+        let (r2, _) = imce_batch(&mut graph, &registry, &[(0, 1)]);
+        assert_eq!(r2.new_cliques, vec![(0..6).collect::<Vec<_>>()]);
+        assert_eq!(registry.len(), 1);
+    }
+}

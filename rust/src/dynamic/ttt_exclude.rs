@@ -1,0 +1,208 @@
+//! TTTExcludeEdges (paper Algorithm 8) and its unrolled parallel-ready
+//! sibling ParTTTExcludeEdges (Algorithm 6).
+//!
+//! Identical to TTT except that any branch whose clique K∪{q} would
+//! contain an edge from the exclusion set E is pruned.  ParIMCENew gives
+//! edge eᵢ the exclusion set {e₁…eᵢ₋₁}, so every new maximal clique is
+//! enumerated exactly once — at the *first* new edge (in the batch order)
+//! it contains.
+
+use std::collections::HashSet;
+
+use crate::graph::{norm_edge, AdjacencyGraph, Edge, Vertex};
+use crate::mce::pivot::choose_pivot;
+use crate::mce::sink::CliqueSink;
+use crate::util::vset;
+
+/// Exclusion set with O(1) membership; the "two global hashtables" of the
+/// paper's Appendix A are folded into one normalized-edge hash set.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeSet {
+    set: HashSet<Edge>,
+}
+
+impl EdgeSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_edges(edges: &[Edge]) -> Self {
+        let mut s = Self::new();
+        for &(u, v) in edges {
+            s.insert(u, v);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, u: Vertex, v: Vertex) -> bool {
+        match norm_edge(u, v) {
+            Some(e) => self.set.insert(e),
+            None => false,
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, u: Vertex, v: Vertex) -> bool {
+        match norm_edge(u, v) {
+            Some(e) => self.set.contains(&e),
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Does clique `k` plus vertex `q` close an excluded edge?
+    /// (K itself is invariantly exclusion-free, so only q×K pairs matter —
+    /// the O(n)-work check of Appendix A.)
+    #[inline]
+    pub fn closes_excluded(&self, k: &[Vertex], q: Vertex) -> bool {
+        if self.set.is_empty() {
+            return false;
+        }
+        k.iter().any(|&w| self.contains(w, q))
+    }
+}
+
+/// Enumerate all maximal cliques of `g` containing `k`, extendable by
+/// `cand`, excluding vertices of `fini`, and *pruning* any branch whose
+/// clique would contain an edge of `excl` (Algorithm 8 semantics).
+pub fn ttt_exclude_edges<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    excl: &EdgeSet,
+    sink: &dyn CliqueSink,
+) {
+    rec(g, k, cand, fini, excl, sink);
+}
+
+fn rec<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    mut cand: Vec<Vertex>,
+    mut fini: Vec<Vertex>,
+    excl: &EdgeSet,
+    sink: &dyn CliqueSink,
+) {
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(k);
+        }
+        return;
+    }
+    let pivot = choose_pivot(g, &cand, &fini);
+    let ext = vset::difference(&cand, g.neighbors(pivot));
+    let mut cand_q = Vec::new();
+    let mut fini_q = Vec::new();
+    for q in ext {
+        // Alg. 8 lines 7–10: skip the branch, but q still migrates
+        // cand → fini so sibling branches treat it as explored.
+        if excl.closes_excluded(k, q) {
+            vset::remove_sorted(&mut cand, q);
+            vset::insert_sorted(&mut fini, q);
+            continue;
+        }
+        let nbrs = g.neighbors(q);
+        vset::intersect_into(&cand, nbrs, &mut cand_q);
+        vset::intersect_into(&fini, nbrs, &mut fini_q);
+        k.push(q);
+        rec(
+            g,
+            k,
+            std::mem::take(&mut cand_q),
+            std::mem::take(&mut fini_q),
+            excl,
+            sink,
+        );
+        k.pop();
+        vset::remove_sorted(&mut cand, q);
+        vset::insert_sorted(&mut fini, q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::generators;
+    use crate::mce::sink::CollectSink;
+
+    fn run(
+        g: &CsrGraph,
+        k0: Vec<Vertex>,
+        cand: Vec<Vertex>,
+        fini: Vec<Vertex>,
+        excl: &EdgeSet,
+    ) -> Vec<Vec<Vertex>> {
+        let sink = CollectSink::new();
+        let mut k = k0;
+        ttt_exclude_edges(g, &mut k, cand, fini, excl, &sink);
+        sink.into_canonical()
+    }
+
+    #[test]
+    fn empty_exclusion_equals_ttt() {
+        let g = generators::gnp(18, 0.45, 5);
+        let all: Vec<Vertex> = (0..18).collect();
+        let got = run(&g, vec![], all, vec![], &EdgeSet::new());
+        assert_eq!(got, crate::mce::oracle::maximal_cliques(&g));
+    }
+
+    #[test]
+    fn excluded_edge_prunes_cliques_containing_it() {
+        // K4 on {0,1,2,3}; excluding edge (0,1) leaves no maximal clique
+        // containing both 0 and 1.
+        let g = generators::complete(4);
+        let excl = EdgeSet::from_edges(&[(0, 1)]);
+        let got = run(&g, vec![], (0..4).collect(), vec![], &excl);
+        for c in &got {
+            assert!(
+                !(c.contains(&0) && c.contains(&1)),
+                "clique {c:?} contains the excluded edge"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_set_membership() {
+        let mut s = EdgeSet::new();
+        assert!(s.insert(5, 2));
+        assert!(!s.insert(2, 5), "normalized duplicate");
+        assert!(!s.insert(3, 3), "self-loop rejected");
+        assert!(s.contains(2, 5) && s.contains(5, 2));
+        assert!(!s.contains(2, 4));
+        assert!(s.closes_excluded(&[7, 2], 5));
+        assert!(!s.closes_excluded(&[7, 3], 5));
+    }
+
+    #[test]
+    fn exclusion_partition_covers_all_cliques_once() {
+        // Enumerating "cliques containing e_i but none of e_1..e_{i-1}"
+        // over ALL edges partitions the set of maximal cliques (with ≥1
+        // edge). This is the heart of ParIMCENew's no-duplication claim.
+        let g = generators::gnp(14, 0.5, 8);
+        let edges = g.edges();
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            let excl = EdgeSet::from_edges(&edges[..i]);
+            let cand = crate::util::vset::intersect(g.neighbors(u), g.neighbors(v));
+            let got = run(&g, vec![u, v], cand, vec![], &excl);
+            for mut c in got {
+                c.sort_unstable();
+                assert!(seen.insert(c.clone()), "clique {c:?} enumerated twice");
+            }
+        }
+        let oracle: Vec<Vec<Vertex>> = crate::mce::oracle::maximal_cliques(&g)
+            .into_iter()
+            .filter(|c| c.len() >= 2)
+            .collect();
+        assert_eq!(seen.len(), oracle.len());
+    }
+}

@@ -1,0 +1,230 @@
+//! Ablations on the design choices DESIGN.md calls out (beyond the
+//! paper's own tables):
+//!
+//! 1. pivoting on/off — the TTT ingredient (recursive-call counts);
+//! 2. ParTTT sequential cutoff — task granularity vs schedulable
+//!    parallelism;
+//! 3. rank direction — the paper's "higher rank ⇒ smaller share" versus
+//!    the inverted assignment (shows the load-balancing choice matters);
+//! 4. ParIMCE batch size — the §6.2 choice of 1000 (10 for dense).
+
+use anyhow::Result;
+
+use crate::coordinator::sim::simulate;
+use crate::coordinator::stats;
+use crate::dynamic::stream::{replay, EdgeStream, Engine};
+use crate::graph::csr::CsrGraph;
+use crate::graph::datasets::{Dataset, Scale};
+use crate::graph::Vertex;
+use crate::mce::parmce::subproblems_timed;
+use crate::mce::ranking::{RankStrategy, Ranking};
+use crate::mce::sink::CountSink;
+use crate::mce::ttt::{ttt_from_metered, TttMetrics};
+use crate::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
+
+use super::fixtures::secs;
+use super::SIM_OVERHEAD_NS;
+
+pub fn all(scale: Scale) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&pivot_ablation(scale)?);
+    out.push('\n');
+    out.push_str(&cutoff_ablation(scale)?);
+    out.push('\n');
+    out.push_str(&rank_direction_ablation(scale)?);
+    out.push('\n');
+    out.push_str(&batch_size_ablation(scale)?);
+    Ok(out)
+}
+
+/// 1. Pivot vs no pivot: recursive calls and wall time.
+pub fn pivot_ablation(scale: Scale) -> Result<String> {
+    let mut t = Table::new(
+        "Ablation 1 — pivoting (TTT) vs none (BK): recursive calls and time",
+        &["Dataset", "TTT calls", "TTT(s)", "BK-noPivot(s)", "pivot gain"],
+    );
+    // sparse analogs + the clique-dense worst case: pivoting's win is a
+    // *pruning* win, so it only pays where unpruned search explodes
+    let mm = crate::graph::generators::moon_moser(6);
+    let named: Vec<(String, crate::graph::csr::CsrGraph)> = vec![
+        ("as-skitter-like".into(), Dataset::AsSkitterLike.graph(scale)),
+        ("ca-cit-hepth-like".into(), Dataset::CaCitHepThLike.graph(scale)),
+        ("moon-moser-18".into(), mm),
+    ];
+    for (name, g) in named {
+        let sink = CountSink::new();
+        let mut m = TttMetrics::default();
+        let mut k = Vec::new();
+        let (_, ttt_s) = secs(|| {
+            ttt_from_metered(
+                &g,
+                &mut k,
+                (0..g.n() as Vertex).collect(),
+                Vec::new(),
+                &sink,
+                &mut m,
+            )
+        });
+        let sink2 = CountSink::new();
+        let (_, bk_s) = secs(|| crate::baselines::bk::bk_basic(&g, &sink2));
+        assert_eq!(sink.count(), sink2.count());
+        t.row(vec![
+            name,
+            fmt_count(m.calls),
+            fmt_secs(ttt_s),
+            fmt_secs(bk_s),
+            fmt_speedup(bk_s / ttt_s),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// 2. ParTTT sequential cutoff sweep: tasks spawned vs simulated makespan.
+pub fn cutoff_ablation(scale: Scale) -> Result<String> {
+    let d = Dataset::WikipediaLike;
+    let g = d.graph(scale);
+    let ranking = Ranking::compute(&g, RankStrategy::Degree);
+    // full-resolution trace once; coarser cutoffs = collapsing subtrees.
+    // We emulate cutoff by capping trace depth: tasks deeper than the cut
+    // are merged into their ancestors (their time becomes exclusive time
+    // of the ancestor at the cut).
+    let sink = CountSink::new();
+    let tr = crate::mce::parmce::trace(&g, &ranking, &sink);
+    let mut depth = vec![0u32; tr.len()];
+    for (i, task) in tr.tasks.iter().enumerate() {
+        depth[i] = task.parent.map(|p| depth[p as usize] + 1).unwrap_or(0);
+    }
+    let mut t = Table::new(
+        format!("Ablation 2 — task granularity (depth cut), {}", d.name()),
+        &["max task depth", "#tasks", "sim@32 (s)", "speedup vs depth0"],
+    );
+    let full_work = tr.work_ns() as f64 / 1e9;
+    for cut in [0u32, 1, 2, 4, 8, u32::MAX] {
+        // merge deep tasks upward
+        let mut merged = crate::coordinator::sim::Trace::new();
+        let mut map: Vec<Option<u32>> = vec![None; tr.len()];
+        for (i, task) in tr.tasks.iter().enumerate() {
+            if depth[i] <= cut {
+                let parent = task.parent.and_then(|p| map[p as usize]);
+                map[i] = Some(merged.push(parent, task.excl_ns));
+            } else {
+                // fold into nearest kept ancestor
+                let mut a = task.parent.unwrap() as usize;
+                while depth[a] > cut {
+                    a = tr.tasks[a].parent.unwrap() as usize;
+                }
+                let kept = map[a].unwrap();
+                merged.tasks[kept as usize].excl_ns += task.excl_ns;
+                map[i] = Some(kept);
+            }
+        }
+        let r = simulate(&merged, 32, SIM_OVERHEAD_NS);
+        let s = r.makespan_ns as f64 / 1e9;
+        t.row(vec![
+            if cut == u32::MAX { "∞".into() } else { cut.to_string() },
+            fmt_count(merged.len() as u64),
+            fmt_secs(s),
+            fmt_speedup(full_work / s),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// 3. Rank direction: paper's choice vs inverted (big shares to big
+/// vertices) — compare subproblem imbalance.
+pub fn rank_direction_ablation(scale: Scale) -> Result<String> {
+    let d = Dataset::WikiTalkLike;
+    let g = d.graph(scale);
+    let mut t = Table::new(
+        format!(
+            "Ablation 3 — rank direction, {} (paper: higher degree ⇒ higher rank ⇒ smaller share)",
+            d.name()
+        ),
+        &["assignment", "CV(time)", "max task(ms)", "sim@32 (s)"],
+    );
+    for (name, ranking) in [
+        ("paper (degree asc share)", Ranking::compute(&g, RankStrategy::Degree)),
+        ("inverted (id-only)", Ranking::compute(&g, RankStrategy::Id)),
+        ("inverted (neg degree)", inverted_degree_ranking(&g)),
+    ] {
+        let subs = subproblems_timed(&g, &ranking);
+        let summary = stats::summarize(&subs);
+        let mut tr = crate::coordinator::sim::Trace::new();
+        let root = tr.push(None, 0);
+        for s in &subs {
+            tr.push(Some(root), s.ns);
+        }
+        let sim = simulate(&tr, 32, SIM_OVERHEAD_NS);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", summary.cv),
+            format!("{:.2}", summary.max_ns as f64 / 1e6),
+            fmt_secs(sim.makespan_ns as f64 / 1e9),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Inverted degree ranking: low degree ⇒ high rank (the anti-paper order).
+fn inverted_degree_ranking(g: &CsrGraph) -> Ranking {
+    // Ranking's internals are private; emulate inversion through the
+    // public API by exploiting that metric values only matter relatively:
+    // we construct a Ranking via compute() on a degree-complemented proxy.
+    // Simplest correct route: build a ranking whose metric is
+    // (max_degree - degree(v)).
+    Ranking::from_metric(
+        (0..g.n())
+            .map(|v| (g.max_degree() - g.degree(v as Vertex)) as u64)
+            .collect(),
+    )
+}
+
+/// 4. ParIMCE batch size sweep on the dense analog.
+pub fn batch_size_ablation(scale: Scale) -> Result<String> {
+    let d = Dataset::CaCitHepThLike;
+    let g = d.graph(scale);
+    let stream = EdgeStream::permuted(&g, 7);
+    let mut t = Table::new(
+        format!("Ablation 4 — ParIMCE batch size, {}", d.name()),
+        &["batch size", "#batches", "IMCE(s)", "ParIMCE@32(s)", "speedup"],
+    );
+    for bs in [10usize, 50, 200] {
+        let cap = Some((1500 / bs).clamp(4, 40));
+        let (records, _, _) = replay(&stream, bs, Engine::Sequential, cap);
+        let seq: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
+        let par: f64 = records
+            .iter()
+            .map(|r| {
+                let mk = |ns: &[u64]| {
+                    let mut tr = crate::coordinator::sim::Trace::new();
+                    let root = tr.push(None, 0);
+                    for &x in ns {
+                        tr.push(Some(root), x);
+                    }
+                    simulate(&tr, 32, SIM_OVERHEAD_NS).makespan_ns
+                };
+                (mk(&r.new_task_ns) + mk(&r.sub_task_ns)) as f64 / 1e9
+            })
+            .sum();
+        t.row(vec![
+            bs.to_string(),
+            records.len().to_string(),
+            fmt_secs(seq),
+            fmt_secs(par),
+            fmt_speedup(seq / par.max(1e-12)),
+        ]);
+    }
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_render() {
+        let md = all(Scale::Tiny).unwrap();
+        assert!(md.contains("Ablation 1"));
+        assert!(md.contains("Ablation 4"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Dynamic-graph experiments: Table 6 (cumulative IMCE vs ParIMCE),
+//! Figure 8 (speedup vs size of change), Figure 9 (speedup vs threads).
+//!
+//! Methodology (§6.2): start from the empty graph, add edges in batches of
+//! 1000 (10 for the dense ca-cit-hepth analog).  ParIMCE's multi-worker
+//! time is simulated per phase from measured task durations: the two
+//! phases are barrier-separated (Λⁿᵉʷ must be complete before ParIMCESub),
+//! so time(p) = makespan_new(p) + makespan_sub(p), summed over batches.
+
+use anyhow::Result;
+
+use crate::coordinator::sim::{simulate, Trace};
+use crate::dynamic::stream::{replay, BatchRecord, EdgeStream, Engine};
+use crate::graph::datasets::{Dataset, Scale, DYNAMIC_DATASETS};
+use crate::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
+
+use super::SIM_OVERHEAD_NS;
+use super::THREADS;
+
+fn batch_size_for(d: Dataset, scale: Scale) -> usize {
+    // paper: 1000 for all graphs, 10 for Ca-Cit-HepTh; scaled to analog size
+    let base = match scale {
+        Scale::Tiny => 100,
+        Scale::Small => 400,
+        Scale::Full => 1000,
+    };
+    if d == Dataset::CaCitHepThLike {
+        base / 10
+    } else {
+        base
+    }
+}
+
+fn max_batches_for(scale: Scale) -> Option<usize> {
+    match scale {
+        Scale::Tiny => Some(30),
+        Scale::Small => Some(40),
+        Scale::Full => None,
+    }
+}
+
+/// One-phase flat trace from per-task durations.
+fn flat_trace(task_ns: &[u64]) -> Trace {
+    let mut t = Trace::new();
+    let root = t.push(None, 0);
+    for &ns in task_ns {
+        t.push(Some(root), ns);
+    }
+    t
+}
+
+/// Simulated ParIMCE seconds for a batch at p workers (phase barrier).
+fn batch_sim_secs(rec: &BatchRecord, p: usize) -> f64 {
+    let new = simulate(&flat_trace(&rec.new_task_ns), p, SIM_OVERHEAD_NS);
+    let sub = simulate(&flat_trace(&rec.sub_task_ns), p, SIM_OVERHEAD_NS);
+    (new.makespan_ns + sub.makespan_ns) as f64 / 1e9
+}
+
+fn stream_for(d: Dataset, scale: Scale) -> EdgeStream {
+    EdgeStream::permuted(&d.graph(scale), 0xD15EA5E)
+}
+
+/// Table 6: cumulative runtime of IMCE vs ParIMCE (32 workers).
+pub fn table6(scale: Scale) -> Result<String> {
+    let mut t = Table::new(
+        "Table 6 — cumulative incremental runtime; paper speedups 3.6x-19.1x on 32 cores",
+        &[
+            "Dataset", "#edges", "batch", "IMCE(s)", "ParIMCE@32(s)", "speedup",
+            "Σchange",
+        ],
+    );
+    for d in DYNAMIC_DATASETS {
+        let stream = stream_for(d, scale);
+        let bs = batch_size_for(d, scale);
+        let cap = max_batches_for(scale);
+        let (records, _, _) = replay(&stream, bs, Engine::Sequential, cap);
+        let seq_total: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
+        let par_total: f64 = records.iter().map(|r| batch_sim_secs(r, 32)).sum();
+        let change: u64 = records.iter().map(|r| r.change_size() as u64).sum();
+        let edges: usize = records.len() * bs.min(stream.edges.len());
+        t.row(vec![
+            d.name().into(),
+            fmt_count(edges.min(stream.edges.len()) as u64),
+            bs.to_string(),
+            fmt_secs(seq_total),
+            fmt_secs(par_total),
+            fmt_speedup(seq_total / par_total.max(1e-12)),
+            fmt_count(change),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Figure 8: per-batch speedup vs size of change (bucketed scatter).
+pub fn fig8(scale: Scale) -> Result<String> {
+    let mut out = String::new();
+    for d in DYNAMIC_DATASETS {
+        let stream = stream_for(d, scale);
+        let bs = batch_size_for(d, scale);
+        let (records, _, _) = replay(&stream, bs, Engine::Sequential, max_batches_for(scale));
+        // bucket batches by change size (powers of 4)
+        let mut buckets: std::collections::BTreeMap<u64, (f64, f64, usize)> =
+            std::collections::BTreeMap::new();
+        for r in &records {
+            let c = r.change_size() as u64;
+            let bucket = if c == 0 { 0 } else { 1 << (63 - c.leading_zeros()) };
+            let seq = r.ns as f64 / 1e9;
+            let par = batch_sim_secs(r, 32);
+            let e = buckets.entry(bucket).or_insert((0.0, 0.0, 0));
+            e.0 += seq;
+            e.1 += par;
+            e.2 += 1;
+        }
+        let mut t = Table::new(
+            format!(
+                "Figure 8 — ParIMCE speedup vs size of change, {} (paper: speedup grows with change size)",
+                d.name()
+            ),
+            &["change-size bucket", "#batches", "speedup@32"],
+        );
+        for (bucket, (seq, par, n)) in buckets {
+            t.row(vec![
+                format!("~{bucket}"),
+                n.to_string(),
+                fmt_speedup(seq / par.max(1e-12)),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Figure 9: cumulative ParIMCE speedup vs thread count.
+pub fn fig9(scale: Scale) -> Result<String> {
+    let mut t = Table::new(
+        "Figure 9 — ParIMCE speedup over IMCE vs threads (cumulative over batches)",
+        &["Dataset", "p=1", "p=2", "p=4", "p=8", "p=16", "p=32"],
+    );
+    for d in DYNAMIC_DATASETS {
+        let stream = stream_for(d, scale);
+        let bs = batch_size_for(d, scale);
+        let (records, _, _) = replay(&stream, bs, Engine::Sequential, max_batches_for(scale));
+        let seq_total: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
+        let mut cells = vec![d.name().to_string()];
+        for &p in &THREADS {
+            let par: f64 = records.iter().map(|r| batch_sim_secs(r, p)).sum();
+            cells.push(fmt_speedup(seq_total / par.max(1e-12)));
+        }
+        t.row(cells);
+    }
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_renders() {
+        let md = table6(Scale::Tiny).unwrap();
+        assert!(md.contains("ca-cit-hepth-like"));
+        assert!(md.contains("speedup"));
+    }
+
+    #[test]
+    fn fig9_monotone_speedups() {
+        let md = fig9(Scale::Tiny).unwrap();
+        assert!(md.contains("p=32"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Shared measurement helpers for the experiment harness.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::sim::{simulate, Trace};
+use crate::graph::csr::CsrGraph;
+use crate::mce::ranking::{RankStrategy, Ranking};
+use crate::mce::sink::{CliqueSink, CountSink, SizeHistogram};
+use crate::mce::{parmce, parttt, ttt, ParMceConfig, ParTttConfig};
+
+use super::SIM_OVERHEAD_NS;
+
+/// Wall-clock seconds of a closure.
+pub fn secs<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Sequential TTT: (clique count, seconds).
+pub fn run_ttt(g: &CsrGraph) -> (u64, f64) {
+    let sink = CountSink::new();
+    let (_, s) = secs(|| ttt::ttt(g, &sink));
+    (sink.count(), s)
+}
+
+/// Full histogram in one sequential pass.
+pub fn run_ttt_hist(g: &CsrGraph, max_size: usize) -> (SizeHistogram, f64) {
+    let hist = SizeHistogram::new(max_size);
+    let (_, s) = secs(|| ttt::ttt(g, &hist));
+    (hist, s)
+}
+
+/// Measured ParTTT trace → simulated seconds at `p` workers.
+pub fn parttt_sim_secs(g: &CsrGraph, p: usize) -> (u64, f64) {
+    let sink = CountSink::new();
+    let tr = crate::mce::parmce::trace_parttt(g, &sink);
+    let r = simulate(&tr, p, SIM_OVERHEAD_NS);
+    (sink.count(), r.makespan_ns as f64 / 1e9)
+}
+
+/// Measured ParMCE trace (per-vertex subproblems + inner recursion) →
+/// simulated seconds at `p` workers.
+pub fn parmce_sim_secs(g: &CsrGraph, ranking: &Ranking, p: usize) -> (u64, f64) {
+    let sink = CountSink::new();
+    let tr = crate::mce::parmce::trace(g, ranking, &sink);
+    let r = simulate(&tr, p, SIM_OVERHEAD_NS);
+    (sink.count(), r.makespan_ns as f64 / 1e9)
+}
+
+/// The same trace evaluated across thread counts (one measurement pass).
+pub fn sim_curve(tr: &Trace, threads: &[usize]) -> Vec<(usize, f64)> {
+    threads
+        .iter()
+        .map(|&p| (p, simulate(tr, p, SIM_OVERHEAD_NS).makespan_ns as f64 / 1e9))
+        .collect()
+}
+
+/// Real pool execution of ParMCE (wall clock, oversubscribed on 1 core —
+/// used to verify parallel overhead, not speedup).
+pub fn parmce_wall_secs(g: &CsrGraph, strategy: RankStrategy, threads: usize) -> (u64, f64) {
+    let pool = ThreadPool::new(threads);
+    let ranking = Arc::new(Ranking::compute(g, strategy));
+    let g = Arc::new(g.clone());
+    let sink = Arc::new(CountSink::new());
+    let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+    let (_, s) = secs(|| parmce(&pool, &g, &ranking, &dyn_sink, ParMceConfig::default()));
+    (sink.count(), s)
+}
+
+/// Real pool execution of ParTTT (wall clock).
+pub fn parttt_wall_secs(g: &CsrGraph, threads: usize) -> (u64, f64) {
+    let pool = ThreadPool::new(threads);
+    let g = Arc::new(g.clone());
+    let sink = Arc::new(CountSink::new());
+    let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+    let (_, s) = secs(|| parttt(&pool, &g, &dyn_sink, ParTttConfig::default()));
+    (sink.count(), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn sim_and_wall_agree_on_counts() {
+        let g = generators::planted_cliques(120, 0.03, 4, 5, 8, 3);
+        let (seq, _) = run_ttt(&g);
+        let ranking = Ranking::compute(&g, RankStrategy::Degree);
+        let (sim_count, sim_secs) = parmce_sim_secs(&g, &ranking, 32);
+        let (wall_count, _) = parmce_wall_secs(&g, RankStrategy::Degree, 2);
+        let (pt_count, _) = parttt_sim_secs(&g, 32);
+        assert_eq!(seq, sim_count);
+        assert_eq!(seq, wall_count);
+        assert_eq!(seq, pt_count);
+        assert!(sim_secs > 0.0);
+    }
+}

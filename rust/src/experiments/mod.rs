@@ -1,0 +1,70 @@
+//! Experiment harness: one entry point per table/figure of the paper's §6
+//! (see DESIGN.md per-experiment index).  Each experiment returns rendered
+//! markdown (also written to `results/`) with the same rows/series the
+//! paper reports; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Multi-core scaling columns are produced by the trace-replay scheduler
+//! simulator (`coordinator::sim`) — this testbed exposes one hardware
+//! thread (DESIGN.md "Substitutions" item 1).
+
+pub mod ablation;
+pub mod compare;
+pub mod dynamic;
+pub mod fixtures;
+pub mod statics;
+
+use anyhow::{bail, Result};
+
+use crate::graph::datasets::Scale;
+
+/// Per-task scheduling overhead charged in simulations (spawn + steal on
+/// the pool, measured in `benches/scaling.rs`; a conservative round value).
+pub const SIM_OVERHEAD_NS: u64 = 500;
+
+/// Thread counts used across scaling figures (paper: up to 32 cores).
+pub const THREADS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+pub fn run(id: &str, scale: Scale, out_dir: &str) -> Result<String> {
+    let md = match id {
+        "table3" => statics::table3(scale),
+        "table4" => statics::table4(scale),
+        "table5" => statics::table5(scale),
+        "fig2" => statics::fig2(scale),
+        "fig5" => statics::fig5(scale),
+        "fig6" => statics::fig6(scale),
+        "fig7" => statics::fig7(scale),
+        "table6" => dynamic::table6(scale),
+        "fig8" => dynamic::fig8(scale),
+        "fig9" => dynamic::fig9(scale),
+        "table7" => compare::table7(scale),
+        "table8" => compare::table8(scale),
+        "table9" => compare::table9(scale),
+        "table10" => compare::table10(scale),
+        "ablation" => ablation::all(scale),
+        _ => bail!(
+            "unknown experiment {id}; known: table3-10, fig2, fig5-9, ablation, all"
+        ),
+    }?;
+    let path = format!("{out_dir}/{id}.md");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&path, &md)?;
+    eprintln!("wrote {path}");
+    Ok(md)
+}
+
+pub const ALL_IDS: [&str; 15] = [
+    "table3", "fig2", "fig5", "table4", "table5", "fig6", "fig7", "table6", "fig8", "fig9",
+    "table7", "table8", "table9", "table10", "ablation",
+];
+
+pub fn run_all(scale: Scale, out_dir: &str) -> Result<String> {
+    let mut out = String::new();
+    for id in ALL_IDS {
+        eprintln!("=== running {id} ===");
+        out.push_str(&run(id, scale, out_dir)?);
+        out.push('\n');
+    }
+    Ok(out)
+}

@@ -1,0 +1,182 @@
+//! Dynamic adjacency structure for the incremental algorithms (§5).
+//!
+//! Neighbour lists are kept as sorted `Vec<u32>` so the same `util::vset`
+//! set algebra used on CSR slices works on a graph that changes between
+//! batches.  Mutation is single-threaded (between batches, Figure 4's
+//! "update graph" step); reads during enumeration are shared.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::{norm_edge, Edge, Vertex};
+use crate::util::vset;
+
+#[derive(Clone, Debug, Default)]
+pub struct DynGraph {
+    adj: Vec<Vec<Vertex>>,
+    m: usize,
+}
+
+impl DynGraph {
+    pub fn new(n: usize) -> Self {
+        DynGraph {
+            adj: vec![Vec::new(); n],
+            m: 0,
+        }
+    }
+
+    pub fn from_csr(g: &CsrGraph) -> Self {
+        DynGraph {
+            adj: (0..g.n()).map(|v| g.neighbors(v as Vertex).to_vec()).collect(),
+            m: g.m(),
+        }
+    }
+
+    pub fn to_csr(&self) -> CsrGraph {
+        let mut edges = Vec::with_capacity(self.m);
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs {
+                if (u as Vertex) < v {
+                    edges.push((u as Vertex, v));
+                }
+            }
+        }
+        CsrGraph::from_edges(self.n(), &edges)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        &self.adj[v as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.adj[v as usize].len()
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        if u == v {
+            return false;
+        }
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        vset::contains(self.neighbors(a), b)
+    }
+
+    /// Insert an undirected edge; true if the graph changed.
+    pub fn insert_edge(&mut self, u: Vertex, v: Vertex) -> bool {
+        let Some((a, b)) = norm_edge(u, v) else {
+            return false;
+        };
+        debug_assert!((b as usize) < self.n(), "vertex {b} out of range");
+        if vset::insert_sorted(&mut self.adj[a as usize], b) {
+            vset::insert_sorted(&mut self.adj[b as usize], a);
+            self.m += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove an undirected edge; true if the graph changed.
+    pub fn remove_edge(&mut self, u: Vertex, v: Vertex) -> bool {
+        let Some((a, b)) = norm_edge(u, v) else {
+            return false;
+        };
+        if vset::remove_sorted(&mut self.adj[a as usize], b) {
+            vset::remove_sorted(&mut self.adj[b as usize], a);
+            self.m -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert a batch; returns the edges that were actually new, normalized.
+    pub fn insert_batch(&mut self, edges: &[(Vertex, Vertex)]) -> Vec<Edge> {
+        let mut added = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if self.insert_edge(u, v) {
+                added.push(norm_edge(u, v).unwrap());
+            }
+        }
+        added
+    }
+
+    /// Common neighbourhood Γ(u) ∩ Γ(v).
+    pub fn common_neighbors(&self, u: Vertex, v: Vertex) -> Vec<Vertex> {
+        vset::intersect(self.neighbors(u), self.neighbors(v))
+    }
+
+    pub fn is_clique(&self, verts: &[Vertex]) -> bool {
+        for (i, &u) in verts.iter().enumerate() {
+            for &v in &verts[i + 1..] {
+                if !self.has_edge(u, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut g = DynGraph::new(4);
+        assert!(g.insert_edge(0, 1));
+        assert!(g.insert_edge(1, 2));
+        assert!(!g.insert_edge(1, 0), "duplicate rejected");
+        assert!(!g.insert_edge(2, 2), "self-loop rejected");
+        assert_eq!(g.m(), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.m(), 1);
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let edges = [(0, 1), (1, 2), (0, 2), (2, 3)];
+        let g = CsrGraph::from_edges(4, &edges);
+        let d = DynGraph::from_csr(&g);
+        assert_eq!(d.m(), 4);
+        assert_eq!(d.neighbors(2), g.neighbors(2));
+        let back = d.to_csr();
+        assert_eq!(back.edges(), g.edges());
+    }
+
+    #[test]
+    fn insert_batch_reports_new_only() {
+        let mut g = DynGraph::new(5);
+        g.insert_edge(0, 1);
+        let added = g.insert_batch(&[(1, 0), (2, 3), (3, 2), (4, 4), (0, 4)]);
+        assert_eq!(added, vec![(2, 3), (0, 4)]);
+        assert_eq!(g.m(), 3);
+    }
+
+    #[test]
+    fn common_neighbors_sorted() {
+        let mut g = DynGraph::new(6);
+        for (u, v) in [(0, 2), (0, 3), (0, 5), (1, 2), (1, 3), (1, 4)] {
+            g.insert_edge(u, v);
+        }
+        assert_eq!(g.common_neighbors(0, 1), vec![2, 3]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Immutable CSR (compressed sparse row) graph.
+//!
+//! The shared read-only structure all threads traverse concurrently — the
+//! shared-memory advantage the paper leans on (§1: one copy of the graph,
+//! no partitioning).  Neighbour lists are sorted, so set algebra on them
+//! uses `util::vset` merge/gallop routines.
+
+use crate::graph::{norm_edge, Edge, Vertex};
+use crate::util::vset;
+
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    offsets: Vec<usize>,
+    nbrs: Vec<Vertex>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list; self-loops and duplicates are dropped,
+    /// directions ignored (the paper's preprocessing, §6.1).
+    pub fn from_edges(n: usize, edges: &[(Vertex, Vertex)]) -> Self {
+        let mut norm: Vec<Edge> = edges
+            .iter()
+            .filter_map(|&(u, v)| norm_edge(u, v))
+            .collect();
+        norm.sort_unstable();
+        norm.dedup();
+        for &(u, v) in &norm {
+            assert!(
+                (u as usize) < n && (v as usize) < n,
+                "edge ({u},{v}) out of range for n={n}"
+            );
+        }
+        let mut deg = vec![0usize; n];
+        for &(u, v) in &norm {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        for d in &deg {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let mut nbrs = vec![0; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(u, v) in &norm {
+            nbrs[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            nbrs[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // per-vertex neighbour lists are sorted because `norm` was sorted
+        // lexicographically — but the (v, u) reversed inserts are not; sort.
+        for v in 0..n {
+            nbrs[offsets[v]..offsets[v + 1]].sort_unstable();
+        }
+        CsrGraph { offsets, nbrs }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.nbrs.len() / 2
+    }
+
+    /// Sorted neighbour slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        &self.nbrs[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        vset::contains(self.neighbors(a), b)
+    }
+
+    pub fn vertices(&self) -> impl Iterator<Item = Vertex> + '_ {
+        0..self.n() as Vertex
+    }
+
+    /// All edges as normalized (u < v) pairs.
+    pub fn edges(&self) -> Vec<Edge> {
+        let mut out = Vec::with_capacity(self.m());
+        for u in self.vertices() {
+            for &v in self.neighbors(u) {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v as Vertex)).max().unwrap_or(0)
+    }
+
+    pub fn density(&self) -> f64 {
+        let n = self.n() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        2.0 * self.m() as f64 / (n * (n - 1.0))
+    }
+
+    /// Is `verts` (sorted or not) a clique in this graph?
+    pub fn is_clique(&self, verts: &[Vertex]) -> bool {
+        for (i, &u) in verts.iter().enumerate() {
+            for &v in &verts[i + 1..] {
+                if u == v || !self.has_edge(u, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Is `clique` (a clique) maximal — i.e. no vertex adjacent to all of it?
+    pub fn is_maximal_clique(&self, clique: &[Vertex]) -> bool {
+        if clique.is_empty() || !self.is_clique(clique) {
+            return false;
+        }
+        // candidates = common neighbourhood of all clique members
+        let mut sorted = clique.to_vec();
+        sorted.sort_unstable();
+        let seed = *sorted
+            .iter()
+            .min_by_key(|&&v| self.degree(v))
+            .unwrap();
+        'outer: for &w in self.neighbors(seed) {
+            if vset::contains(&sorted, w) {
+                continue;
+            }
+            for &u in &sorted {
+                if !self.has_edge(u, w) {
+                    continue 'outer;
+                }
+            }
+            return false; // w extends the clique
+        }
+        true
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn heap_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>() + self.nbrs.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> CsrGraph {
+        // 0-1-2 triangle, 2-3 tail
+        CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn dedup_loops_and_directions() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 0), (1, 1), (0, 1), (1, 2)]);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = triangle_plus_tail();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+        assert!(!g.has_edge(3, 0));
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let mut edges = vec![(0, 1), (1, 2), (0, 2), (2, 3)];
+        let g = CsrGraph::from_edges(4, &edges);
+        let mut out = g.edges();
+        out.sort_unstable();
+        edges.sort_unstable();
+        assert_eq!(out, edges);
+        let g2 = CsrGraph::from_edges(4, &out);
+        assert_eq!(g2.edges(), out);
+    }
+
+    #[test]
+    fn clique_checks() {
+        let g = triangle_plus_tail();
+        assert!(g.is_clique(&[0, 1, 2]));
+        assert!(!g.is_clique(&[0, 1, 3]));
+        assert!(g.is_maximal_clique(&[0, 1, 2]));
+        assert!(!g.is_maximal_clique(&[0, 1])); // extends to the triangle
+        assert!(g.is_maximal_clique(&[2, 3]));
+        assert!(!g.is_maximal_clique(&[]));
+        assert!(!g.is_maximal_clique(&[0, 3])); // not even a clique
+    }
+
+    #[test]
+    fn density_of_complete_graph_is_one() {
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        let g = CsrGraph::from_edges(5, &edges);
+        assert!((g.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        CsrGraph::from_edges(2, &[(0, 5)]);
+    }
+}

@@ -1,0 +1,181 @@
+//! k-core decomposition / degeneracy ordering (Matula–Beck peeling).
+//!
+//! Used for (a) the degeneracy-based vertex ranking of ParMCE (§4.2) and
+//! (b) the BKDegeneracy baseline of Eppstein–Löffler–Strash (Table 10).
+//! O(n + m) bucket peeling.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+
+#[derive(Clone, Debug)]
+pub struct CoreDecomposition {
+    /// core number (degeneracy number, paper §4.2) per vertex
+    pub core: Vec<u32>,
+    /// peeling order: position i holds the i-th vertex removed
+    pub order: Vec<Vertex>,
+    /// position of each vertex in `order` (inverse permutation)
+    pub pos: Vec<u32>,
+    /// the graph degeneracy = max core number
+    pub degeneracy: u32,
+}
+
+/// Compute the core decomposition by bucket peeling.
+pub fn core_decomposition(g: &CsrGraph) -> CoreDecomposition {
+    let n = g.n();
+    let mut deg: Vec<u32> = (0..n).map(|v| g.degree(v as Vertex) as u32).collect();
+    let max_deg = deg.iter().copied().max().unwrap_or(0) as usize;
+
+    // bucket sort vertices by current degree
+    let mut bin = vec![0u32; max_deg + 2];
+    for &d in &deg {
+        bin[d as usize] += 1;
+    }
+    let mut start = 0u32;
+    for b in bin.iter_mut() {
+        let count = *b;
+        *b = start;
+        start += count;
+    }
+    let mut vert = vec![0 as Vertex; n];
+    let mut pos = vec![0u32; n];
+    {
+        let mut cursor = bin.clone();
+        for v in 0..n {
+            let d = deg[v] as usize;
+            pos[v] = cursor[d];
+            vert[cursor[d] as usize] = v as Vertex;
+            cursor[d] += 1;
+        }
+    }
+
+    let mut core = vec![0u32; n];
+    let mut degeneracy = 0u32;
+    for i in 0..n {
+        let v = vert[i];
+        let dv = deg[v as usize];
+        degeneracy = degeneracy.max(dv);
+        core[v as usize] = degeneracy;
+        // lower the degree of unpeeled neighbours
+        for &u in g.neighbors(v) {
+            let du = deg[u as usize];
+            if du > dv && (pos[u as usize] as usize) > i {
+                // swap u to the front of its bucket, then shrink its degree
+                let pu = pos[u as usize];
+                let pw = bin[du as usize];
+                let w = vert[pw as usize];
+                if u != w {
+                    vert[pu as usize] = w;
+                    vert[pw as usize] = u;
+                    pos[u as usize] = pw;
+                    pos[w as usize] = pu;
+                }
+                bin[du as usize] += 1;
+                deg[u as usize] -= 1;
+            }
+        }
+    }
+
+    CoreDecomposition {
+        core,
+        pos: {
+            let mut p = vec![0u32; n];
+            for (i, &v) in vert.iter().enumerate() {
+                p[v as usize] = i as u32;
+            }
+            p
+        },
+        order: vert,
+        degeneracy,
+    }
+}
+
+/// Vertices of the maximal k-core (possibly empty).
+pub fn k_core_vertices(decomp: &CoreDecomposition, k: u32) -> Vec<Vertex> {
+    decomp
+        .core
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c >= k)
+        .map(|(v, _)| v as Vertex)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn complete_graph_core() {
+        let g = generators::complete(6);
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 5);
+        assert!(d.core.iter().all(|&c| c == 5));
+    }
+
+    #[test]
+    fn path_graph_core_is_one() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 1);
+        assert!(d.core.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn triangle_with_tail() {
+        // triangle 0-1-2 (core 2), tail 2-3-4 (core 1)
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4)]);
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 2);
+        assert_eq!(&d.core[0..3], &[2, 2, 2]);
+        assert_eq!(&d.core[3..5], &[1, 1]);
+    }
+
+    #[test]
+    fn order_is_permutation_with_correct_pos() {
+        let g = generators::gnp(120, 0.08, 4);
+        let d = core_decomposition(&g);
+        let mut sorted = d.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..120).collect::<Vec<_>>());
+        for (i, &v) in d.order.iter().enumerate() {
+            assert_eq!(d.pos[v as usize] as usize, i);
+        }
+    }
+
+    #[test]
+    fn degeneracy_order_invariant() {
+        // In the peeling order, each vertex has ≤ degeneracy neighbours later
+        // in the order — the invariant BKDegeneracy relies on.
+        let g = generators::gnp(150, 0.06, 99);
+        let d = core_decomposition(&g);
+        for (i, &v) in d.order.iter().enumerate() {
+            let later = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| (d.pos[u as usize] as usize) > i)
+                .count();
+            assert!(
+                later <= d.degeneracy as usize,
+                "vertex {v} has {later} later neighbours > degeneracy {}",
+                d.degeneracy
+            );
+        }
+    }
+
+    #[test]
+    fn k_core_extraction() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4)]);
+        let d = core_decomposition(&g);
+        assert_eq!(k_core_vertices(&d, 2), vec![0, 1, 2]);
+        assert_eq!(k_core_vertices(&d, 1).len(), 5);
+        assert!(k_core_vertices(&d, 3).is_empty());
+    }
+
+    #[test]
+    fn moon_moser_core() {
+        let g = generators::moon_moser(4); // 12 vertices, each degree 9
+        let d = core_decomposition(&g);
+        assert_eq!(d.degeneracy, 9);
+    }
+}

@@ -1,0 +1,345 @@
+//! Synthetic graph generators.
+//!
+//! These stand in for the paper's KONECT/SNAP datasets (no network access —
+//! DESIGN.md "Substitutions" item 2) and additionally provide adversarial
+//! structures the paper references analytically (Moon–Moser graphs,
+//! near-complete graphs) for tests and ablations.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::{norm_edge, Edge, Vertex};
+use crate::util::rng::Rng;
+
+/// Erdős–Rényi G(n, p).
+pub fn gnp(n: usize, p: f64, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    if p >= 1.0 {
+        return complete(n);
+    }
+    if p > 0.0 {
+        // geometric skipping for sparse p
+        let log1p = (1.0 - p).ln();
+        let total = n * (n - 1) / 2;
+        let mut idx: i64 = -1;
+        loop {
+            let u = rng.gen_f64().max(f64::MIN_POSITIVE);
+            let skip = (u.ln() / log1p).floor() as i64 + 1;
+            idx += skip.max(1);
+            if idx as usize >= total {
+                break;
+            }
+            edges.push(pair_from_index(n, idx as usize));
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Map a linear index in [0, C(n,2)) to the corresponding (u, v), u < v.
+fn pair_from_index(n: usize, idx: usize) -> Edge {
+    // row-major over the strict upper triangle
+    let mut u = 0usize;
+    let mut remaining = idx;
+    let mut row_len = n - 1;
+    while remaining >= row_len {
+        remaining -= row_len;
+        u += 1;
+        row_len -= 1;
+    }
+    (u as Vertex, (u + 1 + remaining) as Vertex)
+}
+
+/// Complete graph K_n.
+pub fn complete(n: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n as Vertex {
+        for v in (u + 1)..n as Vertex {
+            edges.push((u, v));
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Moon–Moser graph on n = 3k vertices: complete k-partite with parts of
+/// size 3.  Has exactly 3^{n/3} maximal cliques — the worst case for MCE
+/// and the paper's exponential-change example for dynamic graphs (§5).
+pub fn moon_moser(k: usize) -> CsrGraph {
+    let n = 3 * k;
+    let mut edges = Vec::new();
+    for u in 0..n as Vertex {
+        for v in (u + 1)..n as Vertex {
+            if u / 3 != v / 3 {
+                edges.push((u, v));
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// K_n minus a single edge (the paper's O(1)-change example in §5).
+pub fn complete_minus_edge(n: usize) -> CsrGraph {
+    let mut edges = Vec::new();
+    for u in 0..n as Vertex {
+        for v in (u + 1)..n as Vertex {
+            if !(u == 0 && v == 1) {
+                edges.push((u, v));
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert preferential attachment: heavy-tailed degrees.
+pub fn barabasi_albert(n: usize, m0: usize, seed: u64) -> CsrGraph {
+    assert!(m0 >= 1 && n > m0);
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<Edge> = Vec::with_capacity(n * m0);
+    // endpoints list doubles as the preferential-attachment urn
+    let mut urn: Vec<Vertex> = Vec::with_capacity(2 * n * m0);
+    // seed clique on m0+1 vertices
+    for u in 0..=(m0 as Vertex) {
+        for v in (u + 1)..=(m0 as Vertex) {
+            edges.push((u, v));
+            urn.push(u);
+            urn.push(v);
+        }
+    }
+    for v in (m0 + 1)..n {
+        let v = v as Vertex;
+        // BTreeSet: deterministic iteration (HashSet order varies per
+        // process and would make "deterministic" graphs run-dependent)
+        let mut targets = std::collections::BTreeSet::new();
+        while targets.len() < m0 {
+            let t = urn[rng.gen_usize(urn.len())];
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((t, v));
+            urn.push(t);
+            urn.push(v);
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// RMAT power-law generator (Chakrabarti et al.) — extreme degree skew,
+/// our analog for Wiki-Talk-like subproblem imbalance (Fig. 2).
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> CsrGraph {
+    let n = 1usize << scale;
+    let m_target = n * edge_factor;
+    let (a, b, c) = (0.57, 0.19, 0.19); // standard Graph500 parameters
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m_target);
+    for _ in 0..m_target {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.gen_f64();
+            let (bu, bv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if let Some(e) = norm_edge(u as Vertex, v as Vertex) {
+            edges.push(e);
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Sparse background + planted cliques of sizes drawn from [lo, hi]:
+/// our analog for social networks with large dense communities
+/// (Orkut/LiveJournal-like: many large maximal cliques).
+pub fn planted_cliques(
+    n: usize,
+    background_p: f64,
+    num_cliques: usize,
+    lo: usize,
+    hi: usize,
+    seed: u64,
+) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let base = gnp(n, background_p, rng.next_u64());
+    let mut edges = base.edges();
+    for _ in 0..num_cliques {
+        let size = lo + rng.gen_usize(hi - lo + 1);
+        let members = rng.sample_indices(n, size.min(n));
+        for (i, &u) in members.iter().enumerate() {
+            for &v in &members[i + 1..] {
+                if let Some(e) = norm_edge(u as Vertex, v as Vertex) {
+                    edges.push(e);
+                }
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Ring of `num` cliques of size `size`, adjacent cliques sharing `overlap`
+/// vertices: a DBLP-like collaboration structure with known clique count.
+pub fn ring_of_cliques(num: usize, size: usize, overlap: usize) -> CsrGraph {
+    assert!(overlap < size, "overlap must be smaller than clique size");
+    assert!(num >= 3, "need at least 3 cliques for a ring");
+    let stride = size - overlap;
+    let n = num * stride;
+    let mut edges = Vec::new();
+    for c in 0..num {
+        let start = c * stride;
+        let members: Vec<Vertex> = (0..size).map(|i| ((start + i) % n) as Vertex).collect();
+        for (i, &u) in members.iter().enumerate() {
+            for &v in &members[i + 1..] {
+                if let Some(e) = norm_edge(u, v) {
+                    edges.push(e);
+                }
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Caveman-ish power-law community graph: power-law community sizes, dense
+/// inside, sparse across. Wikipedia-like: many mid-size maximal cliques.
+pub fn powerlaw_communities(
+    n: usize,
+    max_comm: usize,
+    intra_p: f64,
+    inter_edges_per_vertex: f64,
+    seed: u64,
+) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    let mut start = 0usize;
+    let mut communities = Vec::new();
+    while start < n {
+        let size = rng.gen_powerlaw(3, max_comm as u64, 2.2) as usize;
+        let end = (start + size).min(n);
+        communities.push((start, end));
+        // dense intra-community block
+        for u in start..end {
+            for v in (u + 1)..end {
+                if rng.gen_bool(intra_p) {
+                    edges.push((u as Vertex, v as Vertex));
+                }
+            }
+        }
+        start = end;
+    }
+    let inter = (n as f64 * inter_edges_per_vertex) as usize;
+    for _ in 0..inter {
+        let u = rng.gen_usize(n) as Vertex;
+        let v = rng.gen_usize(n) as Vertex;
+        if let Some(e) = norm_edge(u, v) {
+            edges.push(e);
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gnp_extremes() {
+        assert_eq!(gnp(10, 0.0, 1).m(), 0);
+        assert_eq!(gnp(10, 1.0, 1).m(), 45);
+    }
+
+    #[test]
+    fn gnp_edge_count_close_to_expectation() {
+        let n = 200;
+        let p = 0.1;
+        let g = gnp(n, p, 42);
+        let expect = (n * (n - 1) / 2) as f64 * p;
+        let got = g.m() as f64;
+        assert!(
+            (got - expect).abs() < 4.0 * expect.sqrt() + 10.0,
+            "m={got} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn gnp_deterministic() {
+        assert_eq!(gnp(50, 0.2, 7).edges(), gnp(50, 0.2, 7).edges());
+        assert_ne!(gnp(50, 0.2, 7).edges(), gnp(50, 0.2, 8).edges());
+    }
+
+    #[test]
+    fn pair_from_index_bijective() {
+        let n = 7;
+        let total = n * (n - 1) / 2;
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..total {
+            let (u, v) = pair_from_index(n, idx);
+            assert!(u < v && (v as usize) < n);
+            assert!(seen.insert((u, v)));
+        }
+        assert_eq!(seen.len(), total);
+    }
+
+    #[test]
+    fn moon_moser_structure() {
+        let g = moon_moser(3); // 9 vertices, parts {0,1,2},{3,4,5},{6,7,8}
+        assert_eq!(g.n(), 9);
+        assert!(!g.has_edge(0, 1), "intra-part non-edge");
+        assert!(g.has_edge(0, 3), "inter-part edge");
+        // every vertex connects to all 6 vertices of the other parts
+        assert_eq!(g.degree(4), 6);
+    }
+
+    #[test]
+    fn complete_minus_edge_shape() {
+        let g = complete_minus_edge(6);
+        assert_eq!(g.m(), 14);
+        assert!(!g.has_edge(0, 1));
+        assert!(g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn ba_degrees_heavy_tailed() {
+        let g = barabasi_albert(500, 3, 5);
+        assert_eq!(g.n(), 500);
+        assert!(g.m() >= 3 * (500 - 4));
+        // hubs exist: max degree should far exceed the attachment constant
+        assert!(g.max_degree() > 20, "max degree {}", g.max_degree());
+    }
+
+    #[test]
+    fn rmat_skew() {
+        let g = rmat(9, 8, 11);
+        assert_eq!(g.n(), 512);
+        assert!(g.m() > 512, "m={}", g.m());
+        assert!(g.max_degree() > 30, "rmat should produce hubs");
+    }
+
+    #[test]
+    fn ring_of_cliques_counts() {
+        // 5 cliques of size 6 sharing 2: maximal cliques = exactly the 5 cliques
+        let g = ring_of_cliques(5, 6, 2);
+        assert_eq!(g.n(), 20);
+        for c in 0..5usize {
+            let start = c * 4;
+            let members: Vec<Vertex> = (0..6).map(|i| ((start + i) % 20) as Vertex).collect();
+            assert!(g.is_clique(&members), "clique {c}");
+        }
+    }
+
+    #[test]
+    fn planted_cliques_contains_dense_parts() {
+        let g = planted_cliques(300, 0.01, 5, 8, 12, 3);
+        assert!(g.m() > 300);
+        assert!(g.max_degree() >= 7);
+    }
+
+    #[test]
+    fn powerlaw_communities_shape() {
+        let g = powerlaw_communities(400, 30, 0.8, 1.0, 9);
+        assert_eq!(g.n(), 400);
+        assert!(g.m() > 400);
+    }
+}

@@ -1,0 +1,80 @@
+//! Graph substrate: immutable CSR graphs, dynamic adjacency, generators,
+//! synthetic dataset analogs, degeneracy/core decomposition, triangle
+//! counting, and edge-list I/O.
+
+pub mod adj;
+pub mod csr;
+pub mod datasets;
+pub mod degeneracy;
+pub mod edgelist;
+pub mod generators;
+pub mod stats;
+pub mod triangles;
+
+/// Vertex identifier. Graphs here are simple and undirected.
+pub type Vertex = u32;
+
+/// An undirected edge, stored with u < v after normalization.
+pub type Edge = (Vertex, Vertex);
+
+/// Normalize an edge to (min, max); `None` for self-loops.
+#[inline]
+pub fn norm_edge(u: Vertex, v: Vertex) -> Option<Edge> {
+    use std::cmp::Ordering::*;
+    match u.cmp(&v) {
+        Less => Some((u, v)),
+        Greater => Some((v, u)),
+        Equal => None,
+    }
+}
+
+/// Read-only adjacency access with *sorted* neighbour slices — the shape
+/// the TTT-family set algebra needs.  Implemented by the static
+/// [`csr::CsrGraph`] and the dynamic [`adj::DynGraph`], so the sequential
+/// enumerators run unchanged on both (the incremental algorithms of §5
+/// enumerate inside a graph that mutates between batches).
+pub trait AdjacencyGraph: Sync {
+    fn n(&self) -> usize;
+    fn neighbors(&self, v: Vertex) -> &[Vertex];
+
+    #[inline]
+    fn degree(&self, v: Vertex) -> usize {
+        self.neighbors(v).len()
+    }
+}
+
+impl AdjacencyGraph for csr::CsrGraph {
+    #[inline]
+    fn n(&self) -> usize {
+        csr::CsrGraph::n(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        csr::CsrGraph::neighbors(self, v)
+    }
+}
+
+impl AdjacencyGraph for adj::DynGraph {
+    #[inline]
+    fn n(&self) -> usize {
+        adj::DynGraph::n(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        adj::DynGraph::neighbors(self, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_edge_orders_and_drops_loops() {
+        assert_eq!(norm_edge(3, 7), Some((3, 7)));
+        assert_eq!(norm_edge(7, 3), Some((3, 7)));
+        assert_eq!(norm_edge(5, 5), None);
+    }
+}

@@ -1,0 +1,74 @@
+//! Structural graph statistics (Table 3 columns that don't need MCE).
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::degeneracy;
+use crate::graph::triangles;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub density: f64,
+    pub degeneracy: u32,
+    pub triangles: u64,
+}
+
+impl GraphStats {
+    pub fn compute(g: &CsrGraph) -> Self {
+        let decomp = degeneracy::core_decomposition(g);
+        GraphStats {
+            n: g.n(),
+            m: g.m(),
+            max_degree: g.max_degree(),
+            avg_degree: if g.n() == 0 {
+                0.0
+            } else {
+                2.0 * g.m() as f64 / g.n() as f64
+            },
+            density: g.density(),
+            degeneracy: decomp.degeneracy,
+            triangles: triangles::total(g),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("n", Json::num(self.n as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("max_degree", Json::num(self.max_degree as f64)),
+            ("avg_degree", Json::num(self.avg_degree)),
+            ("density", Json::num(self.density)),
+            ("degeneracy", Json::num(self.degeneracy)),
+            ("triangles", Json::num(self.triangles as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_of_complete_graph() {
+        let g = generators::complete(10);
+        let s = GraphStats::compute(&g);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.m, 45);
+        assert_eq!(s.max_degree, 9);
+        assert!((s.avg_degree - 9.0).abs() < 1e-12);
+        assert!((s.density - 1.0).abs() < 1e-12);
+        assert_eq!(s.degeneracy, 9);
+        assert_eq!(s.triangles, 120);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let g = generators::gnp(30, 0.2, 1);
+        let j = GraphStats::compute(&g).to_json();
+        assert!(j.get("n").is_some() && j.get("degeneracy").is_some());
+    }
+}

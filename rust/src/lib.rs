@@ -1,0 +1,26 @@
+//! # parmce — shared-memory parallel maximal clique enumeration
+//!
+//! Reproduction of Das, Sanei-Mehri & Tirthapura, *"Shared-Memory Parallel
+//! Maximal Clique Enumeration from Static and Dynamic Graphs"* (ACM TOPC
+//! 2020), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the sequential [`mce::ttt`]
+//!   baseline, the work-efficient parallel [`mce::parttt`], the load-balanced
+//!   [`mce::parmce`] with degree/triangle/degeneracy rankings, and the
+//!   incremental [`dynamic`] algorithms (IMCE / ParIMCE), all running on the
+//!   in-crate work-stealing pool ([`coordinator::pool`]).
+//! * **L2/L1 (python/compile, build-time only)** — the triangle-count vertex
+//!   ranking as a blocked Pallas kernel, AOT-lowered to HLO text and executed
+//!   from Rust via PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dynamic;
+pub mod experiments;
+pub mod mce;
+pub mod graph;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,222 @@
+//! parmce CLI — the L3 coordinator entry point.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   parmce exp <id|all> [--scale tiny|small|full] [--out DIR]
+//!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
+//!   parmce stats [--dataset NAME] [--scale S]
+//!   parmce artifacts-check
+//!   parmce help
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::graph::stats::GraphStats;
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::mce::sink::{CliqueSink, CountSink};
+use parmce::mce::parmce::parmce as run_parmce;
+use parmce::mce::parttt::parttt as run_parttt;
+use parmce::mce::{ttt, ParMceConfig, ParTttConfig};
+use parmce::util::table::fmt_count;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_scale(args: &[String]) -> Result<Scale> {
+    match flag(args, "--scale").as_deref() {
+        None | Some("small") => Ok(Scale::Small),
+        Some("tiny") => Ok(Scale::Tiny),
+        Some("full") => Ok(Scale::Full),
+        Some(s) => bail!("unknown scale {s} (tiny|small|full)"),
+    }
+}
+
+fn parse_dataset(name: &str) -> Result<Dataset> {
+    Dataset::all()
+        .into_iter()
+        .find(|d| d.name() == name || d.paper_name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown dataset {name}; known: {}",
+                Dataset::all().map(|d| d.name()).join(", ")
+            )
+        })
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("exp") => {
+            let id = args.get(1).map(String::as_str).unwrap_or("all");
+            let scale = parse_scale(args)?;
+            let out = flag(args, "--out").unwrap_or_else(|| "results".into());
+            let md = if id == "all" {
+                parmce::experiments::run_all(scale, &out)?
+            } else {
+                parmce::experiments::run(id, scale, &out)?
+            };
+            println!("{md}");
+            Ok(())
+        }
+        Some("enumerate") => {
+            let dataset = flag(args, "--dataset")
+                .ok_or_else(|| anyhow!("--dataset required"))?;
+            let d = parse_dataset(&dataset)?;
+            let scale = parse_scale(args)?;
+            let algo = flag(args, "--algo").unwrap_or_else(|| "parmce-degree".into());
+            let threads: usize = flag(args, "--threads")
+                .map(|t| t.parse())
+                .transpose()?
+                .unwrap_or(4);
+            let g = d.graph(scale);
+            println!(
+                "dataset {} (n={}, m={}), algo {algo}, {threads} threads",
+                d.name(),
+                fmt_count(g.n() as u64),
+                fmt_count(g.m() as u64)
+            );
+            let t0 = std::time::Instant::now();
+            let count = match algo.as_str() {
+                "ttt" => {
+                    let sink = CountSink::new();
+                    ttt::ttt(&g, &sink);
+                    sink.count()
+                }
+                "parttt" => {
+                    let pool = ThreadPool::new(threads);
+                    let g = Arc::new(g);
+                    let sink = Arc::new(CountSink::new());
+                    let ds: Arc<dyn CliqueSink> = sink.clone();
+                    run_parttt(&pool, &g, &ds, ParTttConfig::default());
+                    sink.count()
+                }
+                a if a.starts_with("parmce") => {
+                    let strat = match a {
+                        "parmce-degree" => RankStrategy::Degree,
+                        "parmce-degen" => RankStrategy::Degeneracy,
+                        "parmce-tri" => RankStrategy::Triangle,
+                        "parmce-tri-pjrt" => RankStrategy::Triangle,
+                        _ => bail!("unknown parmce variant {a}"),
+                    };
+                    let ranking = if a == "parmce-tri-pjrt" {
+                        let engine = parmce::runtime::engine::Engine::load_default()?;
+                        let backend =
+                            parmce::runtime::tri_rank::PjrtTriangleBackend::new(&engine);
+                        Arc::new(Ranking::compute_with(&g, strat, &backend)?)
+                    } else {
+                        Arc::new(Ranking::compute(&g, strat))
+                    };
+                    let pool = ThreadPool::new(threads);
+                    let g = Arc::new(g);
+                    let sink = Arc::new(CountSink::new());
+                    let ds: Arc<dyn CliqueSink> = sink.clone();
+                    run_parmce(&pool, &g, &ranking, &ds, ParMceConfig::default());
+                    sink.count()
+                }
+                other => bail!("unknown algo {other} (ttt|parttt|parmce-degree|parmce-degen|parmce-tri|parmce-tri-pjrt)"),
+            };
+            println!(
+                "{} maximal cliques in {:.3}s",
+                fmt_count(count),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(())
+        }
+        Some("stats") => {
+            let scale = parse_scale(args)?;
+            let datasets: Vec<Dataset> = match flag(args, "--dataset") {
+                Some(name) => vec![parse_dataset(&name)?],
+                None => Dataset::all().to_vec(),
+            };
+            for d in datasets {
+                let g = d.graph(scale);
+                let s = GraphStats::compute(&g);
+                println!("{}: {}", d.name(), s.to_json());
+            }
+            Ok(())
+        }
+        Some("perf") => {
+            // L3 hot-path breakdown: TTT cost attribution (pivot vs set
+            // updates) on the two heaviest static analogs — the input to
+            // the EXPERIMENTS.md §Perf iteration log.
+            let scale = parse_scale(args)?;
+            for d in [Dataset::WikiTalkLike, Dataset::AsSkitterLike, Dataset::WikipediaLike] {
+                let g = d.graph(scale);
+                let sink = CountSink::new();
+                let mut m = parmce::mce::ttt::TttMetrics::default();
+                let mut k = Vec::new();
+                let t0 = std::time::Instant::now();
+                parmce::mce::ttt::ttt_from_metered(
+                    &g,
+                    &mut k,
+                    (0..g.n() as u32).collect(),
+                    Vec::new(),
+                    &sink,
+                    &mut m,
+                );
+                let total = t0.elapsed().as_nanos() as u64;
+                println!(
+                    "{}: total {:.1}ms | calls {} | pivot {:.1}ms ({:.0}%) | updates {:.1}ms ({:.0}%) | cliques {}",
+                    d.name(),
+                    total as f64 / 1e6,
+                    m.calls,
+                    m.pivot_ns as f64 / 1e6,
+                    100.0 * m.pivot_ns as f64 / total as f64,
+                    m.update_ns as f64 / 1e6,
+                    100.0 * m.update_ns as f64 / total as f64,
+                    fmt_count(sink.count()),
+                );
+            }
+            Ok(())
+        }
+        Some("artifacts-check") => {
+            let engine = parmce::runtime::engine::Engine::load_default()?;
+            println!("artifacts: {:?}", engine.artifact_names());
+            println!(
+                "TILE_B={} FULL_N={} PIVOT_N={}",
+                engine.constant("TILE_B")?,
+                engine.constant("FULL_N")?,
+                engine.constant("PIVOT_N")?
+            );
+            // smoke-execute the tile kernel
+            let b = engine.constant("TILE_B")?;
+            let ones = vec![1.0f32; b * b];
+            let shape = [b as i64, b as i64];
+            let out = engine.execute_f32(
+                "rank_tri_tile",
+                &[(&ones, &shape), (&ones, &shape), (&ones, &shape)],
+            )?;
+            anyhow::ensure!(out.len() == b && (out[0] - (b * b) as f32).abs() < 1e-3);
+            println!("PJRT round-trip OK ({} outputs)", out.len());
+            Ok(())
+        }
+        Some("help") | None => {
+            println!(
+                "parmce — shared-memory parallel maximal clique enumeration\n\
+                 \n\
+                 USAGE:\n\
+                 \x20 parmce exp <table3..table10|fig2|fig5..fig9|ablation|all> [--scale tiny|small|full] [--out DIR]\n\
+                 \x20 parmce enumerate --dataset NAME [--algo ttt|parttt|parmce-degree|parmce-degen|parmce-tri|parmce-tri-pjrt] [--threads N] [--scale S]\n\
+                 \x20 parmce stats [--dataset NAME] [--scale S]\n\
+                 \x20 parmce artifacts-check\n\
+                 \n\
+                 Datasets: {}",
+                Dataset::all().map(|d| d.name()).join(", ")
+            );
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other}; see `parmce help`"),
+    }
+}

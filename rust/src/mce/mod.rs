@@ -1,0 +1,17 @@
+//! Static maximal clique enumeration: the sequential TTT baseline
+//! (Tomita–Tanaka–Takahashi) and the paper's parallel algorithms
+//! ParTTT (Alg. 3) and ParMCE (Alg. 4).
+
+pub mod oracle;
+pub mod parmce;
+pub mod parttt;
+pub mod pivot;
+pub mod ranking;
+pub mod sink;
+pub mod ttt;
+
+pub use parmce::{parmce, ParMceConfig};
+pub use parttt::{parttt, ParTttConfig};
+pub use ranking::{RankStrategy, Ranking};
+pub use sink::{CliqueSink, CollectSink, CountSink};
+pub use ttt::ttt;

@@ -1,0 +1,111 @@
+//! Independent correctness oracle: plain Bron–Kerbosch (no pivot) plus an
+//! explicit maximality validator.  Deliberately shares no code with the
+//! TTT family so a bug cannot cancel itself out in tests.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+
+/// All maximal cliques, canonical form (each sorted; set sorted).
+/// Exponential — use on small graphs only (tests).
+pub fn maximal_cliques(g: &CsrGraph) -> Vec<Vec<Vertex>> {
+    let mut out = Vec::new();
+    let mut r: Vec<Vertex> = Vec::new();
+    let p: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    bk(g, &mut r, p, Vec::new(), &mut out);
+    for c in out.iter_mut() {
+        c.sort_unstable();
+    }
+    out.sort();
+    out
+}
+
+fn bk(g: &CsrGraph, r: &mut Vec<Vertex>, p: Vec<Vertex>, x: Vec<Vertex>, out: &mut Vec<Vec<Vertex>>) {
+    if p.is_empty() && x.is_empty() {
+        if !r.is_empty() {
+            out.push(r.clone());
+        }
+        return;
+    }
+    let mut p_rest = p.clone();
+    let mut x_rest = x;
+    for v in p {
+        let nbrs = g.neighbors(v);
+        let p2: Vec<Vertex> = p_rest
+            .iter()
+            .copied()
+            .filter(|u| nbrs.binary_search(u).is_ok())
+            .collect();
+        let x2: Vec<Vertex> = x_rest
+            .iter()
+            .copied()
+            .filter(|u| nbrs.binary_search(u).is_ok())
+            .collect();
+        r.push(v);
+        bk(g, r, p2, x2, out);
+        r.pop();
+        p_rest.retain(|&u| u != v);
+        x_rest.push(v);
+    }
+}
+
+/// Validate that `cliques` is exactly the set of maximal cliques of `g`:
+/// each is a maximal clique, no duplicates, and none is missing (checked
+/// against the oracle). Returns an error description on failure.
+pub fn validate(g: &CsrGraph, cliques: &[Vec<Vertex>]) -> Result<(), String> {
+    let mut seen = std::collections::HashSet::new();
+    for c in cliques {
+        let mut s = c.clone();
+        s.sort_unstable();
+        if !g.is_clique(&s) {
+            return Err(format!("{s:?} is not a clique"));
+        }
+        if !g.is_maximal_clique(&s) {
+            return Err(format!("{s:?} is not maximal"));
+        }
+        if !seen.insert(s.clone()) {
+            return Err(format!("{s:?} emitted twice"));
+        }
+    }
+    let want = maximal_cliques(g);
+    if seen.len() != want.len() {
+        return Err(format!(
+            "count mismatch: got {} unique cliques, oracle has {}",
+            seen.len(),
+            want.len()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn oracle_on_triangle_tail() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        assert_eq!(maximal_cliques(&g), vec![vec![0, 1, 2], vec![2, 3]]);
+    }
+
+    #[test]
+    fn oracle_moon_moser() {
+        let g = generators::moon_moser(3);
+        assert_eq!(maximal_cliques(&g).len(), 27);
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let good = vec![vec![0, 1, 2], vec![2, 3]];
+        assert!(validate(&g, &good).is_ok());
+        // non-maximal
+        assert!(validate(&g, &[vec![0, 1], vec![2, 3]]).is_err());
+        // duplicate
+        assert!(validate(&g, &[vec![0, 1, 2], vec![0, 1, 2], vec![2, 3]]).is_err());
+        // missing
+        assert!(validate(&g, &[vec![0, 1, 2]]).is_err());
+        // not a clique
+        assert!(validate(&g, &[vec![0, 3], vec![0, 1, 2]]).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! ParMCE (paper Algorithm 4): rank-ordered per-vertex decomposition with
+//! ParTTT inside each subproblem.
+//!
+//! For every vertex v a subproblem (K = {v}, cand = higher-ranked
+//! neighbours, fini = lower-ranked neighbours) enumerates exactly the
+//! maximal cliques whose lowest-ranked member is v — so the union over v is
+//! exact and duplicate-free, and the rank function (degree / triangle /
+//! degeneracy) shrinks the share of expensive vertices (load balancing à la
+//! PECO, but with nested parallelism inside each subproblem).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::sim::Trace;
+use crate::coordinator::stats::Subproblem;
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+use crate::mce::parttt::{spawn_subtree, ParTttConfig};
+use crate::mce::ranking::Ranking;
+use crate::mce::sink::{CliqueSink, CountSink};
+use crate::mce::ttt;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParMceConfig {
+    pub parttt: ParTttConfig,
+}
+
+/// Enumerate all maximal cliques of `g` into `sink` (Algorithm 4).
+pub fn parmce(
+    pool: &ThreadPool,
+    g: &Arc<CsrGraph>,
+    ranking: &Arc<Ranking>,
+    sink: &Arc<dyn CliqueSink>,
+    cfg: ParMceConfig,
+) {
+    pool.scope(|s| {
+        for v in 0..g.n() as Vertex {
+            let (cand, fini) = ranking.split_neighbors(g, v);
+            spawn_subtree(
+                s,
+                Arc::clone(g),
+                vec![v],
+                cand,
+                fini,
+                Arc::clone(sink),
+                cfg.parttt,
+            );
+        }
+    });
+}
+
+/// Run every per-vertex subproblem *sequentially*, timing each — the
+/// methodology behind Figure 2's imbalance data and the trace source for
+/// the Figure 6/7 scheduler simulation.
+pub fn subproblems_timed(g: &CsrGraph, ranking: &Ranking) -> Vec<Subproblem> {
+    let mut out = Vec::with_capacity(g.n());
+    for v in 0..g.n() as Vertex {
+        let (cand, fini) = ranking.split_neighbors(g, v);
+        let sink = CountSink::new();
+        let mut k = vec![v];
+        let t0 = Instant::now();
+        ttt::ttt_from(g, &mut k, cand, fini, &sink);
+        out.push(Subproblem {
+            vertex: v,
+            cliques: sink.count(),
+            ns: t0.elapsed().as_nanos() as u64,
+        });
+    }
+    out
+}
+
+/// Record the full ParMCE task tree (root → per-vertex subproblems → TTT
+/// recursion) with measured exclusive durations, for `coordinator::sim`.
+pub fn trace(g: &CsrGraph, ranking: &Ranking, sink: &dyn CliqueSink) -> Trace {
+    let mut tr = Trace::new();
+    let root = tr.push(None, 0);
+    for v in 0..g.n() as Vertex {
+        let (cand, fini) = ranking.split_neighbors(g, v);
+        let mut k = vec![v];
+        ttt::ttt_traced(g, &mut k, cand, fini, sink, &mut tr, Some(root));
+    }
+    tr
+}
+
+/// Record the ParTTT task tree (single root task over the whole graph).
+pub fn trace_parttt(g: &CsrGraph, sink: &dyn CliqueSink) -> Trace {
+    let mut tr = Trace::new();
+    let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    let mut k = Vec::new();
+    ttt::ttt_traced(g, &mut k, cand, Vec::new(), sink, &mut tr, None);
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::mce::ranking::RankStrategy;
+    use crate::mce::sink::CollectSink;
+
+    fn run_parmce(g: CsrGraph, strategy: RankStrategy, threads: usize) -> Vec<Vec<Vertex>> {
+        let pool = ThreadPool::new(threads);
+        let ranking = Arc::new(Ranking::compute(&g, strategy));
+        let g = Arc::new(g);
+        let sink = Arc::new(CollectSink::new());
+        let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+        parmce(&pool, &g, &ranking, &dyn_sink, ParMceConfig::default());
+        drop(dyn_sink);
+        Arc::try_unwrap(sink).ok().unwrap().into_canonical()
+    }
+
+    #[test]
+    fn triangle_tail_all_strategies() {
+        for s in [
+            RankStrategy::Id,
+            RankStrategy::Degree,
+            RankStrategy::Triangle,
+            RankStrategy::Degeneracy,
+        ] {
+            let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+            assert_eq!(
+                run_parmce(g, s, 3),
+                vec![vec![0, 1, 2], vec![2, 3]],
+                "{s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_duplicates_across_subproblems() {
+        // overlapping cliques are the dangerous case for per-vertex splits
+        let g = generators::ring_of_cliques(6, 5, 2);
+        let cliques = run_parmce(g.clone(), RankStrategy::Degree, 4);
+        let mut dedup = cliques.clone();
+        dedup.dedup();
+        assert_eq!(cliques.len(), dedup.len(), "duplicate maximal cliques emitted");
+        oracle::validate(&g, &cliques).unwrap();
+    }
+
+    #[test]
+    fn matches_oracle_randomized_all_strategies() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 51, iters: 12 },
+            |rng, level| {
+                let n = 6 + rng.gen_usize(16 >> level.min(2));
+                let g = generators::gnp(n, 0.5, rng.next_u64());
+                let strat = match rng.gen_usize(4) {
+                    0 => RankStrategy::Id,
+                    1 => RankStrategy::Degree,
+                    2 => RankStrategy::Triangle,
+                    _ => RankStrategy::Degeneracy,
+                };
+                (g, strat)
+            },
+            |(g, strat)| {
+                let got = run_parmce(g.clone(), *strat, 2);
+                let want = oracle::maximal_cliques(g);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("{strat:?}: got {}, want {}", got.len(), want.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn isolated_vertices_are_cliques() {
+        let g = CsrGraph::from_edges(3, &[(0, 1)]);
+        assert_eq!(
+            run_parmce(g, RankStrategy::Degree, 2),
+            vec![vec![0, 1], vec![2]]
+        );
+    }
+
+    #[test]
+    fn subproblems_cover_all_cliques_exactly_once() {
+        let g = generators::planted_cliques(150, 0.03, 5, 5, 8, 77);
+        let ranking = Ranking::compute(&g, RankStrategy::Degree);
+        let subs = subproblems_timed(&g, &ranking);
+        let total: u64 = subs.iter().map(|s| s.cliques).sum();
+        let seq = CountSink::new();
+        ttt::ttt(&g, &seq);
+        assert_eq!(total, seq.count());
+        assert_eq!(subs.len(), g.n());
+    }
+
+    #[test]
+    fn trace_covers_full_enumeration() {
+        let g = generators::gnp(40, 0.3, 3);
+        let ranking = Ranking::compute(&g, RankStrategy::Degree);
+        let sink = CountSink::new();
+        let tr = trace(&g, &ranking, &sink);
+        let seq = CountSink::new();
+        ttt::ttt(&g, &seq);
+        assert_eq!(sink.count(), seq.count());
+        assert!(tr.len() > g.n(), "trace has per-vertex tasks plus recursion");
+        // replaying the trace on 1 worker is just the total work
+        let r = crate::coordinator::sim::simulate(&tr, 1, 0);
+        assert_eq!(r.makespan_ns, tr.work_ns());
+    }
+}

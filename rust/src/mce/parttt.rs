@@ -1,0 +1,223 @@
+//! ParTTT (paper Algorithm 3): work-efficient parallelization of TTT.
+//!
+//! The loop-carried dependency of Algorithm 1 (cand/fini evolve across
+//! iterations) is removed by *unrolling*: with ext = ⟨v₁…v_κ⟩ in a fixed
+//! order, iteration i explicitly computes
+//!
+//! ```text
+//! cand_i = (cand \ ext[..i]) ∩ Γ(vᵢ)
+//! fini_i = (fini ∪ ext[..i]) ∩ Γ(vᵢ)
+//! ```
+//!
+//! so every recursive call is independent and forked onto the
+//! work-stealing pool.  Below `seq_cutoff` the task falls back to
+//! sequential TTT — the granularity control that keeps the O(n) unrolling
+//! overhead (Lemma 2) from dominating at the bottom of the recursion.
+
+use std::sync::Arc;
+
+use crate::coordinator::pool::{ScopeHandle, ThreadPool};
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+use crate::mce::pivot::{choose_pivot, par_pivot};
+use crate::mce::sink::CliqueSink;
+use crate::mce::ttt;
+use crate::util::vset;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ParTttConfig {
+    /// |cand| + |fini| at or below which the task runs sequential TTT.
+    pub seq_cutoff: usize,
+    /// |cand ∪ fini| above which the pivot itself is computed in parallel
+    /// (ParPivot, Algorithm 2); below, sequential pivoting is cheaper.
+    pub par_pivot_min: usize,
+}
+
+impl Default for ParTttConfig {
+    fn default() -> Self {
+        ParTttConfig {
+            seq_cutoff: 32,
+            par_pivot_min: 4096,
+        }
+    }
+}
+
+/// Enumerate all maximal cliques of `g` into `sink` using the pool.
+pub fn parttt(
+    pool: &ThreadPool,
+    g: &Arc<CsrGraph>,
+    sink: &Arc<dyn CliqueSink>,
+    cfg: ParTttConfig,
+) {
+    if g.n() == 0 {
+        return;
+    }
+    let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    pool.scope(|s| {
+        spawn_subtree(s, Arc::clone(g), Vec::new(), cand, Vec::new(), Arc::clone(sink), cfg);
+    });
+}
+
+/// Fork the enumeration of the (k, cand, fini) subtree into `scope`.
+/// Shared by ParTTT (root = whole graph) and ParMCE (root = one vertex's
+/// subproblem) — the "additional recursive level of parallelism" of §4.2.
+pub(crate) fn spawn_subtree(
+    scope: &ScopeHandle,
+    g: Arc<CsrGraph>,
+    k: Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: Arc<dyn CliqueSink>,
+    cfg: ParTttConfig,
+) {
+    scope.spawn(move |s| run_task(s, g, k, cand, fini, sink, cfg));
+}
+
+fn run_task(
+    scope: &ScopeHandle,
+    g: Arc<CsrGraph>,
+    mut k: Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: Arc<dyn CliqueSink>,
+    cfg: ParTttConfig,
+) {
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(&k);
+        }
+        return;
+    }
+    // granularity control: small subproblems run sequentially in-task
+    if cand.len() + fini.len() <= cfg.seq_cutoff {
+        ttt::ttt_from(g.as_ref(), &mut k, cand, fini, sink.as_ref());
+        return;
+    }
+
+    // Line 3: pivot — parallel above the threshold (Algorithm 2).
+    let pivot = if cand.len() + fini.len() >= cfg.par_pivot_min {
+        let cand_arc = Arc::new(cand.clone());
+        let fini_arc = Arc::new(fini.clone());
+        par_pivot(scope.pool(), &g, &cand_arc, &fini_arc)
+    } else {
+        choose_pivot(g.as_ref(), &cand, &fini)
+    };
+
+    // Line 4: ext = cand − Γ(pivot), in cand's (sorted) order.
+    let ext = vset::difference(&cand, g.neighbors(pivot));
+
+    // Lines 5–10, unrolled: iteration i sees cand \ ext[..i], fini ∪ ext[..i].
+    let mut buf = Vec::new();
+    for (i, &q) in ext.iter().enumerate() {
+        let nbrs = g.neighbors(q);
+        // cand_q = (cand ∩ Γ(q)) \ ext[..i]   (ext[..i] is sorted)
+        vset::intersect_into(&cand, nbrs, &mut buf);
+        let cand_q = vset::difference(&buf, &ext[..i]);
+        // fini_q = (fini ∩ Γ(q)) ∪ (ext[..i] ∩ Γ(q))
+        vset::intersect_into(&fini, nbrs, &mut buf);
+        let fini_q = vset::union(&buf, &vset::intersect(&ext[..i], nbrs));
+
+        let mut k_q = Vec::with_capacity(k.len() + 1);
+        k_q.extend_from_slice(&k);
+        k_q.push(q);
+
+        spawn_subtree(
+            scope,
+            Arc::clone(&g),
+            k_q,
+            cand_q,
+            fini_q,
+            Arc::clone(&sink),
+            cfg,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::mce::sink::{CollectSink, CountSink};
+
+    fn run_parttt(g: CsrGraph, threads: usize, cfg: ParTttConfig) -> Vec<Vec<Vertex>> {
+        let pool = ThreadPool::new(threads);
+        let g = Arc::new(g);
+        let sink = Arc::new(CollectSink::new());
+        let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+        parttt(&pool, &g, &dyn_sink, cfg);
+        drop(dyn_sink);
+        Arc::try_unwrap(sink).ok().unwrap().into_canonical()
+    }
+
+    #[test]
+    fn matches_ttt_on_small_graphs() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        assert_eq!(
+            run_parttt(g, 4, ParTttConfig::default()),
+            vec![vec![0, 1, 2], vec![2, 3]]
+        );
+    }
+
+    #[test]
+    fn zero_cutoff_forces_full_parallel_recursion() {
+        // cutoff 0: every recursive call is its own task — stresses the
+        // unrolled cand/fini computation itself.
+        let cfg = ParTttConfig {
+            seq_cutoff: 0,
+            par_pivot_min: 8, // force the ParPivot path too
+        };
+        let g = generators::moon_moser(3);
+        let cliques = run_parttt(g, 4, cfg);
+        assert_eq!(cliques.len(), 27);
+    }
+
+    #[test]
+    fn matches_oracle_randomized() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 41, iters: 15 },
+            |rng, level| {
+                let n = 6 + rng.gen_usize(16 >> level.min(2));
+                generators::gnp(n, 0.4 + 0.3 * rng.gen_f64(), rng.next_u64())
+            },
+            |g| {
+                let got = run_parttt(
+                    g.clone(),
+                    3,
+                    ParTttConfig {
+                        seq_cutoff: 2,
+                        par_pivot_min: 4096,
+                    },
+                );
+                let want = oracle::maximal_cliques(g);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {}, want {}", got.len(), want.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn larger_graph_count_matches_sequential() {
+        let g = generators::planted_cliques(300, 0.02, 8, 6, 10, 13);
+        let seq = CountSink::new();
+        crate::mce::ttt::ttt(&g, &seq);
+
+        let pool = ThreadPool::new(4);
+        let g = Arc::new(g);
+        let sink = Arc::new(CountSink::new());
+        let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
+        parttt(&pool, &g, &dyn_sink, ParTttConfig::default());
+        assert_eq!(sink.count(), seq.count());
+        assert!(sink.count() > 0);
+    }
+
+    #[test]
+    fn single_thread_correct() {
+        let g = generators::moon_moser(4);
+        let cliques = run_parttt(g, 1, ParTttConfig::default());
+        assert_eq!(cliques.len(), 81);
+    }
+}

@@ -1,0 +1,181 @@
+//! Pivot selection (paper Algorithm 2, `ParPivot`).
+//!
+//! TTT's pruning ingredient: pick u ∈ cand ∪ fini maximizing |cand ∩ Γ(u)|,
+//! then only extend by cand \ Γ(u).  The sequential version carries a
+//! best-so-far lower bound so candidates whose degree already loses are
+//! skipped without touching their adjacency (this is the dominant cost of
+//! TTT; see EXPERIMENTS.md §Perf).  The parallel version partitions the
+//! score computation across pool workers (Lemma 1: work-efficient,
+//! O(log n) depth).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::graph::csr::CsrGraph;
+use crate::graph::{AdjacencyGraph, Vertex};
+use crate::util::vset;
+
+/// Sequential pivot choice over cand ∪ fini. Returns the pivot vertex.
+/// Assumes `cand` is non-empty or `fini` is non-empty.
+pub fn choose_pivot<G: AdjacencyGraph + ?Sized>(g: &G, cand: &[Vertex], fini: &[Vertex]) -> Vertex {
+    debug_assert!(!cand.is_empty() || !fini.is_empty());
+    // §Perf optimization 2: seed the scan with the vertex of maximal
+    // upper bound min(deg(u), |cand|) — its (usually high) score makes the
+    // early-exit bound below prune most of the remaining intersections.
+    let seed = cand
+        .iter()
+        .chain(fini)
+        .copied()
+        .max_by_key(|&u| g.degree(u).min(cand.len()))
+        .expect("cand ∪ fini must be non-empty");
+    let mut best_v = seed;
+    let mut best_score = vset::intersection_count(cand, g.neighbors(seed));
+    let mut consider = |u: Vertex| {
+        if u == seed {
+            return;
+        }
+        let nbrs = g.neighbors(u);
+        // upper bound: can't beat best_score → skip the intersection
+        if nbrs.len().min(cand.len()) <= best_score {
+            return;
+        }
+        let score = vset::intersection_count(cand, nbrs);
+        if score > best_score {
+            best_v = u;
+            best_score = score;
+        }
+    };
+    for &u in cand {
+        consider(u);
+    }
+    for &u in fini {
+        consider(u);
+    }
+    best_v
+}
+
+/// Parallel pivot (Algorithm 2): score all u ∈ cand ∪ fini on the pool,
+/// then argmax.  Scores are packed into an AtomicU64 as (score << 32 | v̄)
+/// so the argmax reduction is a lock-free `fetch_max`; ties resolve to the
+/// *smallest* vertex id (v̄ = !v), matching the sequential tie-break of
+/// first-in-iteration-order only up to ties — callers must not rely on a
+/// specific pivot among equals, only on the score being maximal.
+pub fn par_pivot(
+    pool: &ThreadPool,
+    g: &Arc<CsrGraph>,
+    cand: &Arc<Vec<Vertex>>,
+    fini: &Arc<Vec<Vertex>>,
+) -> Vertex {
+    let best: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
+    let total = cand.len() + fini.len();
+    debug_assert!(total > 0);
+    let chunk = total.div_ceil(pool.num_threads() * 4).max(16);
+    pool.scope(|s| {
+        let mut start = 0;
+        while start < total {
+            let end = (start + chunk).min(total);
+            let g = Arc::clone(g);
+            let cand = Arc::clone(cand);
+            let fini = Arc::clone(fini);
+            let best = Arc::clone(&best);
+            s.spawn(move |_| {
+                let mut local_best = 0u64;
+                for i in start..end {
+                    let u = if i < cand.len() {
+                        cand[i]
+                    } else {
+                        fini[i - cand.len()]
+                    };
+                    let score = vset::intersection_count(&cand, g.neighbors(u));
+                    let packed = ((score as u64) << 32) | (!u as u64 & 0xFFFF_FFFF);
+                    local_best = local_best.max(packed);
+                }
+                best.fetch_max(local_best, Ordering::Relaxed);
+            });
+            start = end;
+        }
+    });
+    let packed = best.load(Ordering::Relaxed);
+    !(packed as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    /// Naive max score for cross-checking.
+    fn max_score(g: &CsrGraph, cand: &[Vertex], fini: &[Vertex]) -> usize {
+        cand.iter()
+            .chain(fini)
+            .map(|&u| vset::intersection_count(cand, g.neighbors(u)))
+            .max()
+            .unwrap()
+    }
+
+    #[test]
+    fn pivot_maximizes_cand_coverage() {
+        // star center covers all of cand
+        let g = CsrGraph::from_edges(6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)]);
+        let cand: Vec<Vertex> = vec![1, 2, 3, 4, 5];
+        let p = choose_pivot(&g, &cand, &[0]);
+        // only vertex 0 has score 5; every leaf has score 0
+        assert_eq!(p, 0);
+    }
+
+    #[test]
+    fn seq_pivot_score_is_maximal_randomized() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 21, iters: 40 },
+            |rng, level| {
+                let n = 8 + rng.gen_usize(40 >> level);
+                let g = generators::gnp(n, 0.3, rng.next_u64());
+                let cand: Vec<Vertex> =
+                    (0..n as Vertex).filter(|_| rng.gen_bool(0.5)).collect();
+                let fini: Vec<Vertex> = (0..n as Vertex)
+                    .filter(|v| !cand.contains(v))
+                    .filter(|_| rng.gen_bool(0.3))
+                    .collect();
+                (g, cand, fini)
+            },
+            |(g, cand, fini)| {
+                if cand.is_empty() && fini.is_empty() {
+                    return Ok(());
+                }
+                let p = choose_pivot(g, cand, fini);
+                let got = vset::intersection_count(cand, g.neighbors(p));
+                let want = max_score(g, cand, fini);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("pivot score {got} < max {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn par_pivot_matches_seq_score() {
+        let pool = ThreadPool::new(4);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..20 {
+            let n = 20 + rng.gen_usize(60);
+            let g = Arc::new(generators::gnp(n, 0.25, rng.next_u64()));
+            let cand: Arc<Vec<Vertex>> =
+                Arc::new((0..n as Vertex).filter(|_| rng.gen_bool(0.6)).collect());
+            let fini: Arc<Vec<Vertex>> = Arc::new(
+                (0..n as Vertex)
+                    .filter(|v| !cand.contains(v))
+                    .filter(|_| rng.gen_bool(0.4))
+                    .collect(),
+            );
+            if cand.is_empty() && fini.is_empty() {
+                continue;
+            }
+            let p = par_pivot(&pool, &g, &cand, &fini);
+            let got = vset::intersection_count(&cand, g.neighbors(p));
+            assert_eq!(got, max_score(&g, &cand, &fini));
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Vertex rankings for ParMCE's per-vertex subproblem decomposition (§4.2).
+//!
+//! rank(v) = (metric(v), id(v)) lexicographically; vertex v's subproblem
+//! enumerates exactly the maximal cliques in which v is the *lowest-ranked*
+//! member, so a higher rank means a smaller share — the PECO-style load
+//! balancing idea.  Metrics: degree (free), triangle count (CPU forward
+//! algorithm or the AOT Pallas kernel via [`TriangleBackend`]), degeneracy
+//! (O(n+m) peeling).
+
+use anyhow::Result;
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::{degeneracy, triangles, Vertex};
+
+/// Which vertex-ordering metric ParMCE uses (ParMCEDegree / Tri / Degen).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RankStrategy {
+    /// identifier only (ablation baseline; not in the paper's tables)
+    Id,
+    /// degree-based — "available for free when the input graph is read"
+    Degree,
+    /// triangle-count-based
+    Triangle,
+    /// degeneracy-number-based (Eppstein et al. ordering)
+    Degeneracy,
+}
+
+impl RankStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankStrategy::Id => "Id",
+            RankStrategy::Degree => "Degree",
+            RankStrategy::Triangle => "Tri",
+            RankStrategy::Degeneracy => "Degen",
+        }
+    }
+}
+
+/// Pluggable triangle-count provider: CPU forward algorithm, or the
+/// PJRT-executed Pallas kernel (`runtime::tri_rank::PjrtTriangleBackend`).
+/// Ranking computation is a single-threaded pre-pass (the paper computes
+/// rankings sequentially too, §6.2), so implementations need not be Sync —
+/// which lets the Rc-based PJRT client implement it directly.
+pub trait TriangleBackend {
+    fn per_vertex(&self, g: &CsrGraph) -> Result<Vec<u64>>;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's sequential CPU routine (§6.2).
+pub struct CpuTriangleBackend;
+
+impl TriangleBackend for CpuTriangleBackend {
+    fn per_vertex(&self, g: &CsrGraph) -> Result<Vec<u64>> {
+        Ok(triangles::per_vertex(g))
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-forward"
+    }
+}
+
+/// A computed total order on vertices.
+#[derive(Clone, Debug)]
+pub struct Ranking {
+    /// metric value per vertex; ties broken by id
+    metric: Vec<u64>,
+    strategy: RankStrategy,
+}
+
+impl Ranking {
+    /// Compute with the default (CPU) backends.
+    pub fn compute(g: &CsrGraph, strategy: RankStrategy) -> Ranking {
+        Self::compute_with(g, strategy, &CpuTriangleBackend).expect("CPU backends are infallible")
+    }
+
+    /// Compute with an explicit triangle backend (PJRT offload path).
+    pub fn compute_with(
+        g: &CsrGraph,
+        strategy: RankStrategy,
+        tri: &dyn TriangleBackend,
+    ) -> Result<Ranking> {
+        let metric = match strategy {
+            RankStrategy::Id => vec![0; g.n()],
+            RankStrategy::Degree => (0..g.n()).map(|v| g.degree(v as Vertex) as u64).collect(),
+            RankStrategy::Triangle => tri.per_vertex(g)?,
+            RankStrategy::Degeneracy => degeneracy::core_decomposition(g)
+                .core
+                .iter()
+                .map(|&c| c as u64)
+                .collect(),
+        };
+        Ok(Ranking { metric, strategy })
+    }
+
+    /// Construct from an explicit metric vector (ablation studies that
+    /// test non-paper orderings, e.g. inverted degree).
+    pub fn from_metric(metric: Vec<u64>) -> Ranking {
+        Ranking {
+            metric,
+            strategy: RankStrategy::Id,
+        }
+    }
+
+    pub fn strategy(&self) -> RankStrategy {
+        self.strategy
+    }
+
+    /// rank(v) > rank(w)?
+    #[inline]
+    pub fn higher(&self, v: Vertex, w: Vertex) -> bool {
+        (self.metric[v as usize], v) > (self.metric[w as usize], w)
+    }
+
+    /// Split Γ(v) into (cand, fini) for v's subproblem (Alg. 4 lines 4–6):
+    /// higher-ranked neighbours go to cand, lower-ranked to fini.
+    pub fn split_neighbors(&self, g: &CsrGraph, v: Vertex) -> (Vec<Vertex>, Vec<Vertex>) {
+        let mut cand = Vec::new();
+        let mut fini = Vec::new();
+        for &w in g.neighbors(v) {
+            if self.higher(w, v) {
+                cand.push(w);
+            } else {
+                fini.push(w);
+            }
+        }
+        (cand, fini)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn total_order_antisymmetric() {
+        let g = generators::gnp(50, 0.2, 1);
+        for s in [
+            RankStrategy::Id,
+            RankStrategy::Degree,
+            RankStrategy::Triangle,
+            RankStrategy::Degeneracy,
+        ] {
+            let r = Ranking::compute(&g, s);
+            for v in 0..50u32 {
+                for w in 0..50u32 {
+                    if v != w {
+                        assert!(
+                            r.higher(v, w) ^ r.higher(w, v),
+                            "{s:?}: exactly one of rank(v)>rank(w), rank(w)>rank(v)"
+                        );
+                    } else {
+                        assert!(!r.higher(v, w));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degree_ranking_orders_by_degree() {
+        // star: center has max degree
+        let g = CsrGraph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let r = Ranking::compute(&g, RankStrategy::Degree);
+        for leaf in 1..5u32 {
+            assert!(r.higher(0, leaf));
+        }
+    }
+
+    #[test]
+    fn split_neighbors_partitions() {
+        let g = generators::gnp(40, 0.3, 7);
+        let r = Ranking::compute(&g, RankStrategy::Degree);
+        for v in 0..40u32 {
+            let (cand, fini) = r.split_neighbors(&g, v);
+            assert_eq!(cand.len() + fini.len(), g.degree(v));
+            for &w in &cand {
+                assert!(r.higher(w, v));
+            }
+            for &w in &fini {
+                assert!(r.higher(v, w));
+            }
+            // sorted outputs (neighbor order is preserved)
+            assert!(cand.windows(2).all(|w| w[0] < w[1]));
+            assert!(fini.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn triangle_backend_names() {
+        assert_eq!(CpuTriangleBackend.name(), "cpu-forward");
+        let g = generators::complete(5);
+        let counts = CpuTriangleBackend.per_vertex(&g).unwrap();
+        assert_eq!(counts, vec![6; 5]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Clique sinks: where enumerated maximal cliques go.
+//!
+//! Enumeration is output-dominated (Orkut: 2.27 *billion* maximal cliques),
+//! so algorithms never materialize the result set unless asked: they emit
+//! each clique into a `CliqueSink` that counts, histograms, collects, or
+//! forwards — all thread-safe, since ParTTT/ParMCE emit from pool workers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::Vertex;
+
+/// Receiver for enumerated maximal cliques. Implementations must tolerate
+/// concurrent `emit` calls from multiple worker threads.
+pub trait CliqueSink: Sync + Send {
+    fn emit(&self, clique: &[Vertex]);
+}
+
+/// Counts cliques (the default for benchmarks — O(1) memory).
+#[derive(Default)]
+pub struct CountSink {
+    count: AtomicU64,
+}
+
+impl CountSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl CliqueSink for CountSink {
+    #[inline]
+    fn emit(&self, _clique: &[Vertex]) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Collects every clique (tests / small graphs only).
+#[derive(Default)]
+pub struct CollectSink {
+    cliques: Mutex<Vec<Vec<Vertex>>>,
+}
+
+impl CollectSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Canonical form: each clique sorted, the set of cliques sorted —
+    /// so results from different algorithms/schedules compare equal.
+    pub fn into_canonical(self) -> Vec<Vec<Vertex>> {
+        let mut cliques = self.cliques.into_inner().unwrap();
+        for c in cliques.iter_mut() {
+            c.sort_unstable();
+        }
+        cliques.sort();
+        cliques
+    }
+
+    pub fn len(&self) -> usize {
+        self.cliques.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl CliqueSink for CollectSink {
+    fn emit(&self, clique: &[Vertex]) {
+        self.cliques.lock().unwrap().push(clique.to_vec());
+    }
+}
+
+/// Histogram of maximal clique sizes (Figure 5) + count + max size.
+pub struct SizeHistogram {
+    bins: Vec<AtomicU64>,
+    max_size: AtomicUsize,
+    count: AtomicU64,
+    total_verts: AtomicU64,
+}
+
+impl SizeHistogram {
+    pub fn new(max_expected_size: usize) -> Self {
+        SizeHistogram {
+            bins: (0..=max_expected_size).map(|_| AtomicU64::new(0)).collect(),
+            max_size: AtomicUsize::new(0),
+            count: AtomicU64::new(0),
+            total_verts: AtomicU64::new(0),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.max_size.load(Ordering::Relaxed)
+    }
+
+    pub fn avg_size(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_verts.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// (size, count) pairs for sizes that occur.
+    pub fn nonzero_bins(&self) -> Vec<(usize, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .filter_map(|(s, b)| {
+                let v = b.load(Ordering::Relaxed);
+                (v > 0).then_some((s, v))
+            })
+            .collect()
+    }
+}
+
+impl CliqueSink for SizeHistogram {
+    fn emit(&self, clique: &[Vertex]) {
+        let s = clique.len();
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_verts.fetch_add(s as u64, Ordering::Relaxed);
+        self.max_size.fetch_max(s, Ordering::Relaxed);
+        let idx = s.min(self.bins.len() - 1);
+        self.bins[idx].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Forwards each clique to a closure.
+pub struct CallbackSink<F: Fn(&[Vertex]) + Sync + Send> {
+    f: F,
+}
+
+impl<F: Fn(&[Vertex]) + Sync + Send> CallbackSink<F> {
+    pub fn new(f: F) -> Self {
+        CallbackSink { f }
+    }
+}
+
+impl<F: Fn(&[Vertex]) + Sync + Send> CliqueSink for CallbackSink<F> {
+    fn emit(&self, clique: &[Vertex]) {
+        (self.f)(clique)
+    }
+}
+
+/// Tee: emit into two sinks at once (e.g. count + histogram).
+pub struct TeeSink<'a> {
+    pub a: &'a dyn CliqueSink,
+    pub b: &'a dyn CliqueSink,
+}
+
+impl CliqueSink for TeeSink<'_> {
+    fn emit(&self, clique: &[Vertex]) {
+        self.a.emit(clique);
+        self.b.emit(clique);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_sink_counts() {
+        let s = CountSink::new();
+        s.emit(&[1, 2, 3]);
+        s.emit(&[4]);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn collect_sink_canonicalizes() {
+        let s = CollectSink::new();
+        s.emit(&[3, 1, 2]);
+        s.emit(&[0, 5]);
+        let c = s.into_canonical();
+        assert_eq!(c, vec![vec![0, 5], vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn histogram_tracks_sizes() {
+        let h = SizeHistogram::new(10);
+        h.emit(&[1, 2, 3]);
+        h.emit(&[1, 2, 3]);
+        h.emit(&[7]);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_size(), 3);
+        assert!((h.avg_size() - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(h.nonzero_bins(), vec![(1, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn histogram_clamps_oversize() {
+        let h = SizeHistogram::new(2);
+        h.emit(&[1, 2, 3, 4, 5]);
+        assert_eq!(h.nonzero_bins(), vec![(2, 1)]);
+        assert_eq!(h.max_size(), 5);
+    }
+
+    #[test]
+    fn tee_hits_both() {
+        let a = CountSink::new();
+        let b = CountSink::new();
+        let t = TeeSink { a: &a, b: &b };
+        t.emit(&[1]);
+        assert_eq!(a.count(), 1);
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn concurrent_emits() {
+        let s = std::sync::Arc::new(CountSink::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        s.emit(&[1, 2]);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count(), 4000);
+    }
+}

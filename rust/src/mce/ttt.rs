@@ -1,0 +1,366 @@
+//! Sequential TTT (Tomita–Tanaka–Takahashi 2006) — paper Algorithm 1.
+//!
+//! The work-efficiency baseline every parallel algorithm is measured
+//! against (Tables 4/5, Figures 6/7).  Worst-case O(3^{n/3}), optimal.
+//!
+//! Besides the plain enumerator this module provides:
+//! * [`ttt_from`] — enumeration from an arbitrary (K, cand, fini) state,
+//!   the subroutine ParMCE runs inside each per-vertex subproblem;
+//! * [`ttt_traced`] — records a task tree (one node per recursive call,
+//!   exclusive durations) for the trace-replay scheduler simulator;
+//! * [`TttMetrics`] — pivot / set-update cost attribution (§6.3.1 quotes
+//!   these overheads for DBLP: 248s pivot, 38s updates in ParTTT).
+
+use std::time::Instant;
+
+use crate::coordinator::sim::Trace;
+use crate::graph::csr::CsrGraph;
+use crate::graph::{AdjacencyGraph, Vertex};
+use crate::mce::pivot::choose_pivot;
+use crate::mce::sink::CliqueSink;
+use crate::util::vset;
+
+/// Cost attribution counters (nanoseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TttMetrics {
+    pub calls: u64,
+    pub pivot_ns: u64,
+    pub update_ns: u64,
+    pub emitted: u64,
+}
+
+/// Enumerate all maximal cliques of `g` into `sink`.
+pub fn ttt(g: &CsrGraph, sink: &dyn CliqueSink) {
+    if g.n() == 0 {
+        return;
+    }
+    let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
+    let mut k = Vec::new();
+    ttt_from(g, &mut k, cand, Vec::new(), sink);
+}
+
+/// Enumerate all maximal cliques containing `k`, extendable by `cand`,
+/// excluding any vertex of `fini` (paper Algorithm 1 semantics).
+/// `cand`/`fini` must be sorted and disjoint; all their members adjacent
+/// to every vertex of `k`.
+///
+/// Hot path: recursion buffers (ext / cand_q / fini_q) come from a free
+/// pool, so steady-state enumeration performs no allocation (§Perf
+/// optimization 1 — see EXPERIMENTS.md for the before/after).
+pub fn ttt_from<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    mut cand: Vec<Vertex>,
+    mut fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+) {
+    let mut pool: Vec<Vec<Vertex>> = Vec::new();
+    rec_pooled(g, k, &mut cand, &mut fini, sink, &mut pool);
+}
+
+fn rec_pooled<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: &mut Vec<Vertex>,
+    fini: &mut Vec<Vertex>,
+    sink: &dyn CliqueSink,
+    pool: &mut Vec<Vec<Vertex>>,
+) {
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(k);
+        }
+        return;
+    }
+    let pivot = choose_pivot(g, cand, fini);
+    let mut ext = pool.pop().unwrap_or_default();
+    vset::difference_into(cand, g.neighbors(pivot), &mut ext);
+    let mut cand_q = pool.pop().unwrap_or_default();
+    let mut fini_q = pool.pop().unwrap_or_default();
+    for i in 0..ext.len() {
+        let q = ext[i];
+        let nbrs = g.neighbors(q);
+        // intersect_into clears its output first, so buffer state left by
+        // the child recursion is irrelevant
+        vset::intersect_into(cand, nbrs, &mut cand_q);
+        vset::intersect_into(fini, nbrs, &mut fini_q);
+        k.push(q);
+        rec_pooled(g, k, &mut cand_q, &mut fini_q, sink, pool);
+        k.pop();
+        vset::remove_sorted(cand, q);
+        vset::insert_sorted(fini, q);
+    }
+    ext.clear();
+    cand_q.clear();
+    fini_q.clear();
+    pool.push(ext);
+    pool.push(cand_q);
+    pool.push(fini_q);
+}
+
+/// As [`ttt_from`] but collecting metrics.
+pub fn ttt_from_metered<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+    metrics: &mut TttMetrics,
+) {
+    rec(g, k, cand, fini, sink, Some(metrics));
+}
+
+fn rec<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    mut cand: Vec<Vertex>,
+    mut fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+    mut metrics: Option<&mut TttMetrics>,
+) {
+    if let Some(m) = metrics.as_deref_mut() {
+        m.calls += 1;
+    }
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(k);
+            if let Some(m) = metrics.as_deref_mut() {
+                m.emitted += 1;
+            }
+        }
+        return;
+    }
+
+    // Line 3: pivot maximizing |cand ∩ Γ(u)| over u ∈ cand ∪ fini.
+    let t0 = metrics.is_some().then(Instant::now);
+    let pivot = choose_pivot(g, &cand, &fini);
+    if let (Some(m), Some(t)) = (metrics.as_deref_mut(), t0) {
+        m.pivot_ns += t.elapsed().as_nanos() as u64;
+    }
+
+    // Line 4: ext = cand − Γ(pivot) (sorted, since cand is sorted).
+    let ext = vset::difference(&cand, g.neighbors(pivot));
+
+    // Lines 5–11.
+    let mut cand_q = Vec::new();
+    let mut fini_q = Vec::new();
+    for q in ext {
+        let nbrs = g.neighbors(q);
+        let t1 = metrics.is_some().then(Instant::now);
+        vset::intersect_into(&cand, nbrs, &mut cand_q);
+        vset::intersect_into(&fini, nbrs, &mut fini_q);
+        if let (Some(m), Some(t)) = (metrics.as_deref_mut(), t1) {
+            m.update_ns += t.elapsed().as_nanos() as u64;
+        }
+        k.push(q);
+        rec(
+            g,
+            k,
+            std::mem::take(&mut cand_q),
+            std::mem::take(&mut fini_q),
+            sink,
+            metrics.as_deref_mut(),
+        );
+        k.pop();
+        let t2 = metrics.is_some().then(Instant::now);
+        vset::remove_sorted(&mut cand, q);
+        vset::insert_sorted(&mut fini, q);
+        if let (Some(m), Some(t)) = (metrics.as_deref_mut(), t2) {
+            m.update_ns += t.elapsed().as_nanos() as u64;
+        }
+    }
+}
+
+/// Traced enumeration: one [`Trace`] node per recursive call with its
+/// *exclusive* time (pivot + set updates + emit, excluding children).
+/// This is the input to `coordinator::sim` for Figures 6/7.
+pub fn ttt_traced<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+    trace: &mut Trace,
+    parent: Option<u32>,
+) {
+    rec_traced(g, k, cand, fini, sink, trace, parent);
+}
+
+fn rec_traced<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    mut cand: Vec<Vertex>,
+    mut fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+    trace: &mut Trace,
+    parent: Option<u32>,
+) {
+    let my_id = trace.push(parent, 0);
+    let mut excl = 0u64;
+    let t0 = Instant::now();
+
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(k);
+        }
+        trace.tasks[my_id as usize].excl_ns = t0.elapsed().as_nanos() as u64;
+        return;
+    }
+
+    let pivot = choose_pivot(g, &cand, &fini);
+    let ext = vset::difference(&cand, g.neighbors(pivot));
+    let mut cand_q = Vec::new();
+    let mut fini_q = Vec::new();
+    excl += t0.elapsed().as_nanos() as u64;
+
+    for q in ext {
+        let t1 = Instant::now();
+        let nbrs = g.neighbors(q);
+        vset::intersect_into(&cand, nbrs, &mut cand_q);
+        vset::intersect_into(&fini, nbrs, &mut fini_q);
+        excl += t1.elapsed().as_nanos() as u64;
+        k.push(q);
+        rec_traced(
+            g,
+            k,
+            std::mem::take(&mut cand_q),
+            std::mem::take(&mut fini_q),
+            sink,
+            trace,
+            Some(my_id),
+        );
+        k.pop();
+        let t2 = Instant::now();
+        vset::remove_sorted(&mut cand, q);
+        vset::insert_sorted(&mut fini, q);
+        excl += t2.elapsed().as_nanos() as u64;
+    }
+    trace.tasks[my_id as usize].excl_ns = excl;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::mce::sink::{CollectSink, CountSink};
+
+    fn enumerate(g: &CsrGraph) -> Vec<Vec<Vertex>> {
+        let sink = CollectSink::new();
+        ttt(g, &sink);
+        sink.into_canonical()
+    }
+
+    #[test]
+    fn triangle_with_tail() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        assert_eq!(enumerate(&g), vec![vec![0, 1, 2], vec![2, 3]]);
+    }
+
+    #[test]
+    fn empty_and_edgeless_graphs() {
+        let g0 = CsrGraph::from_edges(0, &[]);
+        assert!(enumerate(&g0).is_empty());
+        // isolated vertices are themselves maximal cliques
+        let g3 = CsrGraph::from_edges(3, &[]);
+        assert_eq!(enumerate(&g3), vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn complete_graph_single_clique() {
+        let g = generators::complete(7);
+        assert_eq!(enumerate(&g), vec![(0..7).collect::<Vec<_>>()]);
+    }
+
+    #[test]
+    fn moon_moser_count() {
+        // 3^k maximal cliques on the complete k-partite graph with parts of 3
+        for k in 2..=4 {
+            let g = generators::moon_moser(k);
+            let sink = CountSink::new();
+            ttt(&g, &sink);
+            assert_eq!(sink.count(), 3u64.pow(k as u32), "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_random_graphs() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 31, iters: 40 },
+            |rng, level| {
+                let n = 4 + rng.gen_usize(18 >> level.min(2));
+                let p = 0.2 + 0.6 * rng.gen_f64();
+                generators::gnp(n, p, rng.next_u64())
+            },
+            |g| {
+                let got = enumerate(g);
+                let want = oracle::maximal_cliques(g);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {} cliques, oracle {}", got.len(), want.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn ttt_from_subproblem_semantics() {
+        // G = triangle 0-1-2 plus edge 2-3. Subproblem rooted at K={2} with
+        // cand={3}, fini={0,1} must yield only {2,3}: cliques through 0/1
+        // are excluded.
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let sink = CollectSink::new();
+        let mut k = vec![2];
+        ttt_from(&g, &mut k, vec![3], vec![0, 1], &sink);
+        assert_eq!(sink.into_canonical(), vec![vec![2, 3]]);
+        assert_eq!(k, vec![2], "K restored after enumeration");
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let g = generators::gnp(40, 0.3, 9);
+        let sink = CountSink::new();
+        let mut m = TttMetrics::default();
+        let mut k = Vec::new();
+        ttt_from_metered(
+            &g,
+            &mut k,
+            (0..40).collect(),
+            Vec::new(),
+            &sink,
+            &mut m,
+        );
+        assert!(m.calls > 0);
+        assert_eq!(m.emitted, sink.count());
+        assert!(m.pivot_ns > 0);
+    }
+
+    #[test]
+    fn traced_run_matches_plain_and_trace_is_sane() {
+        let g = generators::gnp(30, 0.35, 4);
+        let plain = CountSink::new();
+        ttt(&g, &plain);
+
+        let sink = CountSink::new();
+        let mut trace = Trace::new();
+        let mut k = Vec::new();
+        ttt_traced(
+            &g,
+            &mut k,
+            (0..30).collect(),
+            Vec::new(),
+            &sink,
+            &mut trace,
+            None,
+        );
+        assert_eq!(sink.count(), plain.count());
+        assert!(!trace.is_empty());
+        assert!(trace.span_ns() <= trace.work_ns());
+        // exactly one root
+        assert_eq!(
+            trace.tasks.iter().filter(|t| t.parent.is_none()).count(),
+            1
+        );
+    }
+}

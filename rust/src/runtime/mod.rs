@@ -1,0 +1,7 @@
+//! Runtime bridge to the AOT-compiled L1/L2 artifacts: a PJRT CPU client
+//! wrapper ([`engine::Engine`]) and the triangle-ranking offload that
+//! feeds ParMCETri ([`tri_rank::PjrtTriangleBackend`]).  Python never runs
+//! here — artifacts are HLO text produced once by `make artifacts`.
+
+pub mod engine;
+pub mod tri_rank;

@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bencher::bench`]: warmup, then timed iterations, reporting min /
+//! median / mean / MAD.  Results can be dumped as JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u32,
+    pub min_ns: u64,
+    pub median_ns: u64,
+    pub mean_ns: u64,
+    pub mad_ns: u64,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns as f64 / 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters)),
+            ("min_ns", Json::num(self.min_ns as f64)),
+            ("median_ns", Json::num(self.median_ns as f64)),
+            ("mean_ns", Json::num(self.mean_ns as f64)),
+            ("mad_ns", Json::num(self.mad_ns as f64)),
+        ])
+    }
+}
+
+pub struct Bencher {
+    pub warmup: u32,
+    pub iters: u32,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            iters: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        Bencher {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick-mode bencher honoring PARMCE_BENCH_FAST=1 (CI-friendly).
+    pub fn from_env() -> Self {
+        if std::env::var("PARMCE_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(0, 2)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f` and record stats under `name`. Returns the median in ns.
+    pub fn bench<R>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> R) -> u64 {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        samples.sort_unstable();
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<u64>() / samples.len() as u64;
+        let mad = {
+            let mut dev: Vec<u64> = samples.iter().map(|&s| s.abs_diff(median)).collect();
+            dev.sort_unstable();
+            dev[dev.len() / 2]
+        };
+        let stats = Stats {
+            name: name.clone(),
+            iters: self.iters,
+            min_ns: min,
+            median_ns: median,
+            mean_ns: mean,
+            mad_ns: mad,
+        };
+        println!(
+            "bench {:<48} median {:>12}  min {:>12}  mean {:>12}  ±{}",
+            stats.name,
+            crate::util::fmt_ns(stats.median_ns),
+            crate::util::fmt_ns(stats.min_ns),
+            crate::util::fmt_ns(stats.mean_ns),
+            crate::util::fmt_ns(stats.mad_ns),
+        );
+        self.results.push(stats);
+        median
+    }
+
+    /// Write accumulated results as JSON to `path` (best-effort).
+    pub fn dump_json(&self, path: &str) {
+        let arr = Json::arr(self.results.iter().map(|s| s.to_json()));
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Err(e) = std::fs::write(path, arr.to_string_pretty()) {
+            eprintln!("warn: could not write {path}: {e}");
+        } else {
+            println!("wrote {path}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut b = Bencher::new(0, 3);
+        let med = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(med > 0);
+        assert_eq!(b.results.len(), 1);
+        let s = &b.results[0];
+        assert!(s.min_ns <= s.median_ns);
+        assert_eq!(s.name, "spin");
+    }
+
+    #[test]
+    fn dump_json_writes_file() {
+        let mut b = Bencher::new(0, 1);
+        b.bench("x", || 1 + 1);
+        let dir = std::env::temp_dir().join("parmce_bench_test");
+        let path = dir.join("out.json");
+        b.dump_json(path.to_str().unwrap());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,223 @@
+//! Fixed-capacity bitset over u64 words.
+//!
+//! The dense representation for `cand` / `fini` inside small subproblems
+//! (the perf-pass hot path, see DESIGN.md §Perf): intersection with a
+//! neighbourhood becomes word-wise AND, and pivot scoring becomes popcount.
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> Self {
+        BitSet {
+            words: vec![0; capacity.div_ceil(64)],
+            capacity,
+        }
+    }
+
+    pub fn from_iter_cap(capacity: usize, it: impl IntoIterator<Item = u32>) -> Self {
+        let mut s = BitSet::new(capacity);
+        for v in it {
+            s.insert(v);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: u32) {
+        debug_assert!((i as usize) < self.capacity);
+        self.words[i as usize >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: u32) {
+        debug_assert!((i as usize) < self.capacity);
+        self.words[i as usize >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: u32) -> bool {
+        ((self.words[i as usize >> 6] >> (i & 63)) & 1) != 0
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// self ∩= other
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// self ∪= other
+    pub fn union_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// self \= other
+    pub fn subtract(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// |self ∩ other| without allocating.
+    pub fn intersection_count(&self, other: &BitSet) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// out = self ∩ other (out is cleared first; capacities must match).
+    pub fn intersection_into(&self, other: &BitSet, out: &mut BitSet) {
+        for ((o, a), b) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
+            *o = a & b;
+        }
+    }
+
+    pub fn iter(&self) -> BitIter<'_> {
+        BitIter {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// First set bit, if any.
+    pub fn first(&self) -> Option<u32> {
+        self.iter().next()
+    }
+
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.iter().collect()
+    }
+
+    /// Approximate heap footprint in bytes (for the memory-budget guard).
+    pub fn heap_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+pub struct BitIter<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for BitIter<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros();
+                self.current &= self.current - 1;
+                return Some((self.word_idx as u32) * 64 + bit);
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = BitSet::new(200);
+        assert!(!s.contains(5));
+        s.insert(5);
+        s.insert(64);
+        s.insert(199);
+        assert!(s.contains(5) && s.contains(64) && s.contains(199));
+        assert_eq!(s.len(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn iter_in_order() {
+        let s = BitSet::from_iter_cap(300, [7u32, 0, 255, 64, 63]);
+        assert_eq!(s.to_vec(), vec![0, 7, 63, 64, 255]);
+    }
+
+    #[test]
+    fn set_ops_match_naive() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let cap = 130;
+            let a_v: Vec<u32> = (0..cap as u32).filter(|_| rng.gen_bool(0.3)).collect();
+            let b_v: Vec<u32> = (0..cap as u32).filter(|_| rng.gen_bool(0.3)).collect();
+            let a = BitSet::from_iter_cap(cap, a_v.iter().copied());
+            let b = BitSet::from_iter_cap(cap, b_v.iter().copied());
+
+            let inter_naive: Vec<u32> =
+                a_v.iter().filter(|v| b_v.contains(v)).copied().collect();
+            let mut i = a.clone();
+            i.intersect_with(&b);
+            assert_eq!(i.to_vec(), inter_naive);
+            assert_eq!(a.intersection_count(&b), inter_naive.len());
+
+            let mut u = a.clone();
+            u.union_with(&b);
+            let mut union_naive = a_v.clone();
+            union_naive.extend(b_v.iter().filter(|v| !a_v.contains(v)));
+            union_naive.sort_unstable();
+            assert_eq!(u.to_vec(), union_naive);
+
+            let mut d = a.clone();
+            d.subtract(&b);
+            let diff_naive: Vec<u32> =
+                a_v.iter().filter(|v| !b_v.contains(v)).copied().collect();
+            assert_eq!(d.to_vec(), diff_naive);
+        }
+    }
+
+    #[test]
+    fn intersection_into_reuses_buffer() {
+        let a = BitSet::from_iter_cap(128, [1u32, 2, 3, 100]);
+        let b = BitSet::from_iter_cap(128, [2u32, 100, 127]);
+        let mut out = BitSet::from_iter_cap(128, [9u32, 10]);
+        a.intersection_into(&b, &mut out);
+        assert_eq!(out.to_vec(), vec![2, 100]);
+    }
+
+    #[test]
+    fn empty_and_clear() {
+        let mut s = BitSet::from_iter_cap(64, [0u32, 63]);
+        assert!(!s.is_empty());
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.first(), None);
+    }
+}

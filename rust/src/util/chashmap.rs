@@ -1,0 +1,276 @@
+//! Sharded concurrent hash map / set.
+//!
+//! Stand-in for TBB `concurrent_hash_map` (paper §6.2) and for the
+//! Shalev–Shavit lock-free table the analysis cites (Theorem 3.1): N mutex
+//! shards give O(1)-expected concurrent insert/find/remove with contention
+//! spread across shards.  Used for the dynamic-graph clique registry C(G)
+//! and for cross-thread dedup in the Hashing baseline.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::hash::{BuildHasher, BuildHasherDefault, Hash, Hasher};
+use std::sync::Mutex;
+
+/// FxHash-style multiply hasher — fast for the small keys we use.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ x).wrapping_mul(0x51_7c_c1_b7_27_22_0a_95);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, x: u32) {
+        self.write_u64(x as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+const SHARD_BITS: usize = 6;
+const NUM_SHARDS: usize = 1 << SHARD_BITS;
+
+pub struct ConcurrentMap<K, V> {
+    shards: Vec<Mutex<HashMap<K, V, FxBuildHasher>>>,
+    hasher: FxBuildHasher,
+}
+
+impl<K: Hash + Eq, V> Default for ConcurrentMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
+    pub fn new() -> Self {
+        ConcurrentMap {
+            shards: (0..NUM_SHARDS)
+                .map(|_| Mutex::new(HashMap::default()))
+                .collect(),
+            hasher: FxBuildHasher::default(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: &K) -> usize {
+        let h = self.hasher.hash_one(key);
+        // use high bits: the multiply hasher's low bits are weaker
+        (h >> (64 - SHARD_BITS)) as usize
+    }
+
+    /// Insert; returns the previous value if any.
+    pub fn insert(&self, key: K, value: V) -> Option<V> {
+        let s = self.shard(&key);
+        self.shards[s].lock().unwrap().insert(key, value)
+    }
+
+    /// Insert only if vacant; returns true if inserted.
+    pub fn insert_if_absent(&self, key: K, value: V) -> bool {
+        let s = self.shard(&key);
+        match self.shards[s].lock().unwrap().entry(key) {
+            Entry::Occupied(_) => false,
+            Entry::Vacant(e) => {
+                e.insert(value);
+                true
+            }
+        }
+    }
+
+    pub fn remove(&self, key: &K) -> Option<V> {
+        let s = self.shard(key);
+        self.shards[s].lock().unwrap().remove(key)
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        let s = self.shard(key);
+        self.shards[s].lock().unwrap().contains_key(key)
+    }
+
+    pub fn get_cloned(&self, key: &K) -> Option<V>
+    where
+        V: Clone,
+    {
+        let s = self.shard(key);
+        self.shards[s].lock().unwrap().get(key).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    /// Drain all entries into a Vec (single-threaded epilogue).
+    pub fn drain_all(&self) -> Vec<(K, V)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.lock().unwrap().drain());
+        }
+        out
+    }
+
+    /// Apply `f` to every entry under shard locks.
+    pub fn for_each(&self, mut f: impl FnMut(&K, &V)) {
+        for s in &self.shards {
+            for (k, v) in s.lock().unwrap().iter() {
+                f(k, v);
+            }
+        }
+    }
+}
+
+/// Concurrent set, as a map with unit values.
+pub struct ConcurrentSet<K> {
+    map: ConcurrentMap<K, ()>,
+}
+
+impl<K: Hash + Eq> Default for ConcurrentSet<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Hash + Eq> ConcurrentSet<K> {
+    pub fn new() -> Self {
+        ConcurrentSet {
+            map: ConcurrentMap::new(),
+        }
+    }
+
+    /// True if newly inserted.
+    pub fn insert(&self, key: K) -> bool {
+        self.map.insert_if_absent(key, ())
+    }
+
+    pub fn remove(&self, key: &K) -> bool {
+        self.map.remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn drain_all(&self) -> Vec<K> {
+        self.map.drain_all().into_iter().map(|(k, _)| k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_map_ops() {
+        let m: ConcurrentMap<u64, u64> = ConcurrentMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(1, 10), None);
+        assert_eq!(m.insert(1, 20), Some(10));
+        assert!(m.contains(&1));
+        assert_eq!(m.get_cloned(&1), Some(20));
+        assert_eq!(m.remove(&1), Some(20));
+        assert!(!m.contains(&1));
+    }
+
+    #[test]
+    fn insert_if_absent_semantics() {
+        let m: ConcurrentMap<String, u32> = ConcurrentMap::new();
+        assert!(m.insert_if_absent("a".into(), 1));
+        assert!(!m.insert_if_absent("a".into(), 2));
+        assert_eq!(m.get_cloned(&"a".to_string()), Some(1));
+    }
+
+    #[test]
+    fn concurrent_inserts_all_land() {
+        let s: Arc<ConcurrentSet<u64>> = Arc::new(ConcurrentSet::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        s.insert(t * 10_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(s.len(), 8000);
+    }
+
+    #[test]
+    fn concurrent_dedup_exactly_once() {
+        // All threads insert the same keys; exactly one insert per key wins.
+        let s: Arc<ConcurrentSet<u64>> = Arc::new(ConcurrentSet::new());
+        let wins: Arc<std::sync::atomic::AtomicU64> = Arc::new(0.into());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let wins = Arc::clone(&wins);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        if s.insert(i) {
+                            wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 500);
+        assert_eq!(s.len(), 500);
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let m: ConcurrentMap<u32, u32> = ConcurrentMap::new();
+        for i in 0..100 {
+            m.insert(i, i * 2);
+        }
+        let mut all = m.drain_all();
+        all.sort_unstable();
+        assert_eq!(all.len(), 100);
+        assert_eq!(all[10], (10, 20));
+        assert!(m.is_empty());
+    }
+}

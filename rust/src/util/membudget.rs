@@ -1,0 +1,160 @@
+//! Cooperative memory budget.
+//!
+//! Table 8 of the paper reports that CliqueEnumerator and Hashing run *out
+//! of memory* on every input while ParMCE completes.  Actually exhausting
+//! RAM in CI is antisocial, so the reimplemented baselines charge their
+//! dominant allocations (bit vectors, intermediate non-maximal clique sets)
+//! against a `MemBudget`; exceeding it aborts the run with `OutOfBudget`,
+//! which the experiment harness prints as the paper's "Out of memory" cell.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BudgetError {
+    /// The run exceeded its byte budget (reported bytes = attempted total).
+    OutOfBudget { attempted: usize, cap: usize },
+    /// The run exceeded its wall-clock deadline.
+    TimedOut { elapsed_ms: u64, cap_ms: u64 },
+}
+
+impl std::fmt::Display for BudgetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetError::OutOfBudget { attempted, cap } => write!(
+                f,
+                "out of memory budget: attempted {attempted} bytes > cap {cap} bytes"
+            ),
+            BudgetError::TimedOut { elapsed_ms, cap_ms } => {
+                write!(f, "timed out: {elapsed_ms}ms > cap {cap_ms}ms")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BudgetError {}
+
+pub struct MemBudget {
+    used: AtomicUsize,
+    peak: AtomicUsize,
+    cap: usize,
+}
+
+impl MemBudget {
+    pub fn new(cap_bytes: usize) -> Self {
+        MemBudget {
+            used: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            cap: cap_bytes,
+        }
+    }
+
+    /// Effectively unlimited (for running a baseline to completion).
+    pub fn unlimited() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    /// Charge `bytes`; error if the running total would exceed the cap.
+    pub fn charge(&self, bytes: usize) -> Result<(), BudgetError> {
+        let prev = self.used.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        if now > self.cap {
+            Err(BudgetError::OutOfBudget {
+                attempted: now,
+                cap: self.cap,
+            })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Return `bytes` to the budget (freed allocation).
+    pub fn release(&self, bytes: usize) {
+        self.used.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Wall-clock deadline guard (Table 8's "did not complete in 5 hours" rows).
+pub struct Deadline {
+    start: std::time::Instant,
+    cap: std::time::Duration,
+}
+
+impl Deadline {
+    pub fn new(cap: std::time::Duration) -> Self {
+        Deadline {
+            start: std::time::Instant::now(),
+            cap,
+        }
+    }
+
+    pub fn check(&self) -> Result<(), BudgetError> {
+        let elapsed = self.start.elapsed();
+        if elapsed > self.cap {
+            Err(BudgetError::TimedOut {
+                elapsed_ms: elapsed.as_millis() as u64,
+                cap_ms: self.cap.as_millis() as u64,
+            })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_under_cap_ok() {
+        let b = MemBudget::new(1000);
+        assert!(b.charge(400).is_ok());
+        assert!(b.charge(400).is_ok());
+        assert_eq!(b.used(), 800);
+        assert_eq!(b.peak(), 800);
+    }
+
+    #[test]
+    fn charge_over_cap_errors() {
+        let b = MemBudget::new(1000);
+        b.charge(900).unwrap();
+        let err = b.charge(200).unwrap_err();
+        match err {
+            BudgetError::OutOfBudget { attempted, cap } => {
+                assert_eq!(attempted, 1100);
+                assert_eq!(cap, 1000);
+            }
+            _ => panic!("wrong error kind"),
+        }
+    }
+
+    #[test]
+    fn release_frees_headroom() {
+        let b = MemBudget::new(1000);
+        b.charge(900).unwrap();
+        b.release(800);
+        assert!(b.charge(500).is_ok());
+        assert_eq!(b.peak(), 900.max(b.used()));
+    }
+
+    #[test]
+    fn deadline_trips() {
+        let d = Deadline::new(std::time::Duration::from_millis(1));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(d.check().is_err());
+        let ok = Deadline::new(std::time::Duration::from_secs(3600));
+        assert!(ok.check().is_ok());
+    }
+}

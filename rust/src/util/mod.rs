@@ -1,0 +1,38 @@
+//! Substrate utilities built from scratch (the offline environment provides
+//! no rayon/serde/rand/criterion — see DESIGN.md "Substitutions").
+
+pub mod bench;
+pub mod bitset;
+pub mod chashmap;
+pub mod json;
+pub mod membudget;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod vset;
+
+/// Format a nanosecond duration as a human-readable string.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else {
+        format!("{}ns", ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(1_500), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_250_000_000), "3.25s");
+    }
+}

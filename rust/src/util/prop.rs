@@ -1,0 +1,116 @@
+//! Seeded randomized property-testing harness (proptest is unavailable
+//! offline — DESIGN.md "Substitutions").
+//!
+//! `forall` runs `iters` random cases; on the first failure it retries with
+//! progressively "smaller" cases drawn from the same generator (shrink-lite:
+//! the generator receives a shrink level it can use to reduce sizes) and
+//! panics with the reproducing seed.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub seed: u64,
+    pub iters: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 0xC0FFEE,
+            iters: 64,
+        }
+    }
+}
+
+/// Run `prop` on `iters` cases drawn by `gen`. Panics with the failing seed.
+///
+/// `gen` receives (rng, shrink_level); level 0 = full-size cases. On failure
+/// the harness retries the same seed at levels 1..=3, reporting the smallest
+/// level that still fails so the panic message points at a small repro.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng, u32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.iters {
+        let case_seed = meta.next_u64();
+        let input = gen(&mut Rng::new(case_seed), 0);
+        if let Err(msg) = prop(&input) {
+            // shrink-lite: retry same seed with smaller generator levels
+            let mut best: (u32, T, String) = (0, input, msg);
+            for level in (1..=3).rev() {
+                let small = gen(&mut Rng::new(case_seed), level);
+                if let Err(m) = prop(&small) {
+                    best = (level, small, m);
+                    break; // highest level (smallest case) that fails
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, shrink level {}):\n  {}\n  input: {:?}",
+                best.0, best.2, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config { seed: 1, iters: 50 },
+            |rng, _| rng.gen_usize(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config { seed: 2, iters: 50 },
+            |rng, level| rng.gen_usize(100 >> level),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen = Vec::new();
+        forall(
+            Config { seed: 3, iters: 10 },
+            |rng, _| rng.next_u64(),
+            |&x| {
+                seen.push(x);
+                Ok(())
+            },
+        );
+        let mut second = Vec::new();
+        forall(
+            Config { seed: 3, iters: 10 },
+            |rng, _| rng.next_u64(),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(seen, second);
+    }
+}

@@ -1,0 +1,242 @@
+//! Sorted-vector vertex-set operations.
+//!
+//! `cand` / `fini` and CSR neighbour lists are sorted `&[u32]` slices; all
+//! TTT-family set algebra reduces to merge/gallop intersections here.  These
+//! functions are the L3 hot path (see EXPERIMENTS.md §Perf for the
+//! merge-vs-gallop crossover measurement).
+
+/// Binary-search membership on a sorted slice.
+#[inline]
+pub fn contains(sorted: &[u32], x: u32) -> bool {
+    sorted.binary_search(&x).is_ok()
+}
+
+/// |a ∩ b| for sorted slices, galloping when sizes are lopsided.
+pub fn intersection_count(a: &[u32], b: &[u32]) -> usize {
+    if a.len() > b.len() {
+        return intersection_count(b, a);
+    }
+    // `a` is the smaller side.
+    if a.is_empty() {
+        return 0;
+    }
+    if b.len() / a.len() >= 8 {
+        // gallop: binary-search each element of the small side
+        return a.iter().filter(|&&x| contains(b, x)).count();
+    }
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// a ∩ b into `out` (cleared first). Sorted in, sorted out.
+pub fn intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    if a.len() > b.len() {
+        return intersect_into_inner(b, a, out);
+    }
+    intersect_into_inner(a, b, out)
+}
+
+fn intersect_into_inner(small: &[u32], big: &[u32], out: &mut Vec<u32>) {
+    if small.is_empty() || big.is_empty() {
+        return;
+    }
+    if big.len() / small.len() >= 8 {
+        out.extend(small.iter().filter(|&&x| contains(big, x)));
+        return;
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < small.len() && j < big.len() {
+        match small[i].cmp(&big[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(small[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// a ∩ b as a fresh Vec.
+pub fn intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len().min(b.len()));
+    intersect_into(a, b, &mut out);
+    out
+}
+
+/// a \ b into `out` (cleared first).
+pub fn difference_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() {
+        if j >= b.len() || a[i] < b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else if a[i] > b[j] {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+}
+
+/// a \ b as a fresh Vec.
+pub fn difference(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len());
+    difference_into(a, b, &mut out);
+    out
+}
+
+/// a ∪ b as a fresh sorted Vec (inputs sorted, deduped).
+pub fn union(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        if j >= b.len() || (i < a.len() && a[i] < b[j]) {
+            out.push(a[i]);
+            i += 1;
+        } else if i >= a.len() || a[i] > b[j] {
+            out.push(b[j]);
+            j += 1;
+        } else {
+            out.push(a[i]);
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Is `a` ⊆ `b`? Both sorted.
+pub fn is_subset(a: &[u32], b: &[u32]) -> bool {
+    if a.len() > b.len() {
+        return false;
+    }
+    if !a.is_empty() && b.len() / a.len() >= 16 {
+        return a.iter().all(|&x| contains(b, x));
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => return false,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    i == a.len()
+}
+
+/// Insert into a sorted Vec, keeping it sorted; false if already present.
+pub fn insert_sorted(v: &mut Vec<u32>, x: u32) -> bool {
+    match v.binary_search(&x) {
+        Ok(_) => false,
+        Err(pos) => {
+            v.insert(pos, x);
+            true
+        }
+    }
+}
+
+/// Remove from a sorted Vec; false if absent.
+pub fn remove_sorted(v: &mut Vec<u32>, x: u32) -> bool {
+    match v.binary_search(&x) {
+        Ok(pos) => {
+            v.remove(pos);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_sorted(rng: &mut Rng, max: u32, p: f64) -> Vec<u32> {
+        (0..max).filter(|_| rng.gen_bool(p)).collect()
+    }
+
+    fn naive_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| b.contains(x)).copied().collect()
+    }
+
+    #[test]
+    fn ops_match_naive_randomized() {
+        let mut rng = Rng::new(1234);
+        for round in 0..200 {
+            let p1 = 0.05 + 0.9 * rng.gen_f64();
+            let p2 = 0.05 + 0.9 * rng.gen_f64();
+            let a = rand_sorted(&mut rng, 150, p1);
+            let b = rand_sorted(&mut rng, 150, p2);
+            let ni = naive_intersect(&a, &b);
+            assert_eq!(intersect(&a, &b), ni, "round {round}");
+            assert_eq!(intersection_count(&a, &b), ni.len());
+            let nd: Vec<u32> = a.iter().filter(|x| !b.contains(x)).copied().collect();
+            assert_eq!(difference(&a, &b), nd);
+            let mut nu: Vec<u32> = a.iter().chain(&b).copied().collect();
+            nu.sort_unstable();
+            nu.dedup();
+            assert_eq!(union(&a, &b), nu);
+            assert_eq!(is_subset(&ni, &a), true);
+            assert_eq!(is_subset(&ni, &b), true);
+        }
+    }
+
+    #[test]
+    fn gallop_path_exercised() {
+        // small side ≤ big/16 → gallop branch
+        let small = vec![5u32, 500, 5000];
+        let big: Vec<u32> = (0..6000).collect();
+        assert_eq!(intersect(&small, &big), small);
+        assert_eq!(intersection_count(&small, &big), 3);
+        assert!(is_subset(&small, &big));
+    }
+
+    #[test]
+    fn empty_edges() {
+        let e: Vec<u32> = vec![];
+        let a = vec![1u32, 2, 3];
+        assert_eq!(intersect(&e, &a), e);
+        assert_eq!(difference(&a, &e), a);
+        assert_eq!(difference(&e, &a), e);
+        assert_eq!(union(&e, &e), e);
+        assert!(is_subset(&e, &a));
+        assert!(!is_subset(&a, &e));
+    }
+
+    #[test]
+    fn sorted_mutation() {
+        let mut v = vec![2u32, 5, 9];
+        assert!(insert_sorted(&mut v, 7));
+        assert!(!insert_sorted(&mut v, 7));
+        assert_eq!(v, vec![2, 5, 7, 9]);
+        assert!(remove_sorted(&mut v, 5));
+        assert!(!remove_sorted(&mut v, 5));
+        assert_eq!(v, vec![2, 7, 9]);
+    }
+
+    #[test]
+    fn intersect_into_reuses_buffer() {
+        let mut buf = vec![99u32; 8];
+        intersect_into(&[1, 3, 5], &[3, 5, 7], &mut buf);
+        assert_eq!(buf, vec![3, 5]);
+    }
+}

@@ -1,0 +1,80 @@
+//! L1↔L3 contract tests: the AOT Pallas artifacts executed via PJRT must
+//! agree exactly with the CPU oracle on real graphs, and the manifest's
+//! shape constants must match what the Rust tile scheduler assumes.
+//! (Requires `make artifacts`; tests skip gracefully when missing.)
+
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::graph::{generators, triangles};
+use parmce::mce::ranking::{RankStrategy, Ranking, TriangleBackend};
+use parmce::runtime::engine::Engine;
+use parmce::runtime::tri_rank::{PjrtTiledBackend, PjrtTriangleBackend};
+
+fn engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping artifact tests: {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_counts_match_cpu_on_dataset_analogs() {
+    let Some(e) = engine() else { return };
+    let backend = PjrtTriangleBackend::new(&e);
+    for d in [Dataset::DblpLike, Dataset::WikiTalkLike, Dataset::OrkutLike] {
+        let g = d.graph(Scale::Tiny);
+        let got = backend.per_vertex(&g).unwrap();
+        assert_eq!(got, triangles::per_vertex(&g), "{}", d.name());
+    }
+}
+
+#[test]
+fn tiled_schedule_exact_on_non_tile_aligned_sizes() {
+    let Some(e) = engine() else { return };
+    let backend = PjrtTiledBackend(PjrtTriangleBackend::new(&e));
+    for n in [100usize, 257, 300] {
+        let g = generators::gnp(n, 0.08, n as u64);
+        assert_eq!(
+            backend.per_vertex(&g).unwrap(),
+            triangles::per_vertex(&g),
+            "n={n}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_ranking_orders_identically_to_cpu_ranking() {
+    let Some(e) = engine() else { return };
+    let g = Dataset::AsSkitterLike.graph(Scale::Tiny);
+    let backend = PjrtTriangleBackend::new(&e);
+    let pjrt = Ranking::compute_with(&g, RankStrategy::Triangle, &backend).unwrap();
+    let cpu = Ranking::compute(&g, RankStrategy::Triangle);
+    for v in 0..g.n() as u32 {
+        for w in 0..g.n() as u32 {
+            assert_eq!(pjrt.higher(v, w), cpu.higher(v, w), "({v},{w})");
+        }
+    }
+}
+
+#[test]
+fn manifest_constants_match_tile_scheduler_assumptions() {
+    let Some(e) = engine() else { return };
+    let tile_b = e.constant("TILE_B").unwrap();
+    let full_n = e.constant("FULL_N").unwrap();
+    assert!(tile_b.is_power_of_two());
+    assert!(full_n % 128 == 0, "FULL_N must be a multiple of the kernel block");
+    // the python test suite asserts the same constants from the L2 side
+}
+
+#[test]
+fn empty_and_triangle_free_graphs() {
+    let Some(e) = engine() else { return };
+    let backend = PjrtTriangleBackend::new(&e);
+    let star = parmce::graph::csr::CsrGraph::from_edges(
+        64,
+        &(1..64u32).map(|v| (0, v)).collect::<Vec<_>>(),
+    );
+    assert_eq!(backend.per_vertex(&star).unwrap(), vec![0u64; 64]);
+}

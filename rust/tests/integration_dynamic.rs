@@ -1,0 +1,95 @@
+//! Dynamic-pipeline integration: streamed incremental maintenance must
+//! converge to from-scratch enumeration on every dynamic dataset analog,
+//! sequentially and in parallel, through growth and shrinkage.
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::registry::CliqueRegistry;
+use parmce::dynamic::stream::{imce_remove_batch, replay, EdgeStream, Engine};
+use parmce::graph::adj::DynGraph;
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::mce::sink::CountSink;
+use parmce::mce::ttt;
+
+fn from_scratch(g: &parmce::graph::csr::CsrGraph) -> u64 {
+    let s = CountSink::new();
+    ttt::ttt(g, &s);
+    s.count()
+}
+
+#[test]
+fn replay_converges_on_all_dynamic_datasets() {
+    for d in [
+        Dataset::DblpLike,
+        Dataset::WikipediaLike,
+        Dataset::LiveJournalLike,
+    ] {
+        let g = d.graph(Scale::Tiny);
+        let stream = EdgeStream::permuted(&g, 17);
+        let (records, graph, registry) = replay(&stream, 50, Engine::Sequential, None);
+        assert!(!records.is_empty());
+        assert_eq!(
+            registry.len() as u64,
+            from_scratch(&graph.to_csr()),
+            "{}",
+            d.name()
+        );
+    }
+}
+
+#[test]
+fn parallel_and_sequential_replay_identical_per_batch() {
+    let d = Dataset::CaCitHepThLike; // the exponential-change regime
+    let g = d.graph(Scale::Tiny);
+    let stream = EdgeStream::permuted(&g, 23);
+    let (seq, _, rs) = replay(&stream, 20, Engine::Sequential, Some(25));
+    let pool = ThreadPool::new(4);
+    let (par, _, rp) = replay(&stream, 20, Engine::Parallel(&pool), Some(25));
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.new_cliques, b.new_cliques, "batch {}", a.batch_index);
+        assert_eq!(a.subsumed, b.subsumed, "batch {}", a.batch_index);
+    }
+    assert_eq!(rs.drain_canonical(), rp.drain_canonical());
+}
+
+#[test]
+fn grow_then_shrink_roundtrip() {
+    // add everything in batches, then remove half in batches; registry
+    // must track from-scratch state at every checkpoint.
+    let g = Dataset::DblpLike.graph(Scale::Tiny);
+    let stream = EdgeStream::permuted(&g, 31);
+    let (_, mut graph, registry) = replay(&stream, 60, Engine::Sequential, None);
+    assert_eq!(registry.len() as u64, from_scratch(&graph.to_csr()));
+
+    let mut removed = 0;
+    for chunk in stream.edges.chunks(40) {
+        imce_remove_batch(&mut graph, &registry, chunk);
+        removed += chunk.len();
+        assert_eq!(
+            registry.len() as u64,
+            from_scratch(&graph.to_csr()),
+            "after removing {removed} edges"
+        );
+        if removed >= stream.edges.len() / 2 {
+            break;
+        }
+    }
+}
+
+#[test]
+fn change_size_extremes_from_paper_section5() {
+    // O(1) change: near-complete graph completion
+    let g = parmce::graph::generators::complete_minus_edge(12);
+    let mut graph = DynGraph::from_csr(&g);
+    let registry = CliqueRegistry::from_graph(&g);
+    let (r, _) = parmce::dynamic::imce_batch(&mut graph, &registry, &[(0, 1)]);
+    assert_eq!(r.change_size(), 3, "paper §5: exactly 3");
+
+    // exponential change: Moon–Moser + one edge
+    let g = parmce::graph::generators::moon_moser(4); // 81 cliques
+    let mut graph = DynGraph::from_csr(&g);
+    let registry = CliqueRegistry::from_graph(&g);
+    let (r, _) = parmce::dynamic::imce_batch(&mut graph, &registry, &[(0, 1)]);
+    // 27 new ({0,1} × one per other part³), 54 subsumed (all with 0 or 1)
+    assert_eq!(r.new_cliques.len(), 27);
+    assert_eq!(r.subsumed.len(), 54);
+}

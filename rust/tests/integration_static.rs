@@ -1,0 +1,119 @@
+//! Cross-algorithm integration: every enumerator in the repo must agree
+//! on every dataset analog — the strongest correctness statement we can
+//! make above unit level (nine independent implementations, one answer).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parmce::baselines::{bk, clique_enumerator, greedybb, hashing, peco};
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::datasets::{Dataset, Scale};
+use parmce::mce::oracle;
+use parmce::mce::parmce::parmce;
+use parmce::mce::parttt::parttt;
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::mce::sink::{CliqueSink, CountSink};
+use parmce::mce::{ttt, ParMceConfig, ParTttConfig};
+use parmce::util::membudget::MemBudget;
+
+fn count_ttt(g: &parmce::graph::csr::CsrGraph) -> u64 {
+    let s = CountSink::new();
+    ttt::ttt(g, &s);
+    s.count()
+}
+
+#[test]
+fn all_enumerators_agree_on_all_tiny_datasets() {
+    let pool = ThreadPool::new(3);
+    for d in Dataset::all() {
+        let g = d.graph(Scale::Tiny);
+        let want = count_ttt(&g);
+        assert!(want > 0, "{}", d.name());
+
+        // ParTTT
+        let ga = Arc::new(g.clone());
+        let s = Arc::new(CountSink::new());
+        let ds: Arc<dyn CliqueSink> = s.clone();
+        parttt(&pool, &ga, &ds, ParTttConfig::default());
+        assert_eq!(s.count(), want, "{}: ParTTT", d.name());
+
+        // ParMCE under all rankings
+        for strat in [
+            RankStrategy::Degree,
+            RankStrategy::Degeneracy,
+            RankStrategy::Triangle,
+        ] {
+            let ranking = Arc::new(Ranking::compute(&g, strat));
+            let s = Arc::new(CountSink::new());
+            let ds: Arc<dyn CliqueSink> = s.clone();
+            parmce(&pool, &ga, &ranking, &ds, ParMceConfig::default());
+            assert_eq!(s.count(), want, "{}: ParMCE{}", d.name(), strat.name());
+        }
+
+        // PECO
+        let ranking = Arc::new(Ranking::compute(&g, RankStrategy::Degree));
+        let s = Arc::new(CountSink::new());
+        let ds: Arc<dyn CliqueSink> = s.clone();
+        peco::peco(&pool, &ga, &ranking, &ds);
+        assert_eq!(s.count(), want, "{}: PECO", d.name());
+
+        // BK family
+        let s = CountSink::new();
+        bk::bk_pivot(&g, &s);
+        assert_eq!(s.count(), want, "{}: bk_pivot", d.name());
+        let s = CountSink::new();
+        bk::bk_degeneracy(&g, &s);
+        assert_eq!(s.count(), want, "{}: bk_degeneracy", d.name());
+    }
+}
+
+#[test]
+fn memory_bound_baselines_agree_when_unbounded() {
+    // smaller graph: these baselines are exponential in space/time
+    let g = Dataset::DblpLike.graph(Scale::Tiny);
+    let want = count_ttt(&g);
+
+    let s = CountSink::new();
+    hashing::hashing(&g, &s, &MemBudget::unlimited()).unwrap();
+    assert_eq!(s.count(), want, "hashing");
+
+    let s = CountSink::new();
+    clique_enumerator::clique_enumerator(&g, &s, &MemBudget::unlimited()).unwrap();
+    assert_eq!(s.count(), want, "clique_enumerator");
+
+    let s = CountSink::new();
+    greedybb::greedybb(&g, &s, &MemBudget::unlimited(), Duration::from_secs(300)).unwrap();
+    assert_eq!(s.count(), want, "greedybb");
+}
+
+#[test]
+fn emitted_cliques_are_valid_on_moderate_graph() {
+    // full validation (clique-ness, maximality, no dup, completeness)
+    let g = parmce::graph::generators::planted_cliques(60, 0.06, 3, 5, 7, 99);
+    let pool = ThreadPool::new(2);
+    let ranking = Arc::new(Ranking::compute(&g, RankStrategy::Degree));
+    let ga = Arc::new(g.clone());
+    let collect = Arc::new(parmce::mce::sink::CollectSink::new());
+    let ds: Arc<dyn CliqueSink> = collect.clone();
+    parmce(&pool, &ga, &ranking, &ds, ParMceConfig::default());
+    drop(ds);
+    let cliques = Arc::try_unwrap(collect).ok().unwrap().into_canonical();
+    oracle::validate(&g, &cliques).unwrap();
+}
+
+#[test]
+fn histogram_consistency_across_algorithms() {
+    let g = Dataset::OrkutLike.graph(Scale::Tiny);
+    let h1 = parmce::mce::sink::SizeHistogram::new(128);
+    ttt::ttt(&g, &h1);
+
+    let pool = ThreadPool::new(3);
+    let ga = Arc::new(g);
+    let h2 = Arc::new(parmce::mce::sink::SizeHistogram::new(128));
+    let ds: Arc<dyn CliqueSink> = h2.clone();
+    parttt(&pool, &ga, &ds, ParTttConfig::default());
+
+    assert_eq!(h1.count(), h2.count());
+    assert_eq!(h1.max_size(), h2.max_size());
+    assert_eq!(h1.nonzero_bins(), h2.nonzero_bins());
+}
