@@ -1,12 +1,13 @@
 //! Dynamic-graph example: maintain the maximal clique set of a growing
-//! graph with IMCE (sequential) and ParIMCE (parallel), batch by batch —
-//! the Figure 4 pipeline — then remove edges again (decremental case).
+//! graph with IMCE (sequential) and ParIMCE (parallel) `DynamicSession`s,
+//! batch by batch — the Figure 4 pipeline — then remove edges again
+//! (decremental case).
 //!
 //!     cargo run --release --example dynamic_mce
 
-use parmce::coordinator::pool::ThreadPool;
-use parmce::dynamic::stream::{imce_remove_batch, replay, EdgeStream, Engine};
+use parmce::dynamic::stream::EdgeStream;
 use parmce::graph::datasets::{Dataset, Scale};
+use parmce::session::{Algo, DynAlgo, DynamicSession, MceSession};
 use parmce::util::table::{fmt_count, fmt_secs, Table};
 
 fn main() {
@@ -23,11 +24,11 @@ fn main() {
     let batch = 25;
 
     // sequential replay
-    let (seq_records, _, _) = replay(&stream, batch, Engine::Sequential, Some(20));
+    let mut seq = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+    let seq_records = seq.replay(&stream, batch, Some(20));
     // parallel replay (must agree batch-by-batch)
-    let pool = ThreadPool::new(4);
-    let (par_records, mut graph, registry) =
-        replay(&stream, batch, Engine::Parallel(&pool), Some(20));
+    let mut par = DynamicSession::from_empty(stream.n, DynAlgo::ParImce).with_threads(4);
+    let par_records = par.replay(&stream, batch, Some(20));
 
     let mut t = Table::new(
         "Per-batch incremental maintenance (IMCE vs ParIMCE)",
@@ -47,29 +48,36 @@ fn main() {
     }
     println!("{}", t.render());
     println!(
-        "registry now tracks {} maximal cliques over {} edges",
-        fmt_count(registry.len() as u64),
-        fmt_count(graph.m() as u64)
+        "registry now tracks {} maximal cliques over {} edges ({} batches applied)",
+        fmt_count(par.clique_count() as u64),
+        fmt_count(par.graph().m() as u64),
+        par.batches_applied()
     );
 
     // decremental: remove the last batch again
     let processed = batch * par_records.len().min(stream.edges.len() / batch);
     let last = &stream.edges[processed.saturating_sub(batch)..processed];
-    let r = imce_remove_batch(&mut graph, &registry, last);
+    let r = par.remove_batch(last);
     println!(
         "decremental: removing the last {} edges deleted {} cliques, surfaced {} replacements; registry {}",
         last.len(),
         r.subsumed.len(),
         r.new_cliques.len(),
-        fmt_count(registry.len() as u64)
+        fmt_count(par.clique_count() as u64)
     );
 
-    // verify against from-scratch enumeration
-    let want = {
-        let sink = parmce::mce::sink::CountSink::new();
-        parmce::mce::ttt::ttt(&graph.to_csr(), &sink);
-        sink.count()
-    };
-    assert_eq!(registry.len() as u64, want, "registry diverged from scratch");
+    // verify against from-scratch enumeration through the static session
+    let want = MceSession::builder()
+        .graph(par.csr())
+        .threads(1)
+        .build()
+        .expect("session")
+        .count(Algo::Ttt)
+        .cliques;
+    assert_eq!(
+        par.clique_count() as u64,
+        want,
+        "registry diverged from scratch"
+    );
     println!("✓ registry verified against from-scratch TTT ({want} cliques)");
 }

@@ -1,17 +1,9 @@
 //! Quickstart: enumerate the maximal cliques of a small graph three ways —
-//! sequential TTT, ParTTT, and ParMCE — and print them.
+//! sequential TTT, ParTTT, and ParMCE — through one `MceSession`.
 //!
 //!     cargo run --release --example quickstart
 
-use std::sync::Arc;
-
-use parmce::coordinator::pool::ThreadPool;
-use parmce::graph::csr::CsrGraph;
-use parmce::mce::parmce::parmce;
-use parmce::mce::parttt::parttt;
-use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::mce::sink::{CliqueSink, CollectSink};
-use parmce::mce::{ttt, ParMceConfig, ParTttConfig};
+use parmce::session::{Algo, MceSession, SinkSpec};
 
 fn main() {
     // the paper's Figure 1-style example: a triangle sharing a vertex with
@@ -21,39 +13,37 @@ fn main() {
         (2, 3), (3, 4), (2, 4),       // triangle {2,3,4}
         (4, 5), (5, 6), (4, 6), (3, 6), (3, 4), // dense tail
     ];
-    let g = CsrGraph::from_edges(7, &edges);
+    let session = MceSession::builder()
+        .edges(7, &edges)
+        .algo(Algo::Ttt)
+        .sink(SinkSpec::Collect)
+        .threads(4)
+        .build()
+        .expect("session");
+    let g = session.graph();
     println!("graph: n={} m={}", g.n(), g.m());
 
     // 1. sequential TTT (Tomita et al. — the paper's baseline)
-    let sink = CollectSink::new();
-    ttt::ttt(&g, &sink);
-    let seq = sink.into_canonical();
+    let run = session.run();
+    let seq = run.cliques.expect("collect sink");
     println!("\nTTT found {} maximal cliques:", seq.len());
     for c in &seq {
         println!("  {c:?}");
     }
 
-    // 2. ParTTT on the work-stealing pool
-    let pool = ThreadPool::new(4);
-    let ga = Arc::new(g.clone());
-    let collect = Arc::new(CollectSink::new());
-    let dyn_sink: Arc<dyn CliqueSink> = collect.clone();
-    parttt(&pool, &ga, &dyn_sink, ParTttConfig::default());
-    drop(dyn_sink);
-    let par = Arc::try_unwrap(collect).ok().unwrap().into_canonical();
-    assert_eq!(seq, par, "ParTTT must agree with TTT");
-    println!("\nParTTT agrees ({} cliques).", par.len());
+    // 2./3. the parallel algorithms — same session, same verbs
+    for algo in [Algo::ParTtt, Algo::ParMce] {
+        let (cliques, report) = session.collect(algo);
+        assert_eq!(seq, cliques, "{} must agree with TTT", algo.name());
+        println!(
+            "{} agrees ({} cliques in {:?}).",
+            algo.name(),
+            report.cliques,
+            report.wall
+        );
+    }
 
-    // 3. ParMCE with degree ranking (the paper's best configuration)
-    let ranking = Arc::new(Ranking::compute(&g, RankStrategy::Degree));
-    let collect = Arc::new(CollectSink::new());
-    let dyn_sink: Arc<dyn CliqueSink> = collect.clone();
-    parmce(&pool, &ga, &ranking, &dyn_sink, ParMceConfig::default());
-    drop(dyn_sink);
-    let mce = Arc::try_unwrap(collect).ok().unwrap().into_canonical();
-    assert_eq!(seq, mce, "ParMCE must agree with TTT");
-    println!("ParMCEDegree agrees ({} cliques).", mce.len());
-
-    let (spawned, steals) = pool.scheduler_counters();
+    let (spawned, steals) = session.pool().scheduler_counters();
     println!("\nscheduler: {spawned} tasks spawned, {steals} steals");
+    println!("session history: {} runs recorded", session.history().len());
 }

@@ -3,7 +3,8 @@
 //!
 //!   1. build the five static dataset analogs (graph substrate),
 //!   2. compute the ParMCETri vertex ranking on the **AOT Pallas kernel
-//!      via PJRT** (L1/L2 artifacts — falls back to CPU if absent),
+//!      via PJRT** (L1/L2 artifacts — falls back to CPU if absent) and
+//!      seed it into the session's ranking cache,
 //!   3. enumerate with ParMCE on the work-stealing pool (L3),
 //!   4. verify the count against sequential TTT,
 //!   5. replay the measured task trace through the scheduler simulator
@@ -13,15 +14,12 @@
 
 use std::sync::Arc;
 
-use parmce::coordinator::pool::ThreadPool;
 use parmce::experiments::fixtures;
 use parmce::graph::datasets::{Scale, STATIC_DATASETS};
-use parmce::mce::parmce::parmce;
 use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::mce::sink::{CliqueSink, CountSink};
-use parmce::mce::ParMceConfig;
 use parmce::runtime::engine::Engine;
 use parmce::runtime::tri_rank::PjrtTriangleBackend;
+use parmce::session::{Algo, MceSession};
 use parmce::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
 
 fn main() {
@@ -36,7 +34,6 @@ fn main() {
         Err(e) => println!("artifacts unavailable ({e}); CPU triangle ranking fallback"),
     }
 
-    let pool = ThreadPool::new(4);
     let mut table = Table::new(
         "End-to-end: TTT vs ParTTT vs ParMCETri (PJRT-ranked), 32 simulated workers",
         &[
@@ -44,40 +41,50 @@ fn main() {
             "speedup", "rank backend", "rank(s)",
         ],
     );
+    let (mut spawned_total, mut steals_total) = (0u64, 0u64);
 
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
 
-        // L1/L2: triangle ranking on the AOT kernel
-        let (ranking, backend_name, rank_secs) = match &engine {
+        // L1/L2: triangle ranking — on the AOT kernel when available —
+        // seeded into the session so every later run reuses it
+        let mut builder = MceSession::builder()
+            .graph(g.clone())
+            .algo(Algo::ParMce)
+            .rank_strategy(RankStrategy::Triangle)
+            .threads(4);
+        let (backend_name, rank_secs) = match &engine {
             Ok(e) => {
                 let backend = PjrtTriangleBackend::new(e);
                 let t0 = std::time::Instant::now();
                 let r = Ranking::compute_with(&g, RankStrategy::Triangle, &backend)
                     .expect("PJRT ranking");
-                (r, "pjrt-pallas", t0.elapsed().as_secs_f64())
+                builder = builder.ranking(Arc::new(r));
+                ("pjrt-pallas", t0.elapsed().as_secs_f64())
             }
             Err(_) => {
                 let t0 = std::time::Instant::now();
                 let r = Ranking::compute(&g, RankStrategy::Triangle);
-                (r, "cpu-forward", t0.elapsed().as_secs_f64())
+                builder = builder.ranking(Arc::new(r));
+                ("cpu-forward", t0.elapsed().as_secs_f64())
             }
         };
+        let session = builder.build().expect("session");
 
-        // L3 baseline + parallel runs
-        let (seq_count, ttt_s) = fixtures::run_ttt(&g);
-        let (c1, parttt_s) = fixtures::parttt_sim_secs(&g, 32);
-        let (c2, parmce_s) = fixtures::parmce_sim_secs(&g, &ranking, 32);
+        // L3 baseline + simulated parallel runs
+        let (seq_count, ttt_s) = fixtures::run_ttt(&session);
+        let (c1, parttt_s) = fixtures::parttt_sim_secs(&session, 32);
+        let (c2, parmce_s) = fixtures::parmce_sim_secs(&session, RankStrategy::Triangle, 32);
         assert_eq!(seq_count, c1, "{}: ParTTT count mismatch", d.name());
         assert_eq!(seq_count, c2, "{}: ParMCE count mismatch", d.name());
 
         // real pool execution must agree too (wall clock on 1 core)
-        let ga = Arc::new(g.clone());
-        let sink = Arc::new(CountSink::new());
-        let ds: Arc<dyn CliqueSink> = sink.clone();
-        let ranking = Arc::new(ranking);
-        parmce(&pool, &ga, &ranking, &ds, ParMceConfig::default());
-        assert_eq!(seq_count, sink.count(), "{}: pool run mismatch", d.name());
+        let wall = session.run();
+        assert_eq!(
+            seq_count, wall.report.cliques,
+            "{}: pool run mismatch",
+            d.name()
+        );
 
         table.row(vec![
             d.name().into(),
@@ -89,10 +96,16 @@ fn main() {
             backend_name.into(),
             fmt_secs(rank_secs),
         ]);
-        println!("✓ {}: {} maximal cliques verified across all layers", d.name(), fmt_count(seq_count));
+        let (spawned, steals) = session.pool().scheduler_counters();
+        spawned_total += spawned;
+        steals_total += steals;
+        println!(
+            "✓ {}: {} maximal cliques verified across all layers",
+            d.name(),
+            fmt_count(seq_count)
+        );
     }
 
     println!("\n{}", table.render());
-    let (spawned, steals) = pool.scheduler_counters();
-    println!("scheduler counters: {spawned} tasks, {steals} steals");
+    println!("scheduler counters: {spawned_total} tasks, {steals_total} steals");
 }

@@ -1,48 +1,44 @@
 //! Bench: Tables 7/8/10 — baseline algorithms vs TTT/ParMCE on a common
-//! workload.  OOM/timeout baselines run under their budget guards.
-//! `cargo bench --bench baselines`
+//! workload, all through the session API.  OOM/timeout baselines run
+//! under a budgeted session.  `cargo bench --bench baselines`
 
-use std::time::Duration;
-
-use parmce::baselines::{bk, clique_enumerator, greedybb, hashing};
 use parmce::experiments::fixtures;
 use parmce::graph::datasets::{Dataset, Scale};
-use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::mce::sink::CountSink;
+use parmce::mce::ranking::RankStrategy;
+use parmce::session::{Algo, MceSession, RunOutcome};
 use parmce::util::bench::Bencher;
-use parmce::util::membudget::MemBudget;
 
 fn main() {
     let mut b = Bencher::from_env();
     for d in [Dataset::AsSkitterLike, Dataset::WikipediaLike] {
         let g = d.graph(Scale::Tiny);
-        b.bench(format!("baseline/{}/ttt", d.name()), || fixtures::run_ttt(&g));
+        let s = fixtures::session(&g, 4);
+        let budgeted = MceSession::builder()
+            .graph_arc(std::sync::Arc::clone(s.graph()))
+            .mem_budget_bytes(8 << 20)
+            .build()
+            .expect("session");
+        b.bench(format!("baseline/{}/ttt", d.name()), || fixtures::run_ttt(&s));
         b.bench(format!("baseline/{}/bk_pivot", d.name()), || {
-            let s = CountSink::new();
-            bk::bk_pivot(&g, &s);
-            s.count()
+            s.count(Algo::Bk).cliques
         });
         b.bench(format!("baseline/{}/bk_degeneracy", d.name()), || {
-            let s = CountSink::new();
-            bk::bk_degeneracy(&g, &s);
-            s.count()
+            s.count(Algo::BkDegeneracy).cliques
         });
         b.bench(format!("baseline/{}/greedybb_unbounded", d.name()), || {
-            let s = CountSink::new();
-            greedybb::greedybb(&g, &s, &MemBudget::unlimited(), Duration::from_secs(120)).unwrap();
-            s.count()
+            let r = s.count(Algo::GreedyBb);
+            assert_eq!(r.outcome, RunOutcome::Completed);
+            r.cliques
         });
         b.bench(format!("baseline/{}/hashing_budgeted", d.name()), || {
-            let s = CountSink::new();
-            let _ = hashing::hashing(&g, &s, &MemBudget::new(8 << 20));
+            budgeted.count(Algo::Hashing).outcome
         });
-        b.bench(format!("baseline/{}/clique_enumerator_budgeted", d.name()), || {
-            let s = CountSink::new();
-            let _ = clique_enumerator::clique_enumerator(&g, &s, &MemBudget::new(8 << 20));
-        });
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
+        b.bench(
+            format!("baseline/{}/clique_enumerator_budgeted", d.name()),
+            || budgeted.count(Algo::CliqueEnumerator).outcome,
+        );
         b.bench(format!("baseline/{}/parmce_degree_sim32", d.name()), || {
-            fixtures::parmce_sim_secs(&g, &ranking, 32)
+            fixtures::parmce_sim_secs(&s, RankStrategy::Degree, 32)
         });
     }
     b.dump_json("results/bench_baselines.json");

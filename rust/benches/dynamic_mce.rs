@@ -1,9 +1,11 @@
 //! Bench: Table 6 / Figures 8-9 — IMCE vs ParIMCE batch replay on the
-//! dynamic dataset analogs.  `cargo bench --bench dynamic_mce`
+//! dynamic dataset analogs through `DynamicSession`.
+//! `cargo bench --bench dynamic_mce`
 
 use parmce::coordinator::pool::ThreadPool;
-use parmce::dynamic::stream::{replay, EdgeStream, Engine};
+use parmce::dynamic::stream::EdgeStream;
 use parmce::graph::datasets::{Dataset, Scale, DYNAMIC_DATASETS};
+use parmce::session::{DynAlgo, DynamicSession};
 use parmce::util::bench::Bencher;
 
 fn main() {
@@ -16,10 +18,13 @@ fn main() {
         let stream = EdgeStream::permuted(&d.graph(scale), 3);
         let bs = if d == Dataset::CaCitHepThLike { 10 } else { 100 };
         b.bench(format!("table6/{}/imce_seq", d.name()), || {
-            replay(&stream, bs, Engine::Sequential, cap)
+            let mut s = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+            s.replay(&stream, bs, cap)
         });
         b.bench(format!("table6/{}/parimce_wall_t4", d.name()), || {
-            replay(&stream, bs, Engine::Parallel(&pool), cap)
+            let mut s =
+                DynamicSession::from_empty(stream.n, DynAlgo::ParImce).with_pool(pool.clone());
+            s.replay(&stream, bs, cap)
         });
     }
     b.dump_json("results/bench_dynamic_mce.json");

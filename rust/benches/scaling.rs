@@ -7,10 +7,9 @@ use std::sync::Arc;
 
 use parmce::coordinator::pool::ThreadPool;
 use parmce::coordinator::sim::simulate;
+use parmce::experiments::fixtures;
 use parmce::graph::datasets::{Dataset, Scale};
-use parmce::mce::parmce::trace;
-use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::mce::sink::CountSink;
+use parmce::mce::ranking::RankStrategy;
 use parmce::util::bench::Bencher;
 
 fn main() {
@@ -42,9 +41,8 @@ fn main() {
     // --- simulated speedup curves (Figure 6 series) -----------------------
     for d in [Dataset::WikiTalkLike, Dataset::WikipediaLike] {
         let g = d.graph(Scale::Tiny);
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
-        let sink = CountSink::new();
-        let tr = trace(&g, &ranking, &sink);
+        let s = fixtures::session(&g, 1);
+        let (tr, _) = s.parmce_trace(RankStrategy::Degree);
         let t1 = tr.work_ns();
         for p in [1usize, 4, 16, 32] {
             b.bench(format!("simcurve/{}/p{p}", d.name()), || {

@@ -1,10 +1,11 @@
 //! Bench: Table 4 — TTT vs ParTTT vs ParMCE variants on the five static
-//! dataset analogs.  `cargo bench --bench static_mce`
-//! (set PARMCE_BENCH_FAST=1 for a quick pass).
+//! dataset analogs, routed through one `MceSession` per graph.
+//! `cargo bench --bench static_mce` (set PARMCE_BENCH_FAST=1 for a quick
+//! pass).
 
 use parmce::experiments::fixtures;
 use parmce::graph::datasets::{Scale, STATIC_DATASETS};
-use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::mce::ranking::RankStrategy;
 use parmce::util::bench::Bencher;
 
 fn main() {
@@ -16,19 +17,19 @@ fn main() {
     let mut b = Bencher::from_env();
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        b.bench(format!("table4/{}/ttt", d.name()), || fixtures::run_ttt(&g));
+        let s = fixtures::session(&g, 4);
+        b.bench(format!("table4/{}/ttt", d.name()), || fixtures::run_ttt(&s));
         b.bench(format!("table4/{}/parttt_sim32", d.name()), || {
-            fixtures::parttt_sim_secs(&g, 32)
+            fixtures::parttt_sim_secs(&s, 32)
         });
         for strat in [
             RankStrategy::Degree,
             RankStrategy::Degeneracy,
             RankStrategy::Triangle,
         ] {
-            let ranking = Ranking::compute(&g, strat);
             b.bench(
                 format!("table4/{}/parmce_{}_sim32", d.name(), strat.name()),
-                || fixtures::parmce_sim_secs(&g, &ranking, 32),
+                || fixtures::parmce_sim_secs(&s, strat, 32),
             );
         }
         // real pool wall-clock (oversubscribed on this 1-core testbed):

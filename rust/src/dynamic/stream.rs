@@ -10,17 +10,15 @@
 //! are recovered from endpoint-removal candidates plus an explicit
 //! maximality check.
 
-use std::time::Instant;
-
 use crate::coordinator::pool::ThreadPool;
-use crate::dynamic::imce::{imce_batch, subsumption_candidates};
-use crate::dynamic::par_imce::par_imce_batch;
+use crate::dynamic::imce::subsumption_candidates;
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::BatchResult;
 use crate::graph::adj::DynGraph;
 use crate::graph::csr::CsrGraph;
 use crate::graph::edgelist::TimedEdge;
 use crate::graph::{Edge, Vertex};
+use crate::session::dynamic::{DynAlgo, DynamicSession};
 use crate::util::rng::Rng;
 use crate::util::vset;
 
@@ -81,39 +79,21 @@ pub enum Engine<'p> {
 
 /// Replay `stream` in batches from the empty graph, maintaining C(G).
 /// Returns per-batch records; `max_batches` truncates long streams.
+/// (Thin compatibility shim over [`DynamicSession::replay`].)
 pub fn replay(
     stream: &EdgeStream,
     batch_size: usize,
     engine: Engine<'_>,
     max_batches: Option<usize>,
 ) -> (Vec<BatchRecord>, DynGraph, CliqueRegistry) {
-    let mut graph = DynGraph::new(stream.n);
-    let registry = CliqueRegistry::new();
-    // C(edgeless graph) = singleton cliques
-    for v in 0..stream.n as Vertex {
-        registry.insert(&[v]);
-    }
-    let mut records = Vec::new();
-    for (i, batch) in stream.batches(batch_size).enumerate() {
-        if let Some(cap) = max_batches {
-            if i >= cap {
-                break;
-            }
+    let mut session = match engine {
+        Engine::Sequential => DynamicSession::from_empty(stream.n, DynAlgo::Imce),
+        Engine::Parallel(pool) => {
+            DynamicSession::from_empty(stream.n, DynAlgo::ParImce).with_pool(pool.clone())
         }
-        let t0 = Instant::now();
-        let (result, timings) = match engine {
-            Engine::Sequential => imce_batch(&mut graph, &registry, batch),
-            Engine::Parallel(pool) => par_imce_batch(pool, &mut graph, &registry, batch),
-        };
-        records.push(BatchRecord {
-            batch_index: i,
-            new_cliques: result.new_cliques.len(),
-            subsumed: result.subsumed.len(),
-            ns: t0.elapsed().as_nanos() as u64,
-            new_task_ns: timings.new_task_ns,
-            sub_task_ns: timings.sub_task_ns,
-        });
-    }
+    };
+    let records = session.replay(stream, batch_size, max_batches);
+    let (graph, registry) = session.into_parts();
     (records, graph, registry)
 }
 
@@ -191,6 +171,7 @@ fn is_maximal(g: &DynGraph, clique: &[Vertex]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dynamic::imce_batch;
     use crate::graph::generators;
     use crate::mce::oracle;
 

@@ -8,21 +8,23 @@
 //!    the inverted assignment (shows the load-balancing choice matters);
 //! 4. ParIMCE batch size — the §6.2 choice of 1000 (10 for dense).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::sim::simulate;
 use crate::coordinator::stats;
-use crate::dynamic::stream::{replay, EdgeStream, Engine};
+use crate::dynamic::stream::EdgeStream;
 use crate::graph::csr::CsrGraph;
 use crate::graph::datasets::{Dataset, Scale};
 use crate::graph::Vertex;
-use crate::mce::parmce::subproblems_timed;
 use crate::mce::ranking::{RankStrategy, Ranking};
 use crate::mce::sink::CountSink;
 use crate::mce::ttt::{ttt_from_metered, TttMetrics};
+use crate::session::{Algo, DynAlgo, DynamicSession};
 use crate::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
 
-use super::fixtures::secs;
+use super::fixtures::{secs, session};
 use super::SIM_OVERHEAD_NS;
 
 pub fn all(scale: Scale) -> Result<String> {
@@ -46,7 +48,7 @@ pub fn pivot_ablation(scale: Scale) -> Result<String> {
     // sparse analogs + the clique-dense worst case: pivoting's win is a
     // *pruning* win, so it only pays where unpruned search explodes
     let mm = crate::graph::generators::moon_moser(6);
-    let named: Vec<(String, crate::graph::csr::CsrGraph)> = vec![
+    let named: Vec<(String, CsrGraph)> = vec![
         ("as-skitter-like".into(), Dataset::AsSkitterLike.graph(scale)),
         ("ca-cit-hepth-like".into(), Dataset::CaCitHepThLike.graph(scale)),
         ("moon-moser-18".into(), mm),
@@ -65,15 +67,15 @@ pub fn pivot_ablation(scale: Scale) -> Result<String> {
                 &mut m,
             )
         });
-        let sink2 = CountSink::new();
-        let (_, bk_s) = secs(|| crate::baselines::bk::bk_basic(&g, &sink2));
-        assert_eq!(sink.count(), sink2.count());
+        let s = session(&g, 1);
+        let bk = s.count(Algo::BkBasic);
+        assert_eq!(sink.count(), bk.cliques);
         t.row(vec![
             name,
             fmt_count(m.calls),
             fmt_secs(ttt_s),
-            fmt_secs(bk_s),
-            fmt_speedup(bk_s / ttt_s),
+            fmt_secs(bk.secs()),
+            fmt_speedup(bk.secs() / ttt_s),
         ]);
     }
     Ok(t.render())
@@ -83,13 +85,12 @@ pub fn pivot_ablation(scale: Scale) -> Result<String> {
 pub fn cutoff_ablation(scale: Scale) -> Result<String> {
     let d = Dataset::WikipediaLike;
     let g = d.graph(scale);
-    let ranking = Ranking::compute(&g, RankStrategy::Degree);
+    let s = session(&g, 1);
     // full-resolution trace once; coarser cutoffs = collapsing subtrees.
     // We emulate cutoff by capping trace depth: tasks deeper than the cut
     // are merged into their ancestors (their time becomes exclusive time
     // of the ancestor at the cut).
-    let sink = CountSink::new();
-    let tr = crate::mce::parmce::trace(&g, &ranking, &sink);
+    let (tr, _) = s.parmce_trace(RankStrategy::Degree);
     let mut depth = vec![0u32; tr.len()];
     for (i, task) in tr.tasks.iter().enumerate() {
         depth[i] = task.parent.map(|p| depth[p as usize] + 1).unwrap_or(0);
@@ -119,12 +120,12 @@ pub fn cutoff_ablation(scale: Scale) -> Result<String> {
             }
         }
         let r = simulate(&merged, 32, SIM_OVERHEAD_NS);
-        let s = r.makespan_ns as f64 / 1e9;
+        let sim_s = r.makespan_ns as f64 / 1e9;
         t.row(vec![
             if cut == u32::MAX { "∞".into() } else { cut.to_string() },
             fmt_count(merged.len() as u64),
-            fmt_secs(s),
-            fmt_speedup(full_work / s),
+            fmt_secs(sim_s),
+            fmt_speedup(full_work / sim_s),
         ]);
     }
     Ok(t.render())
@@ -135,6 +136,7 @@ pub fn cutoff_ablation(scale: Scale) -> Result<String> {
 pub fn rank_direction_ablation(scale: Scale) -> Result<String> {
     let d = Dataset::WikiTalkLike;
     let g = d.graph(scale);
+    let s = session(&g, 1);
     let mut t = Table::new(
         format!(
             "Ablation 3 — rank direction, {} (paper: higher degree ⇒ higher rank ⇒ smaller share)",
@@ -142,17 +144,20 @@ pub fn rank_direction_ablation(scale: Scale) -> Result<String> {
         ),
         &["assignment", "CV(time)", "max task(ms)", "sim@32 (s)"],
     );
-    for (name, ranking) in [
-        ("paper (degree asc share)", Ranking::compute(&g, RankStrategy::Degree)),
-        ("inverted (id-only)", Ranking::compute(&g, RankStrategy::Id)),
-        ("inverted (neg degree)", inverted_degree_ranking(&g)),
-    ] {
-        let subs = subproblems_timed(&g, &ranking);
+    let rows = [
+        ("paper (degree asc share)", s.subproblems(RankStrategy::Degree)),
+        ("inverted (id-only)", s.subproblems(RankStrategy::Id)),
+        (
+            "inverted (neg degree)",
+            Arc::new(s.subproblems_with(&inverted_degree_ranking(&g))),
+        ),
+    ];
+    for (name, subs) in rows {
         let summary = stats::summarize(&subs);
         let mut tr = crate::coordinator::sim::Trace::new();
         let root = tr.push(None, 0);
-        for s in &subs {
-            tr.push(Some(root), s.ns);
+        for sub in subs.iter() {
+            tr.push(Some(root), sub.ns);
         }
         let sim = simulate(&tr, 32, SIM_OVERHEAD_NS);
         t.row(vec![
@@ -167,11 +172,6 @@ pub fn rank_direction_ablation(scale: Scale) -> Result<String> {
 
 /// Inverted degree ranking: low degree ⇒ high rank (the anti-paper order).
 fn inverted_degree_ranking(g: &CsrGraph) -> Ranking {
-    // Ranking's internals are private; emulate inversion through the
-    // public API by exploiting that metric values only matter relatively:
-    // we construct a Ranking via compute() on a degree-complemented proxy.
-    // Simplest correct route: build a ranking whose metric is
-    // (max_degree - degree(v)).
     Ranking::from_metric(
         (0..g.n())
             .map(|v| (g.max_degree() - g.degree(v as Vertex)) as u64)
@@ -190,7 +190,8 @@ pub fn batch_size_ablation(scale: Scale) -> Result<String> {
     );
     for bs in [10usize, 50, 200] {
         let cap = Some((1500 / bs).clamp(4, 40));
-        let (records, _, _) = replay(&stream, bs, Engine::Sequential, cap);
+        let mut dyn_session = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+        let records = dyn_session.replay(&stream, bs, cap);
         let seq: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
         let par: f64 = records
             .iter()

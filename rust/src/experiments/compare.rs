@@ -1,21 +1,19 @@
 //! Prior-work comparisons: Table 7 (PECO), Table 8 (shared-memory
 //! parallel: Hashing / CliqueEnumerator / Peamc), Table 9 (GP), Table 10
-//! (sequential: BKDegeneracy / GreedyBB).
+//! (sequential: BKDegeneracy / GreedyBB).  Every baseline runs through
+//! the session API; budget/deadline outcomes surface as [`RunOutcome`]s.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::baselines::gp::{simulate_gp, GpConfig, GpOutcome};
-use crate::baselines::{bk, clique_enumerator, greedybb, hashing, peamc, peco};
-use crate::coordinator::pool::ThreadPool;
+use crate::baselines::gp::{GpConfig, GpOutcome};
 use crate::coordinator::sim::{simulate, Trace};
+use crate::coordinator::stats::Subproblem;
 use crate::graph::datasets::{Scale, STATIC_DATASETS};
-use crate::mce::parmce::{subproblems_timed, trace};
-use crate::mce::ranking::{RankStrategy, Ranking};
-use crate::mce::sink::{CliqueSink, CountSink};
-use crate::util::membudget::MemBudget;
+use crate::mce::ranking::RankStrategy;
+use crate::session::{Algo, MceSession, RunOutcome, RunReport};
 use crate::util::table::{fmt_secs, fmt_speedup, Table};
 
 use super::fixtures::*;
@@ -23,13 +21,23 @@ use super::SIM_OVERHEAD_NS;
 
 /// PECO's multi-worker time: per-vertex tasks are atomic (no inner
 /// parallelism) — simulate the flat task set.
-fn peco_sim_secs(subs: &[crate::coordinator::stats::Subproblem], p: usize) -> f64 {
+fn peco_sim_secs(subs: &[Subproblem], p: usize) -> f64 {
     let mut tr = Trace::new();
     let root = tr.push(None, 0);
     for s in subs {
         tr.push(Some(root), s.ns);
     }
     simulate(&tr, p, SIM_OVERHEAD_NS).makespan_ns as f64 / 1e9
+}
+
+/// Render a budget/deadline-aware run as a paper-style table cell.
+fn outcome_cell(r: RunReport) -> String {
+    match r.outcome {
+        RunOutcome::Completed => fmt_secs(r.secs()),
+        RunOutcome::OutOfMemory => format!("OOM in {}", fmt_secs(r.secs())),
+        RunOutcome::TimedOut => format!("timeout ({})", fmt_secs(r.secs())),
+        RunOutcome::Cancelled => "cancelled".into(),
+    }
 }
 
 /// Table 7: ParMCE vs shared-memory PECO under all three rankings (32
@@ -45,12 +53,12 @@ pub fn table7(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
+        let s = session(&g, 4);
         let mut cells = vec![d.name().to_string()];
         for strat in [RankStrategy::Degree, RankStrategy::Degeneracy, RankStrategy::Triangle] {
-            let ranking = Ranking::compute(&g, strat);
-            let subs = subproblems_timed(&g, &ranking);
+            let subs = s.subproblems(strat);
             let peco_s = peco_sim_secs(&subs, 32);
-            let (_, parmce_s) = parmce_sim_secs(&g, &ranking, 32);
+            let (_, parmce_s) = parmce_sim_secs(&s, strat, 32);
             cells.push(fmt_secs(peco_s));
             cells.push(fmt_secs(parmce_s));
         }
@@ -65,7 +73,7 @@ pub fn table7(scale: Scale) -> Result<String> {
 pub fn table8(scale: Scale) -> Result<String> {
     // budget scaled so completions are possible only on trivial inputs —
     // mirrors 1TB being insufficient in the paper
-    let budget_bytes = match scale {
+    let budget_bytes: usize = match scale {
         Scale::Tiny => 96 << 10,
         Scale::Small => 1 << 20,
         Scale::Full => 16 << 20,
@@ -85,46 +93,19 @@ pub fn table8(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
-        let (_, parmce_s) = parmce_sim_secs(&g, &ranking, 32);
-
-        let run_budgeted = |f: &dyn Fn(&MemBudget) -> Result<(), crate::util::membudget::BudgetError>| {
-            let budget = MemBudget::new(budget_bytes);
-            let (res, s) = secs(|| f(&budget));
-            match res {
-                Ok(()) => fmt_secs(s),
-                Err(crate::util::membudget::BudgetError::OutOfBudget { .. }) => {
-                    format!("OOM in {}", fmt_secs(s))
-                }
-                Err(crate::util::membudget::BudgetError::TimedOut { .. }) => {
-                    format!("timeout ({})", fmt_secs(s))
-                }
-            }
-        };
-        let hashing_cell = run_budgeted(&|b| {
-            let sink = CountSink::new();
-            hashing::hashing(&g, &sink, b)
-        });
-        let ce_cell = run_budgeted(&|b| {
-            let sink = CountSink::new();
-            clique_enumerator::clique_enumerator(&g, &sink, b)
-        });
-        let peamc_cell = {
-            let pool = ThreadPool::new(4);
-            let ga = Arc::new(g.clone());
-            let sink: Arc<dyn CliqueSink> = Arc::new(CountSink::new());
-            let (res, s) = secs(|| peamc::peamc(&pool, &ga, &sink, deadline));
-            match res {
-                Ok(()) => fmt_secs(s),
-                Err(_) => format!("timeout ({})", fmt_secs(s)),
-            }
-        };
+        let s = MceSession::builder()
+            .graph(g)
+            .threads(4)
+            .mem_budget_bytes(budget_bytes)
+            .deadline(deadline)
+            .build()?;
+        let (_, parmce_s) = parmce_sim_secs(&s, RankStrategy::Degree, 32);
         t.row(vec![
             d.name().into(),
             fmt_secs(parmce_s),
-            hashing_cell,
-            ce_cell,
-            peamc_cell,
+            outcome_cell(s.count(Algo::Hashing)),
+            outcome_cell(s.count(Algo::CliqueEnumerator)),
+            outcome_cell(s.count(Algo::Peamc)),
         ]);
     }
     Ok(t.render())
@@ -142,14 +123,13 @@ pub fn table9(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
-        let subs = subproblems_timed(&g, &ranking);
-        let sink = CountSink::new();
-        let tr = trace(&g, &ranking, &sink);
+        let s = session(&g, 4);
+        let subs = s.subproblems(RankStrategy::Degree);
+        let (tr, _) = s.parmce_trace(RankStrategy::Degree);
         let parmce_at = |p: usize| simulate(&tr, p, SIM_OVERHEAD_NS).makespan_ns as f64 / 1e9;
         let mut cells = vec![d.name().to_string()];
         for p in [2usize, 4, 8, 16, 32] {
-            let cell = match simulate_gp(&g, &subs, p, GpConfig::default()) {
+            let cell = match s.simulate_gp(p, GpConfig::default()) {
                 GpOutcome::Finished { makespan_ns, .. } => {
                     fmt_speedup(makespan_ns as f64 / 1e9 / parmce_at(p))
                 }
@@ -167,7 +147,7 @@ pub fn table9(scale: Scale) -> Result<String> {
 
 /// Table 10: ParMCE vs sequential BKDegeneracy and GreedyBB.
 pub fn table10(scale: Scale) -> Result<String> {
-    let budget = match scale {
+    let budget: usize = match scale {
         Scale::Tiny => 256 << 10,
         Scale::Small => 4 << 20,
         Scale::Full => 64 << 20,
@@ -185,32 +165,20 @@ pub fn table10(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        let (_, ttt_s) = run_ttt(&g);
-        let bkd = {
-            let sink = CountSink::new();
-            let (_, s) = secs(|| bk::bk_degeneracy(&g, &sink));
-            s
-        };
-        let gbb_cell = {
-            let sink = CountSink::new();
-            let b = MemBudget::new(budget);
-            let (res, s) = secs(|| greedybb::greedybb(&g, &sink, &b, deadline));
-            match res {
-                Ok(()) => fmt_secs(s),
-                Err(crate::util::membudget::BudgetError::OutOfBudget { .. }) => {
-                    format!("OOM in {}", fmt_secs(s))
-                }
-                Err(crate::util::membudget::BudgetError::TimedOut { .. }) => {
-                    format!("timeout ({})", fmt_secs(s))
-                }
-            }
-        };
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
-        let (_, parmce_s) = parmce_sim_secs(&g, &ranking, 32);
+        let s = session(&g, 4);
+        let (_, ttt_s) = run_ttt(&s);
+        let bkd_s = s.count(Algo::BkDegeneracy).secs();
+        let gbb = MceSession::builder()
+            .graph_arc(Arc::clone(s.graph()))
+            .mem_budget_bytes(budget)
+            .deadline(deadline)
+            .build()?;
+        let gbb_cell = outcome_cell(gbb.count(Algo::GreedyBb));
+        let (_, parmce_s) = parmce_sim_secs(&s, RankStrategy::Degree, 32);
         t.row(vec![
             d.name().into(),
             fmt_secs(ttt_s),
-            fmt_secs(bkd),
+            fmt_secs(bkd_s),
             gbb_cell,
             fmt_secs(parmce_s),
         ]);
@@ -221,14 +189,11 @@ pub fn table10(scale: Scale) -> Result<String> {
 /// Correctness gate used by integration tests: PECO and ParMCE agree.
 pub fn peco_parmce_agree(scale: Scale) -> Result<bool> {
     for d in STATIC_DATASETS {
-        let g = Arc::new(d.graph(scale));
-        let pool = ThreadPool::new(2);
-        let ranking = Arc::new(Ranking::compute(&g, RankStrategy::Degree));
-        let s1 = Arc::new(CountSink::new());
-        let d1: Arc<dyn CliqueSink> = s1.clone();
-        peco::peco(&pool, &g, &ranking, &d1);
-        let (seq, _) = run_ttt(&g);
-        if s1.count() != seq {
+        let g = d.graph(scale);
+        let s = session(&g, 2);
+        let peco_count = s.count(Algo::Peco).cliques;
+        let (seq, _) = run_ttt(&s);
+        if peco_count != seq {
             return Ok(false);
         }
     }

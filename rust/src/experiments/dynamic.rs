@@ -2,16 +2,18 @@
 //! Figure 8 (speedup vs size of change), Figure 9 (speedup vs threads).
 //!
 //! Methodology (§6.2): start from the empty graph, add edges in batches of
-//! 1000 (10 for the dense ca-cit-hepth analog).  ParIMCE's multi-worker
-//! time is simulated per phase from measured task durations: the two
-//! phases are barrier-separated (Λⁿᵉʷ must be complete before ParIMCESub),
-//! so time(p) = makespan_new(p) + makespan_sub(p), summed over batches.
+//! 1000 (10 for the dense ca-cit-hepth analog).  Replay runs through a
+//! [`DynamicSession`]; ParIMCE's multi-worker time is simulated per phase
+//! from measured task durations: the two phases are barrier-separated
+//! (Λⁿᵉʷ must be complete before ParIMCESub), so
+//! time(p) = makespan_new(p) + makespan_sub(p), summed over batches.
 
 use anyhow::Result;
 
 use crate::coordinator::sim::{simulate, Trace};
-use crate::dynamic::stream::{replay, BatchRecord, EdgeStream, Engine};
+use crate::dynamic::stream::{BatchRecord, EdgeStream};
 use crate::graph::datasets::{Dataset, Scale, DYNAMIC_DATASETS};
+use crate::session::{DynAlgo, DynamicSession};
 use crate::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
 
 use super::SIM_OVERHEAD_NS;
@@ -60,6 +62,15 @@ fn stream_for(d: Dataset, scale: Scale) -> EdgeStream {
     EdgeStream::permuted(&d.graph(scale), 0xD15EA5E)
 }
 
+/// Sequential replay of `d`'s stream through a fresh [`DynamicSession`].
+fn replay_records(d: Dataset, scale: Scale) -> (EdgeStream, usize, Vec<BatchRecord>) {
+    let stream = stream_for(d, scale);
+    let bs = batch_size_for(d, scale);
+    let mut session = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+    let records = session.replay(&stream, bs, max_batches_for(scale));
+    (stream, bs, records)
+}
+
 /// Table 6: cumulative runtime of IMCE vs ParIMCE (32 workers).
 pub fn table6(scale: Scale) -> Result<String> {
     let mut t = Table::new(
@@ -70,10 +81,7 @@ pub fn table6(scale: Scale) -> Result<String> {
         ],
     );
     for d in DYNAMIC_DATASETS {
-        let stream = stream_for(d, scale);
-        let bs = batch_size_for(d, scale);
-        let cap = max_batches_for(scale);
-        let (records, _, _) = replay(&stream, bs, Engine::Sequential, cap);
+        let (stream, bs, records) = replay_records(d, scale);
         let seq_total: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
         let par_total: f64 = records.iter().map(|r| batch_sim_secs(r, 32)).sum();
         let change: u64 = records.iter().map(|r| r.change_size() as u64).sum();
@@ -95,9 +103,7 @@ pub fn table6(scale: Scale) -> Result<String> {
 pub fn fig8(scale: Scale) -> Result<String> {
     let mut out = String::new();
     for d in DYNAMIC_DATASETS {
-        let stream = stream_for(d, scale);
-        let bs = batch_size_for(d, scale);
-        let (records, _, _) = replay(&stream, bs, Engine::Sequential, max_batches_for(scale));
+        let (_, _, records) = replay_records(d, scale);
         // bucket batches by change size (powers of 4)
         let mut buckets: std::collections::BTreeMap<u64, (f64, f64, usize)> =
             std::collections::BTreeMap::new();
@@ -138,9 +144,7 @@ pub fn fig9(scale: Scale) -> Result<String> {
         &["Dataset", "p=1", "p=2", "p=4", "p=8", "p=16", "p=32"],
     );
     for d in DYNAMIC_DATASETS {
-        let stream = stream_for(d, scale);
-        let bs = batch_size_for(d, scale);
-        let (records, _, _) = replay(&stream, bs, Engine::Sequential, max_batches_for(scale));
+        let (_, _, records) = replay_records(d, scale);
         let seq_total: f64 = records.iter().map(|r| r.ns as f64 / 1e9).sum();
         let mut cells = vec![d.name().to_string()];
         for &p in &THREADS {

@@ -1,14 +1,15 @@
-//! Shared measurement helpers for the experiment harness.
+//! Shared measurement helpers for the experiment harness, built on the
+//! [`crate::session`] API — no experiment wires pools, rankings or sinks
+//! by hand anymore.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::sim::{simulate, Trace};
 use crate::graph::csr::CsrGraph;
-use crate::mce::ranking::{RankStrategy, Ranking};
-use crate::mce::sink::{CliqueSink, CountSink, SizeHistogram};
-use crate::mce::{parmce, parttt, ttt, ParMceConfig, ParTttConfig};
+use crate::mce::ranking::RankStrategy;
+use crate::mce::sink::{CliqueSink, SizeHistogram};
+use crate::session::{Algo, MceSession};
 
 use super::SIM_OVERHEAD_NS;
 
@@ -19,35 +20,46 @@ pub fn secs<R>(f: impl FnOnce() -> R) -> (R, f64) {
     (r, t0.elapsed().as_secs_f64())
 }
 
+/// One session per graph: the pool spawns lazily, rankings and
+/// subproblem measurements are cached across every helper below.
+pub fn session(g: &CsrGraph, threads: usize) -> MceSession {
+    MceSession::builder()
+        .graph(g.clone())
+        .threads(threads)
+        .build()
+        .expect("session over an explicit graph cannot fail")
+}
+
 /// Sequential TTT: (clique count, seconds).
-pub fn run_ttt(g: &CsrGraph) -> (u64, f64) {
-    let sink = CountSink::new();
-    let (_, s) = secs(|| ttt::ttt(g, &sink));
-    (sink.count(), s)
+pub fn run_ttt(s: &MceSession) -> (u64, f64) {
+    let r = s.count(Algo::Ttt);
+    (r.cliques, r.secs())
 }
 
 /// Full histogram in one sequential pass.
 pub fn run_ttt_hist(g: &CsrGraph, max_size: usize) -> (SizeHistogram, f64) {
-    let hist = SizeHistogram::new(max_size);
-    let (_, s) = secs(|| ttt::ttt(g, &hist));
-    (hist, s)
+    let s = session(g, 1);
+    let hist = Arc::new(SizeHistogram::new(max_size));
+    let sink: Arc<dyn CliqueSink> = Arc::clone(&hist);
+    let r = s.run_with_sink(Algo::Ttt, &sink);
+    drop(sink);
+    let hist = Arc::into_inner(hist).expect("histogram still shared");
+    (hist, r.secs())
 }
 
 /// Measured ParTTT trace → simulated seconds at `p` workers.
-pub fn parttt_sim_secs(g: &CsrGraph, p: usize) -> (u64, f64) {
-    let sink = CountSink::new();
-    let tr = crate::mce::parmce::trace_parttt(g, &sink);
+pub fn parttt_sim_secs(s: &MceSession, p: usize) -> (u64, f64) {
+    let (tr, count) = s.parttt_trace();
     let r = simulate(&tr, p, SIM_OVERHEAD_NS);
-    (sink.count(), r.makespan_ns as f64 / 1e9)
+    (count, r.makespan_ns as f64 / 1e9)
 }
 
-/// Measured ParMCE trace (per-vertex subproblems + inner recursion) →
-/// simulated seconds at `p` workers.
-pub fn parmce_sim_secs(g: &CsrGraph, ranking: &Ranking, p: usize) -> (u64, f64) {
-    let sink = CountSink::new();
-    let tr = crate::mce::parmce::trace(g, ranking, &sink);
+/// Measured ParMCE trace (per-vertex subproblems + inner recursion)
+/// under `strategy` → simulated seconds at `p` workers.
+pub fn parmce_sim_secs(s: &MceSession, strategy: RankStrategy, p: usize) -> (u64, f64) {
+    let (tr, count) = s.parmce_trace(strategy);
     let r = simulate(&tr, p, SIM_OVERHEAD_NS);
-    (sink.count(), r.makespan_ns as f64 / 1e9)
+    (count, r.makespan_ns as f64 / 1e9)
 }
 
 /// The same trace evaluated across thread counts (one measurement pass).
@@ -61,23 +73,21 @@ pub fn sim_curve(tr: &Trace, threads: &[usize]) -> Vec<(usize, f64)> {
 /// Real pool execution of ParMCE (wall clock, oversubscribed on 1 core —
 /// used to verify parallel overhead, not speedup).
 pub fn parmce_wall_secs(g: &CsrGraph, strategy: RankStrategy, threads: usize) -> (u64, f64) {
-    let pool = ThreadPool::new(threads);
-    let ranking = Arc::new(Ranking::compute(g, strategy));
-    let g = Arc::new(g.clone());
-    let sink = Arc::new(CountSink::new());
-    let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
-    let (_, s) = secs(|| parmce(&pool, &g, &ranking, &dyn_sink, ParMceConfig::default()));
-    (sink.count(), s)
+    let s = MceSession::builder()
+        .graph(g.clone())
+        .rank_strategy(strategy)
+        .threads(threads)
+        .build()
+        .expect("session");
+    let r = s.count(Algo::ParMce);
+    (r.cliques, r.secs())
 }
 
 /// Real pool execution of ParTTT (wall clock).
 pub fn parttt_wall_secs(g: &CsrGraph, threads: usize) -> (u64, f64) {
-    let pool = ThreadPool::new(threads);
-    let g = Arc::new(g.clone());
-    let sink = Arc::new(CountSink::new());
-    let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
-    let (_, s) = secs(|| parttt(&pool, &g, &dyn_sink, ParTttConfig::default()));
-    (sink.count(), s)
+    let s = session(g, threads);
+    let r = s.count(Algo::ParTtt);
+    (r.cliques, r.secs())
 }
 
 #[cfg(test)]
@@ -88,11 +98,11 @@ mod tests {
     #[test]
     fn sim_and_wall_agree_on_counts() {
         let g = generators::planted_cliques(120, 0.03, 4, 5, 8, 3);
-        let (seq, _) = run_ttt(&g);
-        let ranking = Ranking::compute(&g, RankStrategy::Degree);
-        let (sim_count, sim_secs) = parmce_sim_secs(&g, &ranking, 32);
+        let s = session(&g, 2);
+        let (seq, _) = run_ttt(&s);
+        let (sim_count, sim_secs) = parmce_sim_secs(&s, RankStrategy::Degree, 32);
         let (wall_count, _) = parmce_wall_secs(&g, RankStrategy::Degree, 2);
-        let (pt_count, _) = parttt_sim_secs(&g, 32);
+        let (pt_count, _) = parttt_sim_secs(&s, 32);
         assert_eq!(seq, sim_count);
         assert_eq!(seq, wall_count);
         assert_eq!(seq, pt_count);

@@ -1,14 +1,14 @@
 //! Static-graph experiments: Table 3 (datasets), Figure 2 (imbalance),
 //! Figure 5 (clique-size histograms), Tables 4/5 (runtimes & ranking
-//! breakdown), Figures 6/7 (scaling).
+//! breakdown), Figures 6/7 (scaling).  All measurement routes through
+//! the [`crate::session`] API.
 
 use anyhow::Result;
 
 use crate::coordinator::stats::{self, fraction_for_share};
 use crate::graph::datasets::{Dataset, Scale, STATIC_DATASETS};
-use crate::mce::parmce::{subproblems_timed, trace, trace_parttt};
-use crate::mce::ranking::{RankStrategy, Ranking};
-use crate::mce::sink::CountSink;
+use crate::mce::ranking::RankStrategy;
+use crate::session::MceSession;
 use crate::util::table::{fmt_count, fmt_secs, fmt_speedup, Table};
 
 use super::fixtures::*;
@@ -46,6 +46,11 @@ pub fn table3(scale: Scale) -> Result<String> {
 
 /// Figure 2: subproblem imbalance on the skewed analogs.
 pub fn fig2(scale: Scale) -> Result<String> {
+    let sessions: Vec<(Dataset, MceSession)> = [Dataset::AsSkitterLike, Dataset::WikiTalkLike]
+        .into_iter()
+        .map(|d| (d, session(&d.graph(scale), 1)))
+        .collect();
+
     let mut t = Table::new(
         "Figure 2 — per-vertex subproblem skew (paper: As-Skitter 0.022% of subproblems = 90% of runtime; Wiki-Talk 0.004%)",
         &[
@@ -53,25 +58,22 @@ pub fn fig2(scale: Scale) -> Result<String> {
             "% subs for 90% cliques", "% subs for 90% time",
         ],
     );
-    for d in [Dataset::AsSkitterLike, Dataset::WikiTalkLike] {
-        let g = d.graph(scale);
-        let ranking = Ranking::compute(&g, RankStrategy::Id); // "natural" split
-        let subs = subproblems_timed(&g, &ranking);
-        let s = stats::summarize(&subs);
+    for (d, s) in &sessions {
+        let subs = s.subproblems(RankStrategy::Id); // "natural" split
+        let sum = stats::summarize(&subs);
         t.row(vec![
             d.name().into(),
-            s.count.to_string(),
-            format!("{:.2}", s.cv),
-            format!("{:.3}%", 100.0 * s.frac_for_90_cliques),
-            format!("{:.3}%", 100.0 * s.frac_for_90_time),
+            sum.count.to_string(),
+            format!("{:.2}", sum.cv),
+            format!("{:.3}%", 100.0 * sum.frac_for_90_cliques),
+            format!("{:.3}%", 100.0 * sum.frac_for_90_time),
         ]);
     }
-    // the full cumulative curves, as plotted in the figure
+    // the full cumulative curves, as plotted in the figure (subproblem
+    // measurements are served from the session cache — one pass total)
     let mut out = t.render();
-    for d in [Dataset::AsSkitterLike, Dataset::WikiTalkLike] {
-        let g = d.graph(scale);
-        let ranking = Ranking::compute(&g, RankStrategy::Id);
-        let subs = subproblems_timed(&g, &ranking);
+    for (d, s) in &sessions {
+        let subs = s.subproblems(RankStrategy::Id);
         let fracs = [0.0001, 0.001, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0];
         let cliques = stats::share_curve(subs.iter().map(|s| s.cliques).collect(), &fracs);
         let time = stats::share_curve(subs.iter().map(|s| s.ns).collect(), &fracs);
@@ -128,17 +130,17 @@ pub fn table4(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        let (count, ttt_s) = run_ttt(&g);
-        let (c2, pt) = parttt_sim_secs(&g, 32);
+        let s = session(&g, 4);
+        let (count, ttt_s) = run_ttt(&s);
+        let (c2, pt) = parttt_sim_secs(&s, 32);
         assert_eq!(count, c2, "{}", d.name());
         let mut cells = vec![d.name().to_string(), fmt_secs(ttt_s), fmt_secs(pt)];
         let mut best = ttt_s / pt;
         for strat in [RankStrategy::Degree, RankStrategy::Degeneracy, RankStrategy::Triangle] {
-            let ranking = Ranking::compute(&g, strat);
-            let (c3, s) = parmce_sim_secs(&g, &ranking, 32);
+            let (c3, sim_s) = parmce_sim_secs(&s, strat, 32);
             assert_eq!(count, c3);
-            best = best.max(ttt_s / s);
-            cells.push(fmt_secs(s));
+            best = best.max(ttt_s / sim_s);
+            cells.push(fmt_secs(sim_s));
         }
         cells.push(fmt_speedup(best));
         t.row(cells);
@@ -160,25 +162,27 @@ pub fn table5(scale: Scale) -> Result<String> {
     );
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
+        let s = session(&g, 4);
         // degree: ranking is free (available as the graph is read)
-        let deg_rank = Ranking::compute(&g, RankStrategy::Degree);
-        let (_, deg_et) = parmce_sim_secs(&g, &deg_rank, 32);
-        // degeneracy
-        let ((degen_rank, _), degen_rt) =
-            secs(|| (Ranking::compute(&g, RankStrategy::Degeneracy), ()));
-        let (_, degen_et) = parmce_sim_secs(&g, &degen_rank, 32);
+        let (_, deg_et) = parmce_sim_secs(&s, RankStrategy::Degree, 32);
+        // degeneracy: the first cache fill is the ranking cost
+        let (_, degen_rt) = secs(|| s.ranking(RankStrategy::Degeneracy));
+        let (_, degen_et) = parmce_sim_secs(&s, RankStrategy::Degeneracy, 32);
         // triangle: CPU backend
-        let ((tri_rank, _), tri_rt_cpu) =
-            secs(|| (Ranking::compute(&g, RankStrategy::Triangle), ()));
-        let (_, tri_et) = parmce_sim_secs(&g, &tri_rank, 32);
+        let (_, tri_rt_cpu) = secs(|| s.ranking(RankStrategy::Triangle));
+        let (_, tri_et) = parmce_sim_secs(&s, RankStrategy::Triangle, 32);
         // triangle: PJRT backend (fair comparison of the offload)
         let tri_rt_pjrt = engine.as_ref().map(|e| {
             let backend = crate::runtime::tri_rank::PjrtTriangleBackend::new(e);
-            let (r, s) = secs(|| {
-                Ranking::compute_with(&g, RankStrategy::Triangle, &backend).unwrap()
+            let (_, rt) = secs(|| {
+                crate::mce::ranking::Ranking::compute_with(
+                    &g,
+                    RankStrategy::Triangle,
+                    &backend,
+                )
+                .unwrap()
             });
-            let _ = r;
-            s
+            rt
         });
         t.row(vec![
             d.name().into(),
@@ -209,7 +213,8 @@ fn scaling_tables(scale: Scale, as_speedup: bool) -> Result<String> {
     let mut out = String::new();
     for d in STATIC_DATASETS {
         let g = d.graph(scale);
-        let (_, ttt_s) = run_ttt(&g);
+        let s = session(&g, 4);
+        let (_, ttt_s) = run_ttt(&s);
         let title = if as_speedup {
             format!("Figure 6 — speedup over TTT vs threads, {}", d.name())
         } else {
@@ -220,25 +225,22 @@ fn scaling_tables(scale: Scale, as_speedup: bool) -> Result<String> {
             &["algorithm", "p=1", "p=2", "p=4", "p=8", "p=16", "p=32"],
         );
         // one trace per algorithm, evaluated across p
-        let sink = CountSink::new();
-        let pt_trace = trace_parttt(&g, &sink);
+        let (pt_trace, _) = s.parttt_trace();
         let mut rows: Vec<(String, Vec<(usize, f64)>)> = vec![(
             "ParTTT".into(),
             sim_curve(&pt_trace, &THREADS),
         )];
         for strat in [RankStrategy::Degree, RankStrategy::Degeneracy, RankStrategy::Triangle] {
-            let ranking = Ranking::compute(&g, strat);
-            let sink = CountSink::new();
-            let tr = trace(&g, &ranking, &sink);
+            let (tr, _) = s.parmce_trace(strat);
             rows.push((format!("ParMCE{}", strat.name()), sim_curve(&tr, &THREADS)));
         }
         for (name, curve) in rows {
             let mut cells = vec![name];
-            for (_, s) in curve {
+            for (_, sim_s) in curve {
                 cells.push(if as_speedup {
-                    fmt_speedup(ttt_s / s)
+                    fmt_speedup(ttt_s / sim_s)
                 } else {
-                    format!("{:.1}", s * 1e3)
+                    format!("{:.1}", sim_s * 1e3)
                 });
             }
             t.row(cells);

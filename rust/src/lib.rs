@@ -2,16 +2,42 @@
 //!
 //! Reproduction of Das, Sanei-Mehri & Tirthapura, *"Shared-Memory Parallel
 //! Maximal Clique Enumeration from Static and Dynamic Graphs"* (ACM TOPC
-//! 2020), built as a three-layer Rust + JAX + Pallas stack:
+//! 2020), built as a three-layer Rust + JAX + Pallas stack.
 //!
-//! * **L3 (this crate)** — the paper's contribution: the sequential [`mce::ttt`]
-//!   baseline, the work-efficient parallel [`mce::parttt`], the load-balanced
-//!   [`mce::parmce`] with degree/triangle/degeneracy rankings, and the
-//!   incremental [`dynamic`] algorithms (IMCE / ParIMCE), all running on the
-//!   in-crate work-stealing pool ([`coordinator::pool`]).
-//! * **L2/L1 (python/compile, build-time only)** — the triangle-count vertex
-//!   ranking as a blocked Pallas kernel, AOT-lowered to HLO text and executed
-//!   from Rust via PJRT ([`runtime`]).
+//! ## Entry point: the session API
+//!
+//! Everything routes through [`session`]: one builder, one [`session::Algo`]
+//! enum covering the paper's algorithms and every comparison baseline, one
+//! [`session::DynamicSession`] for incremental maintenance.
+//!
+//! ```
+//! use parmce::graph::generators;
+//! use parmce::session::{Algo, MceSession, RunOutcome};
+//!
+//! let g = generators::gnp(80, 0.15, 42);
+//! let session = MceSession::builder()
+//!     .graph(g)
+//!     .algo(Algo::ParMce)   // rank-decomposed, load-balanced (Alg. 4)
+//!     .threads(4)
+//!     .build()
+//!     .unwrap();
+//! let run = session.run();
+//! assert_eq!(run.report.outcome, RunOutcome::Completed);
+//! println!("{} maximal cliques in {:?}", run.report.cliques, run.report.wall);
+//! ```
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the paper's contribution: the sequential
+//!   [`mce::ttt`] baseline, the work-efficient parallel [`mce::parttt`],
+//!   the load-balanced [`mce::parmce`] with degree/triangle/degeneracy
+//!   rankings, and the incremental [`dynamic`] algorithms (IMCE /
+//!   ParIMCE), all running on the in-crate work-stealing pool
+//!   ([`coordinator::pool`]) behind the [`session`] facade.
+//! * **L2/L1 (python/compile, build-time only)** — the triangle-count
+//!   vertex ranking as a blocked Pallas kernel, AOT-lowered to HLO text
+//!   and executed from Rust via PJRT ([`runtime`]; requires the `pjrt`
+//!   cargo feature and `make artifacts`).
 //!
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
 //! reproduced tables/figures.
@@ -20,7 +46,8 @@ pub mod baselines;
 pub mod coordinator;
 pub mod dynamic;
 pub mod experiments;
-pub mod mce;
 pub mod graph;
+pub mod mce;
 pub mod runtime;
+pub mod session;
 pub mod util;

@@ -1,24 +1,24 @@
-//! parmce CLI — the L3 coordinator entry point.
+//! parmce CLI — the L3 coordinator entry point, routed through the
+//! session API.
 //!
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!   parmce exp <id|all> [--scale tiny|small|full] [--out DIR]
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
+//!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
 //!   parmce stats [--dataset NAME] [--scale S]
+//!   parmce perf [--scale S]
 //!   parmce artifacts-check
 //!   parmce help
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use parmce::coordinator::pool::ThreadPool;
 use parmce::graph::datasets::{Dataset, Scale};
 use parmce::graph::stats::GraphStats;
 use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::mce::sink::{CliqueSink, CountSink};
-use parmce::mce::parmce::parmce as run_parmce;
-use parmce::mce::parttt::parttt as run_parttt;
-use parmce::mce::{ttt, ParMceConfig, ParTttConfig};
+use parmce::session::{Algo, MceSession, RunOutcome};
 use parmce::util::table::fmt_count;
 
 fn main() {
@@ -56,6 +56,37 @@ fn parse_dataset(name: &str) -> Result<Dataset> {
         })
 }
 
+/// CLI algorithm spelling → (Algo, ranking, wants-PJRT-ranking).
+/// Accepts both the session spellings (`parmce`, `bk`, `hashing`, …) and
+/// the legacy combined forms (`parmce-degree`, `parmce-tri-pjrt`).
+fn parse_algo_spec(a: &str) -> Result<(Algo, RankStrategy, bool)> {
+    let spec = match a {
+        "parmce-degree" => (Algo::ParMce, RankStrategy::Degree, false),
+        "parmce-degen" => (Algo::ParMce, RankStrategy::Degeneracy, false),
+        "parmce-tri" => (Algo::ParMce, RankStrategy::Triangle, false),
+        "parmce-tri-pjrt" => (Algo::ParMce, RankStrategy::Triangle, true),
+        other => match Algo::parse(other) {
+            Some(algo) => (algo, RankStrategy::Degree, false),
+            None => bail!(
+                "unknown algo {other} (ttt|parttt|parmce[-degree|-degen|-tri|-tri-pjrt]|\
+                 bk|bk-basic|bk-degeneracy|peco|peamc|gp|greedybb|clique-enumerator|hashing)"
+            ),
+        },
+    };
+    Ok(spec)
+}
+
+fn parse_rank(args: &[String], default: RankStrategy) -> Result<RankStrategy> {
+    Ok(match flag(args, "--rank").as_deref() {
+        None => default,
+        Some("id") => RankStrategy::Id,
+        Some("degree") => RankStrategy::Degree,
+        Some("degen") | Some("degeneracy") => RankStrategy::Degeneracy,
+        Some("tri") | Some("triangle") => RankStrategy::Triangle,
+        Some(s) => bail!("unknown rank strategy {s} (id|degree|degen|tri)"),
+    })
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => {
@@ -75,63 +106,59 @@ fn dispatch(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("--dataset required"))?;
             let d = parse_dataset(&dataset)?;
             let scale = parse_scale(args)?;
-            let algo = flag(args, "--algo").unwrap_or_else(|| "parmce-degree".into());
+            let algo_str = flag(args, "--algo").unwrap_or_else(|| "parmce-degree".into());
+            let (algo, default_rank, pjrt) = parse_algo_spec(&algo_str)?;
+            let rank = parse_rank(args, default_rank)?;
+            if pjrt && rank != RankStrategy::Triangle {
+                bail!(
+                    "--algo parmce-tri-pjrt ranks on the PJRT triangle kernel; \
+                     it cannot be combined with --rank {rank:?}"
+                );
+            }
             let threads: usize = flag(args, "--threads")
                 .map(|t| t.parse())
                 .transpose()?
                 .unwrap_or(4);
             let g = d.graph(scale);
             println!(
-                "dataset {} (n={}, m={}), algo {algo}, {threads} threads",
+                "dataset {} (n={}, m={}), algo {algo_str}, {threads} threads",
                 d.name(),
                 fmt_count(g.n() as u64),
                 fmt_count(g.m() as u64)
             );
-            let t0 = std::time::Instant::now();
-            let count = match algo.as_str() {
-                "ttt" => {
-                    let sink = CountSink::new();
-                    ttt::ttt(&g, &sink);
-                    sink.count()
-                }
-                "parttt" => {
-                    let pool = ThreadPool::new(threads);
-                    let g = Arc::new(g);
-                    let sink = Arc::new(CountSink::new());
-                    let ds: Arc<dyn CliqueSink> = sink.clone();
-                    run_parttt(&pool, &g, &ds, ParTttConfig::default());
-                    sink.count()
-                }
-                a if a.starts_with("parmce") => {
-                    let strat = match a {
-                        "parmce-degree" => RankStrategy::Degree,
-                        "parmce-degen" => RankStrategy::Degeneracy,
-                        "parmce-tri" => RankStrategy::Triangle,
-                        "parmce-tri-pjrt" => RankStrategy::Triangle,
-                        _ => bail!("unknown parmce variant {a}"),
-                    };
-                    let ranking = if a == "parmce-tri-pjrt" {
-                        let engine = parmce::runtime::engine::Engine::load_default()?;
-                        let backend =
-                            parmce::runtime::tri_rank::PjrtTriangleBackend::new(&engine);
-                        Arc::new(Ranking::compute_with(&g, strat, &backend)?)
-                    } else {
-                        Arc::new(Ranking::compute(&g, strat))
-                    };
-                    let pool = ThreadPool::new(threads);
-                    let g = Arc::new(g);
-                    let sink = Arc::new(CountSink::new());
-                    let ds: Arc<dyn CliqueSink> = sink.clone();
-                    run_parmce(&pool, &g, &ranking, &ds, ParMceConfig::default());
-                    sink.count()
-                }
-                other => bail!("unknown algo {other} (ttt|parttt|parmce-degree|parmce-degen|parmce-tri|parmce-tri-pjrt)"),
-            };
-            println!(
-                "{} maximal cliques in {:.3}s",
-                fmt_count(count),
-                t0.elapsed().as_secs_f64()
-            );
+
+            let mut builder = MceSession::builder()
+                .graph(g.clone())
+                .algo(algo)
+                .rank_strategy(rank)
+                .threads(threads);
+            if let Some(kb) = flag(args, "--budget-kb") {
+                builder = builder.mem_budget_bytes(kb.parse::<usize>()? << 10);
+            }
+            if let Some(ms) = flag(args, "--deadline-ms") {
+                builder = builder.deadline(Duration::from_millis(ms.parse()?));
+            }
+            if pjrt {
+                // rank on the AOT Pallas kernel, seed the session cache
+                let engine = parmce::runtime::engine::Engine::load_default()?;
+                let backend = parmce::runtime::tri_rank::PjrtTriangleBackend::new(&engine);
+                let ranking = Ranking::compute_with(&g, RankStrategy::Triangle, &backend)?;
+                builder = builder.ranking(Arc::new(ranking));
+            }
+            let session = builder.build()?;
+            let run = session.run();
+            match run.report.outcome {
+                RunOutcome::Completed => println!(
+                    "{} maximal cliques in {:.3}s",
+                    fmt_count(run.report.cliques),
+                    run.report.secs()
+                ),
+                other => println!(
+                    "run ended with {other:?} after {:.3}s ({} cliques emitted)",
+                    run.report.secs(),
+                    fmt_count(run.report.cliques)
+                ),
+            }
             Ok(())
         }
         Some("stats") => {
@@ -154,7 +181,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             let scale = parse_scale(args)?;
             for d in [Dataset::WikiTalkLike, Dataset::AsSkitterLike, Dataset::WikipediaLike] {
                 let g = d.graph(scale);
-                let sink = CountSink::new();
+                let sink = parmce::mce::sink::CountSink::new();
                 let mut m = parmce::mce::ttt::TttMetrics::default();
                 let mut k = Vec::new();
                 let t0 = std::time::Instant::now();
@@ -208,10 +235,14 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \n\
                  USAGE:\n\
                  \x20 parmce exp <table3..table10|fig2|fig5..fig9|ablation|all> [--scale tiny|small|full] [--out DIR]\n\
-                 \x20 parmce enumerate --dataset NAME [--algo ttt|parttt|parmce-degree|parmce-degen|parmce-tri|parmce-tri-pjrt] [--threads N] [--scale S]\n\
+                 \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
+                 \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
+                 \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\
                  \n\
+                 Algorithms: ttt, parttt, parmce[-degree|-degen|-tri|-tri-pjrt], bk, bk-basic,\n\
+                 \x20 bk-degeneracy, peco, peamc, gp, greedybb, clique-enumerator, hashing\n\
                  Datasets: {}",
                 Dataset::all().map(|d| d.name()).join(", ")
             );

@@ -1,0 +1,404 @@
+//! [`SessionBuilder`] → [`MceSession`]: the crate's front door for
+//! static maximal clique enumeration.
+//!
+//! One builder replaces the manual pool/ranking/sink dance: pick a graph
+//! source, an [`Algo`], a [`RankStrategy`], resource limits and a sink
+//! shape, and get a session whose [`ExecContext`] owns the pool and the
+//! cached rankings.  Every algorithm then runs through the same
+//! `count` / `collect` / `run` verbs and reports a uniform [`RunReport`].
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::gp::{simulate_gp, GpConfig, GpOutcome};
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::sim::Trace;
+use crate::coordinator::stats::Subproblem;
+use crate::graph::csr::CsrGraph;
+use crate::graph::datasets::{Dataset, Scale};
+use crate::graph::{Edge, Vertex};
+use crate::mce::parmce::{subproblems_timed, trace, trace_parttt};
+use crate::mce::ranking::{RankStrategy, Ranking};
+use crate::mce::sink::{CliqueSink, CollectSink, CountSink, SizeHistogram};
+use crate::mce::ParTttConfig;
+
+use super::context::ExecContext;
+use super::enumerators::Algo;
+use super::report::RunReport;
+
+/// What the session's default [`MceSession::run`] does with emitted
+/// cliques.  Custom sinks go through [`MceSession::run_with_sink`].
+#[derive(Clone, Copy, Debug)]
+pub enum SinkSpec {
+    /// O(1)-memory counting (the default; Orkut has 2.27B cliques).
+    Count,
+    /// Materialize every clique in canonical order (tests/small graphs).
+    Collect,
+    /// Clique-size histogram (Figure 5).
+    Histogram { max_size: usize },
+}
+
+/// Builder for [`MceSession`]. All knobs have sensible defaults; only a
+/// graph source is required.
+pub struct SessionBuilder {
+    graph: Option<Arc<CsrGraph>>,
+    algo: Algo,
+    rank: RankStrategy,
+    threads: usize,
+    mem_budget: Option<usize>,
+    deadline: Duration,
+    parttt: ParTttConfig,
+    sink: SinkSpec,
+    seeded_rankings: Vec<Arc<Ranking>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            graph: None,
+            algo: Algo::ParMce,
+            rank: RankStrategy::Degree,
+            threads: 4,
+            mem_budget: None,
+            deadline: Duration::from_secs(3600),
+            parttt: ParTttConfig::default(),
+            sink: SinkSpec::Count,
+            seeded_rankings: Vec::new(),
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Graph source: an owned CSR graph.
+    pub fn graph(mut self, g: CsrGraph) -> Self {
+        self.graph = Some(Arc::new(g));
+        self
+    }
+
+    /// Graph source: a shared CSR graph (no copy).
+    pub fn graph_arc(mut self, g: Arc<CsrGraph>) -> Self {
+        self.graph = Some(g);
+        self
+    }
+
+    /// Graph source: an edge list over `n` vertices.
+    pub fn edges(self, n: usize, edges: &[Edge]) -> Self {
+        self.graph(CsrGraph::from_edges(n, edges))
+    }
+
+    /// Graph source: a synthetic dataset analog at the given scale.
+    pub fn dataset(self, d: Dataset, scale: Scale) -> Self {
+        self.graph(d.graph(scale))
+    }
+
+    /// Default algorithm for [`MceSession::run`] (default: `ParMce`).
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Vertex ranking for the rank-decomposed algorithms (default:
+    /// `Degree` — the paper's best overall configuration).
+    pub fn rank_strategy(mut self, rank: RankStrategy) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Worker threads for the work-stealing pool (default: 4). The pool
+    /// spawns lazily, so sequential-only sessions never pay for it.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Cooperative memory budget for the memory-bound baselines
+    /// (default: unlimited). Exceeding it yields
+    /// [`super::RunOutcome::OutOfMemory`].
+    pub fn mem_budget_bytes(mut self, bytes: usize) -> Self {
+        self.mem_budget = Some(bytes);
+        self
+    }
+
+    /// Wall-clock deadline for the deadline-aware baselines (default:
+    /// one hour). Exceeding it yields [`super::RunOutcome::TimedOut`].
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// ParTTT granularity control (default: [`ParTttConfig::default`]).
+    pub fn parttt_config(mut self, cfg: ParTttConfig) -> Self {
+        self.parttt = cfg;
+        self
+    }
+
+    /// Shorthand for the sequential cutoff of [`ParTttConfig`].
+    pub fn seq_cutoff(mut self, cutoff: usize) -> Self {
+        self.parttt.seq_cutoff = cutoff;
+        self
+    }
+
+    /// Default sink shape for [`MceSession::run`] (default: `Count`).
+    pub fn sink(mut self, sink: SinkSpec) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    /// Seed the ranking cache with an externally computed ranking —
+    /// the path for the PJRT/Pallas triangle backend, whose client is
+    /// not `Sync` and therefore cannot live inside the context.
+    pub fn ranking(mut self, ranking: Arc<Ranking>) -> Self {
+        self.seeded_rankings.push(ranking);
+        self
+    }
+
+    pub fn build(self) -> Result<MceSession> {
+        let g = self.graph.ok_or_else(|| {
+            anyhow!("SessionBuilder: no graph source (use .graph/.graph_arc/.edges/.dataset)")
+        })?;
+        let ctx = ExecContext::new(
+            self.threads,
+            self.rank,
+            self.mem_budget,
+            self.deadline,
+            self.parttt,
+        );
+        for r in self.seeded_rankings {
+            ctx.seed_ranking(&g, r);
+        }
+        Ok(MceSession {
+            g,
+            algo: self.algo,
+            sink: self.sink,
+            ctx,
+        })
+    }
+}
+
+/// Output of one [`MceSession::run`]: the report plus whatever the
+/// configured [`SinkSpec`] materialized.
+pub struct SessionRun {
+    pub report: RunReport,
+    /// Canonical clique list (`SinkSpec::Collect` only).
+    pub cliques: Option<Vec<Vec<Vertex>>>,
+    /// Size histogram (`SinkSpec::Histogram` only).
+    pub histogram: Option<SizeHistogram>,
+}
+
+/// A static-graph enumeration session: one graph, one shared
+/// [`ExecContext`], any number of algorithm runs.
+pub struct MceSession {
+    g: Arc<CsrGraph>,
+    algo: Algo,
+    sink: SinkSpec,
+    ctx: ExecContext,
+}
+
+impl MceSession {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub fn graph(&self) -> &Arc<CsrGraph> {
+        &self.g
+    }
+
+    pub fn ctx(&self) -> &ExecContext {
+        &self.ctx
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        self.ctx.pool()
+    }
+
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+
+    /// Run the session's configured algorithm into its configured sink.
+    pub fn run(&self) -> SessionRun {
+        self.run_algo(self.algo)
+    }
+
+    /// Run `algo` into the session's configured sink.
+    pub fn run_algo(&self, algo: Algo) -> SessionRun {
+        match self.sink {
+            SinkSpec::Count => SessionRun {
+                report: self.count(algo),
+                cliques: None,
+                histogram: None,
+            },
+            SinkSpec::Collect => {
+                let (cliques, report) = self.collect(algo);
+                SessionRun {
+                    report,
+                    cliques: Some(cliques),
+                    histogram: None,
+                }
+            }
+            SinkSpec::Histogram { max_size } => {
+                let hist = Arc::new(SizeHistogram::new(max_size));
+                let sink: Arc<dyn CliqueSink> = Arc::clone(&hist);
+                let report = self.run_with_sink(algo, &sink);
+                drop(sink);
+                let hist =
+                    Arc::into_inner(hist).expect("histogram sink still shared after run");
+                SessionRun {
+                    report,
+                    cliques: None,
+                    histogram: Some(hist),
+                }
+            }
+        }
+    }
+
+    /// Run `algo` with an O(1)-memory counting sink.
+    pub fn count(&self, algo: Algo) -> RunReport {
+        let sink: Arc<dyn CliqueSink> = Arc::new(CountSink::new());
+        self.run_with_sink(algo, &sink)
+    }
+
+    /// Run `algo` collecting every clique in canonical order.
+    pub fn collect(&self, algo: Algo) -> (Vec<Vec<Vertex>>, RunReport) {
+        let collect = Arc::new(CollectSink::new());
+        let sink: Arc<dyn CliqueSink> = Arc::clone(&collect);
+        let report = self.run_with_sink(algo, &sink);
+        drop(sink);
+        let cliques = Arc::into_inner(collect)
+            .expect("collect sink still shared after run")
+            .into_canonical();
+        (cliques, report)
+    }
+
+    /// Run `algo` into a caller-provided sink.
+    pub fn run_with_sink(&self, algo: Algo, sink: &Arc<dyn CliqueSink>) -> RunReport {
+        let report = algo.enumerator().enumerate(&self.ctx, &self.g, sink);
+        self.ctx.record(report);
+        report
+    }
+
+    /// The (cached) ranking for `strategy` on this session's graph.
+    pub fn ranking(&self, strategy: RankStrategy) -> Arc<Ranking> {
+        self.ctx.ranking(&self.g, strategy)
+    }
+
+    /// Measured per-vertex subproblem costs under `strategy` (cached).
+    pub fn subproblems(&self, strategy: RankStrategy) -> Arc<Vec<Subproblem>> {
+        self.ctx.subproblems(&self.g, strategy)
+    }
+
+    /// Subproblem costs under an ad-hoc ranking (not cached) — for
+    /// ablations that test non-paper orderings.
+    pub fn subproblems_with(&self, ranking: &Ranking) -> Vec<Subproblem> {
+        subproblems_timed(&self.g, ranking)
+    }
+
+    /// Measured ParMCE task tree under `strategy` for the scheduler
+    /// simulator; returns the trace and the clique count it covered.
+    pub fn parmce_trace(&self, strategy: RankStrategy) -> (Trace, u64) {
+        let ranking = self.ctx.ranking(&self.g, strategy);
+        let sink = CountSink::new();
+        let tr = trace(&self.g, &ranking, &sink);
+        (tr, sink.count())
+    }
+
+    /// Measured ParTTT task tree (single root over the whole graph).
+    pub fn parttt_trace(&self) -> (Trace, u64) {
+        let sink = CountSink::new();
+        let tr = trace_parttt(&self.g, &sink);
+        (tr, sink.count())
+    }
+
+    /// Price the GP exchange cost model at `workers` MPI nodes using the
+    /// session's cached subproblem measurements (Table 9).
+    pub fn simulate_gp(&self, workers: usize, cfg: GpConfig) -> GpOutcome {
+        let subs = self.ctx.subproblems(&self.g, self.ctx.rank_strategy());
+        simulate_gp(&self.g, &subs, workers, cfg)
+    }
+
+    /// Set the cooperative cancellation flag: subsequent runs report
+    /// [`super::RunOutcome::Cancelled`] without starting.
+    pub fn cancel(&self) {
+        self.ctx.cancel();
+    }
+
+    pub fn clear_cancel(&self) {
+        self.ctx.clear_cancel();
+    }
+
+    /// Every run this session has executed, in order.
+    pub fn history(&self) -> Vec<RunReport> {
+        self.ctx.history()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::session::RunOutcome;
+
+    #[test]
+    fn builder_requires_a_graph() {
+        assert!(MceSession::builder().build().is_err());
+    }
+
+    #[test]
+    fn count_and_collect_agree_with_each_other() {
+        let g = generators::gnp(20, 0.4, 9);
+        let s = MceSession::builder().graph(g).threads(2).build().unwrap();
+        let report = s.count(Algo::Ttt);
+        assert_eq!(report.outcome, RunOutcome::Completed);
+        let (cliques, r2) = s.collect(Algo::Ttt);
+        assert_eq!(cliques.len() as u64, report.cliques);
+        assert_eq!(r2.cliques, report.cliques);
+        assert_eq!(s.history().len(), 2);
+    }
+
+    #[test]
+    fn run_honors_sink_spec() {
+        let g = generators::gnp(18, 0.4, 4);
+        let s = MceSession::builder()
+            .graph(g)
+            .algo(Algo::Ttt)
+            .sink(SinkSpec::Histogram { max_size: 32 })
+            .build()
+            .unwrap();
+        let run = s.run();
+        let hist = run.histogram.expect("histogram requested");
+        assert_eq!(hist.count(), run.report.cliques);
+        assert!(run.cliques.is_none());
+    }
+
+    #[test]
+    fn seeded_ranking_is_served_from_cache() {
+        let g = generators::gnp(16, 0.3, 2);
+        let pre = Arc::new(Ranking::compute(&g, RankStrategy::Triangle));
+        let s = MceSession::builder()
+            .graph(g)
+            .rank_strategy(RankStrategy::Triangle)
+            .ranking(Arc::clone(&pre))
+            .build()
+            .unwrap();
+        assert!(Arc::ptr_eq(&s.ranking(RankStrategy::Triangle), &pre));
+    }
+
+    #[test]
+    fn traces_cover_the_full_enumeration() {
+        let g = generators::gnp(24, 0.35, 6);
+        let s = MceSession::builder().graph(g).build().unwrap();
+        let want = s.count(Algo::Ttt).cliques;
+        let (tr, n) = s.parmce_trace(RankStrategy::Degree);
+        assert_eq!(n, want);
+        assert!(!tr.is_empty());
+        let (tr2, n2) = s.parttt_trace();
+        assert_eq!(n2, want);
+        assert!(!tr2.is_empty());
+    }
+}

@@ -1,0 +1,268 @@
+//! Shared execution context: the one place a session keeps its thread
+//! pool, resource limits, cached rankings, run history, and cancellation
+//! flag — the state every call site used to wire up by hand.
+//!
+//! Caches are keyed by `(graph identity, strategy)` so a context handed a
+//! different graph (e.g. through a raw [`super::Enumerator`] call) never
+//! serves a stale ranking.  The pool is created lazily: purely sequential
+//! sessions (TTT, the sequential baselines) never spawn worker threads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::stats::Subproblem;
+use crate::graph::csr::CsrGraph;
+use crate::mce::parmce::subproblems_timed;
+use crate::mce::ranking::{RankStrategy, Ranking};
+use crate::mce::ParTttConfig;
+use crate::util::membudget::MemBudget;
+
+use super::report::RunReport;
+
+type RankKey = (usize, RankStrategy);
+
+fn graph_key(g: &Arc<CsrGraph>) -> usize {
+    Arc::as_ptr(g) as usize
+}
+
+/// Cache entry pinning the graph it was computed for: holding the
+/// `Arc<CsrGraph>` keeps the allocation alive, so the pointer key can
+/// never be reused by a different graph (no ABA).
+struct Cached<T> {
+    graph: Arc<CsrGraph>,
+    value: Arc<T>,
+}
+
+pub struct ExecContext {
+    threads: usize,
+    pool: OnceLock<ThreadPool>,
+    rank_strategy: RankStrategy,
+    /// `None` = unlimited (baselines run to completion).
+    mem_budget_bytes: Option<usize>,
+    deadline: Duration,
+    parttt: ParTttConfig,
+    cancelled: AtomicBool,
+    rankings: Mutex<HashMap<RankKey, Cached<Ranking>>>,
+    subproblems: Mutex<HashMap<RankKey, Cached<Vec<Subproblem>>>>,
+    history: Mutex<Vec<RunReport>>,
+}
+
+impl ExecContext {
+    pub fn new(
+        threads: usize,
+        rank_strategy: RankStrategy,
+        mem_budget_bytes: Option<usize>,
+        deadline: Duration,
+        parttt: ParTttConfig,
+    ) -> ExecContext {
+        ExecContext {
+            threads: threads.max(1),
+            pool: OnceLock::new(),
+            rank_strategy,
+            mem_budget_bytes,
+            deadline,
+            parttt,
+            cancelled: AtomicBool::new(false),
+            rankings: Mutex::new(HashMap::new()),
+            subproblems: Mutex::new(HashMap::new()),
+            history: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The work-stealing pool, spawned on first use.
+    pub fn pool(&self) -> &ThreadPool {
+        self.pool.get_or_init(|| ThreadPool::new(self.threads))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn rank_strategy(&self) -> RankStrategy {
+        self.rank_strategy
+    }
+
+    /// A fresh budget for one run (budgets are consumed, not shared).
+    pub fn mem_budget(&self) -> MemBudget {
+        match self.mem_budget_bytes {
+            Some(cap) => MemBudget::new(cap),
+            None => MemBudget::unlimited(),
+        }
+    }
+
+    pub fn mem_budget_bytes(&self) -> Option<usize> {
+        self.mem_budget_bytes
+    }
+
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    pub fn parttt_config(&self) -> ParTttConfig {
+        self.parttt
+    }
+
+    /// Cooperative cancellation: checked before a run starts and between
+    /// coarse units of session-level work (e.g. GP's per-vertex loop).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn clear_cancel(&self) {
+        self.cancelled.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// The ranking for `(g, strategy)`, computed once and cached.
+    pub fn ranking(&self, g: &Arc<CsrGraph>, strategy: RankStrategy) -> Arc<Ranking> {
+        let key = (graph_key(g), strategy);
+        let mut cache = self.rankings.lock().unwrap();
+        if let Some(c) = cache.get(&key) {
+            debug_assert!(Arc::ptr_eq(&c.graph, g));
+            return Arc::clone(&c.value);
+        }
+        let r = Arc::new(Ranking::compute(g, strategy));
+        cache.insert(
+            key,
+            Cached {
+                graph: Arc::clone(g),
+                value: Arc::clone(&r),
+            },
+        );
+        r
+    }
+
+    /// Seed the ranking cache with an externally computed ranking (e.g.
+    /// the PJRT/Pallas triangle backend, which is not `Sync` and so lives
+    /// outside the context).
+    pub fn seed_ranking(&self, g: &Arc<CsrGraph>, ranking: Arc<Ranking>) {
+        let key = (graph_key(g), ranking.strategy());
+        self.rankings.lock().unwrap().insert(
+            key,
+            Cached {
+                graph: Arc::clone(g),
+                value: ranking,
+            },
+        );
+    }
+
+    /// Measured per-vertex subproblem costs under `strategy` (Figure 2's
+    /// methodology), computed once and cached — the input shared by the
+    /// GP simulation, PECO's flat-task model, and the skew experiments.
+    pub fn subproblems(&self, g: &Arc<CsrGraph>, strategy: RankStrategy) -> Arc<Vec<Subproblem>> {
+        let key = (graph_key(g), strategy);
+        if let Some(c) = self.subproblems.lock().unwrap().get(&key) {
+            debug_assert!(Arc::ptr_eq(&c.graph, g));
+            return Arc::clone(&c.value);
+        }
+        // measure outside the lock: enumeration is expensive
+        let ranking = self.ranking(g, strategy);
+        let subs = Arc::new(subproblems_timed(g, &ranking));
+        self.seed_subproblems(g, strategy, Arc::clone(&subs));
+        subs
+    }
+
+    /// Seed the subproblem cache with measurements taken elsewhere (the
+    /// GP enumerator measures the same decomposition while emitting).
+    pub fn seed_subproblems(
+        &self,
+        g: &Arc<CsrGraph>,
+        strategy: RankStrategy,
+        subs: Arc<Vec<Subproblem>>,
+    ) {
+        self.subproblems.lock().unwrap().insert(
+            (graph_key(g), strategy),
+            Cached {
+                graph: Arc::clone(g),
+                value: subs,
+            },
+        );
+    }
+
+    /// Append to the session's run history.
+    pub fn record(&self, report: RunReport) {
+        self.history.lock().unwrap().push(report);
+    }
+
+    /// Every run this context has executed, in order.
+    pub fn history(&self) -> Vec<RunReport> {
+        self.history.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn ctx() -> ExecContext {
+        ExecContext::new(
+            2,
+            RankStrategy::Degree,
+            None,
+            Duration::from_secs(60),
+            ParTttConfig::default(),
+        )
+    }
+
+    #[test]
+    fn ranking_cache_returns_same_arc() {
+        let g = Arc::new(generators::gnp(30, 0.3, 1));
+        let c = ctx();
+        let a = c.ranking(&g, RankStrategy::Degree);
+        let b = c.ranking(&g, RankStrategy::Degree);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        let tri = c.ranking(&g, RankStrategy::Triangle);
+        assert!(!Arc::ptr_eq(&a, &tri));
+    }
+
+    #[test]
+    fn distinct_graphs_do_not_share_cache_entries() {
+        let g1 = Arc::new(generators::gnp(20, 0.3, 1));
+        let g2 = Arc::new(generators::gnp(20, 0.3, 2));
+        let c = ctx();
+        let r1 = c.ranking(&g1, RankStrategy::Degree);
+        let r2 = c.ranking(&g2, RankStrategy::Degree);
+        assert!(!Arc::ptr_eq(&r1, &r2));
+    }
+
+    #[test]
+    fn subproblems_cached_and_cover_all_vertices() {
+        let g = Arc::new(generators::gnp(25, 0.3, 3));
+        let c = ctx();
+        let a = c.subproblems(&g, RankStrategy::Degree);
+        assert_eq!(a.len(), 25);
+        let b = c.subproblems(&g, RankStrategy::Degree);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cancellation_flag_round_trips() {
+        let c = ctx();
+        assert!(!c.is_cancelled());
+        c.cancel();
+        assert!(c.is_cancelled());
+        c.clear_cancel();
+        assert!(!c.is_cancelled());
+    }
+
+    #[test]
+    fn budget_construction_matches_config() {
+        let c = ExecContext::new(
+            1,
+            RankStrategy::Degree,
+            Some(1000),
+            Duration::from_secs(1),
+            ParTttConfig::default(),
+        );
+        let b = c.mem_budget();
+        assert_eq!(b.cap(), 1000);
+        assert_eq!(ctx().mem_budget().cap(), usize::MAX);
+    }
+}

@@ -1,0 +1,266 @@
+//! [`DynamicSession`]: incremental maximal clique maintenance behind one
+//! `apply_batch` verb.
+//!
+//! Wraps the mutable [`DynGraph`], the concurrent [`CliqueRegistry`] and
+//! the IMCE / ParIMCE batch engines (paper §5) so callers choose an
+//! algorithm once and stream edge batches — the Figure 4 pipeline —
+//! without hand-wiring pools or registries.  The decremental reduction
+//! (§5.3) rides along as [`DynamicSession::remove_batch`].
+
+use std::time::Instant;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::dynamic::imce::{imce_batch, BatchTimings};
+use crate::dynamic::par_imce::par_imce_batch;
+use crate::dynamic::registry::CliqueRegistry;
+use crate::dynamic::stream::{imce_remove_batch, BatchRecord, EdgeStream};
+use crate::dynamic::BatchResult;
+use crate::graph::adj::DynGraph;
+use crate::graph::csr::CsrGraph;
+use crate::graph::{Edge, Vertex};
+
+/// Which incremental engine a [`DynamicSession`] applies batches with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DynAlgo {
+    /// Sequential IMCE (VLDB 2019 baseline).
+    Imce,
+    /// ParIMCE (paper Algorithms 5–7) on the work-stealing pool.
+    ParImce,
+}
+
+impl DynAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DynAlgo::Imce => "IMCE",
+            DynAlgo::ParImce => "ParIMCE",
+        }
+    }
+}
+
+/// A dynamic-graph session: the graph, its maximal clique set C(G), and
+/// the chosen batch engine. Every mutation keeps the registry exact.
+pub struct DynamicSession {
+    graph: DynGraph,
+    registry: CliqueRegistry,
+    algo: DynAlgo,
+    threads: usize,
+    pool: Option<ThreadPool>,
+    batches_applied: usize,
+    total_new: u64,
+    total_subsumed: u64,
+}
+
+impl DynamicSession {
+    /// Start from the edgeless graph on `n` vertices (the §6 replay
+    /// methodology); C(G) = the n singleton cliques.
+    pub fn from_empty(n: usize, algo: DynAlgo) -> DynamicSession {
+        let registry = CliqueRegistry::new();
+        for v in 0..n as Vertex {
+            registry.insert(&[v]);
+        }
+        DynamicSession {
+            graph: DynGraph::new(n),
+            registry,
+            algo,
+            threads: 4,
+            pool: None,
+            batches_applied: 0,
+            total_new: 0,
+            total_subsumed: 0,
+        }
+    }
+
+    /// Start from an existing static graph; C(G) is bootstrapped with
+    /// sequential TTT.
+    pub fn from_graph(g: &CsrGraph, algo: DynAlgo) -> DynamicSession {
+        DynamicSession {
+            graph: DynGraph::from_csr(g),
+            registry: CliqueRegistry::from_graph(g),
+            algo,
+            threads: 4,
+            pool: None,
+            batches_applied: 0,
+            total_new: 0,
+            total_subsumed: 0,
+        }
+    }
+
+    /// Worker threads for the ParIMCE pool (default 4; the pool spawns
+    /// lazily on the first parallel batch).
+    pub fn with_threads(mut self, threads: usize) -> DynamicSession {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Share an existing pool instead of spawning one.
+    pub fn with_pool(mut self, pool: ThreadPool) -> DynamicSession {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn algo(&self) -> DynAlgo {
+        self.algo
+    }
+
+    /// Apply one batch of edge insertions; returns the canonical change
+    /// set (Λⁿᵉʷ, Λᵈᵉˡ). The registry advances to C(G + H).
+    pub fn apply_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        self.apply_batch_timed(edges).0
+    }
+
+    /// As [`apply_batch`](Self::apply_batch), also returning per-task
+    /// phase timings for the scheduler simulation (Figures 8/9).
+    pub fn apply_batch_timed(&mut self, edges: &[Edge]) -> (BatchResult, BatchTimings) {
+        let (result, timings) = match self.algo {
+            DynAlgo::Imce => imce_batch(&mut self.graph, &self.registry, edges),
+            DynAlgo::ParImce => {
+                if self.pool.is_none() {
+                    self.pool = Some(ThreadPool::new(self.threads));
+                }
+                let pool = self.pool.as_ref().expect("pool just ensured");
+                par_imce_batch(pool, &mut self.graph, &self.registry, edges)
+            }
+        };
+        self.batches_applied += 1;
+        self.total_new += result.new_cliques.len() as u64;
+        self.total_subsumed += result.subsumed.len() as u64;
+        (result, timings)
+    }
+
+    /// Apply one batch of edge removals (§5.3 decremental reduction).
+    pub fn remove_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        let result = imce_remove_batch(&mut self.graph, &self.registry, edges);
+        self.batches_applied += 1;
+        self.total_new += result.new_cliques.len() as u64;
+        self.total_subsumed += result.subsumed.len() as u64;
+        result
+    }
+
+    /// Stream `stream` through the session in batches, recording
+    /// per-batch change sizes and task timings (the Table 6 / Figure 8/9
+    /// methodology). `max_batches` truncates long streams.
+    pub fn replay(
+        &mut self,
+        stream: &EdgeStream,
+        batch_size: usize,
+        max_batches: Option<usize>,
+    ) -> Vec<BatchRecord> {
+        let mut records = Vec::new();
+        for (i, batch) in stream.batches(batch_size).enumerate() {
+            if let Some(cap) = max_batches {
+                if i >= cap {
+                    break;
+                }
+            }
+            let t0 = Instant::now();
+            let (result, timings) = self.apply_batch_timed(batch);
+            records.push(BatchRecord {
+                batch_index: i,
+                new_cliques: result.new_cliques.len(),
+                subsumed: result.subsumed.len(),
+                ns: t0.elapsed().as_nanos() as u64,
+                new_task_ns: timings.new_task_ns,
+                sub_task_ns: timings.sub_task_ns,
+            });
+        }
+        records
+    }
+
+    /// |C(G)| right now.
+    pub fn clique_count(&self) -> usize {
+        self.registry.len()
+    }
+
+    pub fn graph(&self) -> &DynGraph {
+        &self.graph
+    }
+
+    pub fn registry(&self) -> &CliqueRegistry {
+        &self.registry
+    }
+
+    /// Immutable CSR snapshot of the current graph.
+    pub fn csr(&self) -> CsrGraph {
+        self.graph.to_csr()
+    }
+
+    pub fn batches_applied(&self) -> usize {
+        self.batches_applied
+    }
+
+    /// Cumulative (Λⁿᵉʷ, Λᵈᵉˡ) totals across all batches.
+    pub fn change_totals(&self) -> (u64, u64) {
+        (self.total_new, self.total_subsumed)
+    }
+
+    /// Tear down into the raw graph + registry.
+    pub fn into_parts(self) -> (DynGraph, CliqueRegistry) {
+        (self.graph, self.registry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+
+    #[test]
+    fn from_empty_seeds_singletons() {
+        let s = DynamicSession::from_empty(5, DynAlgo::Imce);
+        assert_eq!(s.clique_count(), 5);
+        assert_eq!(s.batches_applied(), 0);
+    }
+
+    #[test]
+    fn apply_batch_tracks_from_scratch_state() {
+        let target = generators::gnp(14, 0.5, 8);
+        let mut s = DynamicSession::from_empty(14, DynAlgo::Imce);
+        for chunk in target.edges().chunks(9) {
+            s.apply_batch(chunk);
+        }
+        let want = oracle::maximal_cliques(&s.csr());
+        assert_eq!(s.clique_count(), want.len());
+        let (new, sub) = s.change_totals();
+        assert!(new > 0);
+        let _ = sub;
+    }
+
+    #[test]
+    fn parallel_session_matches_sequential_per_batch() {
+        let target = generators::gnp(12, 0.5, 3);
+        let mut seq = DynamicSession::from_empty(12, DynAlgo::Imce);
+        let mut par = DynamicSession::from_empty(12, DynAlgo::ParImce).with_threads(3);
+        for chunk in target.edges().chunks(5) {
+            assert_eq!(seq.apply_batch(chunk), par.apply_batch(chunk));
+        }
+        assert_eq!(seq.clique_count(), par.clique_count());
+    }
+
+    #[test]
+    fn remove_batch_keeps_registry_exact() {
+        let g = generators::complete(6);
+        let mut s = DynamicSession::from_graph(&g, DynAlgo::Imce);
+        assert_eq!(s.clique_count(), 1);
+        let r = s.remove_batch(&[(0, 1)]);
+        assert_eq!(r.subsumed.len(), 1);
+        assert_eq!(r.new_cliques.len(), 2);
+        assert_eq!(
+            s.clique_count(),
+            oracle::maximal_cliques(&s.csr()).len()
+        );
+    }
+
+    #[test]
+    fn replay_records_every_batch() {
+        let g = generators::gnp(16, 0.35, 6);
+        let stream = EdgeStream::permuted(&g, 11);
+        let mut s = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+        let records = s.replay(&stream, 7, Some(3));
+        assert_eq!(records.len(), 3);
+        assert_eq!(s.batches_applied(), 3);
+        let all = s.replay(&stream, stream.edges.len().max(1), None);
+        let _ = all;
+        assert_eq!(s.graph().m(), g.m());
+    }
+}

@@ -1,0 +1,512 @@
+//! One object-safe [`Enumerator`] per algorithm, and the [`Algo`] enum
+//! that names them all.
+//!
+//! Each adapter translates an algorithm's bespoke signature — pool or no
+//! pool, ranking or none, `Result<(), BudgetError>` or `()` — into the
+//! uniform `enumerate(ctx, graph, sink) -> RunReport` contract.  A
+//! counting shim wraps the caller's sink so every report carries the
+//! emitted-clique count regardless of what the sink does with them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::baselines::gp::{simulate_gp, GpConfig, GpOutcome};
+use crate::baselines::{bk, clique_enumerator, greedybb, hashing, peamc, peco};
+use crate::coordinator::stats::Subproblem;
+use crate::graph::csr::CsrGraph;
+use crate::graph::Vertex;
+use crate::mce::parmce::parmce;
+use crate::mce::parttt::parttt;
+use crate::mce::sink::{CliqueSink, CountSink, TeeSink};
+use crate::mce::{ttt, ParMceConfig};
+use crate::util::membudget::BudgetError;
+
+use super::context::ExecContext;
+use super::report::{RunOutcome, RunReport};
+
+/// Every enumeration algorithm the engine can run behind one name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Sequential TTT (paper Algorithm 1) — the work-efficiency baseline.
+    Ttt,
+    /// Work-efficient parallel TTT (Algorithm 3).
+    ParTtt,
+    /// Rank-decomposed ParTTT with nested parallelism (Algorithm 4); uses
+    /// the session's [`crate::mce::ranking::RankStrategy`].
+    ParMce,
+    /// Bron–Kerbosch with pivoting (independent implementation).
+    Bk,
+    /// Bron–Kerbosch without pivoting (Algorithm 457, 1973).
+    BkBasic,
+    /// Eppstein–Löffler–Strash degeneracy-ordered BK.
+    BkDegeneracy,
+    /// Shared-memory PECO: rank-partitioned, no nested parallelism.
+    Peco,
+    /// Peamc: unpivoted parallel search + slow maximality test; honors
+    /// the session deadline (Table 8's timeout rows).
+    Peamc,
+    /// GP: enumerates the rank decomposition, then prices the MPI
+    /// exchange cost model at the session's thread count (Table 9).
+    Gp,
+    /// GreedyBB: bit-parallel branch-and-bound; honors the session
+    /// memory budget and deadline (Table 10).
+    GreedyBb,
+    /// CliqueEnumerator: iterative expansion with per-clique bit vectors;
+    /// honors the session memory budget (Table 8's OOM rows).
+    CliqueEnumerator,
+    /// Hashing: global-table k→k+1 expansion; honors the memory budget.
+    Hashing,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 12] = [
+        Algo::Ttt,
+        Algo::ParTtt,
+        Algo::ParMce,
+        Algo::Bk,
+        Algo::BkBasic,
+        Algo::BkDegeneracy,
+        Algo::Peco,
+        Algo::Peamc,
+        Algo::Gp,
+        Algo::GreedyBb,
+        Algo::CliqueEnumerator,
+        Algo::Hashing,
+    ];
+
+    pub fn all() -> &'static [Algo] {
+        &Self::ALL
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Ttt => "TTT",
+            Algo::ParTtt => "ParTTT",
+            Algo::ParMce => "ParMCE",
+            Algo::Bk => "BKPivot",
+            Algo::BkBasic => "BKBasic",
+            Algo::BkDegeneracy => "BKDegeneracy",
+            Algo::Peco => "PECO",
+            Algo::Peamc => "Peamc",
+            Algo::Gp => "GP",
+            Algo::GreedyBb => "GreedyBB",
+            Algo::CliqueEnumerator => "CliqueEnumerator",
+            Algo::Hashing => "Hashing",
+        }
+    }
+
+    /// CLI spelling → algorithm (see `parmce help`).
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s {
+            "ttt" => Algo::Ttt,
+            "parttt" => Algo::ParTtt,
+            "parmce" => Algo::ParMce,
+            "bk" => Algo::Bk,
+            "bk-basic" => Algo::BkBasic,
+            "bk-degeneracy" => Algo::BkDegeneracy,
+            "peco" => Algo::Peco,
+            "peamc" => Algo::Peamc,
+            "gp" => Algo::Gp,
+            "greedybb" => Algo::GreedyBb,
+            "clique-enumerator" => Algo::CliqueEnumerator,
+            "hashing" => Algo::Hashing,
+            _ => return None,
+        })
+    }
+
+    pub fn enumerator(self) -> Box<dyn Enumerator> {
+        match self {
+            Algo::Ttt => Box::new(TttEnumerator),
+            Algo::ParTtt => Box::new(ParTttEnumerator),
+            Algo::ParMce => Box::new(ParMceEnumerator),
+            Algo::Bk => Box::new(BkEnumerator),
+            Algo::BkBasic => Box::new(BkBasicEnumerator),
+            Algo::BkDegeneracy => Box::new(BkDegeneracyEnumerator),
+            Algo::Peco => Box::new(PecoEnumerator),
+            Algo::Peamc => Box::new(PeamcEnumerator),
+            Algo::Gp => Box::new(GpEnumerator),
+            Algo::GreedyBb => Box::new(GreedyBbEnumerator),
+            Algo::CliqueEnumerator => Box::new(CliqueEnumeratorEnumerator),
+            Algo::Hashing => Box::new(HashingEnumerator),
+        }
+    }
+}
+
+/// Object-safe enumeration contract: run the algorithm on `g`, emit
+/// every maximal clique into `sink`, report what happened.  All state an
+/// algorithm needs beyond the graph (pool, ranking, budget, deadline)
+/// comes from the [`ExecContext`].
+pub trait Enumerator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport;
+}
+
+/// Pass-through sink that counts emissions for the [`RunReport`].
+struct CountedSink {
+    inner: Arc<dyn CliqueSink>,
+    emitted: AtomicU64,
+}
+
+impl CliqueSink for CountedSink {
+    #[inline]
+    fn emit(&self, clique: &[Vertex]) {
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.emit(clique);
+    }
+}
+
+/// Shared run harness: wrap the sink in a counter, honor the
+/// cancellation flag, time the run, assemble the report.
+fn run_counted(
+    algo: Algo,
+    ctx: &ExecContext,
+    sink: &Arc<dyn CliqueSink>,
+    f: impl FnOnce(&Arc<dyn CliqueSink>) -> RunOutcome,
+) -> RunReport {
+    let counted = Arc::new(CountedSink {
+        inner: Arc::clone(sink),
+        emitted: AtomicU64::new(0),
+    });
+    let as_dyn: Arc<dyn CliqueSink> = Arc::clone(&counted);
+    let t0 = Instant::now();
+    let outcome = if ctx.is_cancelled() {
+        RunOutcome::Cancelled
+    } else {
+        f(&as_dyn)
+    };
+    RunReport {
+        algo,
+        cliques: counted.emitted.load(Ordering::Relaxed),
+        wall: t0.elapsed(),
+        outcome,
+    }
+}
+
+fn budget_outcome(err: BudgetError) -> RunOutcome {
+    match err {
+        BudgetError::OutOfBudget { .. } => RunOutcome::OutOfMemory,
+        BudgetError::TimedOut { .. } => RunOutcome::TimedOut,
+    }
+}
+
+pub struct TttEnumerator;
+
+impl Enumerator for TttEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Ttt.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::Ttt, ctx, sink, |s| {
+            ttt::ttt(g, s.as_ref());
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct ParTttEnumerator;
+
+impl Enumerator for ParTttEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::ParTtt.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::ParTtt, ctx, sink, |s| {
+            parttt(ctx.pool(), g, s, ctx.parttt_config());
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct ParMceEnumerator;
+
+impl Enumerator for ParMceEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::ParMce.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        // rankings are expensive: don't compute one for a cancelled run
+        let ranking = (!ctx.is_cancelled()).then(|| ctx.ranking(g, ctx.rank_strategy()));
+        run_counted(Algo::ParMce, ctx, sink, |s| {
+            let ranking = ranking.unwrap_or_else(|| ctx.ranking(g, ctx.rank_strategy()));
+            let cfg = ParMceConfig {
+                parttt: ctx.parttt_config(),
+            };
+            parmce(ctx.pool(), g, &ranking, s, cfg);
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct BkEnumerator;
+
+impl Enumerator for BkEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Bk.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::Bk, ctx, sink, |s| {
+            bk::bk_pivot(g, s.as_ref());
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct BkBasicEnumerator;
+
+impl Enumerator for BkBasicEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::BkBasic.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::BkBasic, ctx, sink, |s| {
+            bk::bk_basic(g, s.as_ref());
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct BkDegeneracyEnumerator;
+
+impl Enumerator for BkDegeneracyEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::BkDegeneracy.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::BkDegeneracy, ctx, sink, |s| {
+            bk::bk_degeneracy(g, s.as_ref());
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct PecoEnumerator;
+
+impl Enumerator for PecoEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Peco.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        let ranking = (!ctx.is_cancelled()).then(|| ctx.ranking(g, ctx.rank_strategy()));
+        run_counted(Algo::Peco, ctx, sink, |s| {
+            let ranking = ranking.unwrap_or_else(|| ctx.ranking(g, ctx.rank_strategy()));
+            peco::peco(ctx.pool(), g, &ranking, s);
+            RunOutcome::Completed
+        })
+    }
+}
+
+pub struct PeamcEnumerator;
+
+impl Enumerator for PeamcEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Peamc.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        run_counted(Algo::Peamc, ctx, sink, |s| {
+            match peamc::peamc(ctx.pool(), g, s, ctx.deadline()) {
+                Ok(()) => RunOutcome::Completed,
+                Err(e) => budget_outcome(e),
+            }
+        })
+    }
+}
+
+pub struct GpEnumerator;
+
+impl Enumerator for GpEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Gp.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        let strategy = ctx.rank_strategy();
+        let ranking = (!ctx.is_cancelled()).then(|| ctx.ranking(g, strategy));
+        run_counted(Algo::Gp, ctx, sink, |s| {
+            // enumerate the rank decomposition, timing each subproblem —
+            // the measured input the GP exchange cost model reprices.
+            // (Same decomposition as `subproblems_timed`, but tee'd into
+            // the caller's sink and cancellable between vertices.)
+            let ranking = ranking.unwrap_or_else(|| ctx.ranking(g, strategy));
+            let mut subs: Vec<Subproblem> = Vec::with_capacity(g.n());
+            for v in 0..g.n() as Vertex {
+                if ctx.is_cancelled() {
+                    return RunOutcome::Cancelled;
+                }
+                let (cand, fini) = ranking.split_neighbors(g, v);
+                let local = CountSink::new();
+                let tee = TeeSink {
+                    a: &local,
+                    b: s.as_ref(),
+                };
+                let mut k = vec![v];
+                let t0 = Instant::now();
+                ttt::ttt_from(g.as_ref(), &mut k, cand, fini, &tee);
+                subs.push(Subproblem {
+                    vertex: v,
+                    cliques: local.count(),
+                    ns: t0.elapsed().as_nanos() as u64,
+                });
+            }
+            let outcome = match simulate_gp(g, &subs, ctx.threads(), GpConfig::default()) {
+                GpOutcome::Finished { .. } => RunOutcome::Completed,
+                GpOutcome::OutOfMemory { .. } => RunOutcome::OutOfMemory,
+            };
+            // the full decomposition was just measured — share it with
+            // later subproblems()/simulate_gp() calls on this context
+            ctx.seed_subproblems(g, strategy, Arc::new(subs));
+            outcome
+        })
+    }
+}
+
+pub struct GreedyBbEnumerator;
+
+impl Enumerator for GreedyBbEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::GreedyBb.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        let budget = ctx.mem_budget();
+        run_counted(Algo::GreedyBb, ctx, sink, |s| {
+            match greedybb::greedybb(g, s.as_ref(), &budget, ctx.deadline()) {
+                Ok(()) => RunOutcome::Completed,
+                Err(e) => budget_outcome(e),
+            }
+        })
+    }
+}
+
+pub struct CliqueEnumeratorEnumerator;
+
+impl Enumerator for CliqueEnumeratorEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::CliqueEnumerator.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        let budget = ctx.mem_budget();
+        run_counted(Algo::CliqueEnumerator, ctx, sink, |s| {
+            match clique_enumerator::clique_enumerator(g, s.as_ref(), &budget) {
+                Ok(()) => RunOutcome::Completed,
+                Err(e) => budget_outcome(e),
+            }
+        })
+    }
+}
+
+pub struct HashingEnumerator;
+
+impl Enumerator for HashingEnumerator {
+    fn name(&self) -> &'static str {
+        Algo::Hashing.name()
+    }
+
+    fn enumerate(
+        &self,
+        ctx: &ExecContext,
+        g: &Arc<CsrGraph>,
+        sink: &Arc<dyn CliqueSink>,
+    ) -> RunReport {
+        let budget = ctx.mem_budget();
+        run_counted(Algo::Hashing, ctx, sink, |s| {
+            match hashing::hashing(g, s.as_ref(), &budget) {
+                Ok(()) => RunOutcome::Completed,
+                Err(e) => budget_outcome(e),
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_and_parse_round_trip() {
+        for &a in Algo::all() {
+            assert!(!a.name().is_empty());
+        }
+        assert_eq!(Algo::parse("ttt"), Some(Algo::Ttt));
+        assert_eq!(Algo::parse("clique-enumerator"), Some(Algo::CliqueEnumerator));
+        assert_eq!(Algo::parse("nope"), None);
+        assert_eq!(Algo::all().len(), 12);
+    }
+
+    #[test]
+    fn enumerator_factory_covers_every_variant() {
+        for &a in Algo::all() {
+            assert_eq!(a.enumerator().name(), a.name());
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! The engine's front door: build a session, run any algorithm.
+//!
+//! The paper's point is that one framework (TTT → ParTTT → ParMCE →
+//! ParIMCE) covers static *and* dynamic MCE with shared ranking and
+//! load-balancing machinery.  This module is that framework's API seam:
+//!
+//! * [`SessionBuilder`] → [`MceSession`] — one builder for every static
+//!   algorithm and baseline ([`Algo`]), owning a shared [`ExecContext`]
+//!   (lazy thread pool, cached rankings and subproblem measurements, run
+//!   history, cancellation flag).
+//! * [`Enumerator`] — the object-safe trait each algorithm implements;
+//!   all runs return a uniform [`RunReport`] whose [`RunOutcome`]
+//!   normalizes the baselines' out-of-memory / timeout failure modes.
+//! * [`DynamicSession`] — incremental maintenance (IMCE / ParIMCE)
+//!   behind one `apply_batch`, plus stream replay and the decremental
+//!   reduction.
+//!
+//! ```
+//! use parmce::graph::generators;
+//! use parmce::session::{Algo, MceSession};
+//!
+//! let g = generators::gnp(60, 0.2, 7);
+//! let session = MceSession::builder()
+//!     .graph(g)
+//!     .algo(Algo::ParMce)
+//!     .threads(4)
+//!     .build()
+//!     .unwrap();
+//! let run = session.run();
+//! assert_eq!(run.report.cliques, session.count(Algo::Ttt).cliques);
+//! ```
+
+pub mod builder;
+pub mod context;
+pub mod dynamic;
+pub mod enumerators;
+pub mod report;
+
+pub use builder::{MceSession, SessionBuilder, SessionRun, SinkSpec};
+pub use context::ExecContext;
+pub use dynamic::{DynAlgo, DynamicSession};
+pub use enumerators::{Algo, Enumerator};
+pub use report::{RunOutcome, RunReport};

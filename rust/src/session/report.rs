@@ -1,0 +1,71 @@
+//! Uniform run reporting for every enumeration algorithm.
+//!
+//! The pre-session API leaked each algorithm's failure mode through its
+//! signature: the TTT family returned `()`, the memory-bound baselines
+//! returned `Result<(), BudgetError>`, GP returned its own outcome enum.
+//! A [`RunReport`] normalizes all of them so callers compare algorithms
+//! without per-algorithm plumbing — the paper's Table 8/10 "Out of
+//! memory" and "did not complete" cells become [`RunOutcome`] variants.
+
+use std::time::Duration;
+
+use super::enumerators::Algo;
+
+/// How an enumeration run ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// Every maximal clique was emitted into the sink.
+    Completed,
+    /// The run exceeded its [`crate::util::membudget::MemBudget`]
+    /// (the paper's "Out of memory" cells).
+    OutOfMemory,
+    /// The run exceeded its wall-clock deadline (the paper's "did not
+    /// complete in 5 hours" cells).
+    TimedOut,
+    /// The session's cancellation flag was set before the run started.
+    Cancelled,
+}
+
+/// What one enumeration run did: which algorithm, how many cliques
+/// reached the sink, how long it took, and how it ended.
+#[derive(Clone, Copy, Debug)]
+pub struct RunReport {
+    pub algo: Algo,
+    /// Cliques that reached the sink. On a non-`Completed` outcome this
+    /// is the count emitted before the run aborted.
+    pub cliques: u64,
+    pub wall: Duration,
+    pub outcome: RunOutcome,
+}
+
+impl RunReport {
+    pub fn completed(&self) -> bool {
+        self.outcome == RunOutcome::Completed
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_helpers() {
+        let r = RunReport {
+            algo: Algo::Ttt,
+            cliques: 3,
+            wall: Duration::from_millis(1500),
+            outcome: RunOutcome::Completed,
+        };
+        assert!(r.completed());
+        assert!((r.secs() - 1.5).abs() < 1e-9);
+        let oom = RunReport {
+            outcome: RunOutcome::OutOfMemory,
+            ..r
+        };
+        assert!(!oom.completed());
+    }
+}

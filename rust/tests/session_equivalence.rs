@@ -1,0 +1,207 @@
+//! API-equivalence suite for the session layer: every [`Algo`] variant
+//! routed through `MceSession` must produce the canonical clique set of
+//! sequential TTT; budget/deadline/cancellation outcomes must surface as
+//! [`RunOutcome`]s; and `DynamicSession`'s sequential and parallel
+//! engines must produce identical [`BatchResult`]s over a replayed
+//! stream.
+
+use std::time::Duration;
+
+use parmce::dynamic::stream::EdgeStream;
+use parmce::dynamic::BatchResult;
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::generators;
+use parmce::graph::Vertex;
+use parmce::session::{Algo, DynAlgo, DynamicSession, MceSession, RunOutcome, SinkSpec};
+
+fn canonical(g: &CsrGraph, algo: Algo) -> Vec<Vec<Vertex>> {
+    let s = MceSession::builder()
+        .graph(g.clone())
+        .threads(3)
+        .build()
+        .unwrap();
+    let (cliques, report) = s.collect(algo);
+    assert_eq!(
+        report.outcome,
+        RunOutcome::Completed,
+        "{} did not complete",
+        algo.name()
+    );
+    assert_eq!(
+        report.cliques as usize,
+        cliques.len(),
+        "{}: report count vs collected count",
+        algo.name()
+    );
+    cliques
+}
+
+#[test]
+fn every_algo_variant_matches_ttt() {
+    let graphs = vec![
+        generators::gnp(22, 0.4, 11),
+        generators::gnp(16, 0.65, 5),
+        generators::moon_moser(3),
+        generators::planted_cliques(40, 0.06, 3, 4, 6, 9),
+        CsrGraph::from_edges(5, &[(0, 1)]), // isolated vertices
+    ];
+    for (i, g) in graphs.iter().enumerate() {
+        let want = canonical(g, Algo::Ttt);
+        assert!(!want.is_empty(), "graph {i}");
+        for &algo in Algo::all() {
+            assert_eq!(
+                canonical(g, algo),
+                want,
+                "graph {i}: {} diverges from TTT",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn clique_enumerator_oom_surfaces_in_report() {
+    // moon_moser(5): 243 maximal cliques on 15 vertices — 4 KiB is far
+    // too small for per-clique bit vectors (the Table 8 OOM regime)
+    let g = generators::moon_moser(5);
+    let s = MceSession::builder()
+        .graph(g)
+        .mem_budget_bytes(4 * 1024)
+        .build()
+        .unwrap();
+    let r = s.count(Algo::CliqueEnumerator);
+    assert_eq!(r.outcome, RunOutcome::OutOfMemory);
+}
+
+#[test]
+fn hashing_oom_on_intermediate_explosion() {
+    // one 18-clique spawns ~2^18 intermediate subsets on the way up
+    let g = generators::complete(18);
+    let s = MceSession::builder()
+        .graph(g)
+        .mem_budget_bytes(64 * 1024)
+        .build()
+        .unwrap();
+    let r = s.count(Algo::Hashing);
+    assert_eq!(r.outcome, RunOutcome::OutOfMemory);
+}
+
+#[test]
+fn peamc_deadline_surfaces_timeout() {
+    let g = generators::moon_moser(7);
+    let s = MceSession::builder()
+        .graph(g)
+        .threads(2)
+        .deadline(Duration::from_micros(50))
+        .build()
+        .unwrap();
+    let r = s.count(Algo::Peamc);
+    assert_eq!(r.outcome, RunOutcome::TimedOut);
+}
+
+#[test]
+fn cancelled_session_reports_cancelled() {
+    let g = generators::gnp(20, 0.3, 1);
+    let s = MceSession::builder().graph(g).build().unwrap();
+    s.cancel();
+    let r = s.count(Algo::Ttt);
+    assert_eq!(r.outcome, RunOutcome::Cancelled);
+    assert_eq!(r.cliques, 0);
+    s.clear_cancel();
+    assert_eq!(s.count(Algo::Ttt).outcome, RunOutcome::Completed);
+    assert_eq!(s.history().len(), 2);
+}
+
+#[test]
+fn sink_spec_controls_run_output() {
+    let g = generators::gnp(18, 0.4, 3);
+    let count = MceSession::builder()
+        .graph(g.clone())
+        .algo(Algo::Ttt)
+        .build()
+        .unwrap()
+        .run();
+    assert!(count.cliques.is_none() && count.histogram.is_none());
+
+    let collect = MceSession::builder()
+        .graph(g.clone())
+        .algo(Algo::Ttt)
+        .sink(SinkSpec::Collect)
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(
+        collect.cliques.expect("collect sink").len() as u64,
+        count.report.cliques
+    );
+
+    let hist = MceSession::builder()
+        .graph(g)
+        .algo(Algo::Ttt)
+        .sink(SinkSpec::Histogram { max_size: 64 })
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(
+        hist.histogram.expect("histogram sink").count(),
+        count.report.cliques
+    );
+}
+
+#[test]
+fn batch_result_canonicalize_sorts_members_and_lists() {
+    let mut r = BatchResult {
+        new_cliques: vec![vec![3, 1, 2], vec![0, 2, 1]],
+        subsumed: vec![vec![5, 4], vec![2, 0]],
+    };
+    r.canonicalize();
+    assert_eq!(r.new_cliques, vec![vec![0, 1, 2], vec![1, 2, 3]]);
+    assert_eq!(r.subsumed, vec![vec![0, 2], vec![4, 5]]);
+    assert_eq!(r.change_size(), 4);
+}
+
+#[test]
+fn dynamic_session_seq_and_par_agree_on_replayed_stream() {
+    let g = generators::gnp(18, 0.45, 77);
+    let stream = EdgeStream::permuted(&g, 13);
+    let mut seq = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+    let mut par = DynamicSession::from_empty(stream.n, DynAlgo::ParImce).with_threads(3);
+    for (i, batch) in stream.edges.chunks(6).enumerate() {
+        let a = seq.apply_batch(batch);
+        let b = par.apply_batch(batch);
+        assert_eq!(a, b, "batch {i}: sequential vs parallel change set");
+    }
+    assert_eq!(seq.clique_count(), par.clique_count());
+    // converged state equals from-scratch enumeration via the static API
+    let want = MceSession::builder()
+        .graph(seq.csr())
+        .threads(1)
+        .build()
+        .unwrap()
+        .count(Algo::Ttt)
+        .cliques;
+    assert_eq!(seq.clique_count() as u64, want);
+}
+
+#[test]
+fn dynamic_session_replay_and_remove_roundtrip() {
+    let g = generators::planted_cliques(30, 0.06, 3, 4, 6, 4);
+    let stream = EdgeStream::permuted(&g, 3);
+    let mut s = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+    let records = s.replay(&stream, 10, None);
+    assert!(!records.is_empty());
+    assert_eq!(s.graph().m(), g.m());
+    let (new_total, _) = s.change_totals();
+    assert!(new_total > 0);
+
+    let removed: Vec<_> = stream.edges[..5.min(stream.edges.len())].to_vec();
+    s.remove_batch(&removed);
+    let want = MceSession::builder()
+        .graph(s.csr())
+        .threads(1)
+        .build()
+        .unwrap()
+        .count(Algo::Ttt)
+        .cliques;
+    assert_eq!(s.clique_count() as u64, want);
+}
