@@ -2,9 +2,10 @@
 //! including the CPU-vs-PJRT triangle backends and the vset hot-path
 //! primitives the perf pass optimizes.  `cargo bench --bench pivots_and_ranking`
 
+use parmce::coordinator::pool::ThreadPool;
 use parmce::graph::datasets::{Dataset, Scale};
 use parmce::graph::generators;
-use parmce::mce::pivot::choose_pivot;
+use parmce::mce::pivot::{choose_pivot, par_pivot};
 use parmce::mce::ranking::{CpuTriangleBackend, RankStrategy, Ranking, TriangleBackend};
 use parmce::runtime::engine::Engine;
 use parmce::runtime::tri_rank::PjrtTriangleBackend;
@@ -33,6 +34,12 @@ fn main() {
         let cand: Vec<u32> = (0..g.n() as u32).collect();
         b.bench(format!("pivot/seq/{name}"), || {
             choose_pivot(&g, &cand, &[])
+        });
+        // ParPivot now borrows cand/fini (no per-call Arc clones); this
+        // is the number that regressed under the old allocation churn
+        let pool = ThreadPool::new(4);
+        b.bench(format!("pivot/par4/{name}"), || {
+            par_pivot(&pool, &g, &cand, &[])
         });
     }
 

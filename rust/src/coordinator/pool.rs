@@ -44,6 +44,19 @@ thread_local! {
         const { std::cell::Cell::new(None) };
 }
 
+/// Worker index of the current thread, if it is a pool worker — the
+/// shard-binding hook for the sharded sinks in [`crate::mce::sink`].
+///
+/// Pool-agnostic by design: a sink sized for one pool can be fed from
+/// another pool's workers (or from no pool at all); callers must treat
+/// the returned index as a *routing hint* and clamp out-of-range values
+/// to a shared fallback shard.  Returns `None` on non-pool threads,
+/// including a caller thread that executes tasks while waiting inside
+/// [`ThreadPool::scope`].
+pub fn current_worker_slot() -> Option<usize> {
+    WORKER.with(|w| w.get().map(|(_, idx)| idx))
+}
+
 /// Cloneable handle to a work-stealing pool.
 #[derive(Clone)]
 pub struct ThreadPool {
@@ -98,6 +111,12 @@ impl ThreadPool {
     /// (LIFO, depth-first); otherwise on the injector.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
         self.spawn_internal(Box::new(job));
+    }
+
+    /// Worker index if the current thread belongs to *this* pool (the
+    /// strict form of [`current_worker_slot`], which ignores identity).
+    pub fn current_worker_id(&self) -> Option<usize> {
+        self.current_worker()
     }
 
     /// Worker index if the current thread belongs to this pool.
@@ -304,6 +323,12 @@ impl ScopeHandle {
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
     }
+
+    /// Worker index of the current thread within this scope's pool
+    /// (`None` when called from the scope's blocked caller thread).
+    pub fn worker_id(&self) -> Option<usize> {
+        self.pool.current_worker_id()
+    }
 }
 
 impl ThreadPool {
@@ -409,6 +434,34 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn worker_slots_are_in_range_and_stable() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(current_worker_slot(), None, "caller is not a worker");
+        assert_eq!(pool.current_worker_id(), None);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        pool.scope(|s| {
+            for _ in 0..50 {
+                let seen = Arc::clone(&seen);
+                s.spawn(move |s2| {
+                    // on a worker thread both views agree; the scope
+                    // caller helping out reports None for both
+                    let slot = current_worker_slot();
+                    assert_eq!(slot, s2.worker_id());
+                    if let Some(idx) = slot {
+                        assert!(idx < 3, "slot {idx} out of range");
+                        seen.lock().unwrap().push(idx);
+                    }
+                });
+            }
+        });
+        // tasks may also run on the blocked caller; whatever did run on
+        // workers must have reported valid indices
+        for &idx in seen.lock().unwrap().iter() {
+            assert!(idx < 3);
+        }
     }
 
     #[test]

@@ -67,7 +67,9 @@ pub fn imce_batch(
         let mut k = vec![u.min(v), u.max(v)];
         k.sort_unstable();
         ttt_exclude_edges(graph, &mut k, cand, Vec::new(), &excl, &sink);
-        new_cliques.extend(sink.into_canonical());
+        // per-clique sort only (subsumption_candidates binary-searches
+        // members); the set-level sort happens once in canonicalize()
+        new_cliques.extend(sink.into_sorted_cliques());
         excl.insert(u, v);
         timings.new_task_ns.push(t0.elapsed().as_nanos() as u64);
     }

@@ -65,7 +65,9 @@ pub fn par_imce_batch(
                     let cand = graph.common_neighbors(u, v);
                     let mut k = vec![u.min(v), u.max(v)];
                     ttt_exclude_edges(graph, &mut k, cand, Vec::new(), &excl, &sink);
-                    let found = sink.into_canonical();
+                    // per-clique sort only; the batch-level set is
+                    // canonicalized once after both phases join
+                    let found = sink.into_sorted_cliques();
                     let ns = t0.elapsed().as_nanos() as u64;
                     if !found.is_empty() {
                         new_cliques.lock().unwrap().extend(found);

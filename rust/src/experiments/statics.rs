@@ -112,6 +112,14 @@ pub fn fig5(scale: Scale) -> Result<String> {
         for (size, count) in hist.nonzero_bins() {
             t.row(vec![size.to_string(), fmt_count(count)]);
         }
+        // cliques beyond the binned range: keep the rows summing to the
+        // header count instead of silently dropping the tail
+        if hist.overflow() > 0 {
+            t.row(vec![
+                format!(">{}", hist.max_binned_size()),
+                fmt_count(hist.overflow()),
+            ]);
+        }
         out.push_str(&t.render());
         out.push('\n');
     }

@@ -19,11 +19,32 @@ pub struct TimedEdge {
     pub t: u64,
 }
 
+/// Everything [`parse_report`] extracted from an edge list.
+#[derive(Clone, Debug)]
+pub struct ParseReport {
+    pub edges: Vec<TimedEdge>,
+    /// Dense vertex count (every id that appeared, including self-loop
+    /// endpoints).
+    pub n: usize,
+    /// Self-loop lines (`u u`) skipped during parsing. The static loader
+    /// (`CsrGraph::from_edges`) drops self-loops anyway; skipping them
+    /// here keeps dynamic streams consistent with static loads.
+    pub self_loops: u64,
+}
+
 /// Parse an edge list from a reader. Vertices are renumbered densely in
-/// first-appearance order; returns (edges, n).
-pub fn parse(reader: impl BufRead) -> Result<(Vec<TimedEdge>, usize)> {
+/// first-appearance order.
+///
+/// Lines without a timestamp get a synthetic one from a monotone *edge*
+/// counter — not the raw file line number, which would leave gaps at
+/// comment/blank lines and interleave wrongly with real timestamps under
+/// [`load_stream`]'s stable sort.  Self-loop edges are skipped (counted
+/// in [`ParseReport::self_loops`]); their endpoints still count toward
+/// `n`, matching what the static path's `CsrGraph::from_edges` does.
+pub fn parse_report(reader: impl BufRead) -> Result<ParseReport> {
     let mut ids = std::collections::HashMap::new();
-    let mut edges = Vec::new();
+    let mut edges: Vec<TimedEdge> = Vec::new();
+    let mut self_loops = 0u64;
     let mut intern = |raw: u64, ids: &mut std::collections::HashMap<u64, Vertex>| -> Vertex {
         let next = ids.len() as Vertex;
         *ids.entry(raw).or_insert(next)
@@ -44,31 +65,59 @@ pub fn parse(reader: impl BufRead) -> Result<(Vec<TimedEdge>, usize)> {
             Some(ts) => ts
                 .parse()
                 .with_context(|| format!("line {}: bad timestamp", lineno + 1))?,
-            None => lineno as u64,
+            // synthetic timestamp: the number of edges accepted so far
+            None => edges.len() as u64,
         };
         let u = intern(a, &mut ids);
         let v = intern(b, &mut ids);
+        if u == v {
+            self_loops += 1;
+            continue;
+        }
         edges.push(TimedEdge { u, v, t });
     }
-    Ok((edges, ids.len()))
+    Ok(ParseReport {
+        edges,
+        n: ids.len(),
+        self_loops,
+    })
+}
+
+/// Parse an edge list from a reader; returns (edges, n). Thin wrapper
+/// over [`parse_report`] for callers that don't need the skip counts.
+pub fn parse(reader: impl BufRead) -> Result<(Vec<TimedEdge>, usize)> {
+    let r = parse_report(reader)?;
+    Ok((r.edges, r.n))
+}
+
+fn warn_self_loops(r: &ParseReport, path: &Path) {
+    if r.self_loops > 0 {
+        eprintln!(
+            "warn: {:?}: skipped {} self-loop edge(s)",
+            path, r.self_loops
+        );
+    }
 }
 
 /// Load a static graph from a file.
 pub fn load_graph(path: impl AsRef<Path>) -> Result<CsrGraph> {
     let file = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {:?}", path.as_ref()))?;
-    let (edges, n) = parse(std::io::BufReader::new(file))?;
-    let pairs: Vec<(Vertex, Vertex)> = edges.iter().map(|e| (e.u, e.v)).collect();
-    Ok(CsrGraph::from_edges(n, &pairs))
+    let r = parse_report(std::io::BufReader::new(file))?;
+    warn_self_loops(&r, path.as_ref());
+    let pairs: Vec<(Vertex, Vertex)> = r.edges.iter().map(|e| (e.u, e.v)).collect();
+    Ok(CsrGraph::from_edges(r.n, &pairs))
 }
 
 /// Load a dynamic stream (sorted by timestamp, stable).
 pub fn load_stream(path: impl AsRef<Path>) -> Result<(Vec<TimedEdge>, usize)> {
     let file = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {:?}", path.as_ref()))?;
-    let (mut edges, n) = parse(std::io::BufReader::new(file))?;
+    let r = parse_report(std::io::BufReader::new(file))?;
+    warn_self_loops(&r, path.as_ref());
+    let mut edges = r.edges;
     edges.sort_by_key(|e| e.t);
-    Ok((edges, n))
+    Ok((edges, r.n))
 }
 
 /// Write a graph as an edge list.
@@ -93,9 +142,59 @@ mod tests {
         let (edges, n) = parse(Cursor::new(input)).unwrap();
         assert_eq!(n, 3);
         assert_eq!(edges.len(), 3);
-        assert_eq!(edges[0], TimedEdge { u: 0, v: 1, t: 2 }); // lineno default
+        // synthetic timestamps count accepted edges, not file lines
+        assert_eq!(edges[0], TimedEdge { u: 0, v: 1, t: 0 });
         assert_eq!(edges[1], TimedEdge { u: 1, v: 2, t: 5 });
-        assert_eq!(edges[2], TimedEdge { u: 0, v: 2, t: 5 });
+        assert_eq!(edges[2], TimedEdge { u: 0, v: 2, t: 2 });
+    }
+
+    #[test]
+    fn synthetic_timestamps_ignore_comment_and_blank_lines() {
+        // regression: the old lineno-based default left gaps at comments
+        // and blank lines, so later untimed edges jumped *past* real
+        // timestamps under load_stream's stable sort
+        let input = "0 1\n# gap\n\n% gap\n1 2\n# gap\n2 3\n";
+        let (edges, _) = parse(Cursor::new(input)).unwrap();
+        let ts: Vec<u64> = edges.iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![0, 1, 2], "monotone, gap-free edge counter");
+    }
+
+    #[test]
+    fn synthetic_timestamps_stay_stable_under_stream_sort() {
+        // three untimed edges after a commented preamble plus one real
+        // timestamp: with lineno defaults the untimed edges would carry
+        // t=4,5,6 and sort after the t=3 edge; the edge counter keeps
+        // them at t=0,1,2, before it
+        let input = "# header\n# header\n# header\n# header\n0 1\n1 2\n2 3\n3 4 3\n";
+        let dir = std::env::temp_dir().join("parmce_synth_ts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.txt");
+        std::fs::write(&path, input).unwrap();
+        let (edges, _) = load_stream(&path).unwrap();
+        let order: Vec<(Vertex, Vertex)> = edges.iter().map(|e| (e.u, e.v)).collect();
+        assert_eq!(order, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn self_loops_are_skipped_and_counted() {
+        // regression: self-loops used to pass through into dynamic
+        // streams even though CsrGraph::from_edges drops them for static
+        // loads — DynamicSession could ingest edges the static path
+        // never sees
+        let input = "0 0\n0 1\n2 2 7\n1 2\n";
+        let r = parse_report(Cursor::new(input)).unwrap();
+        assert_eq!(r.self_loops, 2);
+        assert_eq!(
+            r.edges,
+            vec![
+                TimedEdge { u: 0, v: 1, t: 0 },
+                TimedEdge { u: 1, v: 2, t: 1 },
+            ]
+        );
+        // self-loop-only vertex 2's id still counts toward n, matching
+        // the static loader's vertex universe
+        assert_eq!(r.n, 3);
     }
 
     #[test]

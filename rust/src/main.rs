@@ -5,6 +5,7 @@
 //!   parmce exp <id|all> [--scale tiny|small|full] [--out DIR]
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
 //!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
+//!                    [--out FILE [--format ndjson|text|binary]]
 //!   parmce stats [--dataset NAME] [--scale S]
 //!   parmce perf [--scale S]
 //!   parmce artifacts-check
@@ -18,7 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use parmce::graph::datasets::{Dataset, Scale};
 use parmce::graph::stats::GraphStats;
 use parmce::mce::ranking::{RankStrategy, Ranking};
-use parmce::session::{Algo, MceSession, RunOutcome};
+use parmce::session::{Algo, MceSession, RunOutcome, WriterFormat};
 use parmce::util::table::fmt_count;
 
 fn main() {
@@ -146,17 +147,43 @@ fn dispatch(args: &[String]) -> Result<()> {
                 builder = builder.ranking(Arc::new(ranking));
             }
             let session = builder.build()?;
-            let run = session.run();
-            match run.report.outcome {
+            // --out FILE streams every clique to disk instead of counting
+            let report = match flag(args, "--out") {
+                Some(out) => {
+                    let format = match flag(args, "--format") {
+                        None => WriterFormat::Ndjson,
+                        Some(f) => WriterFormat::parse(&f).ok_or_else(|| {
+                            anyhow!("unknown format {f} (ndjson|text|binary)")
+                        })?,
+                    };
+                    let (report, stats) = session.stream_to(algo, &out, format)?;
+                    println!(
+                        "wrote {} cliques ({} bytes, {} flushes{}) to {out} [{}]",
+                        fmt_count(stats.cliques),
+                        fmt_count(stats.bytes),
+                        stats.flushes,
+                        if stats.dropped > 0 {
+                            format!(", {} dropped by budget", fmt_count(stats.dropped))
+                        } else {
+                            String::new()
+                        },
+                        format.name()
+                    );
+                    report
+                }
+                None => session.run().report,
+            };
+            match report.outcome {
                 RunOutcome::Completed => println!(
-                    "{} maximal cliques in {:.3}s",
-                    fmt_count(run.report.cliques),
-                    run.report.secs()
+                    "{} maximal cliques in {:.3}s ({:.0} cliques/s)",
+                    fmt_count(report.cliques),
+                    report.secs(),
+                    report.cliques_per_sec()
                 ),
                 other => println!(
                     "run ended with {other:?} after {:.3}s ({} cliques emitted)",
-                    run.report.secs(),
-                    fmt_count(run.report.cliques)
+                    report.secs(),
+                    fmt_count(report.cliques)
                 ),
             }
             Ok(())
@@ -237,6 +264,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 parmce exp <table3..table10|fig2|fig5..fig9|ablation|all> [--scale tiny|small|full] [--out DIR]\n\
                  \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
                  \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
+                 \x20                  [--out FILE [--format ndjson|text|binary]]\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
                  \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\

@@ -95,10 +95,10 @@ fn run_task(
     }
 
     // Line 3: pivot — parallel above the threshold (Algorithm 2).
+    // par_pivot borrows cand/fini directly; no per-call Arc clones on
+    // the recursion hot path.
     let pivot = if cand.len() + fini.len() >= cfg.par_pivot_min {
-        let cand_arc = Arc::new(cand.clone());
-        let fini_arc = Arc::new(fini.clone());
-        par_pivot(scope.pool(), &g, &cand_arc, &fini_arc)
+        par_pivot(scope.pool(), g.as_ref(), &cand, &fini)
     } else {
         choose_pivot(g.as_ref(), &cand, &fini)
     };

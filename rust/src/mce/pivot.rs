@@ -9,7 +9,6 @@
 //! O(log n) depth).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
 
 use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
@@ -61,25 +60,37 @@ pub fn choose_pivot<G: AdjacencyGraph + ?Sized>(g: &G, cand: &[Vertex], fini: &[
 /// *smallest* vertex id (v̄ = !v), matching the sequential tie-break of
 /// first-in-iteration-order only up to ties — callers must not rely on a
 /// specific pivot among equals, only on the score being maximal.
-pub fn par_pivot(
-    pool: &ThreadPool,
-    g: &Arc<CsrGraph>,
-    cand: &Arc<Vec<Vertex>>,
-    fini: &Arc<Vec<Vertex>>,
-) -> Vertex {
-    let best: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
+///
+/// Borrows `cand`/`fini` as plain slices: ParTTT calls this once per
+/// large recursion node, and cloning both sets into fresh `Arc`s each
+/// call was pure allocation churn on the hot path.  Tasks reference the
+/// borrowed data through a raw-pointer shim; `pool.scope` blocks until
+/// every task completes, so the pointees strictly outlive all
+/// dereferences.
+pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Vertex]) -> Vertex {
+    let best = AtomicU64::new(0);
     let total = cand.len() + fini.len();
     debug_assert!(total > 0);
     let chunk = total.div_ceil(pool.num_threads() * 4).max(16);
+    let shared = PivotCtx {
+        g: g as *const CsrGraph,
+        cand: cand as *const [Vertex],
+        fini: fini as *const [Vertex],
+        best: &best as *const AtomicU64,
+    };
     pool.scope(|s| {
         let mut start = 0;
         while start < total {
             let end = (start + chunk).min(total);
-            let g = Arc::clone(g);
-            let cand = Arc::clone(cand);
-            let fini = Arc::clone(fini);
-            let best = Arc::clone(&best);
+            let ctx = shared.clone();
             s.spawn(move |_| {
+                let ctx = ctx; // capture the whole Send shim, not fields
+                // SAFETY: the enclosing scope blocks until this task
+                // completes, so every pointee is still alive.
+                let g = unsafe { &*ctx.g };
+                let cand = unsafe { &*ctx.cand };
+                let fini = unsafe { &*ctx.fini };
+                let best = unsafe { &*ctx.best };
                 let mut local_best = 0u64;
                 for i in start..end {
                     let u = if i < cand.len() {
@@ -87,7 +98,7 @@ pub fn par_pivot(
                     } else {
                         fini[i - cand.len()]
                     };
-                    let score = vset::intersection_count(&cand, g.neighbors(u));
+                    let score = vset::intersection_count(cand, g.neighbors(u));
                     let packed = ((score as u64) << 32) | (!u as u64 & 0xFFFF_FFFF);
                     local_best = local_best.max(packed);
                 }
@@ -99,6 +110,28 @@ pub fn par_pivot(
     let packed = best.load(Ordering::Relaxed);
     !(packed as u32)
 }
+
+/// Raw-pointer shim handing short-lived borrows to 'static pool tasks
+/// (same pattern as `dynamic::par_imce`). SAFETY: see [`par_pivot`].
+struct PivotCtx {
+    g: *const CsrGraph,
+    cand: *const [Vertex],
+    fini: *const [Vertex],
+    best: *const AtomicU64,
+}
+
+impl Clone for PivotCtx {
+    fn clone(&self) -> Self {
+        PivotCtx {
+            g: self.g,
+            cand: self.cand,
+            fini: self.fini,
+            best: self.best,
+        }
+    }
+}
+
+unsafe impl Send for PivotCtx {}
 
 #[cfg(test)]
 mod tests {
@@ -161,15 +194,12 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(5);
         for _ in 0..20 {
             let n = 20 + rng.gen_usize(60);
-            let g = Arc::new(generators::gnp(n, 0.25, rng.next_u64()));
-            let cand: Arc<Vec<Vertex>> =
-                Arc::new((0..n as Vertex).filter(|_| rng.gen_bool(0.6)).collect());
-            let fini: Arc<Vec<Vertex>> = Arc::new(
-                (0..n as Vertex)
-                    .filter(|v| !cand.contains(v))
-                    .filter(|_| rng.gen_bool(0.4))
-                    .collect(),
-            );
+            let g = generators::gnp(n, 0.25, rng.next_u64());
+            let cand: Vec<Vertex> = (0..n as Vertex).filter(|_| rng.gen_bool(0.6)).collect();
+            let fini: Vec<Vertex> = (0..n as Vertex)
+                .filter(|v| !cand.contains(v))
+                .filter(|_| rng.gen_bool(0.4))
+                .collect();
             if cand.is_empty() && fini.is_empty() {
                 continue;
             }

@@ -1,11 +1,13 @@
-//! Clique sinks: where enumerated maximal cliques go.
+//! The [`CliqueSink`] trait and the shared-state sinks.
 //!
-//! Enumeration is output-dominated (Orkut: 2.27 *billion* maximal cliques),
-//! so algorithms never materialize the result set unless asked: they emit
-//! each clique into a `CliqueSink` that counts, histograms, collects, or
-//! forwards — all thread-safe, since ParTTT/ParMCE emit from pool workers.
+//! These sinks funnel every emit through one shared location (an atomic
+//! counter, a mutex-guarded vector) — correct under concurrency, simple,
+//! and the right tool for tests and sequential runs.  Parallel runs
+//! should prefer the shard-per-worker adapters in
+//! [`super::sharded`], which keep the emit hot path off shared cache
+//! lines entirely.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::graph::Vertex;
@@ -16,7 +18,9 @@ pub trait CliqueSink: Sync + Send {
     fn emit(&self, clique: &[Vertex]);
 }
 
-/// Counts cliques (the default for benchmarks — O(1) memory).
+/// Counts cliques through one shared atomic (O(1) memory).  Under
+/// multi-threaded emit storms the shared cache line serializes writers;
+/// use [`super::ShardedCountSink`] on the parallel hot path.
 #[derive(Default)]
 pub struct CountSink {
     count: AtomicU64,
@@ -39,7 +43,23 @@ impl CliqueSink for CountSink {
     }
 }
 
-/// Collects every clique (tests / small graphs only).
+/// Discards every clique. Useful when the caller only wants the emitted
+/// count that the session layer already tracks.
+#[derive(Default)]
+pub struct NullSink;
+
+impl NullSink {
+    pub fn new() -> Self {
+        NullSink
+    }
+}
+
+impl CliqueSink for NullSink {
+    #[inline]
+    fn emit(&self, _clique: &[Vertex]) {}
+}
+
+/// Collects every clique behind one mutex (tests / small graphs only).
 #[derive(Default)]
 pub struct CollectSink {
     cliques: Mutex<Vec<Vec<Vertex>>>,
@@ -53,11 +73,19 @@ impl CollectSink {
     /// Canonical form: each clique sorted, the set of cliques sorted —
     /// so results from different algorithms/schedules compare equal.
     pub fn into_canonical(self) -> Vec<Vec<Vertex>> {
+        let mut cliques = self.into_sorted_cliques();
+        cliques.sort();
+        cliques
+    }
+
+    /// Each clique sorted, collection order preserved — the cheap form
+    /// for callers (e.g. the IMCE batch engines) that need per-clique
+    /// canonical members now but canonicalize the full set later.
+    pub fn into_sorted_cliques(self) -> Vec<Vec<Vertex>> {
         let mut cliques = self.cliques.into_inner().unwrap();
         for c in cliques.iter_mut() {
             c.sort_unstable();
         }
-        cliques.sort();
         cliques
     }
 
@@ -73,65 +101,6 @@ impl CollectSink {
 impl CliqueSink for CollectSink {
     fn emit(&self, clique: &[Vertex]) {
         self.cliques.lock().unwrap().push(clique.to_vec());
-    }
-}
-
-/// Histogram of maximal clique sizes (Figure 5) + count + max size.
-pub struct SizeHistogram {
-    bins: Vec<AtomicU64>,
-    max_size: AtomicUsize,
-    count: AtomicU64,
-    total_verts: AtomicU64,
-}
-
-impl SizeHistogram {
-    pub fn new(max_expected_size: usize) -> Self {
-        SizeHistogram {
-            bins: (0..=max_expected_size).map(|_| AtomicU64::new(0)).collect(),
-            max_size: AtomicUsize::new(0),
-            count: AtomicU64::new(0),
-            total_verts: AtomicU64::new(0),
-        }
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn max_size(&self) -> usize {
-        self.max_size.load(Ordering::Relaxed)
-    }
-
-    pub fn avg_size(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.total_verts.load(Ordering::Relaxed) as f64 / c as f64
-        }
-    }
-
-    /// (size, count) pairs for sizes that occur.
-    pub fn nonzero_bins(&self) -> Vec<(usize, u64)> {
-        self.bins
-            .iter()
-            .enumerate()
-            .filter_map(|(s, b)| {
-                let v = b.load(Ordering::Relaxed);
-                (v > 0).then_some((s, v))
-            })
-            .collect()
-    }
-}
-
-impl CliqueSink for SizeHistogram {
-    fn emit(&self, clique: &[Vertex]) {
-        let s = clique.len();
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.total_verts.fetch_add(s as u64, Ordering::Relaxed);
-        self.max_size.fetch_max(s, Ordering::Relaxed);
-        let idx = s.min(self.bins.len() - 1);
-        self.bins[idx].fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -178,6 +147,13 @@ mod tests {
     }
 
     #[test]
+    fn null_sink_accepts_everything() {
+        let s = NullSink::new();
+        s.emit(&[1, 2, 3]);
+        s.emit(&[]);
+    }
+
+    #[test]
     fn collect_sink_canonicalizes() {
         let s = CollectSink::new();
         s.emit(&[3, 1, 2]);
@@ -187,23 +163,15 @@ mod tests {
     }
 
     #[test]
-    fn histogram_tracks_sizes() {
-        let h = SizeHistogram::new(10);
-        h.emit(&[1, 2, 3]);
-        h.emit(&[1, 2, 3]);
-        h.emit(&[7]);
-        assert_eq!(h.count(), 3);
-        assert_eq!(h.max_size(), 3);
-        assert!((h.avg_size() - 7.0 / 3.0).abs() < 1e-12);
-        assert_eq!(h.nonzero_bins(), vec![(1, 1), (3, 2)]);
-    }
-
-    #[test]
-    fn histogram_clamps_oversize() {
-        let h = SizeHistogram::new(2);
-        h.emit(&[1, 2, 3, 4, 5]);
-        assert_eq!(h.nonzero_bins(), vec![(2, 1)]);
-        assert_eq!(h.max_size(), 5);
+    fn collect_sink_sorted_cliques_preserve_order() {
+        let s = CollectSink::new();
+        s.emit(&[5, 4]);
+        s.emit(&[3, 1, 2]);
+        // per-clique members sorted, emission order kept
+        assert_eq!(
+            s.into_sorted_cliques(),
+            vec![vec![4, 5], vec![1, 2, 3]]
+        );
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Clique sinks: where enumerated maximal cliques go.
+//!
+//! Enumeration is output-dominated (Orkut: 2.27 *billion* maximal cliques),
+//! so algorithms never materialize the result set unless asked: they emit
+//! each clique into a [`CliqueSink`].  The module is layered:
+//!
+//! * [`core`] — the [`CliqueSink`] trait and the shared-state sinks
+//!   ([`CountSink`], [`CollectSink`], [`CallbackSink`], [`TeeSink`],
+//!   [`NullSink`]).  Correct under concurrent emits, but every emit
+//!   touches shared state — fine for tests and sequential runs.
+//! * [`sharded`] — [`ShardedSink`]: one lock-free local shard per pool
+//!   worker (plus one for external threads), merged after the scope
+//!   joins.  The hot-path emit touches no shared cache line; this is
+//!   what the session layer uses for parallel runs.
+//! * [`writer`] — [`StreamWriterSink`]: buffered streaming of cliques to
+//!   disk (ndjson / text / binary) with per-worker write buffers,
+//!   periodic flush, and a byte/clique budget.
+//! * [`stats`] — [`SizeHistogram`] (Figure 5) with an explicit overflow
+//!   bin for cliques larger than the expected maximum.
+
+pub mod core;
+pub mod sharded;
+pub mod stats;
+pub mod writer;
+
+pub use self::core::{CallbackSink, CliqueSink, CollectSink, CountSink, NullSink, TeeSink};
+pub use self::sharded::{
+    route_slot, shard_count, CachePadded, CollectShard, CountShard, HistShard, Shard,
+    ShardedCollectSink, ShardedCountSink, ShardedHistogramSink, ShardedSink,
+};
+pub use self::stats::SizeHistogram;
+pub use self::writer::{StreamWriterSink, WriterConfig, WriterFormat, WriterStats};

@@ -1,0 +1,351 @@
+//! Sharded, thread-local sinks: the parallel emit hot path.
+//!
+//! ParTTT/ParMCE emit from every pool worker at once; Orkut-scale graphs
+//! emit billions of cliques.  A single shared counter or mutex serializes
+//! exactly where the algorithms are supposed to scale.  [`ShardedSink`]
+//! gives each pool worker its own cache-line-padded shard — the worker
+//! index (exposed by [`crate::coordinator::pool::current_worker_slot`])
+//! binds a thread to its shard, so `emit` touches no shared cache line.
+//! Threads outside the pool (the scope caller helping out, tests, foreign
+//! pools) fall back to one designated *external* shard, which every shard
+//! type keeps thread-safe — sharding is a performance contract, never a
+//! correctness assumption.
+//!
+//! Shards are merged after the enumeration scope joins (count / collect /
+//! histogram accessors below), so readers never race writers.
+
+use std::sync::Mutex;
+
+use crate::coordinator::pool::{current_worker_slot, ThreadPool};
+use crate::graph::Vertex;
+
+use super::core::CliqueSink;
+use super::stats::SizeHistogram;
+
+/// Pads (and aligns) a value to its own cache line so neighbouring shards
+/// never false-share. 128 bytes covers the common 64B line size plus
+/// adjacent-line prefetchers.
+#[repr(align(128))]
+pub struct CachePadded<T>(pub T);
+
+/// Shards needed for `workers` pool workers: one each plus the external
+/// shard that non-pool threads (and out-of-range foreign-pool workers)
+/// fall back to.
+pub fn shard_count(workers: usize) -> usize {
+    workers.max(1) + 1
+}
+
+/// Route the current thread to a shard index among `n_shards` — its own
+/// worker slot on a pool thread, the last (*external*) shard otherwise.
+/// The single routing rule shared by every sharded sink ([`ShardedSink`]
+/// and [`super::StreamWriterSink`]), so they can never diverge.
+///
+/// `n_shards` must be ≥ 1 ([`shard_count`] always yields ≥ 2).
+#[inline]
+pub fn route_slot(n_shards: usize) -> usize {
+    debug_assert!(n_shards >= 1, "a sharded sink needs at least one shard");
+    let external = n_shards - 1;
+    match current_worker_slot() {
+        Some(i) if i < external => i,
+        _ => external,
+    }
+}
+
+/// Per-worker sink state. `absorb` is called through `&self` because the
+/// external shard can be shared by several non-pool threads — every shard
+/// must stay thread-safe (atomic or mutex), but on the worker-bound path
+/// the state is effectively private, so those primitives are uncontended.
+pub trait Shard: Send + Sync + Default {
+    fn absorb(&self, clique: &[Vertex]);
+}
+
+/// The sharded sink adapter: `workers + 1` shards (one per pool worker,
+/// one for external threads), routed by [`current_worker_slot`].
+pub struct ShardedSink<S: Shard> {
+    shards: Box<[CachePadded<S>]>,
+}
+
+impl<S: Shard> ShardedSink<S> {
+    /// One shard per worker plus the external shard.
+    pub fn new(workers: usize) -> Self {
+        ShardedSink {
+            shards: (0..shard_count(workers))
+                .map(|_| CachePadded(S::default()))
+                .collect(),
+        }
+    }
+
+    /// Sized for `pool` (the usual construction in the session layer).
+    pub fn for_pool(pool: &ThreadPool) -> Self {
+        Self::new(pool.num_threads())
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn local(&self) -> &S {
+        &self.shards[route_slot(self.shards.len())].0
+    }
+
+    /// Merge-time view of every shard (call after the scope has joined).
+    pub fn shards(&self) -> impl Iterator<Item = &S> {
+        self.shards.iter().map(|c| &c.0)
+    }
+
+    pub fn into_shards(self) -> Vec<S> {
+        self.shards.into_vec().into_iter().map(|c| c.0).collect()
+    }
+}
+
+impl<S: Shard> CliqueSink for ShardedSink<S> {
+    #[inline]
+    fn emit(&self, clique: &[Vertex]) {
+        self.local().absorb(clique);
+    }
+}
+
+// --- counting --------------------------------------------------------------
+
+/// Shard for clique counting: one padded atomic per worker. Relaxed
+/// increments on a private cache line cost a plain add in steady state.
+#[derive(Default)]
+pub struct CountShard(std::sync::atomic::AtomicU64);
+
+impl Shard for CountShard {
+    #[inline]
+    fn absorb(&self, _clique: &[Vertex]) {
+        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+impl CountShard {
+    pub fn get(&self) -> u64 {
+        self.0.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Sharded replacement for [`super::CountSink`] on parallel runs.
+pub type ShardedCountSink = ShardedSink<CountShard>;
+
+impl ShardedSink<CountShard> {
+    /// Total across all shards. Exact once the enumeration scope has
+    /// joined; a racy lower bound while workers are still emitting.
+    pub fn count(&self) -> u64 {
+        self.shards().map(CountShard::get).sum()
+    }
+}
+
+// --- collecting ------------------------------------------------------------
+
+/// Shard for clique collection: a per-worker buffer behind a mutex that
+/// is uncontended on the worker-bound path.
+#[derive(Default)]
+pub struct CollectShard(Mutex<Vec<Vec<Vertex>>>);
+
+impl Shard for CollectShard {
+    fn absorb(&self, clique: &[Vertex]) {
+        self.0.lock().unwrap().push(clique.to_vec());
+    }
+}
+
+impl CollectShard {
+    pub fn take(self) -> Vec<Vec<Vertex>> {
+        self.0.into_inner().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Sharded replacement for [`super::CollectSink`] on parallel runs.
+pub type ShardedCollectSink = ShardedSink<CollectShard>;
+
+impl ShardedSink<CollectShard> {
+    /// Merge all shards into the canonical form (each clique sorted, the
+    /// set of cliques sorted) — schedule-independent, so results from
+    /// different algorithms/thread counts compare equal.
+    pub fn into_canonical(self) -> Vec<Vec<Vertex>> {
+        let mut cliques: Vec<Vec<Vertex>> = Vec::new();
+        for shard in self.into_shards() {
+            cliques.extend(shard.take());
+        }
+        for c in cliques.iter_mut() {
+            c.sort_unstable();
+        }
+        cliques.sort();
+        cliques
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards().map(CollectShard::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// --- size histogram --------------------------------------------------------
+
+#[derive(Default)]
+struct LocalHist {
+    /// bins[s] = cliques of size s; grows on demand, so shards need no
+    /// up-front size bound.
+    bins: Vec<u64>,
+}
+
+/// Shard for size-histogram accumulation.
+#[derive(Default)]
+pub struct HistShard(Mutex<LocalHist>);
+
+impl Shard for HistShard {
+    fn absorb(&self, clique: &[Vertex]) {
+        let s = clique.len();
+        let mut h = self.0.lock().unwrap();
+        if s >= h.bins.len() {
+            h.bins.resize(s + 1, 0);
+        }
+        h.bins[s] += 1;
+    }
+}
+
+/// Sharded accumulation for [`SizeHistogram`] on parallel runs.
+pub type ShardedHistogramSink = ShardedSink<HistShard>;
+
+impl ShardedSink<HistShard> {
+    /// Merge all shards into a [`SizeHistogram`] with `max_expected_size`
+    /// regular bins (larger sizes land in its overflow bin).
+    pub fn into_histogram(self, max_expected_size: usize) -> SizeHistogram {
+        let hist = SizeHistogram::new(max_expected_size);
+        for shard in self.into_shards() {
+            let local = shard.0.into_inner().unwrap();
+            for (size, &n) in local.bins.iter().enumerate() {
+                hist.record_many(size, n);
+            }
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn external_threads_share_the_external_shard() {
+        // no pool: every emit routes to the last shard, still correct
+        let s = Arc::new(ShardedCountSink::new(4));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        s.emit(&[1, 2]);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count(), 4000);
+        assert_eq!(s.num_shards(), 5);
+    }
+
+    #[test]
+    fn pool_workers_bind_to_distinct_shards() {
+        let pool = ThreadPool::new(4);
+        let s = Arc::new(ShardedCountSink::for_pool(&pool));
+        // record which worker slot each task emitted from, so we can pin
+        // the binding property (worker i → shard i), not just the total
+        let observed = Arc::new(Mutex::new(std::collections::BTreeMap::new()));
+        pool.scope(|scope| {
+            for _ in 0..200 {
+                let s = Arc::clone(&s);
+                let observed = Arc::clone(&observed);
+                scope.spawn(move |_| {
+                    // a task runs entirely on one thread, so all its
+                    // emits land in the slot observed here (None = the
+                    // scope caller helping out → external shard)
+                    if let Some(slot) = current_worker_slot() {
+                        *observed.lock().unwrap().entry(slot).or_insert(0u64) += 10;
+                    }
+                    for _ in 0..10 {
+                        s.emit(&[7]);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.count(), 2000);
+        let shards: Vec<u64> = s.shards().map(CountShard::get).collect();
+        let observed = observed.lock().unwrap();
+        // on a starved single-vCPU machine the scope caller's help loop
+        // can drain every task before a worker wakes; `observed` is then
+        // empty and the accounting below degenerates to "all external"
+        let mut worker_total = 0u64;
+        for (&slot, &emitted) in observed.iter() {
+            assert!(slot < 4, "slot {slot} out of range");
+            assert_eq!(
+                shards[slot], emitted,
+                "worker {slot}'s shard must hold exactly its own emits"
+            );
+            worker_total += emitted;
+        }
+        // everything else (tasks run by the blocked scope caller) must
+        // have landed in the external shard — nothing leaks elsewhere
+        assert_eq!(*shards.last().unwrap(), 2000 - worker_total);
+    }
+
+    #[test]
+    fn sharded_collect_canonical_matches_shared_collect() {
+        let pool = ThreadPool::new(3);
+        let sharded = Arc::new(ShardedCollectSink::for_pool(&pool));
+        let shared = Arc::new(crate::mce::sink::CollectSink::new());
+        let cliques: Vec<Vec<Vertex>> =
+            (0..50u32).map(|i| vec![i, i + 1, i + 2]).collect();
+        pool.scope(|scope| {
+            for c in cliques.clone() {
+                let a = Arc::clone(&sharded);
+                let b = Arc::clone(&shared);
+                scope.spawn(move |_| {
+                    a.emit(&c);
+                    b.emit(&c);
+                });
+            }
+        });
+        assert_eq!(sharded.len(), 50);
+        let a = Arc::try_unwrap(sharded).ok().unwrap().into_canonical();
+        let b = Arc::try_unwrap(shared).ok().unwrap().into_canonical();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_histogram_merges_into_size_histogram() {
+        let s = ShardedHistogramSink::new(2);
+        s.emit(&[1, 2, 3]);
+        s.emit(&[1, 2, 3]);
+        s.emit(&[9]);
+        s.emit(&[0; 12]); // will overflow a 10-bin histogram
+        let h = s.into_histogram(10);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.nonzero_bins(), vec![(1, 1), (3, 2)]);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.max_size(), 12);
+    }
+
+    #[test]
+    fn zero_worker_request_still_has_two_shards() {
+        let s = ShardedCountSink::new(0);
+        s.emit(&[1]);
+        assert_eq!(s.num_shards(), 2);
+        assert_eq!(s.count(), 1);
+    }
+}

@@ -1,0 +1,477 @@
+//! Streaming writer sink: materialize enumeration results to disk at
+//! scale — the workload counting sinks cannot serve.
+//!
+//! Every pool worker encodes cliques into its own cache-padded write
+//! buffer; a buffer that crosses the flush threshold is appended to the
+//! shared output under a short-held lock.  So the per-emit hot path is
+//! an uncontended buffer append, and the shared file lock is taken once
+//! per ~64 KiB, not once per clique (Orkut: 2.27B cliques).
+//!
+//! Output is bounded: an optional byte and/or clique budget (the session
+//! layer ties the byte budget to its memory limit) turns an oversized
+//! enumeration into a truncated file plus an honest `dropped` count in
+//! [`WriterStats`] instead of a filled disk.
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::Vertex;
+
+use super::core::CliqueSink;
+use super::sharded::{route_slot, shard_count, CachePadded};
+
+/// On-disk encoding of one maximal clique.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriterFormat {
+    /// One JSON array per line: `[0,4,17]\n`.
+    Ndjson,
+    /// Whitespace-separated vertex ids, one clique per line: `0 4 17\n`
+    /// (the edge-list convention of [`crate::graph::edgelist`]).
+    Text,
+    /// Little-endian u32 length prefix followed by the member ids as
+    /// little-endian u32s.
+    Binary,
+}
+
+impl WriterFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WriterFormat::Ndjson => "ndjson",
+            WriterFormat::Text => "text",
+            WriterFormat::Binary => "binary",
+        }
+    }
+
+    /// CLI spelling → format.
+    pub fn parse(s: &str) -> Option<WriterFormat> {
+        Some(match s {
+            "ndjson" | "json" => WriterFormat::Ndjson,
+            "text" | "txt" => WriterFormat::Text,
+            "binary" | "bin" => WriterFormat::Binary,
+            _ => return None,
+        })
+    }
+}
+
+/// Knobs for [`StreamWriterSink`].
+#[derive(Clone, Copy, Debug)]
+pub struct WriterConfig {
+    pub format: WriterFormat,
+    /// Per-worker buffer size that triggers a flush to the shared output.
+    pub buffer_bytes: usize,
+    /// Stop writing once this many bytes were accepted (soft cap: emits
+    /// racing the threshold may land a final buffered clique each).
+    pub byte_budget: Option<u64>,
+    /// Stop writing once this many cliques were accepted (soft cap).
+    pub clique_budget: Option<u64>,
+}
+
+impl Default for WriterConfig {
+    fn default() -> Self {
+        WriterConfig {
+            format: WriterFormat::Ndjson,
+            buffer_bytes: 64 << 10,
+            byte_budget: None,
+            clique_budget: None,
+        }
+    }
+}
+
+/// What a [`StreamWriterSink`] did, readable at any quiescent point.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WriterStats {
+    /// Cliques accepted (encoded into a buffer).
+    pub cliques: u64,
+    /// Bytes accepted. Equals bytes on disk after a full flush.
+    pub bytes: u64,
+    /// Buffer flushes to the shared output.
+    pub flushes: u64,
+    /// Cliques rejected by the byte/clique budget — or, after an I/O
+    /// failure (which [`StreamWriterSink::flush_all`] keeps reporting),
+    /// by the writer refusing to buffer into a dead output.
+    pub dropped: u64,
+}
+
+/// Buffered, sharded clique writer. See the module docs.
+pub struct StreamWriterSink {
+    shards: Box<[CachePadded<Mutex<Vec<u8>>>]>,
+    out: Mutex<Box<dyn Write + Send>>,
+    cfg: WriterConfig,
+    cliques: AtomicU64,
+    bytes: AtomicU64,
+    flushes: AtomicU64,
+    dropped: AtomicU64,
+    /// First I/O failure; once set, emits are dropped (and counted).
+    io_error: Mutex<Option<io::Error>>,
+    failed: AtomicBool,
+}
+
+impl StreamWriterSink {
+    /// Write to `path` (created/truncated), shard buffers sized for
+    /// `workers` pool workers.
+    pub fn create(
+        path: impl AsRef<Path>,
+        workers: usize,
+        cfg: WriterConfig,
+    ) -> io::Result<StreamWriterSink> {
+        let file = std::fs::File::create(path)?;
+        Ok(Self::from_writer(io::BufWriter::new(file), workers, cfg))
+    }
+
+    /// Write to an arbitrary sink (tests, pipes, compression adapters).
+    pub fn from_writer(
+        w: impl Write + Send + 'static,
+        workers: usize,
+        cfg: WriterConfig,
+    ) -> StreamWriterSink {
+        StreamWriterSink {
+            shards: (0..shard_count(workers))
+                .map(|_| CachePadded(Mutex::new(Vec::new())))
+                .collect(),
+            out: Mutex::new(Box::new(w)),
+            cfg,
+            cliques: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            io_error: Mutex::new(None),
+            failed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn config(&self) -> &WriterConfig {
+        &self.cfg
+    }
+
+    /// Counters right now. Exact once emitting has quiesced (scope join).
+    pub fn stats(&self) -> WriterStats {
+        WriterStats {
+            cliques: self.cliques.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain every shard buffer to the output and flush it. Call after
+    /// the enumeration scope has joined.
+    ///
+    /// An I/O failure is *sticky*: once any write fails, this (and
+    /// [`finish`](Self::finish)) keep returning the error on every later
+    /// call — a truncated file can never be mistaken for a clean run.
+    pub fn flush_all(&self) -> io::Result<()> {
+        for shard in self.shards.iter() {
+            let mut buf = shard.0.lock().unwrap();
+            self.write_out(&mut buf);
+        }
+        if !self.failed.load(Ordering::Relaxed) {
+            if let Err(e) = self.out.lock().unwrap().flush() {
+                self.record_error(e);
+            }
+        }
+        // report without consuming: io::Error is not Clone, so re-wrap
+        // the stored failure each time
+        match &*self.io_error.lock().unwrap() {
+            Some(e) => Err(io::Error::new(e.kind(), e.to_string())),
+            None => Ok(()),
+        }
+    }
+
+    /// Flush everything and return the final stats.
+    pub fn finish(self) -> io::Result<WriterStats> {
+        self.flush_all()?;
+        Ok(self.stats())
+    }
+
+    #[inline]
+    fn local(&self) -> &Mutex<Vec<u8>> {
+        &self.shards[route_slot(self.shards.len())].0
+    }
+
+    /// Append `buf` to the shared output and clear it.
+    fn write_out(&self, buf: &mut Vec<u8>) {
+        if buf.is_empty() {
+            return;
+        }
+        if !self.failed.load(Ordering::Relaxed) {
+            let result = self.out.lock().unwrap().write_all(buf);
+            match result {
+                Ok(()) => {
+                    self.flushes.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => self.record_error(e),
+            }
+        }
+        buf.clear();
+    }
+
+    fn record_error(&self, e: io::Error) {
+        self.failed.store(true, Ordering::Relaxed);
+        let mut slot = self.io_error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    fn over_budget(&self) -> bool {
+        if self.failed.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(cap) = self.cfg.clique_budget {
+            if self.cliques.load(Ordering::Relaxed) >= cap {
+                return true;
+            }
+        }
+        if let Some(cap) = self.cfg.byte_budget {
+            if self.bytes.load(Ordering::Relaxed) >= cap {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl CliqueSink for StreamWriterSink {
+    fn emit(&self, clique: &[Vertex]) {
+        if self.over_budget() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let shard = self.local();
+        let mut buf = shard.lock().unwrap();
+        let before = buf.len();
+        encode(self.cfg.format, clique, &mut buf);
+        let n = (buf.len() - before) as u64;
+        self.cliques.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(n, Ordering::Relaxed);
+        if buf.len() >= self.cfg.buffer_bytes {
+            self.write_out(&mut buf);
+        }
+    }
+}
+
+/// Encode one clique into `buf` without allocating.
+fn encode(format: WriterFormat, clique: &[Vertex], buf: &mut Vec<u8>) {
+    match format {
+        WriterFormat::Ndjson => {
+            buf.push(b'[');
+            for (i, &v) in clique.iter().enumerate() {
+                if i > 0 {
+                    buf.push(b',');
+                }
+                push_decimal(buf, v as u64);
+            }
+            buf.extend_from_slice(b"]\n");
+        }
+        WriterFormat::Text => {
+            for (i, &v) in clique.iter().enumerate() {
+                if i > 0 {
+                    buf.push(b' ');
+                }
+                push_decimal(buf, v as u64);
+            }
+            buf.push(b'\n');
+        }
+        WriterFormat::Binary => {
+            buf.extend_from_slice(&(clique.len() as u32).to_le_bytes());
+            for &v in clique {
+                buf.extend_from_slice(&(v as u32).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// ASCII decimal without going through `format!` (hot path).
+fn push_decimal(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("parmce_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ndjson_and_text_write_one_line_per_clique() {
+        for (format, want_lines) in [
+            (WriterFormat::Ndjson, vec!["[0,2,5]", "[7]"]),
+            (WriterFormat::Text, vec!["0 2 5", "7"]),
+        ] {
+            let path = temp_path(&format!("out.{}", format.name()));
+            let w = StreamWriterSink::create(
+                &path,
+                2,
+                WriterConfig {
+                    format,
+                    ..WriterConfig::default()
+                },
+            )
+            .unwrap();
+            w.emit(&[0, 2, 5]);
+            w.emit(&[7]);
+            let stats = w.finish().unwrap();
+            assert_eq!(stats.cliques, 2);
+            assert_eq!(stats.dropped, 0);
+            let text = std::fs::read_to_string(&path).unwrap();
+            let lines: Vec<&str> = text.lines().collect();
+            assert_eq!(lines, want_lines, "{}", format.name());
+            assert_eq!(stats.bytes as usize, text.len());
+        }
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("parmce_writer_test"));
+    }
+
+    #[test]
+    fn binary_roundtrips() {
+        let path = temp_path("out.bin");
+        let w = StreamWriterSink::create(
+            &path,
+            1,
+            WriterConfig {
+                format: WriterFormat::Binary,
+                ..WriterConfig::default()
+            },
+        )
+        .unwrap();
+        w.emit(&[3, 1, 4]);
+        w.emit(&[u32::MAX]);
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut cliques = Vec::new();
+        let mut i = 0;
+        while i < bytes.len() {
+            let len = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+            i += 4;
+            let mut c = Vec::with_capacity(len);
+            for _ in 0..len {
+                c.push(u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()));
+                i += 4;
+            }
+            cliques.push(c);
+        }
+        assert_eq!(cliques, vec![vec![3, 1, 4], vec![u32::MAX]]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clique_budget_truncates_with_honest_dropped_count() {
+        let path = temp_path("budget.ndjson");
+        let w = StreamWriterSink::create(
+            &path,
+            1,
+            WriterConfig {
+                clique_budget: Some(2),
+                ..WriterConfig::default()
+            },
+        )
+        .unwrap();
+        for i in 0..5u32 {
+            w.emit(&[i]);
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.cliques, 2);
+        assert_eq!(stats.dropped, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn byte_budget_truncates() {
+        let w = StreamWriterSink::from_writer(
+            Vec::new(),
+            1,
+            WriterConfig {
+                byte_budget: Some(8),
+                ..WriterConfig::default()
+            },
+        );
+        // "[0]\n" = 4 bytes; two fit before the cap trips, the rest drop
+        for _ in 0..10 {
+            w.emit(&[0]);
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.bytes, 8);
+        assert_eq!(stats.cliques, 2);
+        assert_eq!(stats.dropped, 8);
+    }
+
+    #[test]
+    fn small_buffers_force_incremental_flushes() {
+        let path = temp_path("flushy.txt");
+        let w = StreamWriterSink::create(
+            &path,
+            2,
+            WriterConfig {
+                format: WriterFormat::Text,
+                buffer_bytes: 4, // every emit crosses the threshold
+                ..WriterConfig::default()
+            },
+        )
+        .unwrap();
+        for i in 0..100u32 {
+            w.emit(&[i, i + 1]);
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.cliques, 100);
+        assert!(stats.flushes >= 100, "flushes: {}", stats.flushes);
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap().lines().count(),
+            100
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn format_parse_round_trip() {
+        for f in [WriterFormat::Ndjson, WriterFormat::Text, WriterFormat::Binary] {
+            assert_eq!(WriterFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(WriterFormat::parse("csv"), None);
+    }
+
+    #[test]
+    fn concurrent_emits_lose_nothing() {
+        let w = std::sync::Arc::new(StreamWriterSink::from_writer(
+            Vec::new(),
+            4,
+            WriterConfig {
+                format: WriterFormat::Text,
+                buffer_bytes: 32,
+                ..WriterConfig::default()
+            },
+        ));
+        let hs: Vec<_> = (0..4u32)
+            .map(|t| {
+                let w = std::sync::Arc::clone(&w);
+                std::thread::spawn(move || {
+                    for i in 0..500u32 {
+                        w.emit(&[t, i]);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.cliques, 2000);
+        assert_eq!(stats.dropped, 0);
+    }
+}

@@ -7,6 +7,7 @@
 //! cached rankings.  Every algorithm then runs through the same
 //! `count` / `collect` / `run` verbs and reports a uniform [`RunReport`].
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -21,16 +22,23 @@ use crate::graph::datasets::{Dataset, Scale};
 use crate::graph::{Edge, Vertex};
 use crate::mce::parmce::{subproblems_timed, trace, trace_parttt};
 use crate::mce::ranking::{RankStrategy, Ranking};
-use crate::mce::sink::{CliqueSink, CollectSink, CountSink, SizeHistogram};
+use crate::mce::sink::{
+    CliqueSink, CountSink, NullSink, ShardedCollectSink, ShardedHistogramSink, SizeHistogram,
+    StreamWriterSink, WriterConfig, WriterFormat, WriterStats,
+};
 use crate::mce::ParTttConfig;
 
 use super::context::ExecContext;
 use super::enumerators::Algo;
-use super::report::RunReport;
+use super::report::{OutputStats, RunReport};
 
 /// What the session's default [`MceSession::run`] does with emitted
 /// cliques.  Custom sinks go through [`MceSession::run_with_sink`].
-#[derive(Clone, Copy, Debug)]
+///
+/// All shapes are served by the sharded sink layer (one lock-free shard
+/// per pool worker, merged after the scope joins) — emits on the
+/// parallel hot path touch no shared cache line.
+#[derive(Clone, Debug)]
 pub enum SinkSpec {
     /// O(1)-memory counting (the default; Orkut has 2.27B cliques).
     Count,
@@ -38,6 +46,9 @@ pub enum SinkSpec {
     Collect,
     /// Clique-size histogram (Figure 5).
     Histogram { max_size: usize },
+    /// Stream every clique to `path` in `format`, with the byte budget
+    /// tied to the session memory limit (see [`MceSession::stream_to`]).
+    Stream { path: PathBuf, format: WriterFormat },
 }
 
 /// Builder for [`MceSession`]. All knobs have sensible defaults; only a
@@ -150,6 +161,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Shorthand for [`SinkSpec::Stream`]: stream every clique emitted
+    /// by [`MceSession::run`] to `path`.
+    pub fn stream(mut self, path: impl Into<PathBuf>, format: WriterFormat) -> Self {
+        self.sink = SinkSpec::Stream {
+            path: path.into(),
+            format,
+        };
+        self
+    }
+
     /// Seed the ranking cache with an externally computed ranking —
     /// the path for the PJRT/Pallas triangle backend, whose client is
     /// not `Sync` and therefore cannot live inside the context.
@@ -189,6 +210,18 @@ pub struct SessionRun {
     pub cliques: Option<Vec<Vec<Vertex>>>,
     /// Size histogram (`SinkSpec::Histogram` only).
     pub histogram: Option<SizeHistogram>,
+    /// Materialized-output stats (`SinkSpec::Stream` only).
+    pub output: Option<OutputStats>,
+}
+
+/// [`WriterStats`] → the report-layer [`OutputStats`].
+fn output_stats(w: WriterStats) -> OutputStats {
+    OutputStats {
+        bytes_written: w.bytes,
+        cliques_written: w.cliques,
+        flushes: w.flushes,
+        dropped: w.dropped,
+    }
 }
 
 /// A static-graph enumeration session: one graph, one shared
@@ -227,12 +260,17 @@ impl MceSession {
     }
 
     /// Run `algo` into the session's configured sink.
+    ///
+    /// I/O failures of a [`SinkSpec::Stream`] sink panic here (the
+    /// infallible `run` contract); use [`MceSession::stream_to`] to
+    /// handle them as `Result`s.
     pub fn run_algo(&self, algo: Algo) -> SessionRun {
-        match self.sink {
+        match &self.sink {
             SinkSpec::Count => SessionRun {
                 report: self.count(algo),
                 cliques: None,
                 histogram: None,
+                output: None,
             },
             SinkSpec::Collect => {
                 let (cliques, report) = self.collect(algo);
@@ -240,33 +278,44 @@ impl MceSession {
                     report,
                     cliques: Some(cliques),
                     histogram: None,
+                    output: None,
                 }
             }
             SinkSpec::Histogram { max_size } => {
-                let hist = Arc::new(SizeHistogram::new(max_size));
-                let sink: Arc<dyn CliqueSink> = Arc::clone(&hist);
-                let report = self.run_with_sink(algo, &sink);
-                drop(sink);
-                let hist =
-                    Arc::into_inner(hist).expect("histogram sink still shared after run");
+                let (hist, report) = self.histogram(algo, *max_size);
                 SessionRun {
                     report,
                     cliques: None,
                     histogram: Some(hist),
+                    output: None,
+                }
+            }
+            SinkSpec::Stream { path, format } => {
+                let (report, stats) = self
+                    .stream_to(algo, path, *format)
+                    .expect("SinkSpec::Stream: clique writer I/O failed");
+                SessionRun {
+                    report,
+                    cliques: None,
+                    histogram: None,
+                    output: Some(output_stats(stats)),
                 }
             }
         }
     }
 
-    /// Run `algo` with an O(1)-memory counting sink.
+    /// Run `algo` with an O(1)-memory counting sink. The run harness's
+    /// sharded counter already counts every emit for the report, so the
+    /// sink itself is a no-op — zero shared state on the emit path.
     pub fn count(&self, algo: Algo) -> RunReport {
-        let sink: Arc<dyn CliqueSink> = Arc::new(CountSink::new());
+        let sink: Arc<dyn CliqueSink> = Arc::new(NullSink::new());
         self.run_with_sink(algo, &sink)
     }
 
-    /// Run `algo` collecting every clique in canonical order.
+    /// Run `algo` collecting every clique in canonical order
+    /// (worker-sharded buffers, merged after the run).
     pub fn collect(&self, algo: Algo) -> (Vec<Vec<Vertex>>, RunReport) {
-        let collect = Arc::new(CollectSink::new());
+        let collect = Arc::new(ShardedCollectSink::new(self.ctx.threads()));
         let sink: Arc<dyn CliqueSink> = Arc::clone(&collect);
         let report = self.run_with_sink(algo, &sink);
         drop(sink);
@@ -274,6 +323,58 @@ impl MceSession {
             .expect("collect sink still shared after run")
             .into_canonical();
         (cliques, report)
+    }
+
+    /// Run `algo` into a worker-sharded size histogram, merged into a
+    /// [`SizeHistogram`] with `max_size` regular bins after the run.
+    pub fn histogram(&self, algo: Algo, max_size: usize) -> (SizeHistogram, RunReport) {
+        let hist = Arc::new(ShardedHistogramSink::new(self.ctx.threads()));
+        let sink: Arc<dyn CliqueSink> = Arc::clone(&hist);
+        let report = self.run_with_sink(algo, &sink);
+        drop(sink);
+        let hist = Arc::into_inner(hist)
+            .expect("histogram sink still shared after run")
+            .into_histogram(max_size);
+        (hist, report)
+    }
+
+    /// Run `algo` streaming every clique to `path` — the at-scale
+    /// alternative to [`collect`](Self::collect) (Orkut's 2.27B cliques
+    /// fit on disk, not in memory).  The writer's byte budget is tied to
+    /// the session memory limit: a session built with
+    /// [`SessionBuilder::mem_budget_bytes`] truncates the file there and
+    /// reports the rejected cliques in [`WriterStats::dropped`] instead
+    /// of filling the disk.
+    pub fn stream_to(
+        &self,
+        algo: Algo,
+        path: impl AsRef<Path>,
+        format: WriterFormat,
+    ) -> Result<(RunReport, WriterStats)> {
+        let cfg = WriterConfig {
+            format,
+            byte_budget: self.ctx.mem_budget_bytes().map(|b| b as u64),
+            ..WriterConfig::default()
+        };
+        let writer = StreamWriterSink::create(path, self.ctx.threads(), cfg)?;
+        self.stream_with(algo, writer)
+    }
+
+    /// Run `algo` into a pre-configured [`StreamWriterSink`] (custom
+    /// formats, budgets, buffer sizes, or non-file outputs).
+    pub fn stream_with(
+        &self,
+        algo: Algo,
+        writer: StreamWriterSink,
+    ) -> Result<(RunReport, WriterStats)> {
+        let writer = Arc::new(writer);
+        let sink: Arc<dyn CliqueSink> = Arc::clone(&writer);
+        let report = self.run_with_sink(algo, &sink);
+        drop(sink);
+        let stats = Arc::into_inner(writer)
+            .expect("writer sink still shared after run")
+            .finish()?;
+        Ok((report, stats))
     }
 
     /// Run `algo` into a caller-provided sink.
@@ -374,6 +475,55 @@ mod tests {
         let hist = run.histogram.expect("histogram requested");
         assert_eq!(hist.count(), run.report.cliques);
         assert!(run.cliques.is_none());
+    }
+
+    #[test]
+    fn stream_sink_writes_one_line_per_clique() {
+        let dir = std::env::temp_dir().join("parmce_builder_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cliques.ndjson");
+
+        let g = generators::gnp(20, 0.4, 7);
+        let s = MceSession::builder()
+            .graph(g)
+            .algo(Algo::ParTtt)
+            .threads(2)
+            .stream(&path, WriterFormat::Ndjson)
+            .build()
+            .unwrap();
+        let want = s.count(Algo::Ttt).cliques;
+        let run = s.run();
+        assert_eq!(run.report.cliques, want);
+        let out = run.output.expect("stream sink stats");
+        assert_eq!(out.cliques_written, want);
+        assert_eq!(out.dropped, 0);
+        assert!(out.complete());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count() as u64, want);
+        assert_eq!(out.bytes_written as usize, text.len());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn stream_to_honors_the_session_memory_budget() {
+        let dir = std::env::temp_dir().join("parmce_builder_budget_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.txt");
+
+        let g = generators::moon_moser(4); // 81 cliques of size 4
+        let s = MceSession::builder()
+            .graph(g)
+            .mem_budget_bytes(64) // a few lines at most
+            .build()
+            .unwrap();
+        let (report, stats) = s
+            .stream_to(Algo::Ttt, &path, WriterFormat::Text)
+            .unwrap();
+        assert_eq!(report.cliques, 81, "enumeration itself is unaffected");
+        assert!(stats.dropped > 0, "budget must reject the overflow");
+        assert_eq!(stats.cliques + stats.dropped, 81);
+        assert!(stats.bytes <= 64 + 16, "soft cap overshoot stays small");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

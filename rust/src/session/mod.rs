@@ -40,4 +40,8 @@ pub use builder::{MceSession, SessionBuilder, SessionRun, SinkSpec};
 pub use context::ExecContext;
 pub use dynamic::{DynAlgo, DynamicSession};
 pub use enumerators::{Algo, Enumerator};
-pub use report::{RunOutcome, RunReport};
+pub use report::{OutputStats, RunOutcome, RunReport};
+
+// the streaming sink vocabulary, re-exported so `SinkSpec::Stream` /
+// `stream_to` callers need only the session module
+pub use crate::mce::sink::{WriterConfig, WriterFormat, WriterStats};

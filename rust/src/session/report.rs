@@ -46,6 +46,40 @@ impl RunReport {
     pub fn secs(&self) -> f64 {
         self.wall.as_secs_f64()
     }
+
+    /// Emitted cliques per second of wall time (0 for a zero-length run)
+    /// — the output-dominated-workload headline number.
+    pub fn cliques_per_sec(&self) -> f64 {
+        let s = self.secs();
+        if s > 0.0 {
+            self.cliques as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Materialized-output statistics for runs whose sink writes somewhere
+/// (the streaming writer): what reached the output and what the byte /
+/// clique budget rejected.  Carried by
+/// [`crate::session::SessionRun::output`] next to the [`RunReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutputStats {
+    /// Bytes accepted by the writer (equals bytes on disk after flush).
+    pub bytes_written: u64,
+    /// Cliques the writer accepted.
+    pub cliques_written: u64,
+    /// Buffer flushes to the shared output.
+    pub flushes: u64,
+    /// Cliques rejected by the output budget (0 = complete output).
+    pub dropped: u64,
+}
+
+impl OutputStats {
+    /// True when every emitted clique reached the output.
+    pub fn complete(&self) -> bool {
+        self.dropped == 0
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +101,19 @@ mod tests {
             ..r
         };
         assert!(!oom.completed());
+        assert!((r.cliques_per_sec() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn output_stats_completeness() {
+        let full = OutputStats {
+            bytes_written: 10,
+            cliques_written: 2,
+            flushes: 1,
+            dropped: 0,
+        };
+        assert!(full.complete());
+        assert!(!OutputStats { dropped: 1, ..full }.complete());
+        assert!(OutputStats::default().complete());
     }
 }

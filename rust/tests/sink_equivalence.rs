@@ -1,0 +1,140 @@
+//! Cross-sink equivalence: for every [`Algo`], the four sink shapes —
+//! count, collect, histogram, streaming writer — must observe the same
+//! enumeration.  Complements `session_equivalence.rs` (which pins the
+//! clique *sets*) by pinning the *output pipeline*: sharded merge,
+//! histogram binning, and writer line counts all reconcile with the
+//! counted total, including under full parallel recursion
+//! (`seq_cutoff: 0`) where every task emits concurrently.
+
+use std::path::PathBuf;
+
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::generators;
+use parmce::session::{Algo, MceSession, RunOutcome, WriterFormat};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("parmce_sink_equiv").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Count / collect / histogram / writer must agree for `algo` on `g`.
+fn check_all_sinks(g: &CsrGraph, algo: Algo, threads: usize, seq_cutoff: usize, tag: &str) {
+    let dir = temp_dir(tag);
+    let s = MceSession::builder()
+        .graph(g.clone())
+        .threads(threads)
+        .seq_cutoff(seq_cutoff)
+        .build()
+        .unwrap();
+
+    let count_report = s.count(algo);
+    assert_eq!(
+        count_report.outcome,
+        RunOutcome::Completed,
+        "{tag}/{}: count run",
+        algo.name()
+    );
+    let want = count_report.cliques;
+    assert!(want > 0, "{tag}/{}: empty enumeration", algo.name());
+
+    let (cliques, collect_report) = s.collect(algo);
+    assert_eq!(
+        cliques.len() as u64,
+        want,
+        "{tag}/{}: collect len vs count",
+        algo.name()
+    );
+    assert_eq!(collect_report.cliques, want);
+
+    let (hist, hist_report) = s.histogram(algo, 64);
+    assert_eq!(hist.count(), want, "{tag}/{}: histogram count", algo.name());
+    assert_eq!(hist.overflow(), 0, "{tag}/{}: unexpected overflow", algo.name());
+    let binned: u64 = hist.nonzero_bins().iter().map(|&(_, c)| c).sum();
+    assert_eq!(binned, want, "{tag}/{}: histogram bins", algo.name());
+    assert_eq!(hist_report.cliques, want);
+
+    let path = dir.join(format!("{}.txt", algo.name()));
+    let (stream_report, stats) = s.stream_to(algo, &path, WriterFormat::Text).unwrap();
+    assert_eq!(stream_report.cliques, want);
+    assert_eq!(stats.cliques, want, "{tag}/{}: writer cliques", algo.name());
+    assert_eq!(stats.dropped, 0);
+    let lines = std::fs::read_to_string(&path).unwrap().lines().count() as u64;
+    assert_eq!(lines, want, "{tag}/{}: writer line count", algo.name());
+}
+
+#[test]
+fn every_algo_agrees_across_all_sink_shapes() {
+    let graphs = [
+        ("gnp", generators::gnp(20, 0.4, 11)),
+        ("planted", generators::planted_cliques(36, 0.06, 3, 4, 6, 9)),
+        ("moon_moser", generators::moon_moser(3)),
+    ];
+    for (tag, g) in &graphs {
+        for &algo in Algo::all() {
+            check_all_sinks(g, algo, 3, 32, tag);
+        }
+        // tests in this binary run concurrently: clean only our subdirs
+        let _ = std::fs::remove_dir_all(temp_dir(tag));
+    }
+}
+
+#[test]
+fn sharded_merge_loses_nothing_under_full_parallel_recursion() {
+    // seq_cutoff 0: every recursive call is its own pool task, so every
+    // emit races every other — the stress case for shard routing and
+    // merge-at-join
+    let g = generators::planted_cliques(70, 0.05, 4, 4, 7, 5);
+    let want = MceSession::builder()
+        .graph(g.clone())
+        .threads(1)
+        .build()
+        .unwrap()
+        .count(Algo::Ttt)
+        .cliques;
+    assert!(want > 0);
+    for &algo in &[Algo::ParTtt, Algo::ParMce] {
+        check_all_sinks(&g, algo, 8, 0, "stress");
+    }
+    // the parallel collect must also reproduce the sequential set
+    let s = MceSession::builder()
+        .graph(g.clone())
+        .threads(8)
+        .seq_cutoff(0)
+        .build()
+        .unwrap();
+    let (cliques, _) = s.collect(Algo::ParTtt);
+    assert_eq!(cliques.len() as u64, want);
+    let (seq_cliques, _) = MceSession::builder()
+        .graph(g)
+        .threads(1)
+        .build()
+        .unwrap()
+        .collect(Algo::Ttt);
+    assert_eq!(cliques, seq_cliques, "canonical sets diverge");
+    let _ = std::fs::remove_dir_all(temp_dir("stress"));
+}
+
+#[test]
+fn parallel_stream_writer_under_full_recursion_writes_every_clique() {
+    let dir = temp_dir("stream_stress");
+    let g = generators::moon_moser(4); // 81 cliques, heavy task fan-out
+    let s = MceSession::builder()
+        .graph(g)
+        .threads(8)
+        .seq_cutoff(0)
+        .build()
+        .unwrap();
+    let path = dir.join("mm4.ndjson");
+    let (report, stats) = s.stream_to(Algo::ParTtt, &path, WriterFormat::Ndjson).unwrap();
+    assert_eq!(report.cliques, 81);
+    assert_eq!(stats.cliques, 81);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 81);
+    // every line is a 4-member JSON array
+    for line in text.lines() {
+        assert!(line.starts_with('[') && line.ends_with(']'), "{line}");
+        assert_eq!(line.matches(',').count(), 3, "{line}");
+    }
+    let _ = std::fs::remove_dir_all(temp_dir("stream_stress"));
+}
