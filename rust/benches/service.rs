@@ -1,0 +1,136 @@
+//! Bench: the CliqueService serving path.
+//!
+//! 1. Snapshot read scaling — `r` concurrent readers each issuing a
+//!    fixed query mix against the published snapshot, via the cached
+//!    `SnapshotReader` hot path (one atomic load per revalidation).
+//!    Per-query cost should stay flat as readers are added: reads share
+//!    nothing mutable, so there is no lock to collapse on.  The
+//!    `load-per-query` variant re-fetches the `Arc` through the cell
+//!    mutex on every query, for contrast.
+//! 2. Update-to-visibility — a full `serve_replay` run reporting epoch
+//!    lag and publish→first-seen latency while updates land.
+//!
+//! `cargo bench --bench service` (PARMCE_BENCH_FAST=1 for CI).
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::stream::EdgeStream;
+use parmce::graph::generators;
+use parmce::graph::Vertex;
+use parmce::service::{serve_replay, CliqueService, DriverConfig, ServiceHandle};
+use parmce::session::{DynAlgo, DynamicSession};
+use parmce::util::bench::Bencher;
+use parmce::util::rng::Rng;
+
+/// The per-reader query mix (mirrors the driver's hot queries).
+fn query_round(snap: &parmce::service::CliqueSnapshot, rng: &mut Rng, n: u64) -> u64 {
+    let mut acc = 0u64;
+    let v = rng.gen_range(n) as Vertex;
+    acc += snap.ids_containing(v).len() as u64;
+    let u = rng.gen_range(n) as Vertex;
+    let w = rng.gen_range(n) as Vertex;
+    acc += snap.ids_containing_all(&[u, w]).len() as u64;
+    acc += snap.top_k_largest(4).len() as u64;
+    acc += snap.count() as u64;
+    acc
+}
+
+fn hammer_readers(
+    pool: &ThreadPool,
+    handle: &ServiceHandle,
+    readers: usize,
+    rounds: u64,
+    cached: bool,
+) -> u64 {
+    let total = Arc::new(AtomicU64::new(0));
+    pool.scope(|s| {
+        for r in 0..readers {
+            let mut reader = handle.reader();
+            let handle = handle.clone();
+            let total = Arc::clone(&total);
+            s.spawn(move |_| {
+                let mut rng = Rng::new(0xbe7 ^ r as u64);
+                let mut acc = 0u64;
+                for _ in 0..rounds {
+                    let snap = if cached {
+                        Arc::clone(reader.current())
+                    } else {
+                        handle.snapshot() // cell mutex on every round
+                    };
+                    let n = snap.n().max(1) as u64;
+                    acc += query_round(&snap, &mut rng, n);
+                }
+                total.fetch_add(acc, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    total.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let fast = std::env::var("PARMCE_BENCH_FAST").as_deref() == Ok("1");
+    let rounds: u64 = if fast { 2_000 } else { 20_000 };
+
+    // a served graph with clique structure worth querying
+    let g = generators::planted_cliques(400, 0.02, 10, 4, 8, 77);
+    let svc = CliqueService::wrap(DynamicSession::from_graph_threads(&g, DynAlgo::Imce, 1));
+    let handle = svc.handle();
+    println!(
+        "serving n={} cliques={} (4 queries per round, {rounds} rounds per reader)",
+        g.n(),
+        svc.snapshot().count()
+    );
+
+    // --- 1. read scaling: cached reader vs per-query cell load ------------
+    let mut baseline_ns_per_q = 0.0;
+    for readers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(readers);
+        let queries = readers as u64 * rounds * 4;
+        let ns = b.bench(format!("service/reads/cached/r{readers}"), || {
+            hammer_readers(&pool, &handle, readers, rounds, true)
+        });
+        let per_q = ns as f64 / queries as f64;
+        if readers == 1 {
+            baseline_ns_per_q = per_q;
+        }
+        let ns_load = b.bench(format!("service/reads/load-per-query/r{readers}"), || {
+            hammer_readers(&pool, &handle, readers, rounds, false)
+        });
+        println!(
+            "  -> r{readers}: {:.0}ns/query cached ({:.2}x vs 1 reader), {:.0}ns/query re-loading",
+            per_q,
+            per_q / baseline_ns_per_q.max(1e-9),
+            ns_load as f64 / queries as f64,
+        );
+    }
+
+    // --- 2. update-to-visibility epoch lag under live replay --------------
+    let g2 = generators::gnp(260, 0.04, 42);
+    let stream = EdgeStream::permuted(&g2, 9);
+    let cfg = DriverConfig {
+        batch_size: if fast { 120 } else { 40 },
+        readers: 2,
+        queries_per_round: 8,
+        churn_every: Some(5),
+        seed: 3,
+        max_batches: None,
+    };
+    let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+    let pool = ThreadPool::new(cfg.readers);
+    let report = serve_replay(&mut svc, &stream, &pool, &cfg);
+    assert_eq!(report.consistency_violations, 0, "isolation violated");
+    println!("service/replay: {}", report.summary());
+    println!(
+        "  -> update-to-visibility: mean {:.3}ms over {} epochs; \
+         reader epoch lag mean {:.2} max {}",
+        report.mean_visibility_ns as f64 / 1e6,
+        report.epochs_observed,
+        report.mean_epoch_lag(),
+        report.max_epoch_lag,
+    );
+
+    b.dump_json("results/bench_service.json");
+}

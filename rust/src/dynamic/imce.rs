@@ -79,7 +79,8 @@ pub fn imce_batch(
     for c in &new_cliques {
         let t0 = Instant::now();
         for cand in subsumption_candidates(c, &added) {
-            if registry.remove(&cand) {
+            // candidates are already canonical — skip the sort-and-box
+            if registry.remove_canonical(&cand) {
                 subsumed.push(cand.into_vec());
             }
         }
@@ -87,8 +88,9 @@ pub fn imce_batch(
     }
 
     // update C(G): subsumed already removed; add the new cliques
+    // (per-clique sorted above, so the canonical fast path applies)
     for c in &new_cliques {
-        registry.insert(c);
+        registry.insert_canonical(c);
     }
 
     let mut result = BatchResult {

@@ -102,8 +102,9 @@ pub fn par_imce_batch(
                     let t0 = Instant::now();
                     let mut local: Vec<Vec<Vertex>> = Vec::new();
                     for cand in subsumption_candidates(&cliques[ci], &ctx.added) {
-                        // concurrent atomic remove: exactly-once reporting
-                        if registry.remove(&cand) {
+                        // concurrent atomic remove: exactly-once reporting;
+                        // candidates are canonical, so no re-sort/re-box
+                        if registry.remove_canonical(&cand) {
                             local.push(cand.into_vec());
                         }
                     }
@@ -118,7 +119,7 @@ pub fn par_imce_batch(
     }
 
     for c in &new_cliques {
-        registry.insert(c);
+        registry.insert_canonical(c);
     }
 
     let mut result = BatchResult {

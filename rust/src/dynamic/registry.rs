@@ -5,13 +5,20 @@
 //! `concurrent_hash_map` the paper uses.  ParIMCESub's candidacy check
 //! (Alg. 7 line 14) and removal (line 16) are single concurrent calls, so
 //! a clique subsumed via several new cliques is reported exactly once.
+//!
+//! The `*_canonical` variants skip the per-call sort-and-box when the
+//! caller already holds a canonical (sorted) clique — the IMCE/ParIMCE
+//! hot paths only ever touch canonical data, so they never pay
+//! [`canonical`] twice.
 
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
 use crate::graph::Vertex;
 use crate::mce::sink::{CallbackSink, CliqueSink};
-use crate::mce::ttt;
+use crate::mce::{parttt, ttt, ParTttConfig};
 use crate::util::chashmap::ConcurrentSet;
-use std::sync::Mutex;
 
 /// Canonical clique key: sorted, boxed.
 pub type CliqueKey = Box<[Vertex]>;
@@ -20,6 +27,14 @@ pub fn canonical(clique: &[Vertex]) -> CliqueKey {
     let mut v = clique.to_vec();
     v.sort_unstable();
     v.into_boxed_slice()
+}
+
+#[inline]
+fn debug_assert_canonical(clique: &[Vertex]) {
+    debug_assert!(
+        clique.windows(2).all(|w| w[0] < w[1]),
+        "clique {clique:?} is not canonical (sorted, deduped)"
+    );
 }
 
 #[derive(Default)]
@@ -43,6 +58,20 @@ impl CliqueRegistry {
         reg
     }
 
+    /// Bootstrap from a static graph in parallel: C(G) via ParTTT on
+    /// `pool`, every worker inserting straight into the sharded set —
+    /// the concurrent registry *is* the sharded sink, so no merge step.
+    pub fn from_graph_parallel(g: &CsrGraph, pool: &ThreadPool) -> Self {
+        let reg = Arc::new(CliqueRegistry::new());
+        let sink: Arc<dyn CliqueSink> = Arc::new(RegistrySink(Arc::clone(&reg)));
+        // ParTTT's 'static task bound needs an owned graph snapshot; the
+        // O(n + m) copy is noise next to the enumeration it feeds.
+        let g = Arc::new(g.clone());
+        parttt::parttt(pool, &g, &sink, ParTttConfig::default());
+        drop(sink);
+        Arc::try_unwrap(reg).ok().expect("bootstrap tasks joined; sink dropped")
+    }
+
     /// Insert (canonicalized); true if newly added.
     pub fn insert(&self, clique: &[Vertex]) -> bool {
         self.set.insert(canonical(clique))
@@ -57,12 +86,47 @@ impl CliqueRegistry {
         self.set.contains(&canonical(clique))
     }
 
+    /// [`insert`](Self::insert) for a clique the caller guarantees is
+    /// already canonical — one boxed copy, no sort.
+    pub fn insert_canonical(&self, clique: &[Vertex]) -> bool {
+        debug_assert_canonical(clique);
+        self.set.insert(clique.to_vec().into_boxed_slice())
+    }
+
+    /// [`insert_canonical`](Self::insert_canonical) taking ownership of a
+    /// prebuilt key — no copy at all.
+    pub fn insert_canonical_key(&self, key: CliqueKey) -> bool {
+        debug_assert_canonical(&key);
+        self.set.insert(key)
+    }
+
+    /// [`remove`](Self::remove) for a canonical clique — no sort, no
+    /// allocation (borrowed-slice lookup into the sharded set).
+    pub fn remove_canonical(&self, clique: &[Vertex]) -> bool {
+        debug_assert_canonical(clique);
+        self.set.remove_borrowed::<[Vertex]>(clique)
+    }
+
+    /// [`contains`](Self::contains) for a canonical clique — no sort, no
+    /// allocation.
+    pub fn contains_canonical(&self, clique: &[Vertex]) -> bool {
+        debug_assert_canonical(clique);
+        self.set.contains_borrowed::<[Vertex]>(clique)
+    }
+
     pub fn len(&self) -> usize {
         self.set.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.set.is_empty()
+    }
+
+    /// Apply `f` to every registered clique under shard locks, without
+    /// draining — the bootstrap path for snapshot/index rebuilds
+    /// ([`crate::service`]).
+    pub fn for_each(&self, mut f: impl FnMut(&[Vertex])) {
+        self.set.for_each(|k| f(k));
     }
 
     /// Snapshot as canonical sorted list (drains the registry).
@@ -75,6 +139,16 @@ impl CliqueRegistry {
             .collect();
         all.sort();
         all
+    }
+}
+
+/// Owning sink adapter: every emitted clique lands in the registry.
+/// Used by the parallel bootstrap, whose pool tasks need `'static`.
+struct RegistrySink(Arc<CliqueRegistry>);
+
+impl CliqueSink for RegistrySink {
+    fn emit(&self, clique: &[Vertex]) {
+        self.0.insert(clique);
     }
 }
 
@@ -108,6 +182,19 @@ mod tests {
     }
 
     #[test]
+    fn canonical_variants_agree_with_sorting_ones() {
+        let r = CliqueRegistry::new();
+        assert!(r.insert_canonical(&[1, 2, 3]));
+        assert!(!r.insert(&[3, 2, 1]), "same clique through the sort path");
+        assert!(r.contains_canonical(&[1, 2, 3]));
+        assert!(!r.contains_canonical(&[1, 2]));
+        assert!(r.remove_canonical(&[1, 2, 3]));
+        assert!(!r.remove_canonical(&[1, 2, 3]));
+        assert!(r.insert_canonical_key(canonical(&[5, 4])));
+        assert!(r.contains(&[4, 5]));
+    }
+
+    #[test]
     fn from_graph_matches_oracle() {
         let g = generators::gnp(20, 0.4, 3);
         let reg = CliqueRegistry::from_graph(&g);
@@ -118,6 +205,27 @@ mod tests {
         }
         assert_eq!(reg.drain_canonical(), want);
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn parallel_bootstrap_matches_sequential() {
+        let g = generators::planted_cliques(40, 0.08, 3, 4, 6, 11);
+        let pool = ThreadPool::new(3);
+        let par = CliqueRegistry::from_graph_parallel(&g, &pool);
+        let seq = CliqueRegistry::from_graph(&g);
+        assert_eq!(par.len(), seq.len());
+        assert_eq!(par.drain_canonical(), seq.drain_canonical());
+    }
+
+    #[test]
+    fn for_each_is_non_draining() {
+        let g = generators::gnp(12, 0.5, 9);
+        let reg = CliqueRegistry::from_graph(&g);
+        let mut seen = Vec::new();
+        reg.for_each(|c| seen.push(c.to_vec()));
+        seen.sort();
+        assert_eq!(seen.len(), reg.len(), "registry must survive iteration");
+        assert_eq!(seen, reg.drain_canonical());
     }
 
     #[test]

@@ -125,7 +125,8 @@ pub fn imce_remove_batch(
         if contains_removed {
             deleted.push(c);
         } else {
-            registry.insert(&c);
+            // survivors came out of drain_canonical() already sorted
+            registry.insert_canonical(&c);
         }
     }
 
@@ -138,7 +139,7 @@ pub fn imce_remove_batch(
             if cand.is_empty() {
                 continue;
             }
-            if is_maximal(graph, &cand) && registry.insert(&cand) {
+            if is_maximal(graph, &cand) && registry.insert_canonical(&cand) {
                 new_cliques.push(cand.into_vec());
             }
         }
@@ -200,6 +201,39 @@ mod tests {
             assert_eq!(a.subsumed, b.subsumed, "batch {}", a.batch_index);
         }
         assert_eq!(reg_s.drain_canonical(), reg_p.drain_canonical());
+    }
+
+    #[test]
+    fn final_partial_batch_is_yielded() {
+        // 23 edges in batches of 5 → 4 full batches + one of 3; the
+        // iterator must not drop the remainder
+        let edges: Vec<Edge> = (0..23).map(|i| (i, i + 1)).collect();
+        let s = EdgeStream { n: 24, edges };
+        let sizes: Vec<usize> = s.batches(5).map(<[Edge]>::len).collect();
+        assert_eq!(sizes, vec![5, 5, 5, 5, 3]);
+        assert_eq!(sizes.iter().sum::<usize>(), 23);
+    }
+
+    #[test]
+    fn replay_with_non_dividing_batch_size_preserves_clique_counts() {
+        // regression: if the final partial batch were dropped, the replayed
+        // registry would diverge from the from-scratch enumeration
+        let g = generators::gnp(22, 0.3, 13);
+        let mut stream = EdgeStream::permuted(&g, 5);
+        let batch = 7;
+        if stream.edges.len() % batch == 0 {
+            stream.edges.pop(); // force a trailing partial batch
+        }
+        let (records, graph, registry) = replay(&stream, batch, Engine::Sequential, None);
+        assert_eq!(records.len(), stream.edges.len().div_ceil(batch));
+        assert_eq!(
+            graph.m(),
+            stream.edges.len(),
+            "every streamed edge must have been applied"
+        );
+        let want = oracle::maximal_cliques(&graph.to_csr());
+        assert_eq!(registry.len(), want.len());
+        assert_eq!(registry.drain_canonical(), want);
     }
 
     #[test]

@@ -33,7 +33,10 @@
 //!   the load-balanced [`mce::parmce`] with degree/triangle/degeneracy
 //!   rankings, and the incremental [`dynamic`] algorithms (IMCE /
 //!   ParIMCE), all running on the in-crate work-stealing pool
-//!   ([`coordinator::pool`]) behind the [`session`] facade.
+//!   ([`coordinator::pool`]) behind the [`session`] facade.  The
+//!   [`service`] layer serves queries over the maintained clique set
+//!   through epoch-versioned immutable snapshots, concurrently with
+//!   batch updates (`parmce serve-replay`).
 //! * **L2/L1 (python/compile, build-time only)** — the triangle-count
 //!   vertex ranking as a blocked Pallas kernel, AOT-lowered to HLO text
 //!   and executed from Rust via PJRT ([`runtime`]; requires the `pjrt`
@@ -49,5 +52,6 @@ pub mod experiments;
 pub mod graph;
 pub mod mce;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod util;

@@ -6,6 +6,9 @@
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
 //!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
 //!                    [--out FILE [--format ndjson|text|binary]]
+//!   parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]
+//!                       [--threads N] [--readers R] [--max-batches M]
+//!                       [--churn K] [--seed X] [--scale S]
 //!   parmce stats [--dataset NAME] [--scale S]
 //!   parmce perf [--scale S]
 //!   parmce artifacts-check
@@ -188,6 +191,73 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        Some("serve-replay") => {
+            // the serving pipeline: replay a dynamic stream while reader
+            // tasks query the published epoch snapshots concurrently
+            use parmce::coordinator::pool::ThreadPool;
+            use parmce::dynamic::stream::EdgeStream;
+            use parmce::service::{serve_replay, CliqueService, DriverConfig};
+            use parmce::session::{DynAlgo, DynamicSession};
+
+            let dataset = flag(args, "--dataset")
+                .ok_or_else(|| anyhow!("--dataset required"))?;
+            let d = parse_dataset(&dataset)?;
+            let scale = parse_scale(args)?;
+            let algo = match flag(args, "--algo").as_deref() {
+                None => DynAlgo::ParImce,
+                Some(a) => DynAlgo::parse(a)
+                    .ok_or_else(|| anyhow!("unknown dynamic algo {a} (imce|parimce)"))?,
+            };
+            let threads: usize = flag(args, "--threads")
+                .map(|t| t.parse())
+                .transpose()?
+                .unwrap_or_else(|| algo.default_threads());
+            let readers: usize = flag(args, "--readers")
+                .map(|t| t.parse())
+                .transpose()?
+                .unwrap_or(2);
+            let seed: u64 = flag(args, "--seed")
+                .map(|t| t.parse())
+                .transpose()?
+                .unwrap_or(1);
+            let cfg = DriverConfig {
+                batch_size: flag(args, "--batch")
+                    .map(|t| t.parse())
+                    .transpose()?
+                    .unwrap_or(100),
+                max_batches: flag(args, "--max-batches").map(|t| t.parse()).transpose()?,
+                readers,
+                churn_every: flag(args, "--churn").map(|t| t.parse()).transpose()?,
+                seed,
+                ..DriverConfig::default()
+            };
+
+            let g = d.graph(scale);
+            let stream = EdgeStream::permuted(&g, seed);
+            println!(
+                "serving {} (n={}, m={}) with {} ({threads} writer threads), \
+                 batch {}, {} readers",
+                d.name(),
+                fmt_count(g.n() as u64),
+                fmt_count(g.m() as u64),
+                algo.name(),
+                cfg.batch_size,
+                cfg.readers,
+            );
+            let mut svc = CliqueService::wrap(
+                DynamicSession::from_empty(stream.n, algo).with_threads(threads),
+            );
+            // a dedicated reader pool: the session's ParIMCE pool must not
+            // be occupied by long-lived query loops
+            let pool = ThreadPool::new(readers.max(1));
+            let report = serve_replay(&mut svc, &stream, &pool, &cfg);
+            println!("{}", report.summary());
+            anyhow::ensure!(
+                report.consistency_violations == 0,
+                "snapshot isolation violated"
+            );
+            Ok(())
+        }
         Some("stats") => {
             let scale = parse_scale(args)?;
             let datasets: Vec<Dataset> = match flag(args, "--dataset") {
@@ -265,6 +335,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
                  \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
                  \x20                  [--out FILE [--format ndjson|text|binary]]\n\
+                 \x20 parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]\n\
+                 \x20                     [--threads N] [--readers R] [--max-batches M]\n\
+                 \x20                     [--churn K] [--seed X] [--scale S]\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
                  \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\

@@ -1,0 +1,432 @@
+//! Workload driver: replay a mixed update/query trace against a
+//! [`CliqueService`] and measure the serving-path numbers that matter —
+//! query throughput, per-batch update latency, and epoch lag (how far
+//! reader caches trail the published epoch, and how long a published
+//! epoch takes to be observed by a reader).
+//!
+//! The writer applies stream batches on the calling thread (the single-
+//! writer discipline of Figure 4); `readers` long-lived query tasks run
+//! on the coordinator pool, each with its own cached [`SnapshotReader`]
+//! so the steady-state query path costs one atomic load, no lock.
+//! Optional churn re-removes and re-inserts every k-th batch, driving
+//! the §5.3 decremental path through the same serving pipeline.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::pool::ThreadPool;
+use crate::dynamic::stream::EdgeStream;
+use crate::graph::{Edge, Vertex};
+use crate::util::rng::Rng;
+
+use super::CliqueService;
+
+/// Knobs for one [`serve_replay`] run.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Edges per insertion batch (one epoch per batch).
+    pub batch_size: usize,
+    /// Truncate the stream after this many insertion batches.
+    pub max_batches: Option<usize>,
+    /// Long-lived query tasks on the pool (≤ pool threads to run all
+    /// concurrently; excess tasks only start once earlier ones stop).
+    pub readers: usize,
+    /// Queries each reader issues per snapshot revalidation.
+    pub queries_per_round: usize,
+    /// Every k-th batch is removed and re-applied after insertion —
+    /// exercises `remove_batch` under concurrent reads (net no-op).
+    pub churn_every: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            batch_size: 100,
+            max_batches: None,
+            readers: 2,
+            queries_per_round: 8,
+            churn_every: None,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// What one [`serve_replay`] run measured.
+#[derive(Clone, Debug, Default)]
+pub struct DriverReport {
+    /// Update events applied (insert batches + churn removes/re-inserts).
+    pub updates: usize,
+    pub edges_streamed: usize,
+    pub final_epoch: u64,
+    pub final_cliques: usize,
+    pub total_update_ns: u64,
+    pub max_update_ns: u64,
+    /// Queries answered across all readers.
+    pub queries: u64,
+    pub wall_ns: u64,
+    /// Epoch-lag samples: how many epochs reader caches trailed the
+    /// published snapshot, sampled once per reader round *before*
+    /// revalidation.
+    pub lag_samples: u64,
+    pub lag_sum: u64,
+    pub max_epoch_lag: u64,
+    /// Reader-side self-checks that failed (a clique read from a
+    /// snapshot must be maximal in that same snapshot) — always 0
+    /// unless a published snapshot's index is internally inconsistent.
+    /// (Cross-epoch isolation is proved by tests/service_consistency.rs,
+    /// which validates answers against per-epoch oracle state.)
+    pub consistency_violations: u64,
+    /// Published epochs some reader actually observed.
+    pub epochs_observed: usize,
+    /// Mean publish → first-observation delay over observed epochs.
+    pub mean_visibility_ns: u64,
+}
+
+impl DriverReport {
+    pub fn mean_update_ns(&self) -> u64 {
+        if self.updates == 0 {
+            0
+        } else {
+            self.total_update_ns / self.updates as u64
+        }
+    }
+
+    pub fn mean_epoch_lag(&self) -> f64 {
+        if self.lag_samples == 0 {
+            0.0
+        } else {
+            self.lag_sum as f64 / self.lag_samples as f64
+        }
+    }
+
+    /// Queries per second over the whole replay wall time.
+    pub fn qps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.queries as f64 * 1e9 / self.wall_ns as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "updates {} ({} edges) in {:.3}s | update mean {:.3}ms max {:.3}ms | \
+             queries {} ({:.0}/s) | epoch lag mean {:.2} max {} | \
+             visibility mean {:.3}ms over {} epochs | final epoch {} ({} cliques) | violations {}",
+            self.updates,
+            self.edges_streamed,
+            self.wall_ns as f64 / 1e9,
+            self.mean_update_ns() as f64 / 1e6,
+            self.max_update_ns as f64 / 1e6,
+            self.queries,
+            self.qps(),
+            self.mean_epoch_lag(),
+            self.max_epoch_lag,
+            self.mean_visibility_ns as f64 / 1e6,
+            self.epochs_observed,
+            self.final_epoch,
+            self.final_cliques,
+            self.consistency_violations,
+        )
+    }
+}
+
+/// Publish/first-seen timeline per epoch (offsets from the run start),
+/// for the update-to-visibility accounting.
+struct VisBoard {
+    base_epoch: u64,
+    publish_ns: Vec<AtomicU64>,
+    seen_ns: Vec<AtomicU64>,
+}
+
+impl VisBoard {
+    fn new(base_epoch: u64, events: usize) -> Self {
+        VisBoard {
+            base_epoch,
+            publish_ns: (0..events).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            seen_ns: (0..events).map(|_| AtomicU64::new(u64::MAX)).collect(),
+        }
+    }
+
+    fn slot(&self, epoch: u64) -> Option<usize> {
+        if epoch <= self.base_epoch {
+            return None; // the pre-existing snapshot is not an event
+        }
+        let idx = (epoch - self.base_epoch - 1) as usize;
+        (idx < self.publish_ns.len()).then_some(idx)
+    }
+
+    fn mark_published(&self, epoch: u64, ns: u64) {
+        if let Some(i) = self.slot(epoch) {
+            self.publish_ns[i].store(ns, Ordering::Relaxed);
+        }
+    }
+
+    fn mark_seen(&self, epoch: u64, ns: u64) {
+        if let Some(i) = self.slot(epoch) {
+            self.seen_ns[i].fetch_min(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// (epochs observed, mean publish→seen ns).
+    fn visibility(&self) -> (usize, u64) {
+        let mut observed = 0usize;
+        let mut total = 0u64;
+        for (p, s) in self.publish_ns.iter().zip(&self.seen_ns) {
+            let (p, s) = (p.load(Ordering::Relaxed), s.load(Ordering::Relaxed));
+            if p != u64::MAX && s != u64::MAX {
+                observed += 1;
+                total += s.saturating_sub(p);
+            }
+        }
+        let mean = if observed == 0 { 0 } else { total / observed as u64 };
+        (observed, mean)
+    }
+}
+
+#[derive(Default)]
+struct ReaderTotals {
+    queries: u64,
+    lag_samples: u64,
+    lag_sum: u64,
+    max_lag: u64,
+    violations: u64,
+}
+
+/// Replay `stream` through `service` while `cfg.readers` query tasks on
+/// `pool` hammer the published snapshots. Returns the measured report.
+///
+/// Use a pool distinct from the session's ParIMCE pool — reader loops
+/// occupy workers for the whole run.
+pub fn serve_replay(
+    service: &mut CliqueService,
+    stream: &EdgeStream,
+    pool: &ThreadPool,
+    cfg: &DriverConfig,
+) -> DriverReport {
+    let batch_size = cfg.batch_size.max(1);
+    let n_batches = stream
+        .edges
+        .len()
+        .div_ceil(batch_size)
+        .min(cfg.max_batches.unwrap_or(usize::MAX));
+    let churned = cfg.churn_every.map(|k| n_batches / k.max(1)).unwrap_or(0);
+    let events = n_batches + 2 * churned;
+
+    let base_epoch = service.published_epoch();
+    let board = Arc::new(VisBoard::new(base_epoch, events));
+    let stop = Arc::new(AtomicBool::new(false));
+    let totals = Arc::new(Mutex::new(ReaderTotals::default()));
+    let handle = service.handle();
+    let t0 = Instant::now();
+
+    let mut report = DriverReport::default();
+
+    pool.scope(|s| {
+        for r in 0..cfg.readers {
+            let reader = handle.reader();
+            let board = Arc::clone(&board);
+            let stop = Arc::clone(&stop);
+            let totals = Arc::clone(&totals);
+            let seed = cfg.seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let queries_per_round = cfg.queries_per_round.max(1);
+            s.spawn(move |_| {
+                let local = run_reader(reader, board, stop, seed, queries_per_round, t0);
+                let mut t = totals.lock().unwrap();
+                t.queries += local.queries;
+                t.lag_samples += local.lag_samples;
+                t.lag_sum += local.lag_sum;
+                t.max_lag = t.max_lag.max(local.max_lag);
+                t.violations += local.violations;
+            });
+        }
+
+        // --- the writer: one batch per epoch on this thread ---------------
+        let mut epoch = base_epoch;
+        for (i, batch) in stream.batches(batch_size).take(n_batches).enumerate() {
+            apply_update(service, batch, false, &mut report, &mut epoch, &board, t0);
+            report.edges_streamed += batch.len();
+            if let Some(k) = cfg.churn_every {
+                if (i + 1) % k.max(1) == 0 {
+                    // tear the batch back out, then re-serve it (net no-op)
+                    apply_update(service, batch, true, &mut report, &mut epoch, &board, t0);
+                    apply_update(service, batch, false, &mut report, &mut epoch, &board, t0);
+                }
+            }
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    report.wall_ns = t0.elapsed().as_nanos() as u64;
+    let final_snap = service.snapshot();
+    report.final_epoch = final_snap.epoch();
+    report.final_cliques = final_snap.count();
+    let t = totals.lock().unwrap();
+    report.queries = t.queries;
+    report.lag_samples = t.lag_samples;
+    report.lag_sum = t.lag_sum;
+    report.max_epoch_lag = t.max_lag;
+    report.consistency_violations = t.violations;
+    let (observed, mean_vis) = board.visibility();
+    report.epochs_observed = observed;
+    report.mean_visibility_ns = mean_vis;
+    report
+}
+
+/// One timed update event: apply (or remove) a batch, account for it,
+/// and stamp the publish time of the epoch it produced.
+fn apply_update(
+    svc: &mut CliqueService,
+    edges: &[Edge],
+    remove: bool,
+    report: &mut DriverReport,
+    epoch: &mut u64,
+    board: &VisBoard,
+    t0: Instant,
+) {
+    let tb = Instant::now();
+    if remove {
+        svc.remove_batch(edges);
+    } else {
+        svc.apply_batch(edges);
+    }
+    let ns = tb.elapsed().as_nanos() as u64;
+    // the observer publishes at the tail of apply/remove, so stamping
+    // right after return is within counter-update nanoseconds of the
+    // true publish instant; a reader beating the stamp reads as 0 delay
+    *epoch += 1;
+    board.mark_published(*epoch, t0.elapsed().as_nanos() as u64);
+    report.updates += 1;
+    report.total_update_ns += ns;
+    report.max_update_ns = report.max_update_ns.max(ns);
+}
+
+fn run_reader(
+    mut reader: super::SnapshotReader,
+    board: Arc<VisBoard>,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+    queries_per_round: usize,
+    t0: Instant,
+) -> ReaderTotals {
+    let mut rng = Rng::new(seed);
+    let mut local = ReaderTotals::default();
+    // do-while: every reader task completes at least one query round
+    // even if it is first scheduled after the writer finished
+    loop {
+        // staleness sampled *before* revalidating: how far did this
+        // reader's cache trail the writer since the last round?
+        let lag = reader.staleness();
+        local.lag_samples += 1;
+        local.lag_sum += lag;
+        local.max_lag = local.max_lag.max(lag);
+
+        let snap = Arc::clone(reader.current());
+        board.mark_seen(snap.epoch(), t0.elapsed().as_nanos() as u64);
+        let n = snap.n().max(1) as u64;
+        for _ in 0..queries_per_round {
+            match rng.gen_range(6) {
+                0 => {
+                    let v = rng.gen_range(n) as Vertex;
+                    std::hint::black_box(snap.cliques_containing(v).len());
+                }
+                1 => {
+                    let u = rng.gen_range(n) as Vertex;
+                    let v = rng.gen_range(n) as Vertex;
+                    std::hint::black_box(snap.cliques_containing_all(&[u, v]).len());
+                }
+                2 => {
+                    std::hint::black_box(snap.top_k_largest(4).len());
+                }
+                3 => {
+                    std::hint::black_box(snap.count());
+                }
+                4 => {
+                    // self-check: a clique served by this snapshot must be
+                    // maximal in this same snapshot (intra-snapshot index
+                    // integrity; the cross-epoch isolation proof lives in
+                    // tests/service_consistency.rs)
+                    let v = rng.gen_range(n) as Vertex;
+                    if let Some(&id) = snap.ids_containing(v).first() {
+                        let c = snap.clique(id).expect("live posting id");
+                        if !snap.is_maximal_clique(c) {
+                            local.violations += 1;
+                        }
+                    }
+                }
+                _ => {
+                    std::hint::black_box(snap.size_histogram().count());
+                }
+            }
+            local.queries += 1;
+        }
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+    local
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+    use crate::session::dynamic::DynAlgo;
+
+    #[test]
+    fn driver_replays_and_serves_consistently() {
+        let g = generators::gnp(14, 0.4, 33);
+        let stream = EdgeStream::permuted(&g, 8);
+        let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+        let pool = ThreadPool::new(2);
+        let cfg = DriverConfig {
+            batch_size: 5,
+            readers: 2,
+            queries_per_round: 4,
+            churn_every: Some(3),
+            seed: 7,
+            max_batches: None,
+        };
+        let report = serve_replay(&mut svc, &stream, &pool, &cfg);
+
+        let n_batches = stream.edges.len().div_ceil(5);
+        assert_eq!(report.updates, n_batches + 2 * (n_batches / 3));
+        assert_eq!(report.final_epoch, report.updates as u64);
+        assert_eq!(report.edges_streamed, stream.edges.len());
+        assert_eq!(report.consistency_violations, 0);
+        assert!(report.queries > 0, "readers must have run");
+        assert!(report.lag_samples > 0);
+
+        // churn is a net no-op: final state equals the full graph's C(G)
+        let want = oracle::maximal_cliques(&g);
+        let snap = svc.snapshot();
+        snap.validate().unwrap();
+        assert_eq!(report.final_cliques, want.len());
+        assert_eq!(snap.canonical_cliques(), want);
+        let line = report.summary();
+        assert!(line.contains("violations 0"), "{line}");
+    }
+
+    #[test]
+    fn max_batches_caps_the_replay() {
+        let g = generators::gnp(12, 0.4, 1);
+        let stream = EdgeStream::permuted(&g, 2);
+        let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+        let pool = ThreadPool::new(1);
+        let cfg = DriverConfig {
+            batch_size: 4,
+            max_batches: Some(3),
+            readers: 1,
+            queries_per_round: 2,
+            churn_every: None,
+            seed: 1,
+        };
+        let report = serve_replay(&mut svc, &stream, &pool, &cfg);
+        assert_eq!(report.updates, 3);
+        assert_eq!(report.final_epoch, 3);
+        assert_eq!(report.edges_streamed, 12.min(stream.edges.len()));
+    }
+}

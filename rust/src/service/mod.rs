@@ -1,0 +1,335 @@
+//! CliqueService: the epoch-snapshotted query/serving layer over the
+//! dynamic clique set.
+//!
+//! The dynamic algorithms (§5) keep C(G) live under edge batches; this
+//! module makes that maintained set *servable*: a writer applies batches
+//! through the wrapped [`DynamicSession`] while any number of readers
+//! answer queries against immutable epoch snapshots — snapshot isolation
+//! by construction, no reader ever observes a partially-applied batch.
+//!
+//! * [`store`] — interned clique storage (stable ids) + the vertex →
+//!   clique-ids inverted index, maintained incrementally from each
+//!   batch's (Λⁿᵉʷ, Λᵈᵉˡ) change set.
+//! * [`snapshot`] — the immutable [`CliqueSnapshot`] query surface,
+//!   published through [`SnapshotCell`] / cached [`SnapshotReader`]s
+//!   (one atomic load on the steady-state read path).
+//! * [`driver`] — replays a mixed update/query workload on the
+//!   coordinator pool and reports query throughput, update latency and
+//!   epoch lag (`parmce serve-replay`).
+//!
+//! ```
+//! use parmce::service::CliqueService;
+//! use parmce::session::DynAlgo;
+//!
+//! let mut svc = CliqueService::from_empty(5, DynAlgo::Imce);
+//! svc.apply_batch(&[(0, 1), (1, 2), (0, 2), (2, 3)]);
+//! let count = svc.handle().count();
+//! assert_eq!(count.epoch, 1);
+//! assert_eq!(count.value, 3); // {0,1,2}, {2,3}, {4}
+//! assert!(svc.handle().is_maximal_clique(&[0, 1, 2]).value);
+//! ```
+
+pub mod driver;
+pub mod snapshot;
+mod store;
+
+use std::sync::{Arc, Mutex};
+
+use crate::dynamic::stream::{BatchRecord, EdgeStream};
+use crate::dynamic::BatchResult;
+use crate::graph::csr::CsrGraph;
+use crate::graph::{Edge, Vertex};
+use crate::mce::sink::SizeHistogram;
+use crate::session::dynamic::{BatchEvent, BatchObserver, DynAlgo, DynamicSession};
+
+pub use driver::{serve_replay, DriverConfig, DriverReport};
+pub use snapshot::{CliqueId, CliqueSnapshot, SnapshotCell, SnapshotReader};
+
+use store::CliqueStore;
+
+/// A query answer stamped with the epoch it was computed at.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tagged<T> {
+    /// Batch boundary the answer is consistent with.
+    pub epoch: u64,
+    pub value: T,
+}
+
+/// Shared between the service (writer) and every [`ServiceHandle`].
+struct ServiceShared {
+    store: Mutex<CliqueStore>,
+    cell: Arc<SnapshotCell>,
+}
+
+impl ServiceShared {
+    /// The publish-on-batch observer body: fold the change set into the
+    /// index, freeze, publish. Runs on the writer thread inside
+    /// `apply_batch`/`remove_batch`, so "batch applied" and "epoch
+    /// visible" are one step.
+    fn on_batch(&self, result: &BatchResult) {
+        let mut store = self.store.lock().unwrap();
+        store.apply(result);
+        self.cell.publish(Arc::new(store.freeze()));
+    }
+}
+
+/// The serving layer: one writer ([`apply_batch`](Self::apply_batch) /
+/// [`remove_batch`](Self::remove_batch) / [`replay`](Self::replay)),
+/// any number of concurrent readers through [`handle`](Self::handle).
+pub struct CliqueService {
+    session: DynamicSession,
+    shared: Arc<ServiceShared>,
+}
+
+impl CliqueService {
+    /// Wrap an existing session. The current registry contents become
+    /// the epoch-0 snapshot; every subsequent batch publishes the next
+    /// epoch (epochs count batches *since wrapping*).
+    pub fn wrap(mut session: DynamicSession) -> CliqueService {
+        let store = CliqueStore::from_registry(session.graph().n(), session.registry(), 0);
+        let cell = Arc::new(SnapshotCell::new(Arc::new(store.freeze())));
+        let shared = Arc::new(ServiceShared {
+            store: Mutex::new(store),
+            cell,
+        });
+        let hook = Arc::clone(&shared);
+        let observer: BatchObserver =
+            Arc::new(move |ev: &BatchEvent<'_>| hook.on_batch(ev.result));
+        session.set_batch_observer(observer);
+        CliqueService { session, shared }
+    }
+
+    /// Serve the edgeless graph on `n` vertices (epoch 0 = singletons).
+    pub fn from_empty(n: usize, algo: DynAlgo) -> CliqueService {
+        Self::wrap(DynamicSession::from_empty(n, algo))
+    }
+
+    /// Serve an existing static graph (C(G) bootstrapped by the session,
+    /// in parallel when its thread count exceeds 1).
+    pub fn from_graph(g: &CsrGraph, algo: DynAlgo) -> CliqueService {
+        Self::wrap(DynamicSession::from_graph(g, algo))
+    }
+
+    pub fn session(&self) -> &DynamicSession {
+        &self.session
+    }
+
+    /// Unwrap, detaching the publish hook.
+    pub fn into_session(mut self) -> DynamicSession {
+        self.session.clear_batch_observer();
+        self.session
+    }
+
+    /// Apply one insertion batch; the new epoch is published before this
+    /// returns.
+    pub fn apply_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        self.session.apply_batch(edges)
+    }
+
+    /// Apply one removal batch (§5.3); publishes likewise.
+    pub fn remove_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        self.session.remove_batch(edges)
+    }
+
+    /// Replay a stream batch-by-batch, publishing one epoch per batch.
+    pub fn replay(
+        &mut self,
+        stream: &EdgeStream,
+        batch_size: usize,
+        max_batches: Option<usize>,
+    ) -> Vec<BatchRecord> {
+        self.session.replay(stream, batch_size, max_batches)
+    }
+
+    /// A cloneable, `Send + Sync` read handle for query threads.
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// The currently published snapshot.
+    pub fn snapshot(&self) -> Arc<CliqueSnapshot> {
+        self.shared.cell.load()
+    }
+
+    pub fn published_epoch(&self) -> u64 {
+        self.shared.cell.published_epoch()
+    }
+
+    /// From-scratch rebuild of the snapshot at the current epoch — the
+    /// verification twin of the incrementally maintained index (tests,
+    /// `validate`-style audits). Ids are freshly assigned, so compare
+    /// *contents* ([`CliqueSnapshot::canonical_cliques`], postings per
+    /// vertex), not ids.
+    pub fn rebuilt_snapshot(&self) -> CliqueSnapshot {
+        CliqueStore::from_registry(
+            self.session.graph().n(),
+            self.session.registry(),
+            self.published_epoch(),
+        )
+        .freeze()
+    }
+}
+
+/// Cheap cloneable read-side handle (no access to the writer).
+#[derive(Clone)]
+pub struct ServiceHandle {
+    shared: Arc<ServiceShared>,
+}
+
+impl ServiceHandle {
+    /// A caching [`SnapshotReader`] — the hot-path access for query
+    /// loops (one atomic load per revalidation).
+    pub fn reader(&self) -> SnapshotReader {
+        SnapshotReader::new(&self.shared.cell)
+    }
+
+    /// The currently published snapshot (for one-shot queries).
+    pub fn snapshot(&self) -> Arc<CliqueSnapshot> {
+        self.shared.cell.load()
+    }
+
+    pub fn published_epoch(&self) -> u64 {
+        self.shared.cell.published_epoch()
+    }
+
+    /// |C(G)| now.
+    pub fn count(&self) -> Tagged<usize> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.count(),
+        }
+    }
+
+    /// The maximal cliques containing `v`.
+    pub fn cliques_containing(&self, v: Vertex) -> Tagged<Vec<Arc<[Vertex]>>> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.cliques_containing(v),
+        }
+    }
+
+    /// The maximal cliques containing every vertex in `verts`.
+    pub fn cliques_containing_all(&self, verts: &[Vertex]) -> Tagged<Vec<Arc<[Vertex]>>> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.cliques_containing_all(verts),
+        }
+    }
+
+    /// The `k` largest maximal cliques.
+    pub fn top_k_largest(&self, k: usize) -> Tagged<Vec<Arc<[Vertex]>>> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.top_k_largest(k),
+        }
+    }
+
+    /// Clique-size histogram of the current C(G).
+    pub fn size_histogram(&self) -> Tagged<SizeHistogram> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.size_histogram(),
+        }
+    }
+
+    /// Is `verts` exactly a maximal clique right now?
+    pub fn is_maximal_clique(&self, verts: &[Vertex]) -> Tagged<bool> {
+        let s = self.snapshot();
+        Tagged {
+            epoch: s.epoch(),
+            value: s.is_maximal_clique(verts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::mce::oracle;
+
+    #[test]
+    fn epochs_advance_per_batch_and_tag_answers() {
+        let mut svc = CliqueService::from_empty(6, DynAlgo::Imce);
+        assert_eq!(svc.published_epoch(), 0);
+        assert_eq!(svc.handle().count().value, 6, "singletons at epoch 0");
+
+        svc.apply_batch(&[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(svc.published_epoch(), 1);
+        let t = svc.handle().cliques_containing(1);
+        assert_eq!(t.epoch, 1);
+        assert_eq!(t.value.len(), 1);
+        assert_eq!(t.value[0].as_ref(), &[0, 1, 2]);
+
+        svc.remove_batch(&[(0, 1)]);
+        assert_eq!(svc.published_epoch(), 2);
+        assert!(!svc.handle().is_maximal_clique(&[0, 1, 2]).value);
+    }
+
+    #[test]
+    fn replay_publishes_every_batch_and_matches_oracle() {
+        let g = generators::gnp(16, 0.4, 21);
+        let stream = EdgeStream::permuted(&g, 4);
+        let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+        let records = svc.replay(&stream, 9, None);
+        assert_eq!(svc.published_epoch(), records.len() as u64);
+
+        let snap = svc.snapshot();
+        snap.validate().unwrap();
+        let want = oracle::maximal_cliques(&g);
+        assert_eq!(snap.canonical_cliques(), want);
+
+        // the incrementally maintained index equals a from-scratch rebuild
+        let rebuilt = svc.rebuilt_snapshot();
+        rebuilt.validate().unwrap();
+        assert_eq!(snap.canonical_cliques(), rebuilt.canonical_cliques());
+        for v in 0..g.n() as Vertex {
+            let mut a: Vec<Vec<Vertex>> = snap
+                .cliques_containing(v)
+                .iter()
+                .map(|c| c.to_vec())
+                .collect();
+            let mut b: Vec<Vec<Vertex>> = rebuilt
+                .cliques_containing(v)
+                .iter()
+                .map(|c| c.to_vec())
+                .collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "postings diverge at vertex {v}");
+        }
+    }
+
+    #[test]
+    fn wrap_serves_a_bootstrapped_graph_and_parallel_session() {
+        let g = generators::planted_cliques(30, 0.1, 3, 4, 5, 9);
+        let svc = CliqueService::wrap(DynamicSession::from_graph_threads(&g, DynAlgo::ParImce, 3));
+        let snap = svc.snapshot();
+        snap.validate().unwrap();
+        assert_eq!(snap.epoch(), 0);
+        assert_eq!(snap.canonical_cliques(), oracle::maximal_cliques(&g));
+        let top = svc.handle().top_k_largest(1).value;
+        assert!(!top.is_empty());
+        assert!(svc.handle().is_maximal_clique(&top[0]).value);
+    }
+
+    #[test]
+    fn old_snapshots_survive_later_epochs() {
+        let mut svc = CliqueService::from_empty(5, DynAlgo::Imce);
+        svc.apply_batch(&[(0, 1), (1, 2)]);
+        let old = svc.snapshot();
+        svc.apply_batch(&[(0, 2), (3, 4)]);
+        // the old Arc still answers at its own epoch
+        assert_eq!(old.epoch(), 1);
+        assert!(old.is_maximal_clique(&[0, 1]));
+        assert!(!svc.snapshot().is_maximal_clique(&[0, 1]));
+        assert_eq!(svc.snapshot().epoch(), 2);
+    }
+}

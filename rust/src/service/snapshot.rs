@@ -1,0 +1,381 @@
+//! Immutable epoch snapshots of C(G) and the publish/subscribe point.
+//!
+//! A [`CliqueSnapshot`] is a frozen view of the maximal clique set at one
+//! batch boundary: interned clique storage (one `Arc<[Vertex]>` per
+//! clique, shared across epochs), the vertex → clique-id inverted index,
+//! a size-ordered id list and size histogram bins.  Everything a query
+//! needs is inside the snapshot, so readers never touch writer state —
+//! a query answered at epoch *e* is consistent with exactly the graph
+//! after batch *e*, never a partially-applied batch.
+//!
+//! [`SnapshotCell`] is the single writer → many readers handoff:
+//! `publish` swaps the current `Arc` under a mutex and bumps an atomic
+//! version; [`SnapshotReader`] caches the last `Arc` it fetched and
+//! revalidates with one atomic load, so the steady-state read hot path
+//! (queries between publishes) takes no lock at all.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::Vertex;
+use crate::mce::sink::SizeHistogram;
+use crate::util::vset;
+
+/// Stable identifier of an interned clique. Ids are assigned once, never
+/// reused; a subsumed clique's id is retired with it.
+pub type CliqueId = u32;
+
+/// Frozen view of C(G) at one epoch (batch boundary). Cheap to clone at
+/// the `Arc` level; all queries are lock-free and allocation-light.
+pub struct CliqueSnapshot {
+    pub(crate) epoch: u64,
+    /// id-indexed interned cliques (canonical member order); `None` =
+    /// retired before this epoch.
+    pub(crate) cliques: Vec<Option<Arc<[Vertex]>>>,
+    /// vertex-indexed posting lists of live clique ids, sorted ascending.
+    pub(crate) index: Vec<Arc<Vec<CliqueId>>>,
+    /// live ids ordered by (size descending, id ascending).
+    pub(crate) by_size: Arc<Vec<CliqueId>>,
+    /// `size_bins[s]` = live cliques with exactly `s` members.
+    pub(crate) size_bins: Arc<Vec<u64>>,
+    pub(crate) live: usize,
+}
+
+impl CliqueSnapshot {
+    /// The batch boundary this snapshot reflects (0 = bootstrap state).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// |C(G)| at this epoch.
+    pub fn count(&self) -> usize {
+        self.live
+    }
+
+    /// Number of vertices the index covers.
+    pub fn n(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Members of clique `id`, if it is live at this epoch.
+    pub fn clique(&self, id: CliqueId) -> Option<&[Vertex]> {
+        self.cliques.get(id as usize).and_then(|c| c.as_deref())
+    }
+
+    /// Ids of the live maximal cliques containing `v` (sorted ascending);
+    /// empty for out-of-range vertices.
+    pub fn ids_containing(&self, v: Vertex) -> &[CliqueId] {
+        self.index.get(v as usize).map(|l| l.as_slice()).unwrap_or(&[])
+    }
+
+    /// The maximal cliques containing `v`.
+    pub fn cliques_containing(&self, v: Vertex) -> Vec<Arc<[Vertex]>> {
+        self.ids_containing(v).iter().map(|&id| self.intern(id)).collect()
+    }
+
+    /// Ids of the live maximal cliques containing *all* of `verts`
+    /// (posting-list intersection, smallest list first). Empty input or
+    /// any out-of-range vertex yields the empty answer.
+    pub fn ids_containing_all(&self, verts: &[Vertex]) -> Vec<CliqueId> {
+        let Some((&first, rest)) = verts.split_first() else {
+            return Vec::new();
+        };
+        // start from the shortest posting list
+        let mut seed = first;
+        for &v in rest {
+            if self.ids_containing(v).len() < self.ids_containing(seed).len() {
+                seed = v;
+            }
+        }
+        let mut acc = self.ids_containing(seed).to_vec();
+        for &v in verts {
+            if v == seed {
+                continue;
+            }
+            if acc.is_empty() {
+                break;
+            }
+            acc = vset::intersect(&acc, self.ids_containing(v));
+        }
+        acc
+    }
+
+    /// The maximal cliques containing all of `verts`.
+    pub fn cliques_containing_all(&self, verts: &[Vertex]) -> Vec<Arc<[Vertex]>> {
+        self.ids_containing_all(verts).iter().map(|&id| self.intern(id)).collect()
+    }
+
+    /// The `k` largest maximal cliques (size descending, id ascending
+    /// among ties); fewer if |C(G)| < k.
+    pub fn top_k_largest(&self, k: usize) -> Vec<Arc<[Vertex]>> {
+        self.by_size.iter().take(k).map(|&id| self.intern(id)).collect()
+    }
+
+    /// Largest clique size at this epoch (0 when C(G) is empty).
+    pub fn max_size(&self) -> usize {
+        self.by_size.first().map(|&id| self.intern(id).len()).unwrap_or(0)
+    }
+
+    /// Clique-size histogram at this epoch (the Figure 5 shape, served
+    /// from the maintained bins — no enumeration).
+    pub fn size_histogram(&self) -> SizeHistogram {
+        let hist = SizeHistogram::new(self.size_bins.len().saturating_sub(1).max(1));
+        for (size, &n) in self.size_bins.iter().enumerate() {
+            hist.record_many(size, n);
+        }
+        hist
+    }
+
+    /// True iff the vertex set `verts` (any order; duplicates make it a
+    /// non-set, hence `false`) is exactly a maximal clique of the
+    /// current graph.
+    pub fn is_maximal_clique(&self, verts: &[Vertex]) -> bool {
+        if verts.is_empty() {
+            return false;
+        }
+        let mut sorted = verts.to_vec();
+        sorted.sort_unstable();
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            return false;
+        }
+        // a live clique containing every member and of equal size IS the set
+        self.ids_containing_all(&sorted)
+            .iter()
+            .any(|&id| self.clique(id).is_some_and(|c| c.len() == sorted.len()))
+    }
+
+    /// All live cliques in canonical order (each sorted; list sorted) —
+    /// the comparison form for tests and rebuild verification.
+    pub fn canonical_cliques(&self) -> Vec<Vec<Vertex>> {
+        let mut out: Vec<Vec<Vertex>> = self
+            .cliques
+            .iter()
+            .filter_map(|c| c.as_ref().map(|a| a.to_vec()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Full structural self-check (tests / debugging): index ↔ storage
+    /// agreement, posting-list order, by-size order, bin totals.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        let mut bins: Vec<u64> = Vec::new();
+        for (id, c) in self.cliques.iter().enumerate() {
+            let Some(c) = c else { continue };
+            live += 1;
+            if bins.len() <= c.len() {
+                bins.resize(c.len() + 1, 0);
+            }
+            bins[c.len()] += 1;
+            for &v in c.iter() {
+                let posting = self.ids_containing(v);
+                if posting.binary_search(&(id as CliqueId)).is_err() {
+                    return Err(format!("clique {id} missing from index[{v}]"));
+                }
+            }
+        }
+        if live != self.live {
+            return Err(format!("live count {} != stored {}", live, self.live));
+        }
+        for (v, posting) in self.index.iter().enumerate() {
+            if !posting.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("index[{v}] not sorted"));
+            }
+            for &id in posting.iter() {
+                match self.clique(id) {
+                    None => return Err(format!("index[{v}] holds retired id {id}")),
+                    Some(c) if c.binary_search(&(v as Vertex)).is_err() => {
+                        return Err(format!("index[{v}] holds non-member clique {id}"))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if self.by_size.len() != live {
+            return Err(format!(
+                "by_size len {} != live {live}",
+                self.by_size.len()
+            ));
+        }
+        for w in self.by_size.windows(2) {
+            let (a, b) = (self.intern(w[0]).len(), self.intern(w[1]).len());
+            if a < b || (a == b && w[0] >= w[1]) {
+                return Err(format!("by_size order violated at ids {} {}", w[0], w[1]));
+            }
+        }
+        let mut stored = self.size_bins.as_slice().to_vec();
+        while stored.last() == Some(&0) {
+            stored.pop();
+        }
+        while bins.last() == Some(&0) {
+            bins.pop();
+        }
+        if stored != bins {
+            return Err(format!("size bins {stored:?} != recomputed {bins:?}"));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn intern(&self, id: CliqueId) -> Arc<[Vertex]> {
+        Arc::clone(self.cliques[id as usize].as_ref().expect("posting id must be live"))
+    }
+}
+
+/// Single-writer, many-reader snapshot handoff (copy-on-publish RCU).
+pub struct SnapshotCell {
+    /// epoch of `current`, published with Release so a reader that sees
+    /// the new version also sees the new snapshot through `load`.
+    version: AtomicU64,
+    current: Mutex<Arc<CliqueSnapshot>>,
+}
+
+impl SnapshotCell {
+    pub fn new(initial: Arc<CliqueSnapshot>) -> Self {
+        SnapshotCell {
+            version: AtomicU64::new(initial.epoch()),
+            current: Mutex::new(initial),
+        }
+    }
+
+    /// Make `snap` the current snapshot. Writer-only; epochs must be
+    /// monotone.
+    pub fn publish(&self, snap: Arc<CliqueSnapshot>) {
+        let mut cur = self.current.lock().unwrap();
+        debug_assert!(snap.epoch() >= cur.epoch(), "epochs must not go back");
+        self.version.store(snap.epoch(), Ordering::Release);
+        *cur = snap;
+    }
+
+    /// Epoch of the currently published snapshot (one atomic load).
+    pub fn published_epoch(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Fetch the current snapshot (brief mutex hold: one `Arc` clone).
+    pub fn load(&self) -> Arc<CliqueSnapshot> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+}
+
+/// Per-reader cached snapshot handle: [`current`](Self::current) costs
+/// one atomic load while no new epoch has been published, and one brief
+/// `Arc` clone under the cell mutex when one has — the query hot path
+/// never holds a lock while it reads the index.
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    cached: Arc<CliqueSnapshot>,
+}
+
+impl SnapshotReader {
+    /// A caching reader handle bound to `cell`.
+    pub fn new(cell: &Arc<SnapshotCell>) -> SnapshotReader {
+        SnapshotReader {
+            cached: cell.load(),
+            cell: Arc::clone(cell),
+        }
+    }
+
+    /// The freshest published snapshot (revalidates the cache).
+    pub fn current(&mut self) -> &Arc<CliqueSnapshot> {
+        if self.cell.published_epoch() != self.cached.epoch() {
+            self.cached = self.cell.load();
+        }
+        &self.cached
+    }
+
+    /// The cached snapshot without revalidation (possibly stale).
+    pub fn cached(&self) -> &Arc<CliqueSnapshot> {
+        &self.cached
+    }
+
+    /// How many epochs the cache currently lags the published snapshot.
+    pub fn staleness(&self) -> u64 {
+        self.cell
+            .published_epoch()
+            .saturating_sub(self.cached.epoch())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_snapshot() -> CliqueSnapshot {
+        // cliques: 0 = {0,1,2}, 1 = {1,3} (live), 2 retired
+        let c0: Arc<[Vertex]> = vec![0, 1, 2].into();
+        let c1: Arc<[Vertex]> = vec![1, 3].into();
+        CliqueSnapshot {
+            epoch: 7,
+            cliques: vec![Some(c0), Some(c1), None],
+            index: vec![
+                Arc::new(vec![0]),
+                Arc::new(vec![0, 1]),
+                Arc::new(vec![0]),
+                Arc::new(vec![1]),
+            ],
+            by_size: Arc::new(vec![0, 1]),
+            size_bins: Arc::new(vec![0, 0, 1, 1]),
+            live: 2,
+        }
+    }
+
+    #[test]
+    fn snapshot_queries_answer_from_frozen_state() {
+        let s = tiny_snapshot();
+        assert!(s.validate().is_ok(), "{:?}", s.validate());
+        assert_eq!(s.epoch(), 7);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.ids_containing(1), &[0, 1]);
+        assert_eq!(s.ids_containing(9), &[] as &[CliqueId]);
+        assert_eq!(s.ids_containing_all(&[1, 3]), vec![1]);
+        assert_eq!(s.ids_containing_all(&[0, 3]), Vec::<CliqueId>::new());
+        assert_eq!(s.ids_containing_all(&[]), Vec::<CliqueId>::new());
+        assert_eq!(s.top_k_largest(1)[0].as_ref(), &[0, 1, 2]);
+        assert_eq!(s.top_k_largest(10).len(), 2);
+        assert_eq!(s.max_size(), 3);
+        assert!(s.is_maximal_clique(&[2, 0, 1]));
+        assert!(!s.is_maximal_clique(&[0, 1]), "strict subset is not maximal");
+        assert!(!s.is_maximal_clique(&[0, 3]));
+        assert!(!s.is_maximal_clique(&[]));
+        assert!(!s.is_maximal_clique(&[1, 1]), "duplicates are not a set");
+        let h = s.size_histogram();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.nonzero_bins(), vec![(2, 1), (3, 1)]);
+        assert_eq!(
+            s.canonical_cliques(),
+            vec![vec![0, 1, 2], vec![1, 3]]
+        );
+    }
+
+    #[test]
+    fn validate_catches_inconsistencies() {
+        let mut s = tiny_snapshot();
+        s.live = 3;
+        assert!(s.validate().is_err());
+        let mut s = tiny_snapshot();
+        s.index[0] = Arc::new(vec![0, 2]); // retired id in posting
+        assert!(s.validate().is_err());
+        let mut s = tiny_snapshot();
+        s.by_size = Arc::new(vec![1, 0]); // size order violated
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn reader_cache_revalidates_on_publish() {
+        let cell = Arc::new(SnapshotCell::new(Arc::new(tiny_snapshot())));
+        let mut reader = SnapshotReader::new(&cell);
+        assert_eq!(reader.current().epoch(), 7);
+        assert_eq!(reader.staleness(), 0);
+
+        let mut next = tiny_snapshot();
+        next.epoch = 8;
+        cell.publish(Arc::new(next));
+        assert_eq!(reader.cached().epoch(), 7, "cache is stale until touched");
+        assert_eq!(reader.staleness(), 1);
+        assert_eq!(reader.current().epoch(), 8);
+        assert_eq!(reader.staleness(), 0);
+        assert_eq!(cell.published_epoch(), 8);
+    }
+}

@@ -1,0 +1,224 @@
+//! The writer-side clique store: interned storage + incrementally
+//! maintained inverted index, frozen into [`CliqueSnapshot`]s.
+//!
+//! Every clique is interned once (`Arc<[Vertex]>`, canonical member
+//! order) and addressed by a stable [`CliqueId`]; a batch's change set
+//! (Λⁿᵉʷ, Λᵈᵉˡ) updates only the touched posting lists, the size order
+//! and the size bins — never a rebuild.  `freeze` then publishes by
+//! copying at the pointer level: untouched posting lists, clique data,
+//! the size order and the bins are all shared with previous snapshots
+//! (`Arc` copy-on-write via `make_mut`), so publish cost is pointer
+//! clones, not clique bytes.  Ids are never reused, so the id-indexed
+//! slot table grows with *total interned* cliques over the service's
+//! lifetime (retired slots stay `None`) — the price of id stability
+//! under remove/re-insert churn; live-set queries are unaffected.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dynamic::registry::CliqueRegistry;
+use crate::dynamic::BatchResult;
+use crate::graph::Vertex;
+use crate::util::chashmap::FxBuildHasher;
+
+use super::snapshot::{CliqueId, CliqueSnapshot};
+
+pub(crate) struct CliqueStore {
+    epoch: u64,
+    cliques: Vec<Option<Arc<[Vertex]>>>,
+    /// canonical members → id, for Λᵈᵉˡ retirement (writer-private).
+    by_key: HashMap<Arc<[Vertex]>, CliqueId, FxBuildHasher>,
+    index: Vec<Arc<Vec<CliqueId>>>,
+    by_size: Arc<Vec<CliqueId>>,
+    size_bins: Arc<Vec<u64>>,
+    live: usize,
+}
+
+impl CliqueStore {
+    pub fn new(n: usize, epoch: u64) -> Self {
+        CliqueStore {
+            epoch,
+            cliques: Vec::new(),
+            by_key: HashMap::default(),
+            index: (0..n).map(|_| Arc::new(Vec::new())).collect(),
+            by_size: Arc::new(Vec::new()),
+            size_bins: Arc::new(Vec::new()),
+            live: 0,
+        }
+    }
+
+    /// Build from the live registry contents (bootstrap or from-scratch
+    /// rebuild verification).
+    pub fn from_registry(n: usize, registry: &CliqueRegistry, epoch: u64) -> Self {
+        let mut store = CliqueStore::new(n, epoch);
+        // deterministic id assignment in (size desc, canonical) order:
+        // every `add` then lands at the END of `by_size` (fresh ids are
+        // maximal and sizes are non-increasing), so bootstrap stays
+        // O(C log C) instead of the O(C²) a lexicographic insertion
+        // order would cost in Vec::insert memmoves
+        let mut all: Vec<Vec<Vertex>> = Vec::with_capacity(registry.len());
+        registry.for_each(|c| all.push(c.to_vec()));
+        all.sort_unstable_by(|a, b| b.len().cmp(&a.len()).then_with(|| a.cmp(b)));
+        for c in &all {
+            store.add(c);
+        }
+        store
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Apply one batch's change set and advance the epoch: retire Λᵈᵉˡ,
+    /// intern Λⁿᵉʷ. Both lists are canonical and disjoint (the IMCE
+    /// invariants), so order within the batch does not matter.
+    pub fn apply(&mut self, result: &BatchResult) {
+        for c in &result.subsumed {
+            self.retire(c);
+        }
+        for c in &result.new_cliques {
+            self.add(c);
+        }
+        self.epoch += 1;
+    }
+
+    /// Freeze the current state into an immutable snapshot.
+    pub fn freeze(&self) -> CliqueSnapshot {
+        CliqueSnapshot {
+            epoch: self.epoch,
+            cliques: self.cliques.clone(),
+            index: self.index.clone(),
+            by_size: Arc::clone(&self.by_size),
+            size_bins: Arc::clone(&self.size_bins),
+            live: self.live,
+        }
+    }
+
+    /// Intern a new clique (canonical members) under a fresh stable id.
+    fn add(&mut self, c: &[Vertex]) {
+        debug_assert!(c.windows(2).all(|w| w[0] < w[1]), "clique not canonical");
+        // ids are never reused, so the space is total-interned — fail
+        // loudly rather than wrap and corrupt the index
+        let id = CliqueId::try_from(self.cliques.len()).expect("CliqueId space exhausted");
+        let interned: Arc<[Vertex]> = c.into();
+        let prev = self.by_key.insert(Arc::clone(&interned), id);
+        debug_assert!(prev.is_none(), "clique {c:?} interned twice");
+        self.cliques.push(Some(interned));
+        for &v in c {
+            if self.index.len() <= v as usize {
+                self.index.resize_with(v as usize + 1, || Arc::new(Vec::new()));
+            }
+            // fresh ids are maximal, so push preserves the sort
+            Arc::make_mut(&mut self.index[v as usize]).push(id);
+        }
+        let pos = self.size_insert_pos(c.len(), id);
+        Arc::make_mut(&mut self.by_size).insert(pos, id);
+        let bins = Arc::make_mut(&mut self.size_bins);
+        if bins.len() <= c.len() {
+            bins.resize(c.len() + 1, 0);
+        }
+        bins[c.len()] += 1;
+        self.live += 1;
+    }
+
+    /// Retire a subsumed clique; its id is never reused.
+    fn retire(&mut self, c: &[Vertex]) {
+        let Some(id) = self.by_key.remove(c) else {
+            debug_assert!(false, "retiring unknown clique {c:?}");
+            return;
+        };
+        let pos = self.size_insert_pos(c.len(), id);
+        debug_assert_eq!(self.by_size.get(pos), Some(&id), "by_size out of sync");
+        Arc::make_mut(&mut self.by_size).remove(pos);
+        for &v in c {
+            let list = Arc::make_mut(&mut self.index[v as usize]);
+            match list.binary_search(&id) {
+                Ok(p) => {
+                    list.remove(p);
+                }
+                Err(_) => debug_assert!(false, "index[{v}] missing id {id}"),
+            }
+        }
+        self.cliques[id as usize] = None;
+        let bins = Arc::make_mut(&mut self.size_bins);
+        debug_assert!(bins[c.len()] > 0);
+        bins[c.len()] -= 1;
+        self.live -= 1;
+    }
+
+    /// Position of (size `len`, `id`) in the (size desc, id asc) order —
+    /// the insertion point for a new id, the exact slot for a live one.
+    fn size_insert_pos(&self, len: usize, id: CliqueId) -> usize {
+        self.by_size.partition_point(|&other| {
+            let other_len = self.cliques[other as usize].as_ref().map_or(0, |c| c.len());
+            other_len > len || (other_len == len && other < id)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::registry::CliqueRegistry;
+    use crate::graph::generators;
+
+    fn batch(new: &[&[Vertex]], gone: &[&[Vertex]]) -> BatchResult {
+        BatchResult {
+            new_cliques: new.iter().map(|c| c.to_vec()).collect(),
+            subsumed: gone.iter().map(|c| c.to_vec()).collect(),
+        }
+    }
+
+    #[test]
+    fn incremental_deltas_keep_the_index_exact() {
+        let mut s = CliqueStore::new(5, 0);
+        s.apply(&batch(&[&[0, 1, 2], &[2, 3]], &[]));
+        assert_eq!(s.epoch(), 1);
+        let snap = s.freeze();
+        snap.validate().unwrap();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.ids_containing(2).len(), 2);
+
+        // {2,3} absorbed into {2,3,4}; {0,1,2} stays
+        s.apply(&batch(&[&[2, 3, 4]], &[&[2, 3]]));
+        let snap = s.freeze();
+        snap.validate().unwrap();
+        assert_eq!(snap.epoch(), 2);
+        assert_eq!(
+            snap.canonical_cliques(),
+            vec![vec![0, 1, 2], vec![2, 3, 4]]
+        );
+        assert!(snap.is_maximal_clique(&[4, 2, 3]));
+        assert!(!snap.is_maximal_clique(&[2, 3]));
+    }
+
+    #[test]
+    fn frozen_snapshots_are_isolated_from_later_writes() {
+        let mut s = CliqueStore::new(4, 0);
+        s.apply(&batch(&[&[0, 1], &[1, 2, 3]], &[]));
+        let before = s.freeze();
+        s.apply(&batch(&[&[0, 1, 2]], &[&[0, 1]]));
+        let after = s.freeze();
+        // the old snapshot still answers from its own epoch
+        assert_eq!(before.epoch(), 1);
+        assert_eq!(before.count(), 2);
+        assert!(before.is_maximal_clique(&[0, 1]));
+        assert_eq!(after.epoch(), 2);
+        assert!(!after.is_maximal_clique(&[0, 1]));
+        assert!(after.is_maximal_clique(&[0, 1, 2]));
+        before.validate().unwrap();
+        after.validate().unwrap();
+    }
+
+    #[test]
+    fn from_registry_matches_registry_contents() {
+        let g = generators::gnp(18, 0.4, 2);
+        let reg = CliqueRegistry::from_graph(&g);
+        let want = crate::mce::oracle::maximal_cliques(&g);
+        let snap = CliqueStore::from_registry(g.n(), &reg, 5).freeze();
+        snap.validate().unwrap();
+        assert_eq!(snap.epoch(), 5);
+        assert_eq!(snap.canonical_cliques(), want);
+        assert_eq!(reg.len(), want.len(), "from_registry must not drain");
+    }
+}

@@ -7,6 +7,7 @@
 //! without hand-wiring pools or registries.  The decremental reduction
 //! (§5.3) rides along as [`DynamicSession::remove_batch`].
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;
@@ -35,7 +36,51 @@ impl DynAlgo {
             DynAlgo::ParImce => "ParIMCE",
         }
     }
+
+    pub fn parse(s: &str) -> Option<DynAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "imce" => Some(DynAlgo::Imce),
+            "parimce" | "par-imce" | "par_imce" => Some(DynAlgo::ParImce),
+            _ => None,
+        }
+    }
+
+    /// Default pool width: sequential engines get 1, ParIMCE gets 4.
+    pub fn default_threads(&self) -> usize {
+        match self {
+            DynAlgo::Imce => 1,
+            DynAlgo::ParImce => 4,
+        }
+    }
 }
+
+/// Which kind of mutation a [`BatchEvent`] reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    /// Edge insertions (IMCE / ParIMCE).
+    Insert,
+    /// Edge removals (§5.3 decremental reduction).
+    Remove,
+}
+
+/// One applied batch, as seen by a [`BatchObserver`]: the change set plus
+/// its position in the session's batch sequence.  `seq` equals
+/// [`DynamicSession::batches_applied`] at notification time, so an
+/// observer that publishes per-batch snapshots gets a dense epoch counter
+/// for free.
+pub struct BatchEvent<'a> {
+    pub kind: BatchKind,
+    /// 1-based batch sequence number within this session.
+    pub seq: usize,
+    pub result: &'a BatchResult,
+}
+
+/// Hook fired after *every* applied batch (insert or remove), including
+/// the ones [`DynamicSession::replay`] drives internally — the seam the
+/// [`crate::service`] layer uses to publish epoch snapshots the moment a
+/// batch lands.  Runs on the caller's thread, after the registry has
+/// advanced to the post-batch C(G).
+pub type BatchObserver = Arc<dyn Fn(&BatchEvent<'_>) + Send + Sync>;
 
 /// A dynamic-graph session: the graph, its maximal clique set C(G), and
 /// the chosen batch engine. Every mutation keeps the registry exact.
@@ -48,6 +93,7 @@ pub struct DynamicSession {
     batches_applied: usize,
     total_new: u64,
     total_subsumed: u64,
+    observer: Option<BatchObserver>,
 }
 
 impl DynamicSession {
@@ -56,39 +102,62 @@ impl DynamicSession {
     pub fn from_empty(n: usize, algo: DynAlgo) -> DynamicSession {
         let registry = CliqueRegistry::new();
         for v in 0..n as Vertex {
-            registry.insert(&[v]);
+            registry.insert_canonical(&[v]);
         }
         DynamicSession {
             graph: DynGraph::new(n),
             registry,
             algo,
-            threads: 4,
+            threads: algo.default_threads(),
             pool: None,
             batches_applied: 0,
             total_new: 0,
             total_subsumed: 0,
+            observer: None,
         }
     }
 
-    /// Start from an existing static graph; C(G) is bootstrapped with
-    /// sequential TTT.
+    /// Start from an existing static graph with the engine's default
+    /// thread count (1 for IMCE, 4 for ParIMCE); C(G) is bootstrapped
+    /// in parallel whenever more than one thread is configured.
     pub fn from_graph(g: &CsrGraph, algo: DynAlgo) -> DynamicSession {
+        Self::from_graph_threads(g, algo, algo.default_threads())
+    }
+
+    /// Start from an existing static graph with an explicit thread
+    /// count.  With `threads > 1` the pool spawns eagerly and C(G) is
+    /// bootstrapped with ParTTT straight into the sharded registry;
+    /// otherwise sequential TTT is used.
+    pub fn from_graph_threads(g: &CsrGraph, algo: DynAlgo, threads: usize) -> DynamicSession {
+        let threads = threads.max(1);
+        let (registry, pool) = if threads > 1 {
+            let pool = ThreadPool::new(threads);
+            let registry = CliqueRegistry::from_graph_parallel(g, &pool);
+            (registry, Some(pool))
+        } else {
+            (CliqueRegistry::from_graph(g), None)
+        };
         DynamicSession {
             graph: DynGraph::from_csr(g),
-            registry: CliqueRegistry::from_graph(g),
+            registry,
             algo,
-            threads: 4,
-            pool: None,
+            threads,
+            pool,
             batches_applied: 0,
             total_new: 0,
             total_subsumed: 0,
+            observer: None,
         }
     }
 
-    /// Worker threads for the ParIMCE pool (default 4; the pool spawns
-    /// lazily on the first parallel batch).
+    /// Worker threads for the ParIMCE pool (the pool spawns lazily on the
+    /// first parallel batch).  Dropping to a different count discards an
+    /// already-spawned pool so batches never run on a stale size.
     pub fn with_threads(mut self, threads: usize) -> DynamicSession {
         self.threads = threads.max(1);
+        if self.pool.as_ref().is_some_and(|p| p.num_threads() != self.threads) {
+            self.pool = None;
+        }
         self
     }
 
@@ -100,6 +169,26 @@ impl DynamicSession {
 
     pub fn algo(&self) -> DynAlgo {
         self.algo
+    }
+
+    /// Install the per-batch hook (replacing any previous one); see
+    /// [`BatchObserver`].
+    pub fn set_batch_observer(&mut self, observer: BatchObserver) {
+        self.observer = Some(observer);
+    }
+
+    pub fn clear_batch_observer(&mut self) {
+        self.observer = None;
+    }
+
+    fn notify(&self, kind: BatchKind, result: &BatchResult) {
+        if let Some(obs) = &self.observer {
+            obs(&BatchEvent {
+                kind,
+                seq: self.batches_applied,
+                result,
+            });
+        }
     }
 
     /// Apply one batch of edge insertions; returns the canonical change
@@ -124,6 +213,7 @@ impl DynamicSession {
         self.batches_applied += 1;
         self.total_new += result.new_cliques.len() as u64;
         self.total_subsumed += result.subsumed.len() as u64;
+        self.notify(BatchKind::Insert, &result);
         (result, timings)
     }
 
@@ -133,6 +223,7 @@ impl DynamicSession {
         self.batches_applied += 1;
         self.total_new += result.new_cliques.len() as u64;
         self.total_subsumed += result.subsumed.len() as u64;
+        self.notify(BatchKind::Remove, &result);
         result
     }
 
@@ -248,6 +339,66 @@ mod tests {
         assert_eq!(
             s.clique_count(),
             oracle::maximal_cliques(&s.csr()).len()
+        );
+    }
+
+    #[test]
+    fn parallel_bootstrap_matches_sequential_bootstrap() {
+        let g = generators::planted_cliques(36, 0.08, 3, 4, 6, 4);
+        let seq = DynamicSession::from_graph_threads(&g, DynAlgo::Imce, 1);
+        let par = DynamicSession::from_graph_threads(&g, DynAlgo::ParImce, 3);
+        assert_eq!(seq.clique_count(), par.clique_count());
+        let want = oracle::maximal_cliques(&g);
+        assert_eq!(par.clique_count(), want.len());
+        for c in &want {
+            assert!(par.registry().contains(c));
+        }
+    }
+
+    #[test]
+    fn observer_sees_every_batch_in_order() {
+        use std::sync::Mutex;
+        let target = generators::gnp(12, 0.5, 17);
+        let mut s = DynamicSession::from_empty(12, DynAlgo::Imce);
+        let log: Arc<Mutex<Vec<(BatchKind, usize, usize, usize)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&log);
+        s.set_batch_observer(Arc::new(move |ev: &BatchEvent<'_>| {
+            sink.lock().unwrap().push((
+                ev.kind,
+                ev.seq,
+                ev.result.new_cliques.len(),
+                ev.result.subsumed.len(),
+            ));
+        }));
+        let edges = target.edges();
+        for chunk in edges.chunks(7) {
+            s.apply_batch(chunk);
+        }
+        s.remove_batch(&edges[..3.min(edges.len())]);
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), s.batches_applied());
+        for (i, &(kind, seq, _, _)) in log.iter().enumerate() {
+            assert_eq!(seq, i + 1, "dense 1-based sequence");
+            let want = if i + 1 == log.len() {
+                BatchKind::Remove
+            } else {
+                BatchKind::Insert
+            };
+            assert_eq!(kind, want);
+        }
+        // replay-driven batches notify too
+        let mut s2 = DynamicSession::from_empty(12, DynAlgo::Imce);
+        let count = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        s2.set_batch_observer(Arc::new(move |_: &BatchEvent<'_>| {
+            c2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }));
+        let stream = EdgeStream::permuted(&target, 3);
+        let records = s2.replay(&stream, 5, None);
+        assert_eq!(
+            count.load(std::sync::atomic::Ordering::Relaxed),
+            records.len()
         );
     }
 

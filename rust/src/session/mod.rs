@@ -38,7 +38,7 @@ pub mod report;
 
 pub use builder::{MceSession, SessionBuilder, SessionRun, SinkSpec};
 pub use context::ExecContext;
-pub use dynamic::{DynAlgo, DynamicSession};
+pub use dynamic::{BatchEvent, BatchKind, BatchObserver, DynAlgo, DynamicSession};
 pub use enumerators::{Algo, Enumerator};
 pub use report::{OutputStats, RunOutcome, RunReport};
 

@@ -6,6 +6,7 @@
 //! spread across shards.  Used for the dynamic-graph clique registry C(G)
 //! and for cross-thread dedup in the Hashing baseline.
 
+use std::borrow::Borrow;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::hash::{BuildHasher, BuildHasherDefault, Hash, Hasher};
@@ -74,6 +75,11 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
 
     #[inline]
     fn shard(&self, key: &K) -> usize {
+        self.shard_of(key)
+    }
+
+    #[inline]
+    fn shard_of<Q: Hash + ?Sized>(&self, key: &Q) -> usize {
         let h = self.hasher.hash_one(key);
         // use high bits: the multiply hasher's low bits are weaker
         (h >> (64 - SHARD_BITS)) as usize
@@ -98,12 +104,33 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
     }
 
     pub fn remove(&self, key: &K) -> Option<V> {
-        let s = self.shard(key);
-        self.shards[s].lock().unwrap().remove(key)
+        self.remove_borrowed(key)
     }
 
     pub fn contains(&self, key: &K) -> bool {
-        let s = self.shard(key);
+        self.contains_borrowed(key)
+    }
+
+    /// [`remove`](Self::remove) through a borrowed form of the key (e.g.
+    /// `&[u32]` for `Box<[u32]>` keys) — no owned-key allocation needed.
+    /// The `Borrow` contract guarantees the borrowed form hashes like `K`,
+    /// so shard routing agrees with the owned-key path.
+    pub fn remove_borrowed<Q>(&self, key: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        let s = self.shard_of(key);
+        self.shards[s].lock().unwrap().remove(key)
+    }
+
+    /// [`contains`](Self::contains) through a borrowed form of the key.
+    pub fn contains_borrowed<Q>(&self, key: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        let s = self.shard_of(key);
         self.shards[s].lock().unwrap().contains_key(key)
     }
 
@@ -177,6 +204,29 @@ impl<K: Hash + Eq> ConcurrentSet<K> {
 
     pub fn contains(&self, key: &K) -> bool {
         self.map.contains(key)
+    }
+
+    /// Remove through a borrowed form of the key (no owned-key build).
+    pub fn remove_borrowed<Q>(&self, key: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        self.map.remove_borrowed(key).is_some()
+    }
+
+    /// Membership through a borrowed form of the key.
+    pub fn contains_borrowed<Q>(&self, key: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        self.map.contains_borrowed(key)
+    }
+
+    /// Apply `f` to every element under shard locks (non-draining).
+    pub fn for_each(&self, mut f: impl FnMut(&K)) {
+        self.map.for_each(|k, _| f(k));
     }
 
     pub fn len(&self) -> usize {
@@ -259,6 +309,32 @@ mod tests {
         }
         assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 500);
         assert_eq!(s.len(), 500);
+    }
+
+    #[test]
+    fn borrowed_key_ops_agree_with_owned() {
+        let s: ConcurrentSet<Box<[u32]>> = ConcurrentSet::new();
+        let key: Box<[u32]> = vec![1, 2, 3].into_boxed_slice();
+        assert!(s.insert(key));
+        // the borrowed form must route to the same shard as the owned key
+        assert!(s.contains_borrowed::<[u32]>(&[1, 2, 3]));
+        assert!(!s.contains_borrowed::<[u32]>(&[1, 2]));
+        assert!(s.remove_borrowed::<[u32]>(&[1, 2, 3]));
+        assert!(!s.remove_borrowed::<[u32]>(&[1, 2, 3]));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn set_for_each_visits_all() {
+        let s: ConcurrentSet<u64> = ConcurrentSet::new();
+        for i in 0..50 {
+            s.insert(i);
+        }
+        let mut seen = Vec::new();
+        s.for_each(|&k| seen.push(k));
+        seen.sort_unstable();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+        assert_eq!(s.len(), 50, "for_each must not drain");
     }
 
     #[test]

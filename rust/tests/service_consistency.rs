@@ -1,0 +1,348 @@
+//! CliqueService snapshot-isolation proof: queries issued from pool
+//! threads *while* batches (insertions and removals) land must each be
+//! exactly correct for *some* published epoch — never a blend of two —
+//! and the incrementally maintained inverted index must equal a
+//! from-scratch rebuild after every replay.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::stream::EdgeStream;
+use parmce::graph::adj::DynGraph;
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::generators;
+use parmce::graph::{Edge, Vertex};
+use parmce::mce::oracle;
+use parmce::service::{CliqueService, CliqueSnapshot};
+use parmce::session::DynAlgo;
+use parmce::util::rng::Rng;
+
+type CliqueSet = BTreeSet<Vec<Vertex>>;
+
+#[derive(Clone, Copy)]
+enum Op<'a> {
+    Insert(&'a [Edge]),
+    Remove(&'a [Edge]),
+}
+
+/// Expected C(G) per epoch: epoch 0 is the empty graph on `n` vertices,
+/// epoch i the state after ops[..i] — computed independently of the
+/// service via the Bron–Kerbosch oracle on a mirror graph.
+fn expected_per_epoch(n: usize, ops: &[Op<'_>]) -> Vec<CliqueSet> {
+    let mut mirror = DynGraph::new(n);
+    let mut expected = Vec::with_capacity(ops.len() + 1);
+    expected.push(oracle_set(&mirror.to_csr()));
+    for op in ops {
+        match op {
+            Op::Insert(edges) => {
+                mirror.insert_batch(edges);
+            }
+            Op::Remove(edges) => {
+                for &(u, v) in *edges {
+                    mirror.remove_edge(u, v);
+                }
+            }
+        }
+        expected.push(oracle_set(&mirror.to_csr()));
+    }
+    expected
+}
+
+fn oracle_set(g: &CsrGraph) -> CliqueSet {
+    oracle::maximal_cliques(g).into_iter().collect()
+}
+
+/// A multi-query observation taken from ONE snapshot. If the snapshot
+/// blended two batches, at least one field disagrees with every single
+/// per-epoch expectation.
+struct Observation {
+    epoch: u64,
+    count: usize,
+    probe_v: Vertex,
+    containing: Vec<Vec<Vertex>>,
+    probe_pair: (Vertex, Vertex),
+    containing_pair: Vec<Vec<Vertex>>,
+    top: Vec<Vec<Vertex>>,
+    sampled_maximal: Option<(Vec<Vertex>, bool)>,
+}
+
+fn observe(snap: &CliqueSnapshot, rng: &mut Rng, n: usize) -> Observation {
+    let probe_v = rng.gen_usize(n) as Vertex;
+    let u = rng.gen_usize(n) as Vertex;
+    let w = rng.gen_usize(n) as Vertex;
+    let sampled = snap
+        .ids_containing(probe_v)
+        .first()
+        .map(|&id| {
+            let c = snap.clique(id).expect("live id").to_vec();
+            let ok = snap.is_maximal_clique(&c);
+            (c, ok)
+        });
+    Observation {
+        epoch: snap.epoch(),
+        count: snap.count(),
+        probe_v,
+        containing: snap.cliques_containing(probe_v).iter().map(|c| c.to_vec()).collect(),
+        probe_pair: (u, w),
+        containing_pair: snap.cliques_containing_all(&[u, w]).iter().map(|c| c.to_vec()).collect(),
+        top: snap.top_k_largest(3).iter().map(|c| c.to_vec()).collect(),
+        sampled_maximal: sampled,
+    }
+}
+
+fn check_observation(obs: &Observation, expected: &[CliqueSet]) -> Result<(), String> {
+    let e = obs.epoch as usize;
+    let Some(exp) = expected.get(e) else {
+        return Err(format!("answer tagged with unknown epoch {e}"));
+    };
+    if obs.count != exp.len() {
+        return Err(format!(
+            "epoch {e}: count {} != expected {}",
+            obs.count,
+            exp.len()
+        ));
+    }
+    let want_containing: BTreeSet<&Vec<Vertex>> = exp
+        .iter()
+        .filter(|c| c.binary_search(&obs.probe_v).is_ok())
+        .collect();
+    let got_containing: BTreeSet<&Vec<Vertex>> = obs.containing.iter().collect();
+    if got_containing != want_containing {
+        return Err(format!(
+            "epoch {e}: cliques_containing({}) diverged",
+            obs.probe_v
+        ));
+    }
+    let (u, w) = obs.probe_pair;
+    let want_pair: BTreeSet<&Vec<Vertex>> = exp
+        .iter()
+        .filter(|c| c.binary_search(&u).is_ok() && c.binary_search(&w).is_ok())
+        .collect();
+    let got_pair: BTreeSet<&Vec<Vertex>> = obs.containing_pair.iter().collect();
+    if got_pair != want_pair {
+        return Err(format!(
+            "epoch {e}: cliques_containing_all([{u},{w}]) diverged"
+        ));
+    }
+    // top-k: returned cliques must exist at this epoch and their sizes
+    // must be the k largest sizes of the expected set
+    let mut want_sizes: Vec<usize> = exp.iter().map(Vec::len).collect();
+    want_sizes.sort_unstable_by(|a, b| b.cmp(a));
+    want_sizes.truncate(obs.top.len());
+    let got_sizes: Vec<usize> = obs.top.iter().map(Vec::len).collect();
+    if got_sizes != want_sizes {
+        return Err(format!(
+            "epoch {e}: top-k sizes {got_sizes:?} != expected {want_sizes:?}"
+        ));
+    }
+    for c in &obs.top {
+        if !exp.contains(c) {
+            return Err(format!("epoch {e}: top-k clique {c:?} not in C(G)"));
+        }
+    }
+    if let Some((c, ok)) = &obs.sampled_maximal {
+        if !ok {
+            return Err(format!(
+                "epoch {e}: snapshot served {c:?} but denies its maximality"
+            ));
+        }
+        if !exp.contains(c) {
+            return Err(format!("epoch {e}: served clique {c:?} not in C(G)"));
+        }
+    }
+    Ok(())
+}
+
+/// Build an op schedule: all insert batches, interleaved with removals
+/// of earlier batches that are later re-inserted (so removal epochs are
+/// exercised mid-stream), ending at the full graph.
+fn build_ops(edges: &[Edge], batch: usize, churn_every: usize) -> Vec<Op<'_>> {
+    let chunks: Vec<&[Edge]> = edges.chunks(batch).collect();
+    let mut ops = Vec::new();
+    for (i, &chunk) in chunks.iter().enumerate() {
+        ops.push(Op::Insert(chunk));
+        if (i + 1) % churn_every == 0 {
+            ops.push(Op::Remove(chunk));
+            ops.push(Op::Insert(chunk));
+        }
+    }
+    ops
+}
+
+fn run_interleaved(algo: DynAlgo, seed: u64) {
+    let g = generators::gnp(15, 0.4, seed);
+    let stream = EdgeStream::permuted(&g, seed ^ 0xabcd);
+    let ops = build_ops(&stream.edges, 6, 3);
+    let expected = expected_per_epoch(stream.n, &ops);
+
+    let mut svc = CliqueService::wrap(
+        parmce::session::DynamicSession::from_empty(stream.n, algo).with_threads(2),
+    );
+    let handle = svc.handle();
+    let pool = ThreadPool::new(2);
+    let stop = Arc::new(AtomicBool::new(false));
+    let observations: Arc<Mutex<Vec<Observation>>> = Arc::new(Mutex::new(Vec::new()));
+    let n = stream.n;
+
+    pool.scope(|s| {
+        for r in 0..2u64 {
+            let mut reader = handle.reader();
+            let stop = Arc::clone(&stop);
+            let observations = Arc::clone(&observations);
+            s.spawn(move |_| {
+                let mut rng = Rng::new(seed ^ (r + 1) * 0x9e37);
+                // do-while: at least one observation per reader, even if
+                // the task is first scheduled after the writer finished
+                loop {
+                    let snap = Arc::clone(reader.current());
+                    let obs = observe(&snap, &mut rng, n);
+                    {
+                        let mut log = observations.lock().unwrap();
+                        if log.len() < 20_000 {
+                            log.push(obs);
+                        }
+                    }
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                }
+            });
+        }
+        // writer: apply every op; each publishes one epoch
+        for op in &ops {
+            match op {
+                Op::Insert(edges) => {
+                    svc.apply_batch(edges);
+                }
+                Op::Remove(edges) => {
+                    svc.remove_batch(edges);
+                }
+            }
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    assert_eq!(svc.published_epoch(), ops.len() as u64);
+
+    // 1. every concurrent answer was exact for its tagged epoch
+    let observations = observations.lock().unwrap();
+    assert!(
+        !observations.is_empty(),
+        "readers must have observed something"
+    );
+    for obs in observations.iter() {
+        if let Err(e) = check_observation(obs, &expected) {
+            panic!("snapshot isolation violated ({}): {e}", algo.name());
+        }
+    }
+
+    // 2. final state: equals from-scratch enumeration of the full graph
+    let final_snap = svc.snapshot();
+    final_snap.validate().unwrap();
+    let want = oracle_set(&g);
+    let got: CliqueSet = final_snap.canonical_cliques().into_iter().collect();
+    assert_eq!(got, want, "final C(G) diverged from scratch");
+
+    // 3. the incrementally maintained index equals a full rebuild
+    let rebuilt = svc.rebuilt_snapshot();
+    rebuilt.validate().unwrap();
+    assert_eq!(
+        final_snap.canonical_cliques(),
+        rebuilt.canonical_cliques()
+    );
+    for v in 0..n as Vertex {
+        let mut a: Vec<Vec<Vertex>> = final_snap
+            .cliques_containing(v)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        let mut b: Vec<Vec<Vertex>> = rebuilt
+            .cliques_containing(v)
+            .iter()
+            .map(|c| c.to_vec())
+            .collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "incremental postings diverge from rebuild at {v}");
+    }
+    assert_eq!(
+        final_snap.size_histogram().nonzero_bins(),
+        rebuilt.size_histogram().nonzero_bins()
+    );
+}
+
+#[test]
+fn interleaved_queries_are_snapshot_isolated_sequential() {
+    run_interleaved(DynAlgo::Imce, 101);
+}
+
+#[test]
+fn interleaved_queries_are_snapshot_isolated_parallel() {
+    run_interleaved(DynAlgo::ParImce, 202);
+}
+
+#[test]
+fn every_epoch_prefix_is_exactly_servable() {
+    // single-threaded variant: query *every* epoch right after its
+    // publish and demand exactness — locks in the per-epoch expected
+    // semantics the concurrent test samples from
+    let g = generators::gnp(13, 0.45, 77);
+    let stream = EdgeStream::permuted(&g, 3);
+    let ops = build_ops(&stream.edges, 5, 4);
+    let expected = expected_per_epoch(stream.n, &ops);
+
+    let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+    let mut rng = Rng::new(9);
+    let handle = svc.handle();
+    // epoch 0 (bootstrap) as well
+    let obs = observe(&handle.snapshot(), &mut rng, stream.n);
+    check_observation(&obs, &expected).unwrap();
+    for (i, op) in ops.iter().enumerate() {
+        match op {
+            Op::Insert(edges) => {
+                svc.apply_batch(edges);
+            }
+            Op::Remove(edges) => {
+                svc.remove_batch(edges);
+            }
+        }
+        let snap = handle.snapshot();
+        assert_eq!(snap.epoch(), (i + 1) as u64);
+        snap.validate().unwrap();
+        let obs = observe(&snap, &mut rng, stream.n);
+        check_observation(&obs, &expected).unwrap();
+        let exp = &expected[i + 1];
+        assert_eq!(snap.count(), exp.len(), "epoch {}", i + 1);
+    }
+}
+
+#[test]
+fn readers_pinned_to_old_snapshots_stay_correct() {
+    // a reader that never revalidates keeps answering at its epoch even
+    // as the writer races ahead — the copy-on-publish guarantee
+    let g = generators::gnp(12, 0.5, 5);
+    let stream = EdgeStream::permuted(&g, 6);
+    let ops = build_ops(&stream.edges, 4, 100);
+    let expected = expected_per_epoch(stream.n, &ops);
+
+    let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+    let mut pinned: Vec<Arc<CliqueSnapshot>> = vec![svc.snapshot()];
+    for op in &ops {
+        match op {
+            Op::Insert(edges) => {
+                svc.apply_batch(edges);
+            }
+            Op::Remove(edges) => {
+                svc.remove_batch(edges);
+            }
+        }
+        pinned.push(svc.snapshot());
+    }
+    let mut rng = Rng::new(31);
+    for snap in &pinned {
+        let obs = observe(snap, &mut rng, stream.n);
+        check_observation(&obs, &expected).unwrap();
+    }
+}
