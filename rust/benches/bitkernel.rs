@@ -1,0 +1,56 @@
+//! Bench: slice-path vs bitset-path subproblem throughput — the cutoff
+//! crossover measurement behind the `--bitset-cutoff` default (see
+//! EXPERIMENTS.md §Perf).  `cargo bench --bench bitkernel`
+//!
+//! Sequential rows sweep the hand-off threshold on one dense and one
+//! sparse graph (cutoff 0 = slice-only recursion); parallel rows run
+//! ParTTT at 1–8 threads with the kernel off vs on, showing the hand-off
+//! composes with task spawning rather than serializing it.
+
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::generators;
+use parmce::mce::parttt::parttt;
+use parmce::mce::sink::{CliqueSink, CountSink, NullSink};
+use parmce::mce::ttt;
+use parmce::mce::ParTttConfig;
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // --- sequential crossover sweep ---------------------------------------
+    // dense: deep recursions live almost entirely under small cutoffs
+    // sparse: subproblems are tiny, so the kernel engages immediately
+    for (name, g) in [
+        ("gnp180_p35", generators::gnp(180, 0.35, 7)),
+        ("planted300", generators::planted_cliques(300, 0.02, 8, 6, 10, 13)),
+    ] {
+        for cutoff in [0usize, 16, 64, 128, 512] {
+            b.bench(format!("ttt/{name}/cutoff{cutoff}"), || {
+                let sink = CountSink::new();
+                ttt::ttt_with_cutoff(&g, &sink, cutoff);
+                sink.count()
+            });
+        }
+    }
+
+    // --- parallel: kernel under the ParTTT task tree ----------------------
+    let g = Arc::new(generators::planted_cliques(600, 0.015, 10, 7, 12, 3));
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        for cutoff in [0usize, 128] {
+            let cfg = ParTttConfig {
+                bitset_cutoff: cutoff,
+                ..ParTttConfig::default()
+            };
+            b.bench(format!("parttt/planted600/t{threads}/cutoff{cutoff}"), || {
+                let sink: Arc<dyn CliqueSink> = Arc::new(NullSink::new());
+                parttt(&pool, &g, &sink, cfg);
+            });
+        }
+    }
+
+    b.dump_json("results/bench_bitkernel.json");
+}

@@ -21,6 +21,12 @@ fn main() {
     let small: Vec<u32> = (0..4096).step_by(97).collect();
     b.bench("vset/intersect_balanced_2k", || vset::intersect(&a, &c));
     b.bench("vset/intersect_gallop_42_vs_2k", || vset::intersect(&small, &a));
+    // clustered small side: the exponential-search cursor pays off most
+    // when consecutive probes land close together (log(gap), not log(big))
+    let clustered: Vec<u32> = (2000..2084).step_by(2).collect();
+    b.bench("vset/intersect_gallop_clustered_42_vs_2k", || {
+        vset::intersect(&clustered, &a)
+    });
     b.bench("vset/intersection_count_balanced", || {
         vset::intersection_count(&a, &c)
     });

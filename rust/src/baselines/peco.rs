@@ -20,11 +20,14 @@ use crate::mce::ttt;
 
 /// Shared-memory PECO with the given vertex ranking
 /// (PECODegree / PECODegen / PECOTri = Table 7 columns).
+/// `bitset_cutoff` is the dense-kernel hand-off threshold of the inner
+/// sequential TTT (0 = slice-only).
 pub fn peco(
     pool: &ThreadPool,
     g: &Arc<CsrGraph>,
     ranking: &Arc<Ranking>,
     sink: &Arc<dyn CliqueSink>,
+    bitset_cutoff: usize,
 ) {
     pool.scope(|s| {
         for v in 0..g.n() as Vertex {
@@ -35,7 +38,14 @@ pub fn peco(
                 let (cand, fini) = ranking.split_neighbors(&g, v);
                 let mut k = vec![v];
                 // sequential inner enumeration — the PECO limitation
-                ttt::ttt_from(g.as_ref(), &mut k, cand, fini, sink.as_ref());
+                ttt::ttt_from_with_cutoff(
+                    g.as_ref(),
+                    &mut k,
+                    cand,
+                    fini,
+                    sink.as_ref(),
+                    bitset_cutoff,
+                );
             });
         }
     });
@@ -63,7 +73,7 @@ mod tests {
             let g = Arc::new(g);
             let sink = Arc::new(CollectSink::new());
             let dyn_sink: Arc<dyn CliqueSink> = sink.clone();
-            peco(&pool, &g, &ranking, &dyn_sink);
+            peco(&pool, &g, &ranking, &dyn_sink, 64);
             drop(dyn_sink);
             let got = Arc::try_unwrap(sink).ok().unwrap().into_canonical();
             assert_eq!(got, want, "{strat:?}");

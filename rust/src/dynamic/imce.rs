@@ -16,10 +16,11 @@ use std::collections::HashSet;
 use std::time::Instant;
 
 use crate::dynamic::registry::{canonical, CliqueKey, CliqueRegistry};
-use crate::dynamic::ttt_exclude::{ttt_exclude_edges, EdgeSet};
+use crate::dynamic::ttt_exclude::{ttt_exclude_edges_with_cutoff, EdgeSet};
 use crate::dynamic::BatchResult;
 use crate::graph::adj::DynGraph;
 use crate::graph::{Edge, Vertex};
+use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 use crate::mce::sink::CollectSink;
 
 /// Phase timings, for the Table 6 / Fig. 8 accounting and the per-phase
@@ -53,6 +54,17 @@ pub fn imce_batch(
     registry: &CliqueRegistry,
     batch: &[Edge],
 ) -> (BatchResult, BatchTimings) {
+    imce_batch_with_cutoff(graph, registry, batch, DEFAULT_BITSET_CUTOFF)
+}
+
+/// As [`imce_batch`] with an explicit bitset hand-off threshold for the
+/// TTT-exclude recompute calls (0 = slice-only recursion).
+pub fn imce_batch_with_cutoff(
+    graph: &mut DynGraph,
+    registry: &CliqueRegistry,
+    batch: &[Edge],
+    bitset_cutoff: usize,
+) -> (BatchResult, BatchTimings) {
     // Figure 4 step 1: apply the batch to the shared graph (dedup).
     let added = graph.insert_batch(batch);
     let mut timings = BatchTimings::default();
@@ -66,7 +78,15 @@ pub fn imce_batch(
         let cand = graph.common_neighbors(u, v);
         let mut k = vec![u.min(v), u.max(v)];
         k.sort_unstable();
-        ttt_exclude_edges(graph, &mut k, cand, Vec::new(), &excl, &sink);
+        ttt_exclude_edges_with_cutoff(
+            graph,
+            &mut k,
+            cand,
+            Vec::new(),
+            &excl,
+            &sink,
+            bitset_cutoff,
+        );
         // per-clique sort only (subsumption_candidates binary-searches
         // members); the set-level sort happens once in canonicalize()
         new_cliques.extend(sink.into_sorted_cliques());

@@ -14,8 +14,8 @@ pub mod registry;
 pub mod stream;
 pub mod ttt_exclude;
 
-pub use imce::imce_batch;
-pub use par_imce::par_imce_batch;
+pub use imce::{imce_batch, imce_batch_with_cutoff};
+pub use par_imce::{par_imce_batch, par_imce_batch_with_cutoff};
 pub use registry::CliqueRegistry;
 
 /// The change set produced by one batch, canonical form

@@ -15,10 +15,11 @@ use std::time::Instant;
 use crate::coordinator::pool::ThreadPool;
 use crate::dynamic::imce::{subsumption_candidates, BatchTimings};
 use crate::dynamic::registry::CliqueRegistry;
-use crate::dynamic::ttt_exclude::{ttt_exclude_edges, EdgeSet};
+use crate::dynamic::ttt_exclude::{ttt_exclude_edges_with_cutoff, EdgeSet};
 use crate::dynamic::BatchResult;
 use crate::graph::adj::DynGraph;
 use crate::graph::{Edge, Vertex};
+use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 use crate::mce::sink::CollectSink;
 
 /// Apply one batch in parallel; the registry is updated to C(G + H).
@@ -29,6 +30,18 @@ pub fn par_imce_batch(
     graph: &mut DynGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
+) -> (BatchResult, BatchTimings) {
+    par_imce_batch_with_cutoff(pool, graph, registry, batch, DEFAULT_BITSET_CUTOFF)
+}
+
+/// As [`par_imce_batch`] with an explicit bitset hand-off threshold for
+/// the per-edge TTT-exclude recompute tasks (0 = slice-only recursion).
+pub fn par_imce_batch_with_cutoff(
+    pool: &ThreadPool,
+    graph: &mut DynGraph,
+    registry: &CliqueRegistry,
+    batch: &[Edge],
+    bitset_cutoff: usize,
 ) -> (BatchResult, BatchTimings) {
     // graph mutation is the single-threaded step between batches (Fig. 4)
     let added = Arc::new(graph.insert_batch(batch));
@@ -48,6 +61,7 @@ pub fn par_imce_batch(
             added: Arc::clone(&added),
             new_cliques: &new_cliques as *const _,
             timings: &timings as *const _,
+            bitset_cutoff,
         };
         pool.scope(|s| {
             for i in 0..added.len() {
@@ -64,7 +78,15 @@ pub fn par_imce_batch(
                     let sink = CollectSink::new();
                     let cand = graph.common_neighbors(u, v);
                     let mut k = vec![u.min(v), u.max(v)];
-                    ttt_exclude_edges(graph, &mut k, cand, Vec::new(), &excl, &sink);
+                    ttt_exclude_edges_with_cutoff(
+                        graph,
+                        &mut k,
+                        cand,
+                        Vec::new(),
+                        &excl,
+                        &sink,
+                        ctx.bitset_cutoff,
+                    );
                     // per-clique sort only; the batch-level set is
                     // canonicalized once after both phases join
                     let found = sink.into_sorted_cliques();
@@ -138,6 +160,7 @@ struct SharedBatchCtx {
     added: Arc<Vec<Edge>>,
     new_cliques: *const Mutex<Vec<Vec<Vertex>>>,
     timings: *const Mutex<BatchTimings>,
+    bitset_cutoff: usize,
 }
 
 impl Clone for SharedBatchCtx {
@@ -147,6 +170,7 @@ impl Clone for SharedBatchCtx {
             added: Arc::clone(&self.added),
             new_cliques: self.new_cliques,
             timings: self.timings,
+            bitset_cutoff: self.bitset_cutoff,
         }
     }
 }

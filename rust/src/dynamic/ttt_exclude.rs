@@ -10,6 +10,7 @@
 use std::collections::HashSet;
 
 use crate::graph::{norm_edge, AdjacencyGraph, Edge, Vertex};
+use crate::mce::bitkernel::{self, DEFAULT_BITSET_CUTOFF};
 use crate::mce::pivot::choose_pivot;
 use crate::mce::sink::CliqueSink;
 use crate::util::vset;
@@ -57,6 +58,13 @@ impl EdgeSet {
         self.set.is_empty()
     }
 
+    /// Iterate the normalized excluded edges (arbitrary order) — the
+    /// bit kernel walks these once per hand-off to build its local
+    /// exclusion rows.
+    pub fn iter(&self) -> impl Iterator<Item = Edge> + '_ {
+        self.set.iter().copied()
+    }
+
     /// Does clique `k` plus vertex `q` close an excluded edge?
     /// (K itself is invariantly exclusion-free, so only q×K pairs matter —
     /// the O(n)-work check of Appendix A.)
@@ -80,7 +88,22 @@ pub fn ttt_exclude_edges<G: AdjacencyGraph + ?Sized>(
     excl: &EdgeSet,
     sink: &dyn CliqueSink,
 ) {
-    rec(g, k, cand, fini, excl, sink);
+    ttt_exclude_edges_with_cutoff(g, k, cand, fini, excl, sink, DEFAULT_BITSET_CUTOFF)
+}
+
+/// As [`ttt_exclude_edges`] with an explicit bitset hand-off threshold
+/// (0 = slice-only): working sets at or below it finish in the dense
+/// kernel's exclusion-aware recursion.
+pub fn ttt_exclude_edges_with_cutoff<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    excl: &EdgeSet,
+    sink: &dyn CliqueSink,
+    bitset_cutoff: usize,
+) {
+    rec(g, k, cand, fini, excl, sink, bitset_cutoff);
 }
 
 fn rec<G: AdjacencyGraph + ?Sized>(
@@ -90,7 +113,12 @@ fn rec<G: AdjacencyGraph + ?Sized>(
     mut fini: Vec<Vertex>,
     excl: &EdgeSet,
     sink: &dyn CliqueSink,
+    bitset_cutoff: usize,
 ) {
+    if bitset_cutoff > 0 && cand.len() + fini.len() <= bitset_cutoff {
+        bitkernel::enumerate_subproblem_excl(g, k, &cand, &fini, excl, sink);
+        return;
+    }
     if cand.is_empty() {
         if fini.is_empty() {
             sink.emit(k);
@@ -120,6 +148,7 @@ fn rec<G: AdjacencyGraph + ?Sized>(
             std::mem::take(&mut fini_q),
             excl,
             sink,
+            bitset_cutoff,
         );
         k.pop();
         vset::remove_sorted(&mut cand, q);
@@ -167,6 +196,32 @@ mod tests {
                 !(c.contains(&0) && c.contains(&1)),
                 "clique {c:?} contains the excluded edge"
             );
+        }
+    }
+
+    #[test]
+    fn bitset_cutoff_values_agree_under_exclusion() {
+        let g = generators::gnp(16, 0.5, 9);
+        let edges = g.edges();
+        let excl = EdgeSet::from_edges(&edges[..4.min(edges.len())]);
+        let all: Vec<Vertex> = (0..16).collect();
+        let run_at = |cutoff: usize| {
+            let sink = CollectSink::new();
+            let mut k = Vec::new();
+            ttt_exclude_edges_with_cutoff(
+                &g,
+                &mut k,
+                all.clone(),
+                Vec::new(),
+                &excl,
+                &sink,
+                cutoff,
+            );
+            sink.into_canonical()
+        };
+        let want = run_at(0);
+        for cutoff in [4, 64, usize::MAX] {
+            assert_eq!(run_at(cutoff), want, "cutoff {cutoff}");
         }
     }
 

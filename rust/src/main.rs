@@ -5,10 +5,10 @@
 //!   parmce exp <id|all> [--scale tiny|small|full] [--out DIR]
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
 //!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
-//!                    [--out FILE [--format ndjson|text|binary]]
+//!                    [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]
 //!   parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]
 //!                       [--threads N] [--readers R] [--max-batches M]
-//!                       [--churn K] [--seed X] [--scale S]
+//!                       [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]
 //!   parmce stats [--dataset NAME] [--scale S]
 //!   parmce perf [--scale S]
 //!   parmce artifacts-check
@@ -142,6 +142,10 @@ fn dispatch(args: &[String]) -> Result<()> {
             if let Some(ms) = flag(args, "--deadline-ms") {
                 builder = builder.deadline(Duration::from_millis(ms.parse()?));
             }
+            // dense-kernel hand-off threshold (0 disables the bit kernel)
+            if let Some(w) = flag(args, "--bitset-cutoff") {
+                builder = builder.bitset_cutoff(w.parse()?);
+            }
             if pjrt {
                 // rank on the AOT Pallas kernel, seed the session cache
                 let engine = parmce::runtime::engine::Engine::load_default()?;
@@ -244,9 +248,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                 cfg.batch_size,
                 cfg.readers,
             );
-            let mut svc = CliqueService::wrap(
-                DynamicSession::from_empty(stream.n, algo).with_threads(threads),
-            );
+            let mut session = DynamicSession::from_empty(stream.n, algo).with_threads(threads);
+            if let Some(w) = flag(args, "--bitset-cutoff") {
+                session = session.with_bitset_cutoff(w.parse()?);
+            }
+            let mut svc = CliqueService::wrap(session);
             // a dedicated reader pool: the session's ParIMCE pool must not
             // be occupied by long-lived query loops
             let pool = ThreadPool::new(readers.max(1));
@@ -334,10 +340,10 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 parmce exp <table3..table10|fig2|fig5..fig9|ablation|all> [--scale tiny|small|full] [--out DIR]\n\
                  \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
                  \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
-                 \x20                  [--out FILE [--format ndjson|text|binary]]\n\
+                 \x20                  [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]\n\
                  \x20 parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]\n\
                  \x20                     [--threads N] [--readers R] [--max-batches M]\n\
-                 \x20                     [--churn K] [--seed X] [--scale S]\n\
+                 \x20                     [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
                  \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\

@@ -1,0 +1,476 @@
+//! Dense bit-parallel subproblem kernel — the word-level fast path under
+//! every TTT-family recursion.
+//!
+//! Deep in the recursion `cand ∪ fini` has shrunk to a small *window* of
+//! vertices whose induced subgraph is dense — exactly the regime where
+//! sorted-slice merges lose to word-level AND/popcount (San Segundo et
+//! al., arXiv:1801.00202; the GPU MCE encoding of arXiv:2212.01473).
+//! When a subproblem's working set falls to `bitset_cutoff` or below,
+//! the hand-off here:
+//!
+//! 1. relabels the window into a compact `0..w` id space (the sorted
+//!    window itself is the local→global map; global→local is a binary
+//!    search);
+//! 2. materializes the induced adjacency as fixed-stride rows of a
+//!    [`BitMatrix`] in a per-worker arena (`thread_local`, reused across
+//!    invocations — steady state allocates nothing);
+//! 3. runs the remaining recursion entirely in bitset space: pivot
+//!    selection is a popcount of row ANDs, cand/fini push/pop are word
+//!    copies, and `ext` is a single AND-NOT;
+//! 4. translates emitted cliques back to global vertex ids before they
+//!    hit the sink.
+//!
+//! The exclusion-aware variant serves the dynamic engines' TTT-exclude
+//! recompute calls: excluded edges inside the window become a second bit
+//! matrix (branch pruning = one row AND against the local-K bits), and
+//! excluded edges between the window and the *outer* K collapse to one
+//! per-vertex "blocked" row computed at entry.
+
+use std::cell::RefCell;
+
+use crate::dynamic::ttt_exclude::EdgeSet;
+use crate::graph::{AdjacencyGraph, Vertex};
+use crate::mce::sink::CliqueSink;
+use crate::util::bitset::{row, BitMatrix};
+use crate::util::vset;
+
+/// Default `|cand| + |fini|` at or below which TTT-family recursions
+/// hand off to this kernel; 0 disables the hand-off entirely.  128 keeps
+/// the window within two cache lines per row while catching the dense
+/// bottom of the recursion (see EXPERIMENTS.md for the crossover
+/// methodology).
+pub const DEFAULT_BITSET_CUTOFF: usize = 128;
+
+/// Per-worker arena: every buffer the kernel needs, reused across
+/// invocations so steady-state enumeration performs no allocation.
+#[derive(Default)]
+struct BitScratch {
+    /// sorted window = cand ∪ fini; doubles as the local→global map.
+    window: Vec<Vertex>,
+    /// induced adjacency rows over the window.
+    adj: BitMatrix,
+    /// excluded in-window pairs (exclusion runs only).
+    excl_adj: BitMatrix,
+    /// local vertices excluded against the outer K (exclusion runs only).
+    excl_outer: Vec<u64>,
+    /// local members of K pushed inside the kernel (exclusion runs only).
+    kbits: Vec<u64>,
+    cand_row: Vec<u64>,
+    fini_row: Vec<u64>,
+    /// recursion frames: 3 rows (ext, cand_q, fini_q) per level.
+    arena: Vec<u64>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<BitScratch> = RefCell::new(BitScratch::default());
+}
+
+/// Enumerate all maximal cliques containing `k`, extendable by `cand`,
+/// excluding any vertex of `fini` — [`crate::mce::ttt::ttt_from`]
+/// semantics, run entirely in bitset space.  `cand`/`fini` must be
+/// sorted and disjoint, all members adjacent to every vertex of `k`.
+pub fn enumerate_subproblem<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: &[Vertex],
+    fini: &[Vertex],
+    sink: &dyn CliqueSink,
+) {
+    SCRATCH.with(|s| run(g, k, cand, fini, None, sink, &mut s.borrow_mut()));
+}
+
+/// As [`enumerate_subproblem`] but pruning any branch whose clique would
+/// contain an edge of `excl` — [`crate::dynamic::ttt_exclude`] semantics
+/// for the IMCE/ParIMCE recompute calls.
+pub fn enumerate_subproblem_excl<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: &[Vertex],
+    fini: &[Vertex],
+    excl: &EdgeSet,
+    sink: &dyn CliqueSink,
+) {
+    let excl = (!excl.is_empty()).then_some(excl);
+    SCRATCH.with(|s| run(g, k, cand, fini, excl, sink, &mut s.borrow_mut()));
+}
+
+/// Read-only kernel state shared by every recursion level.
+struct Kernel<'a> {
+    window: &'a [Vertex],
+    adj: &'a BitMatrix,
+    excl: Option<ExclRows<'a>>,
+}
+
+struct ExclRows<'a> {
+    pairs: &'a BitMatrix,
+    outer: &'a [u64],
+}
+
+fn run<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: &[Vertex],
+    fini: &[Vertex],
+    excl: Option<&EdgeSet>,
+    sink: &dyn CliqueSink,
+    s: &mut BitScratch,
+) {
+    if cand.is_empty() {
+        if fini.is_empty() {
+            sink.emit(k);
+        }
+        return;
+    }
+    let BitScratch {
+        window,
+        adj,
+        excl_adj,
+        excl_outer,
+        kbits,
+        cand_row,
+        fini_row,
+        arena,
+    } = s;
+
+    // Relabel: the sorted union is the local→global map; a vertex's
+    // local id is its position in `window`.
+    vset::union_into(cand, fini, window);
+    let w = window.len();
+    let stride = w.div_ceil(64);
+
+    // Induced adjacency rows (row i = in-window neighbours of window[i]).
+    adj.reset(w);
+    for (i, &v) in window.iter().enumerate() {
+        mark_common(window, g.neighbors(v), adj.row_mut(i));
+    }
+
+    cand_row.clear();
+    cand_row.resize(stride, 0);
+    fini_row.clear();
+    fini_row.resize(stride, 0);
+    mark_common(window, cand, cand_row);
+    mark_common(window, fini, fini_row);
+
+    // Exclusion structure: iterate the (normalized) excluded edges once.
+    // In-window pairs land in `excl_adj`; an edge between the window and
+    // a member of the *outer* K permanently blocks its window endpoint
+    // (K is fixed above this subtree), folded into one `excl_outer` row.
+    let has_excl = excl.is_some();
+    if let Some(e) = excl {
+        excl_adj.reset(w);
+        excl_outer.clear();
+        excl_outer.resize(stride, 0);
+        for (u, v) in e.iter() {
+            match (window.binary_search(&u), window.binary_search(&v)) {
+                (Ok(a), Ok(b)) => {
+                    excl_adj.set(a, b);
+                    excl_adj.set(b, a);
+                }
+                (Ok(a), Err(_)) if k.contains(&v) => row::set(excl_outer, a as u32),
+                (Err(_), Ok(b)) if k.contains(&u) => row::set(excl_outer, b as u32),
+                _ => {}
+            }
+        }
+    }
+    kbits.clear();
+    kbits.resize(stride, 0);
+
+    // Frame arena: depth is bounded by w + 1 (cand strictly shrinks per
+    // level), each level consumes 3 rows (ext, cand_q, fini_q).  Grown
+    // but never zeroed — every frame row is fully written (AND / AND-NOT
+    // over all `stride` words) before it is read, so stale words from
+    // earlier invocations are unobservable.
+    let need = (w + 2) * 3 * stride;
+    if arena.len() < need {
+        arena.resize(need, 0);
+    }
+
+    let kernel = Kernel {
+        window,
+        adj,
+        excl: has_excl.then(|| ExclRows {
+            pairs: excl_adj,
+            outer: excl_outer,
+        }),
+    };
+    rec(&kernel, k, kbits, cand_row, fini_row, arena, sink);
+}
+
+fn rec(
+    kn: &Kernel<'_>,
+    k: &mut Vec<Vertex>,
+    kbits: &mut [u64],
+    cand: &mut [u64],
+    fini: &mut [u64],
+    arena: &mut [u64],
+    sink: &dyn CliqueSink,
+) {
+    if row::is_empty(cand) {
+        if row::is_empty(fini) {
+            sink.emit(k);
+        }
+        return;
+    }
+    let stride = kn.adj.stride();
+
+    // Pivot: maximize |cand ∩ Γ(u)| over u ∈ cand ∪ fini — a popcount
+    // of row ANDs per candidate, no slice walks.
+    let mut best = (usize::MAX, 0usize);
+    for u in row::iter(cand).chain(row::iter(fini)) {
+        let score = row::and_count(cand, kn.adj.row(u as usize));
+        if best.0 == usize::MAX || score > best.1 {
+            best = (u as usize, score);
+        }
+    }
+    let pivot = best.0;
+
+    // ext = cand \ Γ(pivot); children get cand_q/fini_q from the arena.
+    let (ext, rest) = arena.split_at_mut(stride);
+    row::and_not_into(cand, kn.adj.row(pivot), ext);
+    let (cand_q, rest) = rest.split_at_mut(stride);
+    let (fini_q, rest) = rest.split_at_mut(stride);
+
+    for q in row::iter(ext) {
+        // Exclusion pruning (Alg. 8 lines 7–10): the branch is skipped,
+        // but q still migrates cand → fini so sibling branches treat it
+        // as explored.
+        if let Some(e) = &kn.excl {
+            if row::test(e.outer, q) || row::intersects(kbits, e.pairs.row(q as usize)) {
+                row::clear(cand, q);
+                row::set(fini, q);
+                continue;
+            }
+        }
+        row::and_into(cand, kn.adj.row(q as usize), cand_q);
+        row::and_into(fini, kn.adj.row(q as usize), fini_q);
+        k.push(kn.window[q as usize]);
+        if kn.excl.is_some() {
+            row::set(kbits, q);
+        }
+        rec(kn, k, kbits, cand_q, fini_q, rest, sink);
+        if kn.excl.is_some() {
+            row::clear(kbits, q);
+        }
+        k.pop();
+        row::clear(cand, q);
+        row::set(fini, q);
+    }
+}
+
+/// Set bit `i` for every `i` with `window[i] ∈ other` (both sorted
+/// ascending; `out` pre-zeroed).  Gallops over `other` when it is much
+/// larger than the window (a high-degree vertex's neighbour list).
+fn mark_common(window: &[Vertex], other: &[Vertex], out: &mut [u64]) {
+    if window.is_empty() || other.is_empty() {
+        return;
+    }
+    if other.len() / window.len() >= 8 {
+        let mut j = 0;
+        for (i, &v) in window.iter().enumerate() {
+            j = vset::gallop_lower_bound(other, j, v);
+            if j >= other.len() {
+                return;
+            }
+            if other[j] == v {
+                row::set(out, i as u32);
+                j += 1;
+            }
+        }
+        return;
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < window.len() && j < other.len() {
+        match window[i].cmp(&other[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                row::set(out, i as u32);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::generators;
+    use crate::mce::sink::CollectSink;
+    use crate::mce::ttt;
+
+    fn kernel_cliques(
+        g: &CsrGraph,
+        k0: Vec<Vertex>,
+        cand: Vec<Vertex>,
+        fini: Vec<Vertex>,
+    ) -> Vec<Vec<Vertex>> {
+        let sink = CollectSink::new();
+        let mut k = k0;
+        enumerate_subproblem(g, &mut k, &cand, &fini, &sink);
+        sink.into_canonical()
+    }
+
+    fn slice_cliques(
+        g: &CsrGraph,
+        k0: Vec<Vertex>,
+        cand: Vec<Vertex>,
+        fini: Vec<Vertex>,
+    ) -> Vec<Vec<Vertex>> {
+        let sink = CollectSink::new();
+        let mut k = k0;
+        ttt::ttt_from_with_cutoff(g, &mut k, cand, fini, &sink, 0);
+        sink.into_canonical()
+    }
+
+    #[test]
+    fn whole_graph_matches_slice_path() {
+        for seed in 0..6 {
+            let g = generators::gnp(20, 0.45, seed);
+            let all: Vec<Vertex> = (0..20).collect();
+            assert_eq!(
+                kernel_cliques(&g, vec![], all.clone(), vec![]),
+                slice_cliques(&g, vec![], all, vec![]),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn relabeling_round_trips_non_contiguous_ids() {
+        // The window {3, 17, 29, 41, 57} is sparse in a 64-vertex id
+        // space: a triangle 3-17-29 plus edges 29-41, 41-57.  Local ids
+        // 0..5 must translate back to these exact globals.
+        let g = CsrGraph::from_edges(
+            64,
+            &[(3, 17), (3, 29), (17, 29), (29, 41), (41, 57)],
+        );
+        let window: Vec<Vertex> = vec![3, 17, 29, 41, 57];
+        let got = kernel_cliques(&g, vec![], window.clone(), vec![]);
+        assert_eq!(got, vec![vec![3, 17, 29], vec![29, 41], vec![41, 57]]);
+        // every emitted vertex is a window member (global ids, not local)
+        for c in &got {
+            for v in c {
+                assert!(window.contains(v), "non-window vertex {v} leaked");
+            }
+        }
+        assert_eq!(got, slice_cliques(&g, vec![], window, vec![]));
+    }
+
+    #[test]
+    fn bitmatrix_rows_mirror_induced_adjacency() {
+        // Direct check of the relabel map: row bits of the window-induced
+        // matrix must match the graph restricted to the window.
+        let g = generators::gnp(40, 0.4, 9);
+        let window: Vec<Vertex> = (0..40).filter(|v| v % 3 != 1).collect();
+        let w = window.len();
+        let mut adj = BitMatrix::new(w);
+        for (i, &v) in window.iter().enumerate() {
+            mark_common(&window, g.neighbors(v), adj.row_mut(i));
+        }
+        for i in 0..w {
+            for j in 0..w {
+                let connected = crate::util::vset::contains(
+                    g.neighbors(window[i]),
+                    window[j],
+                );
+                assert_eq!(adj.test(i, j), connected, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn subproblem_with_fini_and_outer_k_matches_slice() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let sink = CollectSink::new();
+        let mut k = vec![2];
+        enumerate_subproblem(&g, &mut k, &[3], &[0, 1], &sink);
+        assert_eq!(sink.into_canonical(), vec![vec![2, 3]]);
+        assert_eq!(k, vec![2], "K restored after enumeration");
+    }
+
+    #[test]
+    fn exclusion_matches_slice_path_randomized() {
+        crate::util::prop::forall(
+            crate::util::prop::Config { seed: 91, iters: 30 },
+            |rng, level| {
+                let n = 6 + rng.gen_usize(14 >> level.min(2));
+                let g = generators::gnp(n, 0.5, rng.next_u64());
+                let mut edges = g.edges();
+                rng.shuffle(&mut edges);
+                let cut = edges.len().min(1 + rng.gen_usize(4));
+                (g, cut)
+            },
+            |(g, cut)| {
+                let edges = g.edges();
+                let excl = EdgeSet::from_edges(&edges[..*cut]);
+                let all: Vec<Vertex> = (0..g.n() as Vertex).collect();
+
+                let bit = CollectSink::new();
+                let mut k = Vec::new();
+                enumerate_subproblem_excl(g, &mut k, &all, &[], &excl, &bit);
+
+                let slice = CollectSink::new();
+                let mut k2 = Vec::new();
+                crate::dynamic::ttt_exclude::ttt_exclude_edges_with_cutoff(
+                    g,
+                    &mut k2,
+                    all.clone(),
+                    Vec::new(),
+                    &excl,
+                    &slice,
+                    0,
+                );
+                let got = bit.into_canonical();
+                let want = slice.into_canonical();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("bit {} cliques, slice {}", got.len(), want.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn outer_k_exclusion_blocks_window_vertices() {
+        // K4 on {0,1,2,3}; outer K = {0}, window = {1,2,3}, excluded edge
+        // (0,2): any clique through 2 would close it, so only branches
+        // avoiding 2 survive — but 2 ∈ fini then kills maximality of
+        // {0,1,3} ∪ … subsets that 2 extends.
+        let g = generators::complete(4);
+        let excl = EdgeSet::from_edges(&[(0, 2)]);
+
+        let bit = CollectSink::new();
+        let mut k = vec![0];
+        enumerate_subproblem_excl(&g, &mut k, &[1, 2, 3], &[], &excl, &bit);
+
+        let slice = CollectSink::new();
+        let mut k2 = vec![0];
+        crate::dynamic::ttt_exclude::ttt_exclude_edges_with_cutoff(
+            &g,
+            &mut k2,
+            vec![1, 2, 3],
+            Vec::new(),
+            &excl,
+            &slice,
+            0,
+        );
+        assert_eq!(bit.into_canonical(), slice.into_canonical());
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let g = CsrGraph::from_edges(3, &[]);
+        // empty cand + empty fini ⇒ K itself is maximal
+        let got = kernel_cliques(&g, vec![1], vec![], vec![]);
+        assert_eq!(got, vec![vec![1]]);
+        // empty cand + non-empty fini ⇒ nothing
+        let got = kernel_cliques(&g, vec![1], vec![], vec![0]);
+        assert!(got.is_empty());
+        // singleton windows
+        let got = kernel_cliques(&g, vec![], vec![2], vec![]);
+        assert_eq!(got, vec![vec![2]]);
+    }
+}

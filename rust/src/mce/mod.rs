@@ -2,6 +2,7 @@
 //! (Tomita–Tanaka–Takahashi) and the paper's parallel algorithms
 //! ParTTT (Alg. 3) and ParMCE (Alg. 4).
 
+pub mod bitkernel;
 pub mod oracle;
 pub mod parmce;
 pub mod parttt;
@@ -10,6 +11,7 @@ pub mod ranking;
 pub mod sink;
 pub mod ttt;
 
+pub use bitkernel::DEFAULT_BITSET_CUTOFF;
 pub use parmce::{parmce, ParMceConfig};
 pub use parttt::{parttt, ParTttConfig};
 pub use ranking::{RankStrategy, Ranking};

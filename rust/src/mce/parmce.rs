@@ -7,6 +7,13 @@
 //! exact and duplicate-free, and the rank function (degree / triangle /
 //! degeneracy) shrinks the share of expensive vertices (load balancing à la
 //! PECO, but with nested parallelism inside each subproblem).
+//!
+//! Every per-vertex subproblem inherits the [`ParTttConfig`] hand-offs:
+//! tasks spawn until `seq_cutoff`, and working sets at or below
+//! `bitset_cutoff` finish in the dense bit-parallel kernel
+//! ([`crate::mce::bitkernel`]).  [`subproblems_timed`] measures with the
+//! default hand-off (matching real execution); [`trace`] stays slice-only
+//! because the kernel would collapse whole subtrees into one trace node.
 
 use std::sync::Arc;
 use std::time::Instant;

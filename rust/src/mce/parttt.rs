@@ -19,6 +19,7 @@ use std::sync::Arc;
 use crate::coordinator::pool::{ScopeHandle, ThreadPool};
 use crate::graph::csr::CsrGraph;
 use crate::graph::Vertex;
+use crate::mce::bitkernel;
 use crate::mce::pivot::{choose_pivot, par_pivot};
 use crate::mce::sink::CliqueSink;
 use crate::mce::ttt;
@@ -31,6 +32,12 @@ pub struct ParTttConfig {
     /// |cand ∪ fini| above which the pivot itself is computed in parallel
     /// (ParPivot, Algorithm 2); below, sequential pivoting is cheaper.
     pub par_pivot_min: usize,
+    /// |cand| + |fini| at or below which the subproblem finishes in the
+    /// dense bit-parallel kernel ([`crate::mce::bitkernel`]); 0 disables
+    /// the kernel.  Composes with `seq_cutoff`: tasks above both spawn,
+    /// tasks between them run sequential slice TTT (which itself hands
+    /// off once the working set shrinks under this threshold).
+    pub bitset_cutoff: usize,
 }
 
 impl Default for ParTttConfig {
@@ -38,6 +45,7 @@ impl Default for ParTttConfig {
         ParTttConfig {
             seq_cutoff: 32,
             par_pivot_min: 4096,
+            bitset_cutoff: bitkernel::DEFAULT_BITSET_CUTOFF,
         }
     }
 }
@@ -88,9 +96,23 @@ fn run_task(
         }
         return;
     }
+    // dense hand-off: working sets under the bitset threshold finish
+    // entirely in the bit-parallel kernel (sequentially, in-task —
+    // parallel spawning still happens above this point)
+    if cfg.bitset_cutoff > 0 && cand.len() + fini.len() <= cfg.bitset_cutoff {
+        bitkernel::enumerate_subproblem(g.as_ref(), &mut k, &cand, &fini, sink.as_ref());
+        return;
+    }
     // granularity control: small subproblems run sequentially in-task
     if cand.len() + fini.len() <= cfg.seq_cutoff {
-        ttt::ttt_from(g.as_ref(), &mut k, cand, fini, sink.as_ref());
+        ttt::ttt_from_with_cutoff(
+            g.as_ref(),
+            &mut k,
+            cand,
+            fini,
+            sink.as_ref(),
+            cfg.bitset_cutoff,
+        );
         return;
     }
 
@@ -166,6 +188,7 @@ mod tests {
         let cfg = ParTttConfig {
             seq_cutoff: 0,
             par_pivot_min: 8, // force the ParPivot path too
+            bitset_cutoff: 0, // slice path all the way down
         };
         let g = generators::moon_moser(3);
         let cliques = run_parttt(g, 4, cfg);
@@ -187,6 +210,7 @@ mod tests {
                     ParTttConfig {
                         seq_cutoff: 2,
                         par_pivot_min: 4096,
+                        bitset_cutoff: 3,
                     },
                 );
                 let want = oracle::maximal_cliques(g);
@@ -197,6 +221,30 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn bitset_cutoff_values_agree_under_parallel_spawning() {
+        let g = generators::planted_cliques(120, 0.04, 5, 5, 9, 7);
+        let want = run_parttt(
+            g.clone(),
+            4,
+            ParTttConfig {
+                bitset_cutoff: 0,
+                ..ParTttConfig::default()
+            },
+        );
+        for cutoff in [4, 64, usize::MAX] {
+            let got = run_parttt(
+                g.clone(),
+                4,
+                ParTttConfig {
+                    bitset_cutoff: cutoff,
+                    ..ParTttConfig::default()
+                },
+            );
+            assert_eq!(got, want, "cutoff {cutoff}");
+        }
     }
 
     #[test]

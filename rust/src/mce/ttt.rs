@@ -16,6 +16,7 @@ use std::time::Instant;
 use crate::coordinator::sim::Trace;
 use crate::graph::csr::CsrGraph;
 use crate::graph::{AdjacencyGraph, Vertex};
+use crate::mce::bitkernel::{self, DEFAULT_BITSET_CUTOFF};
 use crate::mce::pivot::choose_pivot;
 use crate::mce::sink::CliqueSink;
 use crate::util::vset;
@@ -31,12 +32,20 @@ pub struct TttMetrics {
 
 /// Enumerate all maximal cliques of `g` into `sink`.
 pub fn ttt(g: &CsrGraph, sink: &dyn CliqueSink) {
+    ttt_with_cutoff(g, sink, DEFAULT_BITSET_CUTOFF)
+}
+
+/// As [`ttt`] with an explicit bitset hand-off threshold: subproblems
+/// whose `|cand| + |fini|` is at or below `bitset_cutoff` run in the
+/// dense bit-parallel kernel ([`crate::mce::bitkernel`]); 0 keeps the
+/// whole recursion on the sorted-slice path.
+pub fn ttt_with_cutoff(g: &CsrGraph, sink: &dyn CliqueSink, bitset_cutoff: usize) {
     if g.n() == 0 {
         return;
     }
     let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
     let mut k = Vec::new();
-    ttt_from(g, &mut k, cand, Vec::new(), sink);
+    ttt_from_with_cutoff(g, &mut k, cand, Vec::new(), sink, bitset_cutoff);
 }
 
 /// Enumerate all maximal cliques containing `k`, extendable by `cand`,
@@ -46,16 +55,31 @@ pub fn ttt(g: &CsrGraph, sink: &dyn CliqueSink) {
 ///
 /// Hot path: recursion buffers (ext / cand_q / fini_q) come from a free
 /// pool, so steady-state enumeration performs no allocation (§Perf
-/// optimization 1 — see EXPERIMENTS.md for the before/after).
+/// optimization 1 — see EXPERIMENTS.md for the before/after), and
+/// subproblems at or below [`DEFAULT_BITSET_CUTOFF`] finish in the dense
+/// bit-parallel kernel (§Perf optimization 3).
 pub fn ttt_from<G: AdjacencyGraph + ?Sized>(
+    g: &G,
+    k: &mut Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: &dyn CliqueSink,
+) {
+    ttt_from_with_cutoff(g, k, cand, fini, sink, DEFAULT_BITSET_CUTOFF)
+}
+
+/// As [`ttt_from`] with an explicit bitset hand-off threshold
+/// (0 = slice-only recursion).
+pub fn ttt_from_with_cutoff<G: AdjacencyGraph + ?Sized>(
     g: &G,
     k: &mut Vec<Vertex>,
     mut cand: Vec<Vertex>,
     mut fini: Vec<Vertex>,
     sink: &dyn CliqueSink,
+    bitset_cutoff: usize,
 ) {
     let mut pool: Vec<Vec<Vertex>> = Vec::new();
-    rec_pooled(g, k, &mut cand, &mut fini, sink, &mut pool);
+    rec_pooled(g, k, &mut cand, &mut fini, sink, &mut pool, bitset_cutoff);
 }
 
 fn rec_pooled<G: AdjacencyGraph + ?Sized>(
@@ -65,7 +89,13 @@ fn rec_pooled<G: AdjacencyGraph + ?Sized>(
     fini: &mut Vec<Vertex>,
     sink: &dyn CliqueSink,
     pool: &mut Vec<Vec<Vertex>>,
+    bitset_cutoff: usize,
 ) {
+    // dense hand-off: finish small working sets in bitset space
+    if bitset_cutoff > 0 && cand.len() + fini.len() <= bitset_cutoff {
+        bitkernel::enumerate_subproblem(g, k, cand, fini, sink);
+        return;
+    }
     if cand.is_empty() {
         if fini.is_empty() {
             sink.emit(k);
@@ -85,7 +115,7 @@ fn rec_pooled<G: AdjacencyGraph + ?Sized>(
         vset::intersect_into(cand, nbrs, &mut cand_q);
         vset::intersect_into(fini, nbrs, &mut fini_q);
         k.push(q);
-        rec_pooled(g, k, &mut cand_q, &mut fini_q, sink, pool);
+        rec_pooled(g, k, &mut cand_q, &mut fini_q, sink, pool, bitset_cutoff);
         k.pop();
         vset::remove_sorted(cand, q);
         vset::insert_sorted(fini, q);
@@ -98,7 +128,9 @@ fn rec_pooled<G: AdjacencyGraph + ?Sized>(
     pool.push(fini_q);
 }
 
-/// As [`ttt_from`] but collecting metrics.
+/// As [`ttt_from`] but collecting metrics.  Stays on the slice path for
+/// the whole recursion — the bitset kernel would hide the per-node
+/// pivot/update attribution this exists to measure.
 pub fn ttt_from_metered<G: AdjacencyGraph + ?Sized>(
     g: &G,
     k: &mut Vec<Vertex>,
@@ -173,7 +205,8 @@ fn rec<G: AdjacencyGraph + ?Sized>(
 
 /// Traced enumeration: one [`Trace`] node per recursive call with its
 /// *exclusive* time (pivot + set updates + emit, excluding children).
-/// This is the input to `coordinator::sim` for Figures 6/7.
+/// This is the input to `coordinator::sim` for Figures 6/7.  Slice-only
+/// (the kernel would collapse whole subtrees into one trace node).
 pub fn ttt_traced<G: AdjacencyGraph + ?Sized>(
     g: &G,
     k: &mut Vec<Vertex>,
@@ -280,6 +313,23 @@ mod tests {
             let sink = CountSink::new();
             ttt(&g, &sink);
             assert_eq!(sink.count(), 3u64.pow(k as u32), "k={k}");
+        }
+    }
+
+    #[test]
+    fn bitset_cutoff_values_agree() {
+        // 0 (disabled), tiny (hand-off mid-recursion), huge (whole graph
+        // runs in the kernel) must all enumerate the same set.
+        let g = generators::gnp(26, 0.45, 12);
+        let want = {
+            let sink = CollectSink::new();
+            ttt_with_cutoff(&g, &sink, 0);
+            sink.into_canonical()
+        };
+        for cutoff in [2, 5, 64, usize::MAX] {
+            let sink = CollectSink::new();
+            ttt_with_cutoff(&g, &sink, cutoff);
+            assert_eq!(sink.into_canonical(), want, "cutoff {cutoff}");
         }
     }
 

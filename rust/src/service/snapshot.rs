@@ -34,10 +34,10 @@ pub struct CliqueSnapshot {
     pub(crate) cliques: Vec<Option<Arc<[Vertex]>>>,
     /// vertex-indexed posting lists of live clique ids, sorted ascending.
     pub(crate) index: Vec<Arc<Vec<CliqueId>>>,
-    /// live ids ordered by (size descending, id ascending).
-    pub(crate) by_size: Arc<Vec<CliqueId>>,
-    /// `size_bins[s]` = live cliques with exactly `s` members.
-    pub(crate) size_bins: Arc<Vec<u64>>,
+    /// `size_buckets[s]` = live ids of size-`s` cliques, ascending —
+    /// size-ordered walks go bucket-by-bucket from the largest down, and
+    /// the bucket lengths are the size histogram.
+    pub(crate) size_buckets: Arc<Vec<Arc<Vec<CliqueId>>>>,
     pub(crate) live: usize,
 }
 
@@ -106,22 +106,36 @@ impl CliqueSnapshot {
     }
 
     /// The `k` largest maximal cliques (size descending, id ascending
-    /// among ties); fewer if |C(G)| < k.
+    /// among ties); fewer if |C(G)| < k.  Walks the per-size buckets
+    /// from the largest size down, so the cost is O(k) plus the empty
+    /// buckets skipped — independent of |C(G)|.
     pub fn top_k_largest(&self, k: usize) -> Vec<Arc<[Vertex]>> {
-        self.by_size.iter().take(k).map(|&id| self.intern(id)).collect()
+        let mut out = Vec::with_capacity(k.min(self.live));
+        for bucket in self.size_buckets.iter().rev() {
+            for &id in bucket.iter() {
+                if out.len() == k {
+                    return out;
+                }
+                out.push(self.intern(id));
+            }
+        }
+        out
     }
 
     /// Largest clique size at this epoch (0 when C(G) is empty).
     pub fn max_size(&self) -> usize {
-        self.by_size.first().map(|&id| self.intern(id).len()).unwrap_or(0)
+        self.size_buckets
+            .iter()
+            .rposition(|b| !b.is_empty())
+            .unwrap_or(0)
     }
 
     /// Clique-size histogram at this epoch (the Figure 5 shape, served
-    /// from the maintained bins — no enumeration).
+    /// from the maintained bucket lengths — no enumeration).
     pub fn size_histogram(&self) -> SizeHistogram {
-        let hist = SizeHistogram::new(self.size_bins.len().saturating_sub(1).max(1));
-        for (size, &n) in self.size_bins.iter().enumerate() {
-            hist.record_many(size, n);
+        let hist = SizeHistogram::new(self.size_buckets.len().saturating_sub(1).max(1));
+        for (size, bucket) in self.size_buckets.iter().enumerate() {
+            hist.record_many(size, bucket.len() as u64);
         }
         hist
     }
@@ -192,19 +206,28 @@ impl CliqueSnapshot {
                 }
             }
         }
-        if self.by_size.len() != live {
-            return Err(format!(
-                "by_size len {} != live {live}",
-                self.by_size.len()
-            ));
+        let bucketed: usize = self.size_buckets.iter().map(|b| b.len()).sum();
+        if bucketed != live {
+            return Err(format!("size buckets hold {bucketed} ids != live {live}"));
         }
-        for w in self.by_size.windows(2) {
-            let (a, b) = (self.intern(w[0]).len(), self.intern(w[1]).len());
-            if a < b || (a == b && w[0] >= w[1]) {
-                return Err(format!("by_size order violated at ids {} {}", w[0], w[1]));
+        for (size, bucket) in self.size_buckets.iter().enumerate() {
+            if !bucket.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("size bucket {size} not ascending"));
+            }
+            for &id in bucket.iter() {
+                match self.clique(id) {
+                    None => return Err(format!("size bucket {size} holds retired id {id}")),
+                    Some(c) if c.len() != size => {
+                        return Err(format!(
+                            "size bucket {size} holds id {id} of size {}",
+                            c.len()
+                        ))
+                    }
+                    _ => {}
+                }
             }
         }
-        let mut stored = self.size_bins.as_slice().to_vec();
+        let mut stored: Vec<u64> = self.size_buckets.iter().map(|b| b.len() as u64).collect();
         while stored.last() == Some(&0) {
             stored.pop();
         }
@@ -212,7 +235,7 @@ impl CliqueSnapshot {
             bins.pop();
         }
         if stored != bins {
-            return Err(format!("size bins {stored:?} != recomputed {bins:?}"));
+            return Err(format!("size buckets {stored:?} != recomputed {bins:?}"));
         }
         Ok(())
     }
@@ -315,8 +338,12 @@ mod tests {
                 Arc::new(vec![0]),
                 Arc::new(vec![1]),
             ],
-            by_size: Arc::new(vec![0, 1]),
-            size_bins: Arc::new(vec![0, 0, 1, 1]),
+            size_buckets: Arc::new(vec![
+                Arc::new(vec![]),
+                Arc::new(vec![]),
+                Arc::new(vec![1]),
+                Arc::new(vec![0]),
+            ]),
             live: 2,
         }
     }
@@ -358,7 +385,13 @@ mod tests {
         s.index[0] = Arc::new(vec![0, 2]); // retired id in posting
         assert!(s.validate().is_err());
         let mut s = tiny_snapshot();
-        s.by_size = Arc::new(vec![1, 0]); // size order violated
+        // id 0 (size 3) filed under bucket 2, id 1 (size 2) under 3
+        s.size_buckets = Arc::new(vec![
+            Arc::new(vec![]),
+            Arc::new(vec![]),
+            Arc::new(vec![0]),
+            Arc::new(vec![1]),
+        ]);
         assert!(s.validate().is_err());
     }
 

@@ -3,10 +3,10 @@
 //!
 //! Every clique is interned once (`Arc<[Vertex]>`, canonical member
 //! order) and addressed by a stable [`CliqueId`]; a batch's change set
-//! (Λⁿᵉʷ, Λᵈᵉˡ) updates only the touched posting lists, the size order
-//! and the size bins — never a rebuild.  `freeze` then publishes by
-//! copying at the pointer level: untouched posting lists, clique data,
-//! the size order and the bins are all shared with previous snapshots
+//! (Λⁿᵉʷ, Λᵈᵉˡ) updates only the touched posting lists and per-size
+//! buckets — never a rebuild.  `freeze` then publishes by
+//! copying at the pointer level: untouched posting lists, clique data
+//! and size buckets are all shared with previous snapshots
 //! (`Arc` copy-on-write via `make_mut`), so publish cost is pointer
 //! clones, not clique bytes.  Ids are never reused, so the id-indexed
 //! slot table grows with *total interned* cliques over the service's
@@ -29,8 +29,13 @@ pub(crate) struct CliqueStore {
     /// canonical members → id, for Λᵈᵉˡ retirement (writer-private).
     by_key: HashMap<Arc<[Vertex]>, CliqueId, FxBuildHasher>,
     index: Vec<Arc<Vec<CliqueId>>>,
-    by_size: Arc<Vec<CliqueId>>,
-    size_bins: Arc<Vec<u64>>,
+    /// `size_buckets[s]` = live ids of size-`s` cliques, ascending.
+    /// Fresh ids are maximal, so `add` is an O(1) push; `retire` is a
+    /// binary-search remove within one bucket; `top_k_largest` walks
+    /// buckets from the largest size down.  Per-bucket `Arc`s give the
+    /// same pointer-level COW publish as the posting lists: a batch
+    /// deep-copies only the buckets it touches.
+    size_buckets: Arc<Vec<Arc<Vec<CliqueId>>>>,
     live: usize,
 }
 
@@ -41,8 +46,7 @@ impl CliqueStore {
             cliques: Vec::new(),
             by_key: HashMap::default(),
             index: (0..n).map(|_| Arc::new(Vec::new())).collect(),
-            by_size: Arc::new(Vec::new()),
-            size_bins: Arc::new(Vec::new()),
+            size_buckets: Arc::new(Vec::new()),
             live: 0,
         }
     }
@@ -51,11 +55,9 @@ impl CliqueStore {
     /// rebuild verification).
     pub fn from_registry(n: usize, registry: &CliqueRegistry, epoch: u64) -> Self {
         let mut store = CliqueStore::new(n, epoch);
-        // deterministic id assignment in (size desc, canonical) order:
-        // every `add` then lands at the END of `by_size` (fresh ids are
-        // maximal and sizes are non-increasing), so bootstrap stays
-        // O(C log C) instead of the O(C²) a lexicographic insertion
-        // order would cost in Vec::insert memmoves
+        // deterministic id assignment in (size desc, canonical) order —
+        // stable across engine variants, and every bucket fills in
+        // ascending-id order as a side effect
         let mut all: Vec<Vec<Vertex>> = Vec::with_capacity(registry.len());
         registry.for_each(|c| all.push(c.to_vec()));
         all.sort_unstable_by(|a, b| b.len().cmp(&a.len()).then_with(|| a.cmp(b)));
@@ -88,8 +90,7 @@ impl CliqueStore {
             epoch: self.epoch,
             cliques: self.cliques.clone(),
             index: self.index.clone(),
-            by_size: Arc::clone(&self.by_size),
-            size_bins: Arc::clone(&self.size_bins),
+            size_buckets: Arc::clone(&self.size_buckets),
             live: self.live,
         }
     }
@@ -111,13 +112,12 @@ impl CliqueStore {
             // fresh ids are maximal, so push preserves the sort
             Arc::make_mut(&mut self.index[v as usize]).push(id);
         }
-        let pos = self.size_insert_pos(c.len(), id);
-        Arc::make_mut(&mut self.by_size).insert(pos, id);
-        let bins = Arc::make_mut(&mut self.size_bins);
-        if bins.len() <= c.len() {
-            bins.resize(c.len() + 1, 0);
+        let buckets = Arc::make_mut(&mut self.size_buckets);
+        if buckets.len() <= c.len() {
+            buckets.resize_with(c.len() + 1, || Arc::new(Vec::new()));
         }
-        bins[c.len()] += 1;
+        // fresh ids are maximal, so push keeps the bucket ascending: O(1)
+        Arc::make_mut(&mut buckets[c.len()]).push(id);
         self.live += 1;
     }
 
@@ -127,9 +127,14 @@ impl CliqueStore {
             debug_assert!(false, "retiring unknown clique {c:?}");
             return;
         };
-        let pos = self.size_insert_pos(c.len(), id);
-        debug_assert_eq!(self.by_size.get(pos), Some(&id), "by_size out of sync");
-        Arc::make_mut(&mut self.by_size).remove(pos);
+        let buckets = Arc::make_mut(&mut self.size_buckets);
+        let bucket = Arc::make_mut(&mut buckets[c.len()]);
+        match bucket.binary_search(&id) {
+            Ok(p) => {
+                bucket.remove(p);
+            }
+            Err(_) => debug_assert!(false, "size bucket {} missing id {id}", c.len()),
+        }
         for &v in c {
             let list = Arc::make_mut(&mut self.index[v as usize]);
             match list.binary_search(&id) {
@@ -140,19 +145,7 @@ impl CliqueStore {
             }
         }
         self.cliques[id as usize] = None;
-        let bins = Arc::make_mut(&mut self.size_bins);
-        debug_assert!(bins[c.len()] > 0);
-        bins[c.len()] -= 1;
         self.live -= 1;
-    }
-
-    /// Position of (size `len`, `id`) in the (size desc, id asc) order —
-    /// the insertion point for a new id, the exact slot for a live one.
-    fn size_insert_pos(&self, len: usize, id: CliqueId) -> usize {
-        self.by_size.partition_point(|&other| {
-            let other_len = self.cliques[other as usize].as_ref().map_or(0, |c| c.len());
-            other_len > len || (other_len == len && other < id)
-        })
     }
 }
 

@@ -155,6 +155,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Shorthand for the bitset hand-off threshold of [`ParTttConfig`]:
+    /// subproblems whose `|cand| + |fini|` is at or below it finish in
+    /// the dense bit-parallel kernel ([`crate::mce::bitkernel`]); 0
+    /// disables the kernel (slice-only recursion).
+    pub fn bitset_cutoff(mut self, cutoff: usize) -> Self {
+        self.parttt.bitset_cutoff = cutoff;
+        self
+    }
+
     /// Default sink shape for [`MceSession::run`] (default: `Count`).
     pub fn sink(mut self, sink: SinkSpec) -> Self {
         self.sink = sink;

@@ -11,14 +11,15 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;
-use crate::dynamic::imce::{imce_batch, BatchTimings};
-use crate::dynamic::par_imce::par_imce_batch;
+use crate::dynamic::imce::{imce_batch_with_cutoff, BatchTimings};
+use crate::dynamic::par_imce::par_imce_batch_with_cutoff;
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::stream::{imce_remove_batch, BatchRecord, EdgeStream};
 use crate::dynamic::BatchResult;
 use crate::graph::adj::DynGraph;
 use crate::graph::csr::CsrGraph;
 use crate::graph::{Edge, Vertex};
+use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 
 /// Which incremental engine a [`DynamicSession`] applies batches with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -90,6 +91,7 @@ pub struct DynamicSession {
     algo: DynAlgo,
     threads: usize,
     pool: Option<ThreadPool>,
+    bitset_cutoff: usize,
     batches_applied: usize,
     total_new: u64,
     total_subsumed: u64,
@@ -110,6 +112,7 @@ impl DynamicSession {
             algo,
             threads: algo.default_threads(),
             pool: None,
+            bitset_cutoff: DEFAULT_BITSET_CUTOFF,
             batches_applied: 0,
             total_new: 0,
             total_subsumed: 0,
@@ -143,6 +146,7 @@ impl DynamicSession {
             algo,
             threads,
             pool,
+            bitset_cutoff: DEFAULT_BITSET_CUTOFF,
             batches_applied: 0,
             total_new: 0,
             total_subsumed: 0,
@@ -165,6 +169,22 @@ impl DynamicSession {
     pub fn with_pool(mut self, pool: ThreadPool) -> DynamicSession {
         self.pool = Some(pool);
         self
+    }
+
+    /// Bitset hand-off threshold for the TTT-exclude recompute calls
+    /// inside every insert batch: working sets at or below it run in the
+    /// dense bit-parallel kernel ([`crate::mce::bitkernel`]); 0 keeps
+    /// the recursion on the sorted-slice path.  Applies to batches from
+    /// this call on — the bootstrap enumeration `from_graph*` already
+    /// ran uses the default hand-off (the clique set is identical either
+    /// way; the knob only changes execution strategy).
+    pub fn with_bitset_cutoff(mut self, cutoff: usize) -> DynamicSession {
+        self.bitset_cutoff = cutoff;
+        self
+    }
+
+    pub fn bitset_cutoff(&self) -> usize {
+        self.bitset_cutoff
     }
 
     pub fn algo(&self) -> DynAlgo {
@@ -201,13 +221,24 @@ impl DynamicSession {
     /// phase timings for the scheduler simulation (Figures 8/9).
     pub fn apply_batch_timed(&mut self, edges: &[Edge]) -> (BatchResult, BatchTimings) {
         let (result, timings) = match self.algo {
-            DynAlgo::Imce => imce_batch(&mut self.graph, &self.registry, edges),
+            DynAlgo::Imce => imce_batch_with_cutoff(
+                &mut self.graph,
+                &self.registry,
+                edges,
+                self.bitset_cutoff,
+            ),
             DynAlgo::ParImce => {
                 if self.pool.is_none() {
                     self.pool = Some(ThreadPool::new(self.threads));
                 }
                 let pool = self.pool.as_ref().expect("pool just ensured");
-                par_imce_batch(pool, &mut self.graph, &self.registry, edges)
+                par_imce_batch_with_cutoff(
+                    pool,
+                    &mut self.graph,
+                    &self.registry,
+                    edges,
+                    self.bitset_cutoff,
+                )
             }
         };
         self.batches_applied += 1;
@@ -326,6 +357,23 @@ mod tests {
             assert_eq!(seq.apply_batch(chunk), par.apply_batch(chunk));
         }
         assert_eq!(seq.clique_count(), par.clique_count());
+    }
+
+    #[test]
+    fn bitset_cutoff_values_agree_across_batches() {
+        let target = generators::gnp(13, 0.5, 21);
+        let mut slice = DynamicSession::from_empty(13, DynAlgo::Imce).with_bitset_cutoff(0);
+        let mut bit = DynamicSession::from_empty(13, DynAlgo::Imce).with_bitset_cutoff(4);
+        let mut par_bit = DynamicSession::from_empty(13, DynAlgo::ParImce)
+            .with_threads(3)
+            .with_bitset_cutoff(usize::MAX);
+        for chunk in target.edges().chunks(6) {
+            let want = slice.apply_batch(chunk);
+            assert_eq!(bit.apply_batch(chunk), want);
+            assert_eq!(par_bit.apply_batch(chunk), want);
+        }
+        assert_eq!(slice.clique_count(), bit.clique_count());
+        assert_eq!(slice.clique_count(), par_bit.clique_count());
     }
 
     #[test]

@@ -214,7 +214,7 @@ impl Enumerator for TttEnumerator {
         sink: &Arc<dyn CliqueSink>,
     ) -> RunReport {
         run_counted(Algo::Ttt, ctx, sink, |s| {
-            ttt::ttt(g, s.as_ref());
+            ttt::ttt_with_cutoff(g, s.as_ref(), ctx.parttt_config().bitset_cutoff);
             RunOutcome::Completed
         })
     }
@@ -342,7 +342,7 @@ impl Enumerator for PecoEnumerator {
         let ranking = (!ctx.is_cancelled()).then(|| ctx.ranking(g, ctx.rank_strategy()));
         run_counted(Algo::Peco, ctx, sink, |s| {
             let ranking = ranking.unwrap_or_else(|| ctx.ranking(g, ctx.rank_strategy()));
-            peco::peco(ctx.pool(), g, &ranking, s);
+            peco::peco(ctx.pool(), g, &ranking, s, ctx.parttt_config().bitset_cutoff);
             RunOutcome::Completed
         })
     }
@@ -404,7 +404,14 @@ impl Enumerator for GpEnumerator {
                 };
                 let mut k = vec![v];
                 let t0 = Instant::now();
-                ttt::ttt_from(g.as_ref(), &mut k, cand, fini, &tee);
+                ttt::ttt_from_with_cutoff(
+                    g.as_ref(),
+                    &mut k,
+                    cand,
+                    fini,
+                    &tee,
+                    ctx.parttt_config().bitset_cutoff,
+                );
                 subs.push(Subproblem {
                     vertex: v,
                     cliques: local.count(),

@@ -98,11 +98,7 @@ impl BitSet {
     }
 
     pub fn iter(&self) -> BitIter<'_> {
-        BitIter {
-            words: &self.words,
-            word_idx: 0,
-            current: self.words.first().copied().unwrap_or(0),
-        }
+        BitIter::over(&self.words)
     }
 
     /// First set bit, if any.
@@ -120,10 +116,157 @@ impl BitSet {
     }
 }
 
+/// A bit row is a plain word slice: the unit [`BitMatrix`] hands out and
+/// the [`row`] helpers below operate on.  All rows in one kernel share a
+/// stride, so word-wise zips never run ragged.
+pub type BitRow = [u64];
+
+/// Word-slice primitives for fixed-stride rows (the bit-parallel kernel
+/// hot path — see `mce::bitkernel`).  Callers guarantee equal lengths;
+/// the zips silently truncate otherwise, so debug asserts guard it.
+pub mod row {
+    use super::{BitIter, BitRow};
+
+    /// out = a ∩ b.
+    #[inline]
+    pub fn and_into(a: &BitRow, b: &BitRow, out: &mut BitRow) {
+        debug_assert!(a.len() == b.len() && a.len() == out.len());
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x & y;
+        }
+    }
+
+    /// out = a \ b.
+    #[inline]
+    pub fn and_not_into(a: &BitRow, b: &BitRow, out: &mut BitRow) {
+        debug_assert!(a.len() == b.len() && a.len() == out.len());
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x & !y;
+        }
+    }
+
+    /// |a ∩ b| by popcount, no allocation.
+    #[inline]
+    pub fn and_count(a: &BitRow, b: &BitRow) -> usize {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones() as usize).sum()
+    }
+
+    /// Does a ∩ b have any member?
+    #[inline]
+    pub fn intersects(a: &BitRow, b: &BitRow) -> bool {
+        a.iter().zip(b).any(|(&x, &y)| x & y != 0)
+    }
+
+    #[inline]
+    pub fn count(a: &BitRow) -> usize {
+        a.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    #[inline]
+    pub fn is_empty(a: &BitRow) -> bool {
+        a.iter().all(|&w| w == 0)
+    }
+
+    #[inline]
+    pub fn set(a: &mut BitRow, i: u32) {
+        a[i as usize >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(a: &mut BitRow, i: u32) {
+        a[i as usize >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn test(a: &BitRow, i: u32) -> bool {
+        (a[i as usize >> 6] >> (i & 63)) & 1 != 0
+    }
+
+    /// Iterate set bits in ascending order.
+    #[inline]
+    pub fn iter(a: &BitRow) -> BitIter<'_> {
+        BitIter::over(a)
+    }
+}
+
+/// Fixed-stride dense adjacency over a relabeled `0..w` vertex window:
+/// row `i` holds the in-window neighbours of local vertex `i` as bits.
+/// One flat allocation, reusable across kernel invocations via
+/// [`BitMatrix::reset`] (the per-worker arena keeps one around).
+#[derive(Clone, Debug, Default)]
+pub struct BitMatrix {
+    words: Vec<u64>,
+    stride: usize,
+    rows: usize,
+}
+
+impl BitMatrix {
+    pub fn new(rows: usize) -> Self {
+        let mut m = BitMatrix::default();
+        m.reset(rows);
+        m
+    }
+
+    /// Re-shape to a square `rows × rows` matrix, zeroing every bit.
+    /// Keeps the existing allocation when it is large enough.
+    pub fn reset(&mut self, rows: usize) {
+        self.rows = rows;
+        self.stride = rows.div_ceil(64);
+        self.words.clear();
+        self.words.resize(rows * self.stride, 0);
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Words per row — the shared stride of every [`BitRow`] here.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &BitRow {
+        &self.words[r * self.stride..(r + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut BitRow {
+        &mut self.words[r * self.stride..(r + 1) * self.stride]
+    }
+
+    /// Set the (r, c) bit — `c` is a local column id `< rows`.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize) {
+        debug_assert!(r < self.rows && c < self.rows);
+        self.words[r * self.stride + (c >> 6)] |= 1u64 << (c & 63);
+    }
+
+    #[inline]
+    pub fn test(&self, r: usize, c: usize) -> bool {
+        (self.words[r * self.stride + (c >> 6)] >> (c & 63)) & 1 != 0
+    }
+}
+
 pub struct BitIter<'a> {
     words: &'a [u64],
     word_idx: usize,
     current: u64,
+}
+
+impl<'a> BitIter<'a> {
+    /// Iterate the set bits of a raw word slice.
+    #[inline]
+    pub fn over(words: &'a [u64]) -> Self {
+        BitIter {
+            words,
+            word_idx: 0,
+            current: words.first().copied().unwrap_or(0),
+        }
+    }
 }
 
 impl Iterator for BitIter<'_> {
@@ -219,5 +362,58 @@ mod tests {
         s.clear();
         assert!(s.is_empty());
         assert_eq!(s.first(), None);
+    }
+
+    #[test]
+    fn matrix_rows_round_trip() {
+        let mut m = BitMatrix::new(70);
+        assert_eq!(m.stride(), 2);
+        m.set(0, 69);
+        m.set(69, 0);
+        m.set(3, 3);
+        assert!(m.test(0, 69) && m.test(69, 0) && m.test(3, 3));
+        assert!(!m.test(0, 68));
+        assert_eq!(row::iter(m.row(0)).collect::<Vec<_>>(), vec![69]);
+        // reset reshapes and zeroes
+        m.reset(10);
+        assert_eq!(m.rows(), 10);
+        assert_eq!(m.stride(), 1);
+        assert!(row::is_empty(m.row(3)));
+    }
+
+    #[test]
+    fn row_ops_match_bitset_ops() {
+        let mut rng = Rng::new(123);
+        for _ in 0..40 {
+            let cap = 190;
+            let a_v: Vec<u32> = (0..cap as u32).filter(|_| rng.gen_bool(0.4)).collect();
+            let b_v: Vec<u32> = (0..cap as u32).filter(|_| rng.gen_bool(0.4)).collect();
+            let stride = cap.div_ceil(64);
+            let mut a = vec![0u64; stride];
+            let mut b = vec![0u64; stride];
+            for &x in &a_v {
+                row::set(&mut a, x);
+            }
+            for &x in &b_v {
+                row::set(&mut b, x);
+            }
+            let inter: Vec<u32> = a_v.iter().filter(|x| b_v.contains(x)).copied().collect();
+            let mut out = vec![u64::MAX; stride];
+            row::and_into(&a, &b, &mut out);
+            assert_eq!(row::iter(&out).collect::<Vec<_>>(), inter);
+            assert_eq!(row::and_count(&a, &b), inter.len());
+            assert_eq!(row::intersects(&a, &b), !inter.is_empty());
+            row::and_not_into(&a, &b, &mut out);
+            let diff: Vec<u32> = a_v.iter().filter(|x| !b_v.contains(x)).copied().collect();
+            assert_eq!(row::iter(&out).collect::<Vec<_>>(), diff);
+            assert_eq!(row::count(&a), a_v.len());
+            for &x in &a_v {
+                assert!(row::test(&a, x));
+            }
+            if let Some(&x) = a_v.first() {
+                row::clear(&mut a, x);
+                assert!(!row::test(&a, x));
+            }
+        }
     }
 }

@@ -11,6 +11,28 @@ pub fn contains(sorted: &[u32], x: u32) -> bool {
     sorted.binary_search(&x).is_ok()
 }
 
+/// Index of the first element of `s[from..]` that is `>= x`, found by
+/// true exponential search: doubling probes from the cursor bracket the
+/// answer in O(log gap), then a binary search finishes inside the
+/// bracket.  The gallop loops below carry the cursor across the small
+/// side's elements, so a lopsided intersection costs
+/// O(small · log(gap)) instead of O(small · log(big)).
+#[inline]
+pub(crate) fn gallop_lower_bound(s: &[u32], from: usize, x: u32) -> usize {
+    if from >= s.len() || s[from] >= x {
+        return from;
+    }
+    // s[from] < x: probe from+1, from+2, from+4, … until we overshoot.
+    let mut ofs = 1usize;
+    while from + ofs < s.len() && s[from + ofs] < x {
+        ofs <<= 1;
+    }
+    // answer ∈ (from + ofs/2, from + ofs]
+    let lo = from + ofs / 2 + 1;
+    let hi = (from + ofs).min(s.len());
+    lo + s[lo..hi].partition_point(|&y| y < x)
+}
+
 /// |a ∩ b| for sorted slices, galloping when sizes are lopsided.
 pub fn intersection_count(a: &[u32], b: &[u32]) -> usize {
     if a.len() > b.len() {
@@ -21,8 +43,20 @@ pub fn intersection_count(a: &[u32], b: &[u32]) -> usize {
         return 0;
     }
     if b.len() / a.len() >= 8 {
-        // gallop: binary-search each element of the small side
-        return a.iter().filter(|&&x| contains(b, x)).count();
+        // gallop: exponential search from a moving cursor on the big side
+        let mut j = 0;
+        let mut n = 0;
+        for &x in a {
+            j = gallop_lower_bound(b, j, x);
+            if j >= b.len() {
+                break;
+            }
+            if b[j] == x {
+                n += 1;
+                j += 1;
+            }
+        }
+        return n;
     }
     let (mut i, mut j, mut n) = (0, 0, 0);
     while i < a.len() && j < b.len() {
@@ -53,7 +87,17 @@ fn intersect_into_inner(small: &[u32], big: &[u32], out: &mut Vec<u32>) {
         return;
     }
     if big.len() / small.len() >= 8 {
-        out.extend(small.iter().filter(|&&x| contains(big, x)));
+        let mut j = 0;
+        for &x in small {
+            j = gallop_lower_bound(big, j, x);
+            if j >= big.len() {
+                return;
+            }
+            if big[j] == x {
+                out.push(x);
+                j += 1;
+            }
+        }
         return;
     }
     let (mut i, mut j) = (0, 0);
@@ -104,6 +148,13 @@ pub fn difference(a: &[u32], b: &[u32]) -> Vec<u32> {
 /// a ∪ b as a fresh sorted Vec (inputs sorted, deduped).
 pub fn union(a: &[u32], b: &[u32]) -> Vec<u32> {
     let mut out = Vec::with_capacity(a.len() + b.len());
+    union_into(a, b, &mut out);
+    out
+}
+
+/// a ∪ b into `out` (cleared first). Inputs sorted+deduped; so is `out`.
+pub fn union_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
     let (mut i, mut j) = (0, 0);
     while i < a.len() || j < b.len() {
         if j >= b.len() || (i < a.len() && a[i] < b[j]) {
@@ -118,7 +169,6 @@ pub fn union(a: &[u32], b: &[u32]) -> Vec<u32> {
             j += 1;
         }
     }
-    out
 }
 
 /// Is `a` ⊆ `b`? Both sorted.
@@ -127,7 +177,15 @@ pub fn is_subset(a: &[u32], b: &[u32]) -> bool {
         return false;
     }
     if !a.is_empty() && b.len() / a.len() >= 16 {
-        return a.iter().all(|&x| contains(b, x));
+        let mut j = 0;
+        for &x in a {
+            j = gallop_lower_bound(b, j, x);
+            if j >= b.len() || b[j] != x {
+                return false;
+            }
+            j += 1;
+        }
+        return true;
     }
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
@@ -195,8 +253,8 @@ mod tests {
             nu.sort_unstable();
             nu.dedup();
             assert_eq!(union(&a, &b), nu);
-            assert_eq!(is_subset(&ni, &a), true);
-            assert_eq!(is_subset(&ni, &b), true);
+            assert!(is_subset(&ni, &a));
+            assert!(is_subset(&ni, &b));
         }
     }
 
@@ -238,5 +296,28 @@ mod tests {
         let mut buf = vec![99u32; 8];
         intersect_into(&[1, 3, 5], &[3, 5, 7], &mut buf);
         assert_eq!(buf, vec![3, 5]);
+    }
+
+    #[test]
+    fn gallop_lower_bound_matches_partition_point() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let s = rand_sorted(&mut rng, 400, 0.3);
+            let from = rng.gen_usize(s.len() + 1);
+            let x = rng.gen_usize(420) as u32;
+            let got = gallop_lower_bound(&s, from, x);
+            let want = from + s[from..].partition_point(|&y| y < x);
+            assert_eq!(got, want, "s.len()={}, from={from}, x={x}", s.len());
+        }
+        // cursor past the end and empty slices are fine
+        assert_eq!(gallop_lower_bound(&[], 0, 5), 0);
+        assert_eq!(gallop_lower_bound(&[1, 2], 2, 0), 2);
+    }
+
+    #[test]
+    fn union_into_reuses_buffer() {
+        let mut buf = vec![42u32; 4];
+        union_into(&[1, 4], &[2, 4, 9], &mut buf);
+        assert_eq!(buf, vec![1, 2, 4, 9]);
     }
 }

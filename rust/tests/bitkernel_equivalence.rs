@@ -1,0 +1,89 @@
+//! Bit-kernel equivalence: the dense bit-parallel subproblem kernel is a
+//! pure execution-strategy change, so for every algorithm and every
+//! hand-off threshold the enumerated clique set must be identical to the
+//! slice-only path (`--bitset-cutoff 0`).  Cutoff 4 forces the hand-off
+//! deep in the recursion, 64 mid-way, and the huge value runs entire
+//! enumerations inside the kernel.
+
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::{generators, Vertex};
+use parmce::session::{Algo, DynAlgo, DynamicSession, MceSession};
+
+fn fixtures() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        (
+            "triangle_tail",
+            CsrGraph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]),
+        ),
+        ("complete8", generators::complete(8)),
+        ("moon_moser3", generators::moon_moser(3)),
+        ("gnp24", generators::gnp(24, 0.45, 11)),
+        ("planted", generators::planted_cliques(60, 0.04, 4, 4, 7, 5)),
+        ("ring", generators::ring_of_cliques(5, 5, 2)),
+        (
+            "with_isolated",
+            CsrGraph::from_edges(6, &[(0, 1), (1, 2), (0, 2)]),
+        ),
+        // non-contiguous live ids in a mostly-empty id space: the
+        // relabel map must round-trip global ids exactly
+        (
+            "sparse_ids",
+            CsrGraph::from_edges(64, &[(3, 17), (3, 29), (17, 29), (29, 41), (41, 57)]),
+        ),
+    ]
+}
+
+fn collect_at(g: &CsrGraph, algo: Algo, cutoff: usize) -> Vec<Vec<Vertex>> {
+    let s = MceSession::builder()
+        .graph(g.clone())
+        .threads(3)
+        .bitset_cutoff(cutoff)
+        .build()
+        .expect("session over an explicit graph");
+    s.collect(algo).0
+}
+
+#[test]
+fn all_algorithms_agree_across_bitset_cutoffs() {
+    for (name, g) in fixtures() {
+        for &algo in Algo::all() {
+            let want = collect_at(&g, algo, 0);
+            for cutoff in [4usize, 64, 1 << 20] {
+                let got = collect_at(&g, algo, cutoff);
+                assert_eq!(
+                    got, want,
+                    "{name}/{algo:?}: cutoff {cutoff} diverged from slice path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_output_matches_the_oracle() {
+    // not just self-consistent: the kernel-heavy configuration must also
+    // match the independent reference enumerator
+    for (name, g) in fixtures() {
+        let want = parmce::mce::oracle::maximal_cliques(&g);
+        let got = collect_at(&g, Algo::ParMce, 1 << 20);
+        assert_eq!(got, want, "{name}");
+    }
+}
+
+#[test]
+fn dynamic_engines_agree_across_bitset_cutoffs() {
+    let target = generators::gnp(14, 0.5, 33);
+    let edges = target.edges();
+    for algo in [DynAlgo::Imce, DynAlgo::ParImce] {
+        let mut slice = DynamicSession::from_empty(14, algo).with_bitset_cutoff(0);
+        let mut small = DynamicSession::from_empty(14, algo).with_bitset_cutoff(4);
+        let mut huge = DynamicSession::from_empty(14, algo).with_bitset_cutoff(usize::MAX);
+        for chunk in edges.chunks(6) {
+            let want = slice.apply_batch(chunk);
+            assert_eq!(small.apply_batch(chunk), want, "{algo:?} cutoff 4");
+            assert_eq!(huge.apply_batch(chunk), want, "{algo:?} huge cutoff");
+        }
+        assert_eq!(slice.clique_count(), small.clique_count());
+        assert_eq!(slice.clique_count(), huge.clique_count());
+    }
+}

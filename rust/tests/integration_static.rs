@@ -54,7 +54,7 @@ fn all_enumerators_agree_on_all_tiny_datasets() {
         let ranking = Arc::new(Ranking::compute(&g, RankStrategy::Degree));
         let s = Arc::new(CountSink::new());
         let ds: Arc<dyn CliqueSink> = s.clone();
-        peco::peco(&pool, &ga, &ranking, &ds);
+        peco::peco(&pool, &ga, &ranking, &ds, parmce::mce::DEFAULT_BITSET_CUTOFF);
         assert_eq!(s.count(), want, "{}: PECO", d.name());
 
         // BK family
