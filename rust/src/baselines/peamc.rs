@@ -9,8 +9,8 @@
 //! neighbourhood of every member.  A [`Deadline`] reproduces the paper's
 //! timeout rows without burning five real hours.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::pool::ThreadPool;

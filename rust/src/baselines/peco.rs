@@ -9,7 +9,7 @@
 //! *sequential* TTT — no nested parallelism, so one monster subproblem
 //! pins a core while the rest idle.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;

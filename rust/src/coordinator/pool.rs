@@ -17,11 +17,35 @@
 //! threads cannot deadlock).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Shared pool state.
+///
+/// Memory-ordering contract (audited by the loom models in
+/// `rust/tests/loom_models.rs`; see DESIGN.md "Concurrency contracts"):
+///
+/// * **Job payloads** are published exclusively through the deque/injector
+///   mutexes — no atomic on this struct carries job data.
+/// * **`pending`** is a wakeup hint, not a synchronization edge.  Producers
+///   `fetch_add(1, Release)` *after* pushing under the queue mutex; a
+///   parked worker re-checks it with `Acquire` under `sleep_lock` before
+///   sleeping, so a worker that observes the increment finds the job via
+///   the mutex.  The decrement on dequeue is `Relaxed`: the dequeuer
+///   already synchronized through the queue mutex, and an under-read of
+///   `pending` by a sleeper is recovered by the bounded `wait_timeout`
+///   below (the timeout is load-bearing: producer does not hold
+///   `sleep_lock` while notifying, so a notify can land between a
+///   sleeper's check and its wait).
+/// * **`shutdown`** is `SeqCst` on both sides: it races with `pending`
+///   traffic during drop-while-jobs-pending (regression model
+///   `pool_shutdown_with_pending_jobs`) and the strongest ordering keeps
+///   the check-then-park protocol obviously monotone.
+/// * **`steals`/`spawned`** are observability counters, `Relaxed` by
+///   design (allowlisted in `cargo xtask lint-invariants`).
 struct PoolState {
     /// per-worker deques: owner pushes/pops the back, thieves pop the front
     queues: Vec<Mutex<VecDeque<Job>>>,
@@ -154,13 +178,13 @@ impl ThreadPool {
         // 1. own deque, LIFO
         if let Some(idx) = own {
             if let Some(j) = st.queues[idx].lock().unwrap().pop_back() {
-                st.pending.fetch_sub(1, Ordering::AcqRel);
+                st.pending.fetch_sub(1, Ordering::Relaxed);
                 return Some(j);
             }
         }
         // 2. injector, FIFO
         if let Some(j) = st.injector.lock().unwrap().pop_front() {
-            st.pending.fetch_sub(1, Ordering::AcqRel);
+            st.pending.fetch_sub(1, Ordering::Relaxed);
             return Some(j);
         }
         // 3. steal: FIFO from victims, round-robin
@@ -172,7 +196,7 @@ impl ThreadPool {
                 continue;
             }
             if let Some(j) = st.queues[victim].lock().unwrap().pop_front() {
-                st.pending.fetch_sub(1, Ordering::AcqRel);
+                st.pending.fetch_sub(1, Ordering::Relaxed);
                 st.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(j);
             }
@@ -231,12 +255,12 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
 fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     // own deque LIFO
     if let Some(j) = state.queues[idx].lock().unwrap().pop_back() {
-        state.pending.fetch_sub(1, Ordering::AcqRel);
+        state.pending.fetch_sub(1, Ordering::Relaxed);
         return Some(j);
     }
     // injector
     if let Some(j) = state.injector.lock().unwrap().pop_front() {
-        state.pending.fetch_sub(1, Ordering::AcqRel);
+        state.pending.fetch_sub(1, Ordering::Relaxed);
         return Some(j);
     }
     // steal round-robin
@@ -244,7 +268,7 @@ fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     for off in 1..n {
         let victim = (idx + off) % n;
         if let Some(j) = state.queues[victim].lock().unwrap().pop_front() {
-            state.pending.fetch_sub(1, Ordering::AcqRel);
+            state.pending.fetch_sub(1, Ordering::Relaxed);
             state.steals.fetch_add(1, Ordering::Relaxed);
             return Some(j);
         }
@@ -269,11 +293,20 @@ impl WaitGroup {
     }
 
     fn add(&self) {
-        self.count.fetch_add(1, Ordering::AcqRel);
+        // Relaxed: `add` runs on the spawning thread *before* the job is
+        // published under the queue mutex, so any thread that can run the
+        // job (and hence call `done`) already observes the increment via
+        // that mutex acquisition — no extra edge needed here.
+        self.count.fetch_add(1, Ordering::Relaxed);
     }
 
     fn done(&self) {
-        if self.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Release, paired with the Acquire load in `wait`: when the waiter
+        // reads 0 it must observe every task's side effects.  Each `done`
+        // is an RMW, so intermediate decrements extend the release
+        // sequence and the final Acquire load synchronizes with *all* of
+        // them, not just the last (audited by `pool_scope_runs_all_tasks`).
+        if self.count.fetch_sub(1, Ordering::Release) == 1 {
             let _g = self.lock.lock().unwrap();
             self.cv.notify_all();
         }
@@ -474,5 +507,72 @@ mod tests {
         });
         let (spawned, _steals) = pool.scheduler_counters();
         assert_eq!(spawned, 20);
+    }
+
+    #[test]
+    fn zero_job_scope_returns_immediately() {
+        // WaitGroup starts at 0; `wait` must return without a single
+        // `done` ever firing (no phantom decrement, no 1ms parks stacking).
+        let pool = ThreadPool::new(2);
+        for _ in 0..100 {
+            pool.scope(|_| {});
+        }
+        let (spawned, _) = pool.scheduler_counters();
+        assert_eq!(spawned, 0);
+    }
+
+    #[test]
+    fn nested_scope_from_worker_completes() {
+        // A worker task opens a *new* scope on the same pool: the inner
+        // `wait` runs on a pool thread, which must help (try_run_one) and
+        // not deadlock even on a 1-thread pool.
+        for n in [1, 2, 4] {
+            let pool = ThreadPool::new(n);
+            let counter = Arc::new(AtomicUsize::new(0));
+            pool.scope(|s| {
+                for _ in 0..4 {
+                    let c = Arc::clone(&counter);
+                    let inner_pool = s.pool().clone();
+                    s.spawn(move |_| {
+                        inner_pool.scope(|inner| {
+                            for _ in 0..8 {
+                                let c2 = Arc::clone(&c);
+                                inner.spawn(move |_| {
+                                    c2.fetch_add(1, Ordering::Relaxed);
+                                });
+                            }
+                        });
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 4 * (8 + 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cancellation_racing_shutdown_does_not_hang() {
+        // Fire-and-forget jobs poll a cancel flag; the pool is dropped
+        // while many are still queued.  Workers must drain the backlog on
+        // the shutdown path (no job leaked un-run, no join hang), and
+        // cancelled jobs must be cheap no-ops.
+        for _ in 0..20 {
+            let pool = ThreadPool::new(3);
+            let cancel = Arc::new(AtomicBool::new(false));
+            let ran = Arc::new(AtomicUsize::new(0));
+            for _ in 0..200 {
+                let cancel = Arc::clone(&cancel);
+                let ran = Arc::clone(&ran);
+                pool.spawn(move || {
+                    if !cancel.load(Ordering::SeqCst) {
+                        std::hint::spin_loop();
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            cancel.store(true, Ordering::SeqCst);
+            drop(pool); // joins workers; must not deadlock with the backlog
+            assert_eq!(ran.load(Ordering::SeqCst), 200, "shutdown leaked queued jobs");
+        }
     }
 }

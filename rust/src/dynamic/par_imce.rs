@@ -9,8 +9,9 @@
 //! subsumed clique is reported exactly once even when reachable from
 //! several new cliques.
 
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+use crate::util::sync::{Arc, Mutex, ScopeShare, ScopedPtr};
 
 use crate::coordinator::pool::ThreadPool;
 use crate::dynamic::imce::{subsumption_candidates, BatchTimings};
@@ -53,24 +54,29 @@ pub fn par_imce_batch_with_cutoff(
     // immutably for the whole scope).
     let new_cliques: Mutex<Vec<Vec<Vertex>>> = Mutex::new(Vec::new());
     {
-        // Tasks borrow `graph`, `registry`, `added` — all outlive the scope
-        // because `pool.scope` blocks. The pool API requires 'static, so we
-        // transmute lifetimes via raw pointers wrapped in a Send shim.
+        // Tasks borrow `graph`, `new_cliques`, `timings` — all outlive the
+        // scope because `pool.scope` blocks.  The pool API requires
+        // 'static, so the borrows are lifetime-erased through the audited
+        // ScopeShare/ScopedPtr surface in `util::sync`.
+        //
+        // SAFETY: every shared referent lives until after `pool.scope`
+        // returns, and the scope joins all tasks holding the pointers.
+        #[allow(unsafe_code)]
+        let share = unsafe { ScopeShare::new() };
         let shared = SharedBatchCtx {
-            graph: graph as *const DynGraph,
+            graph: share.share(&*graph),
             added: Arc::clone(&added),
-            new_cliques: &new_cliques as *const _,
-            timings: &timings as *const _,
+            new_cliques: share.share(&new_cliques),
+            timings: share.share(&timings),
             bitset_cutoff,
         };
         pool.scope(|s| {
             for i in 0..added.len() {
                 let ctx = shared.clone();
                 s.spawn(move |_| {
-                    let ctx = ctx; // capture the whole Send shim, not fields
-                    let graph = unsafe { &*ctx.graph };
-                    let new_cliques = unsafe { &*ctx.new_cliques };
-                    let timings = unsafe { &*ctx.timings };
+                    let graph = ctx.graph.get();
+                    let new_cliques = ctx.new_cliques.get();
+                    let timings = ctx.timings.get();
                     let (u, v) = ctx.added[i];
                     let t0 = Instant::now();
                     // exclusion set: edges earlier in the batch order
@@ -104,23 +110,24 @@ pub fn par_imce_batch_with_cutoff(
     // --- ParIMCESub (Algorithm 7): one task per new maximal clique --------
     let subsumed: Mutex<Vec<Vec<Vertex>>> = Mutex::new(Vec::new());
     {
-        let new_ref: &[Vec<Vertex>] = &new_cliques;
+        // SAFETY: as above — the referents outlive the joining scope.
+        #[allow(unsafe_code)]
+        let share = unsafe { ScopeShare::new() };
         let shared = SharedSubCtx {
-            registry: registry as *const CliqueRegistry,
+            registry: share.share(registry),
             added: Arc::clone(&added),
-            new_cliques: new_ref as *const _,
-            subsumed: &subsumed as *const _,
-            timings: &timings as *const _,
+            new_cliques: share.share(new_cliques.as_slice()),
+            subsumed: share.share(&subsumed),
+            timings: share.share(&timings),
         };
         pool.scope(|s| {
             for ci in 0..new_cliques.len() {
                 let ctx = shared.clone();
                 s.spawn(move |_| {
-                    let ctx = ctx; // capture the whole Send shim, not fields
-                    let registry = unsafe { &*ctx.registry };
-                    let cliques = unsafe { &*ctx.new_cliques };
-                    let subsumed = unsafe { &*ctx.subsumed };
-                    let timings = unsafe { &*ctx.timings };
+                    let registry = ctx.registry.get();
+                    let cliques = ctx.new_cliques.get();
+                    let subsumed = ctx.subsumed.get();
+                    let timings = ctx.timings.get();
                     let t0 = Instant::now();
                     let mut local: Vec<Vec<Vertex>> = Vec::new();
                     for cand in subsumption_candidates(&cliques[ci], &ctx.added) {
@@ -152,52 +159,27 @@ pub fn par_imce_batch_with_cutoff(
     (result, timings.into_inner().unwrap())
 }
 
-/// Raw-pointer shims to hand short-lived borrows to 'static pool tasks.
-/// SAFETY: `pool.scope` blocks until every spawned task completes, so the
-/// pointees strictly outlive all dereferences; all pointees are Sync.
+/// Scope-shared borrows handed to 'static pool tasks.  `Send` is derived
+/// from [`ScopedPtr`]'s audited impls (all pointees are `Sync`); the
+/// liveness argument lives at the single `ScopeShare::new` site per scope
+/// in [`par_imce_batch_with_cutoff`].
+#[derive(Clone)]
 struct SharedBatchCtx {
-    graph: *const DynGraph,
+    graph: ScopedPtr<DynGraph>,
     added: Arc<Vec<Edge>>,
-    new_cliques: *const Mutex<Vec<Vec<Vertex>>>,
-    timings: *const Mutex<BatchTimings>,
+    new_cliques: ScopedPtr<Mutex<Vec<Vec<Vertex>>>>,
+    timings: ScopedPtr<Mutex<BatchTimings>>,
     bitset_cutoff: usize,
 }
 
-impl Clone for SharedBatchCtx {
-    fn clone(&self) -> Self {
-        SharedBatchCtx {
-            graph: self.graph,
-            added: Arc::clone(&self.added),
-            new_cliques: self.new_cliques,
-            timings: self.timings,
-            bitset_cutoff: self.bitset_cutoff,
-        }
-    }
-}
-
-unsafe impl Send for SharedBatchCtx {}
-
+#[derive(Clone)]
 struct SharedSubCtx {
-    registry: *const CliqueRegistry,
+    registry: ScopedPtr<CliqueRegistry>,
     added: Arc<Vec<Edge>>,
-    new_cliques: *const [Vec<Vertex>],
-    subsumed: *const Mutex<Vec<Vec<Vertex>>>,
-    timings: *const Mutex<BatchTimings>,
+    new_cliques: ScopedPtr<[Vec<Vertex>]>,
+    subsumed: ScopedPtr<Mutex<Vec<Vec<Vertex>>>>,
+    timings: ScopedPtr<Mutex<BatchTimings>>,
 }
-
-impl Clone for SharedSubCtx {
-    fn clone(&self) -> Self {
-        SharedSubCtx {
-            registry: self.registry,
-            added: Arc::clone(&self.added),
-            new_cliques: self.new_cliques,
-            subsumed: self.subsumed,
-            timings: self.timings,
-        }
-    }
-}
-
-unsafe impl Send for SharedSubCtx {}
 
 #[cfg(test)]
 mod tests {

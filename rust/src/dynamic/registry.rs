@@ -11,9 +11,9 @@
 //! hot paths only ever touch canonical data, so they never pay
 //! [`canonical`] twice.
 
-use std::sync::{Arc, Mutex};
-
 use crate::coordinator::pool::ThreadPool;
+use crate::util::sync::{Arc, Mutex};
+
 use crate::graph::csr::CsrGraph;
 use crate::graph::Vertex;
 use crate::mce::sink::{CallbackSink, CliqueSink};
@@ -230,16 +230,17 @@ mod tests {
 
     #[test]
     fn concurrent_removal_single_winner() {
-        let reg = std::sync::Arc::new(CliqueRegistry::new());
+        use crate::util::sync::atomic::{AtomicU32, Ordering};
+        let reg = Arc::new(CliqueRegistry::new());
         reg.insert(&[1, 2, 3]);
-        let wins = std::sync::Arc::new(std::sync::atomic::AtomicU32::new(0));
+        let wins = Arc::new(AtomicU32::new(0));
         let hs: Vec<_> = (0..8)
             .map(|_| {
                 let reg = reg.clone();
                 let wins = wins.clone();
                 std::thread::spawn(move || {
                     if reg.remove(&[1, 2, 3]) {
-                        wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        wins.fetch_add(1, Ordering::SeqCst);
                     }
                 })
             })
@@ -247,6 +248,6 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
-        assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(wins.load(Ordering::SeqCst), 1);
     }
 }

@@ -8,7 +8,7 @@
 //!    the inverted assignment (shows the load-balancing choice matters);
 //! 4. ParIMCE batch size — the §6.2 choice of 1000 (10 for dense).
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use anyhow::Result;
 

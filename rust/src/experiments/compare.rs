@@ -3,7 +3,7 @@
 //! (sequential: BKDegeneracy / GreedyBB).  Every baseline runs through
 //! the session API; budget/deadline outcomes surface as [`RunOutcome`]s.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;

@@ -2,7 +2,7 @@
 //! [`crate::session`] API — no experiment wires pools, rankings or sinks
 //! by hand anymore.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::sim::{simulate, Trace};

@@ -44,6 +44,18 @@
 //!
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
 //! reproduced tables/figures.
+//!
+//! ## Unsafe policy
+//!
+//! `unsafe` is denied-by-default: the only sanctioned sites are the audited
+//! lifetime-erasure surface in [`util::sync`] ([`util::sync::ScopeShare`] /
+//! [`util::sync::ScopedPtr`]) and its per-scope `ScopeShare::new` calls in
+//! the parallel kernels.  Every site carries a `// SAFETY:` comment and a
+//! local `#[allow(unsafe_code)]`; `cargo xtask lint-invariants` enforces
+//! both, plus the `util::sync`-only rule for `std::sync` imports.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(unsafe_code)]
 
 pub mod baselines;
 pub mod coordinator;

@@ -14,7 +14,7 @@
 //!   parmce artifacts-check
 //!   parmce help
 
-use std::sync::Arc;
+use parmce::util::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};

@@ -15,7 +15,7 @@
 //! default hand-off (matching real execution); [`trace`] stays slice-only
 //! because the kernel would collapse whole subtrees into one trace node.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;

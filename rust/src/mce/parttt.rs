@@ -14,7 +14,7 @@
 //! sequential TTT — the granularity control that keeps the O(n) unrolling
 //! overhead (Lemma 2) from dominating at the bottom of the recursion.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::coordinator::pool::{ScopeHandle, ThreadPool};
 use crate::graph::csr::CsrGraph;

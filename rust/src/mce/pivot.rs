@@ -8,11 +8,11 @@
 //! score computation across pool workers (Lemma 1: work-efficient,
 //! O(log n) depth).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
 use crate::graph::{AdjacencyGraph, Vertex};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{ScopeShare, ScopedPtr};
 use crate::util::vset;
 
 /// Sequential pivot choice over cand ∪ fini. Returns the pivot vertex.
@@ -64,7 +64,7 @@ pub fn choose_pivot<G: AdjacencyGraph + ?Sized>(g: &G, cand: &[Vertex], fini: &[
 /// Borrows `cand`/`fini` as plain slices: ParTTT calls this once per
 /// large recursion node, and cloning both sets into fresh `Arc`s each
 /// call was pure allocation churn on the hot path.  Tasks reference the
-/// borrowed data through a raw-pointer shim; `pool.scope` blocks until
+/// borrowed data through [`ScopedPtr`]s; `pool.scope` blocks until
 /// every task completes, so the pointees strictly outlive all
 /// dereferences.
 pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Vertex]) -> Vertex {
@@ -72,25 +72,26 @@ pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Verte
     let total = cand.len() + fini.len();
     debug_assert!(total > 0);
     let chunk = total.div_ceil(pool.num_threads() * 4).max(16);
-    let shared = PivotCtx {
-        g: g as *const CsrGraph,
-        cand: cand as *const [Vertex],
-        fini: fini as *const [Vertex],
-        best: &best as *const AtomicU64,
+    // SAFETY: every reference shared below (`g`, `cand`, `fini`, `best`)
+    // outlives the `pool.scope` call, which joins all spawned tasks before
+    // returning — no task can hold a ScopedPtr past that join.
+    #[allow(unsafe_code)]
+    let share = unsafe { ScopeShare::new() };
+    let ctx = PivotCtx {
+        g: share.share(g),
+        cand: share.share(cand),
+        fini: share.share(fini),
+        best: share.share(&best),
     };
     pool.scope(|s| {
         let mut start = 0;
         while start < total {
             let end = (start + chunk).min(total);
-            let ctx = shared.clone();
             s.spawn(move |_| {
-                let ctx = ctx; // capture the whole Send shim, not fields
-                // SAFETY: the enclosing scope blocks until this task
-                // completes, so every pointee is still alive.
-                let g = unsafe { &*ctx.g };
-                let cand = unsafe { &*ctx.cand };
-                let fini = unsafe { &*ctx.fini };
-                let best = unsafe { &*ctx.best };
+                let g = ctx.g.get();
+                let cand = ctx.cand.get();
+                let fini = ctx.fini.get();
+                let best = ctx.best.get();
                 let mut local_best = 0u64;
                 for i in start..end {
                     let u = if i < cand.len() {
@@ -111,27 +112,17 @@ pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Verte
     !(packed as u32)
 }
 
-/// Raw-pointer shim handing short-lived borrows to 'static pool tasks
-/// (same pattern as `dynamic::par_imce`). SAFETY: see [`par_pivot`].
+/// Scope-shared borrows handed to 'static pool tasks (same pattern as
+/// `dynamic::par_imce`).  `Send` is derived from [`ScopedPtr`]'s audited
+/// impls — no per-call-site `unsafe impl` needed; the liveness argument
+/// lives at the single [`ScopeShare::new`] site in [`par_pivot`].
+#[derive(Clone, Copy)]
 struct PivotCtx {
-    g: *const CsrGraph,
-    cand: *const [Vertex],
-    fini: *const [Vertex],
-    best: *const AtomicU64,
+    g: ScopedPtr<CsrGraph>,
+    cand: ScopedPtr<[Vertex]>,
+    fini: ScopedPtr<[Vertex]>,
+    best: ScopedPtr<AtomicU64>,
 }
-
-impl Clone for PivotCtx {
-    fn clone(&self) -> Self {
-        PivotCtx {
-            g: self.g,
-            cand: self.cand,
-            fini: self.fini,
-            best: self.best,
-        }
-    }
-}
-
-unsafe impl Send for PivotCtx {}
 
 #[cfg(test)]
 mod tests {

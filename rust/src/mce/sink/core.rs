@@ -7,10 +7,9 @@
 //! [`super::sharded`], which keep the emit hot path off shared cache
 //! lines entirely.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 /// Receiver for enumerated maximal cliques. Implementations must tolerate
 /// concurrent `emit` calls from multiple worker threads.
@@ -186,7 +185,7 @@ mod tests {
 
     #[test]
     fn concurrent_emits() {
-        let s = std::sync::Arc::new(CountSink::new());
+        let s = crate::util::sync::Arc::new(CountSink::new());
         let hs: Vec<_> = (0..4)
             .map(|_| {
                 let s = s.clone();

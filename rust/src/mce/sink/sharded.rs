@@ -14,10 +14,10 @@
 //! Shards are merged after the enumeration scope joins (count / collect /
 //! histogram accessors below), so readers never race writers.
 
-use std::sync::Mutex;
-
 use crate::coordinator::pool::{current_worker_slot, ThreadPool};
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use super::core::CliqueSink;
 use super::stats::SizeHistogram;
@@ -111,18 +111,18 @@ impl<S: Shard> CliqueSink for ShardedSink<S> {
 /// Shard for clique counting: one padded atomic per worker. Relaxed
 /// increments on a private cache line cost a plain add in steady state.
 #[derive(Default)]
-pub struct CountShard(std::sync::atomic::AtomicU64);
+pub struct CountShard(AtomicU64);
 
 impl Shard for CountShard {
     #[inline]
     fn absorb(&self, _clique: &[Vertex]) {
-        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.0.fetch_add(1, Ordering::Relaxed);
     }
 }
 
 impl CountShard {
     pub fn get(&self) -> u64 {
-        self.0.load(std::sync::atomic::Ordering::Relaxed)
+        self.0.load(Ordering::Relaxed)
     }
 }
 
@@ -237,7 +237,7 @@ impl ShardedSink<HistShard> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use crate::util::sync::Arc;
 
     #[test]
     fn external_threads_share_the_external_shard() {

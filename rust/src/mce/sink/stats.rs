@@ -1,8 +1,7 @@
 //! Output statistics sinks: the clique-size histogram of Figure 5.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::core::CliqueSink;
 

@@ -14,10 +14,10 @@
 
 use std::io::{self, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use super::core::CliqueSink;
 use super::sharded::{route_slot, shard_count, CachePadded};
@@ -448,7 +448,7 @@ mod tests {
 
     #[test]
     fn concurrent_emits_lose_nothing() {
-        let w = std::sync::Arc::new(StreamWriterSink::from_writer(
+        let w = crate::util::sync::Arc::new(StreamWriterSink::from_writer(
             Vec::new(),
             4,
             WriterConfig {
@@ -459,7 +459,7 @@ mod tests {
         ));
         let hs: Vec<_> = (0..4u32)
             .map(|t| {
-                let w = std::sync::Arc::clone(&w);
+                let w = crate::util::sync::Arc::clone(&w);
                 std::thread::spawn(move || {
                     for i in 0..500u32 {
                         w.emit(&[t, i]);

@@ -16,7 +16,7 @@
 mod real {
     use std::collections::HashMap;
     use std::path::{Path, PathBuf};
-    use std::sync::Mutex;
+    use crate::util::sync::Mutex;
 
     use anyhow::{anyhow, bail, Context, Result};
 

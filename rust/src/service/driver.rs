@@ -11,11 +11,11 @@
 //! Optional churn re-removes and re-inserts every k-th batch, driving
 //! the §5.3 decremental path through the same serving pipeline.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use crate::dynamic::stream::EdgeStream;
 use crate::graph::{Edge, Vertex};
 use crate::util::rng::Rng;

@@ -33,7 +33,7 @@ pub mod driver;
 pub mod snapshot;
 mod store;
 
-use std::sync::{Arc, Mutex};
+use crate::util::sync::{Arc, Mutex};
 
 use crate::dynamic::stream::{BatchRecord, EdgeStream};
 use crate::dynamic::BatchResult;

@@ -14,10 +14,9 @@
 //! revalidates with one atomic load, so the steady-state read hot path
 //! (queries between publishes) takes no lock at all.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use crate::mce::sink::SizeHistogram;
 use crate::util::vset;
 
@@ -243,6 +242,33 @@ impl CliqueSnapshot {
     #[inline]
     fn intern(&self, id: CliqueId) -> Arc<[Vertex]> {
         Arc::clone(self.cliques[id as usize].as_ref().expect("posting id must be live"))
+    }
+
+    /// Minimal synthetic snapshot: `n` single-vertex cliques at `epoch`.
+    ///
+    /// Concurrency-harness hook (`rust/tests/loom_models.rs` builds
+    /// distinguishable snapshots per epoch without a graph); hidden from
+    /// docs because the fields stay `pub(crate)` and real snapshots come
+    /// from [`crate::service::CliqueService`].
+    #[doc(hidden)]
+    pub fn synthetic(epoch: u64, n: usize) -> CliqueSnapshot {
+        let cliques: Vec<Option<Arc<[Vertex]>>> = (0..n)
+            .map(|v| Some(Arc::from(vec![v as Vertex].into_boxed_slice())))
+            .collect();
+        let index = (0..n)
+            .map(|id| Arc::new(vec![id as CliqueId]))
+            .collect();
+        let buckets = vec![
+            Arc::new(Vec::new()),
+            Arc::new((0..n as CliqueId).collect::<Vec<_>>()),
+        ];
+        CliqueSnapshot {
+            epoch,
+            cliques,
+            index,
+            size_buckets: Arc::new(buckets),
+            live: n,
+        }
     }
 }
 

@@ -14,7 +14,7 @@
 //! under remove/re-insert churn; live-set queries are unaffected.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::BatchResult;

@@ -8,7 +8,7 @@
 //! `count` / `collect` / `run` verbs and reports a uniform [`RunReport`].
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};

@@ -8,9 +8,10 @@
 //! sessions (TTT, the sequential baselines) never spawn worker threads.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{Arc, Mutex, OnceLock};
 
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::stats::Subproblem;

@@ -7,7 +7,7 @@
 //! without hand-wiring pools or registries.  The decremental reduction
 //! (§5.3) rides along as [`DynamicSession::remove_batch`].
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;
@@ -405,7 +405,7 @@ mod tests {
 
     #[test]
     fn observer_sees_every_batch_in_order() {
-        use std::sync::Mutex;
+        use crate::util::sync::Mutex;
         let target = generators::gnp(12, 0.5, 17);
         let mut s = DynamicSession::from_empty(12, DynAlgo::Imce);
         let log: Arc<Mutex<Vec<(BatchKind, usize, usize, usize)>>> =
@@ -437,15 +437,15 @@ mod tests {
         }
         // replay-driven batches notify too
         let mut s2 = DynamicSession::from_empty(12, DynAlgo::Imce);
-        let count = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let count = Arc::new(crate::util::sync::atomic::AtomicUsize::new(0));
         let c2 = Arc::clone(&count);
         s2.set_batch_observer(Arc::new(move |_: &BatchEvent<'_>| {
-            c2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            c2.fetch_add(1, crate::util::sync::atomic::Ordering::SeqCst);
         }));
         let stream = EdgeStream::permuted(&target, 3);
         let records = s2.replay(&stream, 5, None);
         assert_eq!(
-            count.load(std::sync::atomic::Ordering::Relaxed),
+            count.load(crate::util::sync::atomic::Ordering::SeqCst),
             records.len()
         );
     }

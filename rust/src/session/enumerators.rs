@@ -7,7 +7,7 @@
 //! counting shim wraps the caller's sink so every report carries the
 //! emitted-clique count regardless of what the sink does with them.
 
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::gp::{simulate_gp, GpConfig, GpOutcome};

@@ -10,7 +10,8 @@ use std::borrow::Borrow;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::hash::{BuildHasher, BuildHasherDefault, Hash, Hasher};
-use std::sync::Mutex;
+
+use crate::util::sync::Mutex;
 
 /// FxHash-style multiply hasher — fast for the small keys we use.
 #[derive(Default, Clone)]
@@ -245,7 +246,8 @@ impl<K: Hash + Eq> ConcurrentSet<K> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::Arc;
 
     #[test]
     fn basic_map_ops() {
@@ -290,7 +292,7 @@ mod tests {
     fn concurrent_dedup_exactly_once() {
         // All threads insert the same keys; exactly one insert per key wins.
         let s: Arc<ConcurrentSet<u64>> = Arc::new(ConcurrentSet::new());
-        let wins: Arc<std::sync::atomic::AtomicU64> = Arc::new(0.into());
+        let wins: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
         let threads: Vec<_> = (0..8)
             .map(|_| {
                 let s = Arc::clone(&s);
@@ -298,7 +300,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for i in 0..500u64 {
                         if s.insert(i) {
-                            wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            wins.fetch_add(1, Ordering::SeqCst);
                         }
                     }
                 })
@@ -307,8 +309,66 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
-        assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 500);
+        assert_eq!(wins.load(Ordering::SeqCst), 500);
         assert_eq!(s.len(), 500);
+    }
+
+    #[test]
+    fn concurrent_upsert_stress_seeded() {
+        // Seeded interleaving loop over a mixed insert/remove workload on a
+        // deliberately tiny key range (high per-stripe contention).  The
+        // per-key win/loss ledger must balance exactly in every round:
+        //   wins(k) - evictions(k) == 1 if k survived else 0
+        // where a "win" is a successful insert and an "eviction" a
+        // successful remove.  Any lost update, double report, or torn
+        // insert/remove pair breaks the ledger.
+        for seed in 0..8u64 {
+            let s: Arc<ConcurrentSet<u64>> = Arc::new(ConcurrentSet::new());
+            const KEYS: usize = 16;
+            let wins: Arc<Vec<AtomicU64>> =
+                Arc::new((0..KEYS).map(|_| AtomicU64::new(0)).collect());
+            let evictions: Arc<Vec<AtomicU64>> =
+                Arc::new((0..KEYS).map(|_| AtomicU64::new(0)).collect());
+            let threads: Vec<_> = (0..8u64)
+                .map(|t| {
+                    let s = Arc::clone(&s);
+                    let wins = Arc::clone(&wins);
+                    let evictions = Arc::clone(&evictions);
+                    std::thread::spawn(move || {
+                        // per-(seed, thread) xorshift stream: reruns of one
+                        // seed replay the same per-thread op sequence, and
+                        // the loop varies the cross-thread interleaving
+                        let mut x = (seed << 8 | t).wrapping_mul(0x9E37_79B9) | 1;
+                        for _ in 0..2000 {
+                            x ^= x << 13;
+                            x ^= x >> 7;
+                            x ^= x << 17;
+                            let k = x % KEYS as u64;
+                            if x & 0x100 == 0 {
+                                if s.insert(k) {
+                                    wins[k as usize].fetch_add(1, Ordering::SeqCst);
+                                }
+                            } else if s.remove(&k) {
+                                evictions[k as usize].fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().unwrap();
+            }
+            for k in 0..KEYS {
+                let w = wins[k].load(Ordering::SeqCst);
+                let e = evictions[k].load(Ordering::SeqCst);
+                let live = u64::from(s.contains(&(k as u64)));
+                assert_eq!(
+                    w - e,
+                    live,
+                    "seed {seed} key {k}: {w} wins, {e} evictions, live={live}"
+                );
+            }
+        }
     }
 
     #[test]

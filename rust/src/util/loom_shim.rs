@@ -1,0 +1,237 @@
+//! Instrumented sync primitives compiled only under `--cfg loom`.
+//!
+//! Offline stand-in for the `loom` model checker (unavailable in this
+//! vendored build — see DESIGN.md "Substitutions"): the wrappers delegate
+//! to `std` but call [`step`] at every synchronization edge (lock, notify,
+//! atomic load/store/RMW).  [`step`] consults a per-thread PRNG seeded from
+//! the current exploration iteration and randomly yields or spins, so one
+//! [`model`] call exercises many distinct interleavings instead of loom's
+//! exhaustive state-space walk.  Weaker than loom — it cannot *prove*
+//! absence of races — but it reliably reproduces lost-wakeup and
+//! ordering-dependent bugs that a plain test almost never hits, and the
+//! test code is written against the real loom API shape so a vendored loom
+//! can slot in behind `util::sync` without touching any model.
+//!
+//! Never compiled in normal builds: `cfg(loom)` is set only by
+//! `RUSTFLAGS="--cfg loom"` (CI's loom job).
+
+#![allow(dead_code)]
+
+use std::cell::Cell;
+use std::sync::atomic as std_atomic;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+pub use std::sync::{LockResult, MutexGuard, WaitTimeoutResult};
+
+/// Global exploration state: nonzero while a `model` run is active; the
+/// value seeds each thread's local scheduler PRNG.
+static EXPLORE_SEED: std_atomic::AtomicU64 = std_atomic::AtomicU64::new(0);
+/// Monotone thread counter used to decorrelate per-thread PRNG streams.
+static THREAD_IDS: std_atomic::AtomicU64 = std_atomic::AtomicU64::new(1);
+
+thread_local! {
+    /// Per-thread scheduler PRNG state (lazily mixed from the global seed).
+    static SCHED_RNG: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Scheduling perturbation point: called by every wrapper on every
+/// synchronization edge.  No-op outside a `model` run.
+pub(crate) fn step() {
+    let seed = EXPLORE_SEED.load(Ordering::Relaxed);
+    if seed == 0 {
+        return;
+    }
+    SCHED_RNG.with(|s| {
+        let mut x = s.get();
+        if x == 0 {
+            let tid = THREAD_IDS.fetch_add(1, Ordering::Relaxed);
+            // splitmix-style init so (seed, tid) pairs give distinct streams
+            x = (seed ^ tid.wrapping_mul(0x9E37_79B9_7F4A_7C15)) | 1;
+        }
+        // xorshift64
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        s.set(x);
+        match x % 8 {
+            0 | 1 => std::thread::yield_now(),
+            2 => {
+                for _ in 0..(x >> 32) % 64 {
+                    std::hint::spin_loop();
+                }
+            }
+            _ => {}
+        }
+    });
+}
+
+/// Explore `f` under scheduling perturbation.
+///
+/// Mirrors `loom::model`'s signature.  Runs the body `LOOM_MAX_ITERS`
+/// times (default 64) with a fresh scheduler seed each iteration; any
+/// panic inside the body propagates with the iteration's seed printed so
+/// the failing schedule class is identifiable.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let iters: u64 = std::env::var("LOOM_MAX_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    for i in 0..iters {
+        let seed = 0x5DEE_CE66u64.wrapping_mul(i + 1) | 1;
+        EXPLORE_SEED.store(seed, Ordering::SeqCst);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&f));
+        EXPLORE_SEED.store(0, Ordering::SeqCst);
+        if let Err(payload) = result {
+            eprintln!("loom_shim: model failed at iteration {i} (seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// `std::sync::Mutex` with perturbation on lock acquisition.
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized>(std::sync::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Self {
+        Mutex(std::sync::Mutex::new(t))
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.0.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        step();
+        let g = self.0.lock();
+        step();
+        g
+    }
+
+    pub fn try_lock(&self) -> std::sync::TryLockResult<MutexGuard<'_, T>> {
+        step();
+        self.0.try_lock()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.0.get_mut()
+    }
+}
+
+/// `std::sync::Condvar` with perturbation around notify/wait.
+#[derive(Debug, Default)]
+pub struct Condvar(std::sync::Condvar);
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar(std::sync::Condvar::new())
+    }
+
+    pub fn notify_one(&self) {
+        step();
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        step();
+        self.0.notify_all();
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        step();
+        self.0.wait(guard)
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        step();
+        self.0.wait_timeout(guard, dur)
+    }
+}
+
+macro_rules! shim_atomic {
+    ($name:ident, $std:ty, $prim:ty) => {
+        /// Std atomic with perturbation on every access.
+        #[derive(Debug, Default)]
+        pub struct $name($std);
+
+        impl $name {
+            pub fn new(v: $prim) -> Self {
+                $name(<$std>::new(v))
+            }
+
+            pub fn load(&self, o: Ordering) -> $prim {
+                step();
+                self.0.load(o)
+            }
+
+            pub fn store(&self, v: $prim, o: Ordering) {
+                step();
+                self.0.store(v, o);
+                step();
+            }
+
+            pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                step();
+                self.0.swap(v, o)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $prim,
+                new: $prim,
+                ok: Ordering,
+                err: Ordering,
+            ) -> Result<$prim, $prim> {
+                step();
+                self.0.compare_exchange(cur, new, ok, err)
+            }
+
+            pub fn into_inner(self) -> $prim {
+                self.0.into_inner()
+            }
+        }
+    };
+}
+
+macro_rules! shim_atomic_int {
+    ($name:ident, $std:ty, $prim:ty) => {
+        shim_atomic!($name, $std, $prim);
+
+        impl $name {
+            pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                step();
+                self.0.fetch_add(v, o)
+            }
+
+            pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                step();
+                self.0.fetch_sub(v, o)
+            }
+
+            pub fn fetch_max(&self, v: $prim, o: Ordering) -> $prim {
+                step();
+                self.0.fetch_max(v, o)
+            }
+
+            pub fn fetch_min(&self, v: $prim, o: Ordering) -> $prim {
+                step();
+                self.0.fetch_min(v, o)
+            }
+        }
+    };
+}
+
+shim_atomic!(AtomicBool, std_atomic::AtomicBool, bool);
+shim_atomic_int!(AtomicU32, std_atomic::AtomicU32, u32);
+shim_atomic_int!(AtomicU64, std_atomic::AtomicU64, u64);
+shim_atomic_int!(AtomicUsize, std_atomic::AtomicUsize, usize);

@@ -7,7 +7,7 @@
 //! against a `MemBudget`; exceeding it aborts the run with `OutOfBudget`,
 //! which the experiment harness prints as the paper's "Out of memory" cell.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BudgetError {

@@ -5,9 +5,12 @@ pub mod bench;
 pub mod bitset;
 pub mod chashmap;
 pub mod json;
+#[cfg(loom)]
+pub mod loom_shim;
 pub mod membudget;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod table;
 pub mod vset;
 

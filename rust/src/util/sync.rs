@@ -1,0 +1,205 @@
+//! Swappable synchronization layer (ISSUE 6 tentpole).
+//!
+//! Every concurrent module in the crate imports its primitives from here
+//! instead of `std::sync`.  Under a normal build the re-exports below are
+//! zero-cost aliases for the `std` types.  Under `RUSTFLAGS="--cfg loom"`
+//! the lock/condvar/atomic types are swapped for the instrumented wrappers
+//! in [`crate::util::loom_shim`], which inject scheduling perturbation at
+//! every synchronization edge so the models in `rust/tests/loom_models.rs`
+//! explore many interleavings per run.
+//!
+//! The offline build environment cannot vendor the real `loom` crate (no
+//! network, no `cargo add` — see DESIGN.md "Substitutions"), so the shim is
+//! a bundled, loom-shaped stress explorer: same import surface
+//! (`util::sync::{Mutex, Condvar, atomic::*}`, `util::sync::model`), same
+//! test layout, delegating to `std` with seeded yield points instead of
+//! exhaustive interleaving search.  If a vendored loom ever lands, only the
+//! `cfg(loom)` arm of this file changes; no call site moves.
+//!
+//! `cargo xtask lint-invariants` enforces that `std::sync::` / `core::sync::`
+//! imports appear nowhere else in `rust/src` (this file and the shim are the
+//! two allowlisted exceptions).
+//!
+//! This module also hosts the crate's audited unsafe surface:
+//! [`ScopeShare`] / [`ScopedPtr`], the single lifetime-erasure mechanism
+//! used to hand short-lived borrows to `'static` pool tasks.  All other
+//! modules are `unsafe`-free (`#![warn(unsafe_code)]` in `lib.rs`).
+
+// --- std arm -------------------------------------------------------------
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, OnceLock, WaitTimeoutResult};
+
+/// Atomic types and [`Ordering`](std::sync::atomic::Ordering).
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// Run a concurrency model once (std arm: plain execution, no exploration).
+#[cfg(not(loom))]
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    f();
+}
+
+// --- loom arm ------------------------------------------------------------
+
+#[cfg(loom)]
+pub use crate::util::loom_shim::{model, Condvar, Mutex};
+#[cfg(loom)]
+pub use std::sync::{Arc, LockResult, MutexGuard, OnceLock, WaitTimeoutResult};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use crate::util::loom_shim::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+// --- audited lifetime-erasure surface ------------------------------------
+
+/// Witness that a pool scope pins the lifetime of shared borrows.
+///
+/// The pool's `'static` task bound forces parallel kernels that borrow
+/// caller data (`par_pivot`, `par_imce_batch`) to erase lifetimes.  Instead
+/// of per-call-site raw-pointer structs with hand-rolled `unsafe impl Send`
+/// (the pre-ISSUE-6 pattern), each kernel creates **one** `ScopeShare`
+/// witness — the only `unsafe` act — and derives every shared pointer from
+/// it via the safe [`share`](Self::share).
+///
+/// # Safety contract (checked at construction)
+///
+/// `ScopeShare::new` is `unsafe`; the caller promises that every reference
+/// later passed to [`share`](Self::share) **outlives every task that can
+/// observe the resulting [`ScopedPtr`]**.  In this codebase that holds
+/// because the pointers are only moved into tasks spawned inside a
+/// [`ThreadPool::scope`](crate::coordinator::pool::ThreadPool::scope) call,
+/// which blocks until all (transitively) spawned tasks complete — the
+/// borrows live across the whole scope.
+pub struct ScopeShare {
+    _priv: (),
+}
+
+impl ScopeShare {
+    /// Create the witness for one pool scope.
+    ///
+    /// # Safety
+    ///
+    /// Every reference subsequently passed to [`share`](Self::share) must
+    /// remain valid until every task holding a derived [`ScopedPtr`] has
+    /// finished.  The canonical pattern is: create the witness, share the
+    /// borrows, spawn tasks **only** inside a `pool.scope(..)` whose join
+    /// precedes the end of every shared borrow.
+    #[allow(unsafe_code)]
+    pub unsafe fn new() -> Self {
+        ScopeShare { _priv: () }
+    }
+
+    /// Erase the lifetime of `r` under this witness's contract.
+    ///
+    /// Safe because the validity obligation was assumed when the witness
+    /// was created with [`ScopeShare::new`].
+    #[inline]
+    pub fn share<T: ?Sized>(&self, r: &T) -> ScopedPtr<T> {
+        ScopedPtr { ptr: r as *const T }
+    }
+}
+
+/// A lifetime-erased shared reference produced by [`ScopeShare::share`].
+///
+/// `Copy`, `Send`/`Sync` when `T: Sync` (it only ever hands out `&T`), and
+/// dereferenced through the safe [`get`](Self::get) — the pointee is alive
+/// for as long as any task can hold the pointer, per the [`ScopeShare`]
+/// contract.
+pub struct ScopedPtr<T: ?Sized> {
+    ptr: *const T,
+}
+
+impl<T: ?Sized> Clone for ScopedPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T: ?Sized> Copy for ScopedPtr<T> {}
+
+// SAFETY: a ScopedPtr only ever yields `&T` (never `&mut T`), so moving or
+// sharing it across threads is exactly as safe as sharing `&T`, i.e. sound
+// when `T: Sync`.  Pointee liveness across threads is the ScopeShare
+// contract: tasks holding the pointer are joined before the borrow ends.
+#[allow(unsafe_code)]
+unsafe impl<T: ?Sized + Sync> Send for ScopedPtr<T> {}
+// SAFETY: as above — `&ScopedPtr<T>` exposes nothing beyond `&T`.
+#[allow(unsafe_code)]
+unsafe impl<T: ?Sized + Sync> Sync for ScopedPtr<T> {}
+
+impl<T: ?Sized> ScopedPtr<T> {
+    /// Borrow the pointee.
+    #[inline]
+    pub fn get(&self) -> &T {
+        // SAFETY: this pointer was created by ScopeShare::share; the
+        // (unsafe) ScopeShare::new contract guarantees the referent is
+        // alive until every task that can observe the pointer has
+        // completed, which bounds the lifetime of this borrow.
+        #[allow(unsafe_code)]
+        unsafe {
+            &*self.ptr
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::*;
+
+    #[test]
+    fn model_runs_body() {
+        // std arm: `model` must execute the closure (exactly once per call).
+        static HITS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        model(|| {
+            HITS.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert!(HITS.load(std::sync::atomic::Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn scoped_ptr_round_trips() {
+        let data = vec![1u32, 2, 3];
+        let total = AtomicUsize::new(0);
+        // SAFETY: the shared borrows (`data`, `total`) outlive every thread
+        // below — all threads are joined before this frame returns.
+        #[allow(unsafe_code)]
+        let share = unsafe { ScopeShare::new() };
+        let d = share.share(data.as_slice());
+        let t = share.share(&total);
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let sum: u32 = d.get().iter().sum();
+                    t.get().fetch_add(sum as usize, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 6);
+    }
+
+    #[test]
+    fn scoped_ptr_is_copy() {
+        let x = 42u64;
+        // SAFETY: `x` outlives both copies; no threads involved.
+        #[allow(unsafe_code)]
+        let share = unsafe { ScopeShare::new() };
+        let p = share.share(&x);
+        let q = p; // Copy
+        assert_eq!(*p.get(), 42);
+        assert_eq!(*q.get(), 42);
+    }
+}
