@@ -1,0 +1,156 @@
+//! Bench: dynamic graph storage — batch-apply latency and neighbor-scan
+//! throughput, legacy `DynGraph` vs delta-CSR `SnapshotGraph` (fresh
+//! overlay vs post-compaction), 1–8 scan threads on a clustered fixture.
+//! The scan number is the one that matters: enumeration reads dominate a
+//! batch, so the snapshot's chunked CSR must not cost reads what the
+//! overlay saves on writes.  `cargo bench --bench dyngraph`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::adj::DynGraph;
+use parmce::graph::generators;
+use parmce::graph::snapshot::SnapshotGraph;
+use parmce::graph::{AdjacencyGraph, Edge, Vertex};
+use parmce::util::bench::Bencher;
+use parmce::util::rng::Rng;
+
+/// Random edges absent from `base`, deduplicated.
+fn fresh_edges(base: &parmce::graph::csr::CsrGraph, count: usize, seed: u64) -> Vec<Edge> {
+    let mut rng = Rng::new(seed);
+    let n = base.n();
+    let mut out: Vec<Edge> = Vec::with_capacity(count);
+    let mut seen = std::collections::BTreeSet::new();
+    while out.len() < count {
+        let u = rng.gen_usize(n) as Vertex;
+        let v = rng.gen_usize(n) as Vertex;
+        if u == v || base.has_edge(u, v) {
+            continue;
+        }
+        let e = if u < v { (u, v) } else { (v, u) };
+        if seen.insert(e) {
+            out.push(e);
+        }
+    }
+    out
+}
+
+/// Striped parallel sweep summing every neighbor id through the
+/// `AdjacencyGraph` trait; returns the checksum so variants can be
+/// cross-checked (and the read is not optimized away).
+fn scan<G: AdjacencyGraph + Send + Sync + 'static>(
+    pool: &ThreadPool,
+    g: &Arc<G>,
+    threads: usize,
+) -> u64 {
+    let total = Arc::new(AtomicU64::new(0));
+    let n = g.n();
+    pool.scope(|s| {
+        for t in 0..threads {
+            let g = Arc::clone(g);
+            let total = Arc::clone(&total);
+            s.spawn(move |_| {
+                let mut acc = 0u64;
+                let mut v = t;
+                while v < n {
+                    for &w in g.neighbors(v as Vertex) {
+                        acc = acc.wrapping_add(w as u64 + 1);
+                    }
+                    v += threads;
+                }
+                total.fetch_add(acc, Ordering::Relaxed);
+            });
+        }
+    });
+    total.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // clustered fixture: sparse background + planted dense communities
+    let base = generators::planted_cliques(3000, 0.0015, 30, 6, 16, 7);
+    let churn = fresh_edges(&base, 800, 99);
+    let chunk = 200usize;
+    println!(
+        "fixture: n={} m={} churn={} (chunks of {chunk})",
+        base.n(),
+        base.m(),
+        churn.len()
+    );
+
+    // --- batch-apply latency: insert+remove round trips -------------------
+    // each iteration applies every chunk and then undoes it, so the timed
+    // body is steady-state (no per-iteration graph rebuild in the loop)
+    {
+        let mut g = DynGraph::from_csr(&base);
+        let dyn_ns = b.bench("apply/dyngraph/roundtrip", || {
+            for c in churn.chunks(chunk) {
+                g.insert_batch(c);
+                for &(u, v) in c {
+                    g.remove_edge(u, v);
+                }
+            }
+        });
+
+        let mut s = SnapshotGraph::from_csr(&base); // default threshold
+        let snap_ns = b.bench("apply/snapshot/roundtrip", || {
+            for c in churn.chunks(chunk) {
+                s.insert_batch(c);
+                let _ = s.publish();
+                s.remove_batch(c);
+                let _ = s.publish();
+            }
+        });
+        assert_eq!(s.m(), base.m(), "round trips must restore the fixture");
+        println!(
+            "  -> apply: snapshot {:.2}x of dyngraph ({} compactions over the run)",
+            snap_ns as f64 / dyn_ns.max(1) as f64,
+            s.compactions()
+        );
+    }
+
+    // --- neighbor-scan throughput, 1..8 threads ---------------------------
+    // all three variants hold the same logical graph: base + full churn
+    let dyn_graph = {
+        let mut g = DynGraph::from_csr(&base);
+        g.insert_batch(&churn);
+        Arc::new(g)
+    };
+    let overlay_snap = {
+        let mut s = SnapshotGraph::from_csr(&base).with_compact_threshold(usize::MAX);
+        s.insert_batch(&churn);
+        s.publish() // overlay kept: reads take the overlay-first path
+    };
+    let compacted_snap = {
+        let mut s = SnapshotGraph::from_csr(&base).with_compact_threshold(0);
+        s.insert_batch(&churn);
+        s.publish() // overlay folded into the COW blocks
+    };
+    assert!(overlay_snap.overlay_len() > 0);
+    assert_eq!(compacted_snap.overlay_len(), 0);
+
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let want = scan(&pool, &dyn_graph, threads);
+
+        let dyn_ns = b.bench(format!("scan/dyngraph/t{threads}"), || {
+            assert_eq!(scan(&pool, &dyn_graph, threads), want);
+        });
+        let overlay_ns = b.bench(format!("scan/snapshot_overlay/t{threads}"), || {
+            assert_eq!(scan(&pool, &overlay_snap, threads), want);
+        });
+        let compact_ns = b.bench(format!("scan/snapshot_compacted/t{threads}"), || {
+            assert_eq!(scan(&pool, &compacted_snap, threads), want);
+        });
+
+        println!(
+            "  -> t{threads}: vs dyngraph — overlay {:.2}x, compacted {:.2}x",
+            dyn_ns as f64 / overlay_ns.max(1) as f64,
+            dyn_ns as f64 / compact_ns.max(1) as f64,
+        );
+    }
+
+    b.dump_json("results/bench_dyngraph.json");
+}

@@ -18,7 +18,7 @@ use std::time::Instant;
 use crate::dynamic::registry::{canonical, CliqueKey, CliqueRegistry};
 use crate::dynamic::ttt_exclude::{ttt_exclude_edges_with_cutoff, EdgeSet};
 use crate::dynamic::BatchResult;
-use crate::graph::adj::DynGraph;
+use crate::graph::snapshot::SnapshotGraph;
 use crate::graph::{Edge, Vertex};
 use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 use crate::mce::sink::CollectSink;
@@ -50,7 +50,7 @@ impl BatchTimings {
 /// Apply one batch of edge insertions; returns the change set (canonical)
 /// and per-task timings. The registry is updated to C(G + H).
 pub fn imce_batch(
-    graph: &mut DynGraph,
+    graph: &mut SnapshotGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
 ) -> (BatchResult, BatchTimings) {
@@ -60,13 +60,17 @@ pub fn imce_batch(
 /// As [`imce_batch`] with an explicit bitset hand-off threshold for the
 /// TTT-exclude recompute calls (0 = slice-only recursion).
 pub fn imce_batch_with_cutoff(
-    graph: &mut DynGraph,
+    graph: &mut SnapshotGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
     bitset_cutoff: usize,
 ) -> (BatchResult, BatchTimings) {
-    // Figure 4 step 1: apply the batch to the shared graph (dedup).
+    // Figure 4 step 1: apply the batch to the shared graph (dedup), then
+    // publish the post-batch epoch; enumeration reads the immutable
+    // snapshot, never the writer.
     let added = graph.insert_batch(batch);
+    let snap = graph.publish();
+    let g = snap.as_ref();
     let mut timings = BatchTimings::default();
 
     // --- FastIMCENewClq ---------------------------------------------------
@@ -75,11 +79,11 @@ pub fn imce_batch_with_cutoff(
     for &(u, v) in &added {
         let t0 = Instant::now();
         let sink = CollectSink::new();
-        let cand = graph.common_neighbors(u, v);
+        let cand = g.common_neighbors(u, v);
         let mut k = vec![u.min(v), u.max(v)];
         k.sort_unstable();
         ttt_exclude_edges_with_cutoff(
-            graph,
+            g,
             &mut k,
             cand,
             Vec::new(),
@@ -182,7 +186,7 @@ mod tests {
     /// Cross-check: registry after the batch must equal C(G+H) from scratch.
     fn check_batch(n: usize, initial: &[Edge], batch: &[Edge]) -> BatchResult {
         let g0 = CsrGraph::from_edges(n, initial);
-        let mut graph = DynGraph::from_csr(&g0);
+        let mut graph = SnapshotGraph::from_csr(&g0);
         let registry = CliqueRegistry::from_graph(&g0);
         let before = oracle::maximal_cliques(&g0);
 
@@ -240,7 +244,7 @@ mod tests {
     fn duplicate_and_existing_edges_are_noops() {
         let initial = [(0, 1), (1, 2)];
         let g0 = CsrGraph::from_edges(4, &initial);
-        let mut graph = DynGraph::from_csr(&g0);
+        let mut graph = SnapshotGraph::from_csr(&g0);
         let registry = CliqueRegistry::from_graph(&g0);
         let (r, _) = imce_batch(&mut graph, &registry, &[(0, 1), (1, 0)]);
         assert_eq!(r.change_size(), 0);
@@ -250,7 +254,7 @@ mod tests {
     fn batch_from_empty_graph() {
         // the §6 methodology: start from an edgeless graph, add everything
         let target = generators::gnp(12, 0.5, 3);
-        let mut graph = DynGraph::new(12);
+        let mut graph = SnapshotGraph::empty(12);
         let registry = CliqueRegistry::new();
         for v in 0..12u32 {
             registry.insert(&[v]); // C(empty graph) = singletons
@@ -276,7 +280,7 @@ mod tests {
                 let initial = &edges[..*cut];
                 let batch = &edges[*cut..];
                 let g0 = CsrGraph::from_edges(*n, initial);
-                let mut graph = DynGraph::from_csr(&g0);
+                let mut graph = SnapshotGraph::from_csr(&g0);
                 let registry = CliqueRegistry::from_graph(&g0);
                 imce_batch(&mut graph, &registry, batch);
                 let after = oracle::maximal_cliques(&graph.to_csr());

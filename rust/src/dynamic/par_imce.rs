@@ -18,7 +18,7 @@ use crate::dynamic::imce::{subsumption_candidates, BatchTimings};
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::ttt_exclude::{ttt_exclude_edges_with_cutoff, EdgeSet};
 use crate::dynamic::BatchResult;
-use crate::graph::adj::DynGraph;
+use crate::graph::snapshot::{GraphSnapshot, SnapshotGraph};
 use crate::graph::{Edge, Vertex};
 use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 use crate::mce::sink::CollectSink;
@@ -28,7 +28,7 @@ use crate::mce::sink::CollectSink;
 /// equality); only the schedule differs.
 pub fn par_imce_batch(
     pool: &ThreadPool,
-    graph: &mut DynGraph,
+    graph: &mut SnapshotGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
 ) -> (BatchResult, BatchTimings) {
@@ -39,32 +39,33 @@ pub fn par_imce_batch(
 /// the per-edge TTT-exclude recompute tasks (0 = slice-only recursion).
 pub fn par_imce_batch_with_cutoff(
     pool: &ThreadPool,
-    graph: &mut DynGraph,
+    graph: &mut SnapshotGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
     bitset_cutoff: usize,
 ) -> (BatchResult, BatchTimings) {
-    // graph mutation is the single-threaded step between batches (Fig. 4)
+    // graph mutation is the single-threaded step between batches (Fig. 4);
+    // publishing then hands every enumeration task the same immutable
+    // epoch snapshot — a plain `Arc`, no lifetime-erased graph borrow.
     let added = Arc::new(graph.insert_batch(batch));
+    let snap = graph.publish();
     let timings = Mutex::new(BatchTimings::default());
 
     // --- ParIMCENew (Algorithm 5): one task per new edge ------------------
-    // The graph is read-only during enumeration; share it by reference
-    // through an Arc'd snapshot pointer (no copy — DynGraph is borrowed
-    // immutably for the whole scope).
     let new_cliques: Mutex<Vec<Vec<Vertex>>> = Mutex::new(Vec::new());
     {
-        // Tasks borrow `graph`, `new_cliques`, `timings` — all outlive the
+        // Tasks borrow `new_cliques` and `timings` — both outlive the
         // scope because `pool.scope` blocks.  The pool API requires
         // 'static, so the borrows are lifetime-erased through the audited
-        // ScopeShare/ScopedPtr surface in `util::sync`.
+        // ScopeShare/ScopedPtr surface in `util::sync` (the graph itself
+        // travels as an owned `Arc<GraphSnapshot>`, no erasure needed).
         //
         // SAFETY: every shared referent lives until after `pool.scope`
         // returns, and the scope joins all tasks holding the pointers.
         #[allow(unsafe_code)]
         let share = unsafe { ScopeShare::new() };
         let shared = SharedBatchCtx {
-            graph: share.share(&*graph),
+            graph: Arc::clone(&snap),
             added: Arc::clone(&added),
             new_cliques: share.share(&new_cliques),
             timings: share.share(&timings),
@@ -74,7 +75,7 @@ pub fn par_imce_batch_with_cutoff(
             for i in 0..added.len() {
                 let ctx = shared.clone();
                 s.spawn(move |_| {
-                    let graph = ctx.graph.get();
+                    let graph = ctx.graph.as_ref();
                     let new_cliques = ctx.new_cliques.get();
                     let timings = ctx.timings.get();
                     let (u, v) = ctx.added[i];
@@ -165,7 +166,8 @@ pub fn par_imce_batch_with_cutoff(
 /// in [`par_imce_batch_with_cutoff`].
 #[derive(Clone)]
 struct SharedBatchCtx {
-    graph: ScopedPtr<DynGraph>,
+    /// the published epoch snapshot — owned, so no liveness argument needed
+    graph: Arc<GraphSnapshot>,
     added: Arc<Vec<Edge>>,
     new_cliques: ScopedPtr<Mutex<Vec<Vec<Vertex>>>>,
     timings: ScopedPtr<Mutex<BatchTimings>>,
@@ -195,11 +197,11 @@ mod tests {
         let pool = ThreadPool::new(4);
         let g0 = CsrGraph::from_edges(n, initial);
 
-        let mut g_seq = DynGraph::from_csr(&g0);
+        let mut g_seq = SnapshotGraph::from_csr(&g0);
         let reg_seq = CliqueRegistry::from_graph(&g0);
         let (r_seq, _) = imce_batch(&mut g_seq, &reg_seq, batch);
 
-        let mut g_par = DynGraph::from_csr(&g0);
+        let mut g_par = SnapshotGraph::from_csr(&g0);
         let reg_par = CliqueRegistry::from_graph(&g0);
         let (r_par, _) = par_imce_batch(&pool, &mut g_par, &reg_par, batch);
 
@@ -246,7 +248,7 @@ mod tests {
         let edges = target.edges();
         let cut = edges.len() / 2;
         let g0 = CsrGraph::from_edges(60, &edges[..cut]);
-        let mut graph = DynGraph::from_csr(&g0);
+        let mut graph = SnapshotGraph::from_csr(&g0);
         let registry = CliqueRegistry::from_graph(&g0);
         par_imce_batch(&pool, &mut graph, &registry, &edges[cut..]);
         let after = oracle::maximal_cliques(&graph.to_csr());
@@ -261,7 +263,7 @@ mod tests {
         // §5: adding one edge inside a Moon–Moser part multiplies cliques.
         let pool = ThreadPool::new(2);
         let g0 = generators::moon_moser(3); // 27 maximal cliques
-        let mut graph = DynGraph::from_csr(&g0);
+        let mut graph = SnapshotGraph::from_csr(&g0);
         let registry = CliqueRegistry::from_graph(&g0);
         let (r, _) = par_imce_batch(&pool, &mut graph, &registry, &[(0, 1)]);
         // edge inside part {0,1,2}: 9 new cliques {0,1,x,y}; every old

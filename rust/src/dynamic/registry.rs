@@ -14,8 +14,7 @@
 use crate::coordinator::pool::ThreadPool;
 use crate::util::sync::{Arc, Mutex};
 
-use crate::graph::csr::CsrGraph;
-use crate::graph::Vertex;
+use crate::graph::{AdjacencyGraph, Vertex};
 use crate::mce::sink::{CallbackSink, CliqueSink};
 use crate::mce::{parttt, ttt, ParTttConfig};
 use crate::util::chashmap::ConcurrentSet;
@@ -47,13 +46,20 @@ impl CliqueRegistry {
         Self::default()
     }
 
-    /// Bootstrap from a static graph: C(G) via sequential TTT.
-    pub fn from_graph(g: &CsrGraph) -> Self {
+    /// Bootstrap from a static graph: C(G) via sequential TTT.  Generic
+    /// over the adjacency source, so it runs on a `CsrGraph` or directly
+    /// on a published [`crate::graph::snapshot::GraphSnapshot`].
+    pub fn from_graph<G: AdjacencyGraph + ?Sized>(g: &G) -> Self {
         let reg = CliqueRegistry::new();
+        if g.n() == 0 {
+            return reg;
+        }
         let sink = CallbackSink::new(|c: &[Vertex]| {
             reg.insert(c);
         });
-        ttt::ttt(g, &sink);
+        let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
+        let mut k = Vec::new();
+        ttt::ttt_from(g, &mut k, cand, Vec::new(), &sink);
         drop(sink);
         reg
     }
@@ -61,13 +67,16 @@ impl CliqueRegistry {
     /// Bootstrap from a static graph in parallel: C(G) via ParTTT on
     /// `pool`, every worker inserting straight into the sharded set —
     /// the concurrent registry *is* the sharded sink, so no merge step.
-    pub fn from_graph_parallel(g: &CsrGraph, pool: &ThreadPool) -> Self {
+    /// Takes the graph by `Arc` (ParTTT's 'static task bound) so callers
+    /// that already hold one — e.g. a published snapshot — share it with
+    /// zero adjacency copies.
+    pub fn from_graph_parallel<G: AdjacencyGraph + Send + Sync + 'static>(
+        g: &Arc<G>,
+        pool: &ThreadPool,
+    ) -> Self {
         let reg = Arc::new(CliqueRegistry::new());
         let sink: Arc<dyn CliqueSink> = Arc::new(RegistrySink(Arc::clone(&reg)));
-        // ParTTT's 'static task bound needs an owned graph snapshot; the
-        // O(n + m) copy is noise next to the enumeration it feeds.
-        let g = Arc::new(g.clone());
-        parttt::parttt(pool, &g, &sink, ParTttConfig::default());
+        parttt::parttt(pool, g, &sink, ParTttConfig::default());
         drop(sink);
         Arc::try_unwrap(reg).ok().expect("bootstrap tasks joined; sink dropped")
     }
@@ -209,10 +218,10 @@ mod tests {
 
     #[test]
     fn parallel_bootstrap_matches_sequential() {
-        let g = generators::planted_cliques(40, 0.08, 3, 4, 6, 11);
+        let g = Arc::new(generators::planted_cliques(40, 0.08, 3, 4, 6, 11));
         let pool = ThreadPool::new(3);
         let par = CliqueRegistry::from_graph_parallel(&g, &pool);
-        let seq = CliqueRegistry::from_graph(&g);
+        let seq = CliqueRegistry::from_graph(g.as_ref());
         assert_eq!(par.len(), seq.len());
         assert_eq!(par.drain_canonical(), seq.drain_canonical());
     }

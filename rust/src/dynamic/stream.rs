@@ -14,10 +14,10 @@ use crate::coordinator::pool::ThreadPool;
 use crate::dynamic::imce::subsumption_candidates;
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::BatchResult;
-use crate::graph::adj::DynGraph;
 use crate::graph::csr::CsrGraph;
 use crate::graph::edgelist::TimedEdge;
-use crate::graph::{Edge, Vertex};
+use crate::graph::snapshot::SnapshotGraph;
+use crate::graph::{AdjacencyGraph, Edge, Vertex};
 use crate::session::dynamic::{DynAlgo, DynamicSession};
 use crate::util::rng::Rng;
 use crate::util::vset;
@@ -85,7 +85,7 @@ pub fn replay(
     batch_size: usize,
     engine: Engine<'_>,
     max_batches: Option<usize>,
-) -> (Vec<BatchRecord>, DynGraph, CliqueRegistry) {
+) -> (Vec<BatchRecord>, SnapshotGraph, CliqueRegistry) {
     let mut session = match engine {
         Engine::Sequential => DynamicSession::from_empty(stream.n, DynAlgo::Imce),
         Engine::Parallel(pool) => {
@@ -99,16 +99,14 @@ pub fn replay(
 
 /// Decremental case (§5.3): remove a batch of edges, maintaining C(G).
 pub fn imce_remove_batch(
-    graph: &mut DynGraph,
+    graph: &mut SnapshotGraph,
     registry: &CliqueRegistry,
     batch: &[Edge],
 ) -> BatchResult {
-    // apply removals (dedup)
-    let removed: Vec<Edge> = batch
-        .iter()
-        .filter(|&&(u, v)| graph.remove_edge(u, v))
-        .map(|&(u, v)| (u.min(v), u.max(v)))
-        .collect();
+    // apply removals (dedup), then publish the post-batch epoch; the
+    // maximality checks below read the immutable snapshot
+    let removed = graph.remove_batch(batch);
+    let snap = graph.publish();
 
     // Λdel = old maximal cliques containing ≥1 removed edge: collect by
     // scanning the registry once per removed edge's endpoints' cliques —
@@ -139,7 +137,7 @@ pub fn imce_remove_batch(
             if cand.is_empty() {
                 continue;
             }
-            if is_maximal(graph, &cand) && registry.insert_canonical(&cand) {
+            if is_maximal(snap.as_ref(), &cand) && registry.insert_canonical(&cand) {
                 new_cliques.push(cand.into_vec());
             }
         }
@@ -154,7 +152,7 @@ pub fn imce_remove_batch(
 }
 
 /// Explicit maximality check of a clique in the dynamic graph.
-fn is_maximal(g: &DynGraph, clique: &[Vertex]) -> bool {
+fn is_maximal<G: AdjacencyGraph + ?Sized>(g: &G, clique: &[Vertex]) -> bool {
     let seed = clique
         .iter()
         .copied()
@@ -269,7 +267,7 @@ mod tests {
             },
             |(n, edges, k)| {
                 let g = CsrGraph::from_edges(*n, edges);
-                let mut graph = DynGraph::from_csr(&g);
+                let mut graph = SnapshotGraph::from_csr(&g);
                 let registry = CliqueRegistry::from_graph(&g);
                 imce_remove_batch(&mut graph, &registry, &edges[..*k]);
                 let want = oracle::maximal_cliques(&graph.to_csr());
@@ -293,7 +291,7 @@ mod tests {
     #[test]
     fn remove_then_add_roundtrip() {
         let g = generators::complete(6);
-        let mut graph = DynGraph::from_csr(&g);
+        let mut graph = SnapshotGraph::from_csr(&g);
         let registry = CliqueRegistry::from_graph(&g);
         assert_eq!(registry.len(), 1);
         let r = imce_remove_batch(&mut graph, &registry, &[(0, 1)]);

@@ -1,9 +1,15 @@
-//! Dynamic adjacency structure for the incremental algorithms (§5).
+//! Legacy dynamic adjacency structure (reference implementation).
 //!
 //! Neighbour lists are kept as sorted `Vec<u32>` so the same `util::vset`
 //! set algebra used on CSR slices works on a graph that changes between
 //! batches.  Mutation is single-threaded (between batches, Figure 4's
 //! "update graph" step); reads during enumeration are shared.
+//!
+//! The incremental pipeline itself now runs on the epoch-snapshotted
+//! delta-CSR store in [`crate::graph::snapshot`] (DESIGN.md "Graph
+//! storage"); `DynGraph` stays as the simplest-possible mirror that the
+//! equivalence suite (`tests/graph_snapshot_equivalence.rs`) and the
+//! snapshot unit tests check the delta-CSR path against.
 
 use crate::graph::csr::CsrGraph;
 use crate::graph::{norm_edge, Edge, Vertex};

@@ -8,6 +8,7 @@ pub mod datasets;
 pub mod degeneracy;
 pub mod edgelist;
 pub mod generators;
+pub mod snapshot;
 pub mod stats;
 pub mod triangles;
 
@@ -30,9 +31,11 @@ pub fn norm_edge(u: Vertex, v: Vertex) -> Option<Edge> {
 
 /// Read-only adjacency access with *sorted* neighbour slices — the shape
 /// the TTT-family set algebra needs.  Implemented by the static
-/// [`csr::CsrGraph`] and the dynamic [`adj::DynGraph`], so the sequential
-/// enumerators run unchanged on both (the incremental algorithms of §5
-/// enumerate inside a graph that mutates between batches).
+/// [`csr::CsrGraph`], the epoch-snapshotted [`snapshot::GraphSnapshot`] /
+/// [`snapshot::SnapshotGraph`] pair the dynamic stack runs on, and the
+/// legacy [`adj::DynGraph`], so every enumerator runs unchanged on all of
+/// them (the incremental algorithms of §5 enumerate inside a graph that
+/// mutates between batches).
 pub trait AdjacencyGraph: Sync {
     fn n(&self) -> usize;
     fn neighbors(&self, v: Vertex) -> &[Vertex];
@@ -64,6 +67,30 @@ impl AdjacencyGraph for adj::DynGraph {
     #[inline]
     fn neighbors(&self, v: Vertex) -> &[Vertex] {
         adj::DynGraph::neighbors(self, v)
+    }
+}
+
+impl AdjacencyGraph for snapshot::GraphSnapshot {
+    #[inline]
+    fn n(&self) -> usize {
+        snapshot::GraphSnapshot::n(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        snapshot::GraphSnapshot::neighbors(self, v)
+    }
+}
+
+impl AdjacencyGraph for snapshot::SnapshotGraph {
+    #[inline]
+    fn n(&self) -> usize {
+        snapshot::SnapshotGraph::n(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        snapshot::SnapshotGraph::neighbors(self, v)
     }
 }
 

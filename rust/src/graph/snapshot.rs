@@ -1,0 +1,812 @@
+//! Epoch-snapshotted delta-CSR graph storage — the one adjacency
+//! structure both the static and dynamic stacks read through.
+//!
+//! The paper's dynamic algorithms (§5, Figure 4) alternate an "update
+//! graph" step with an "enumerate Λⁿᵉʷ/Λᵈᵉˡ" step.  [`SnapshotGraph`] is
+//! the writer for that loop: adjacency lives in fixed-width CSR *blocks*
+//! ([`BLOCK_VERTS`] vertices each, every block behind its own `Arc`),
+//! plus a small per-vertex *overlay* of freshly mutated neighbour lists.
+//! Mutating a vertex copies only its list into the overlay (first touch)
+//! or rewrites the overlay entry in place; untouched blocks are never
+//! copied — the same pointer-level COW the service store uses for its
+//! posting lists.
+//!
+//! [`SnapshotGraph::publish`] freezes the current state into an immutable
+//! [`GraphSnapshot`] (block spine and overlay entries shared by `Arc`
+//! clone — O(overlay) refcount bumps, zero adjacency bytes copied) and
+//! installs it in the [`GraphCell`], bumping the graph epoch: one epoch
+//! per applied batch.  Enumeration then runs against the snapshot, so
+//! ParIMCE tasks share a plain `Arc` instead of a lifetime-erased borrow,
+//! and service snapshots can pin the *exact* graph their clique set was
+//! computed against.
+//!
+//! When the overlay grows past [`SnapshotGraph::compact_threshold`]
+//! (total neighbour entries across overlay lists, checked at publish),
+//! `compact` folds it back into the block array, rebuilding only the
+//! touched blocks.  Snapshots pinned at older epochs keep their own
+//! `Arc`s to the pre-compaction blocks and overlay entries, so they stay
+//! byte-identical forever.
+
+use std::collections::HashMap;
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::{norm_edge, Edge, Vertex};
+use crate::util::chashmap::FxBuildHasher;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
+use crate::util::vset;
+
+/// log₂ of the block width: 128 vertices per CSR block — small enough
+/// that a batch touching a handful of vertices copies a few KiB, large
+/// enough that the block spine stays short.
+pub const BLOCK_SHIFT: usize = 7;
+/// Vertices per CSR block.
+pub const BLOCK_VERTS: usize = 1 << BLOCK_SHIFT;
+const BLOCK_MASK: usize = BLOCK_VERTS - 1;
+
+/// Default overlay size (total neighbour entries across overlay lists)
+/// above which `publish` compacts the overlay back into the blocks.
+pub const DEFAULT_COMPACT_THRESHOLD: usize = 1 << 15;
+
+/// One fixed-width CSR chunk: local offsets for up to [`BLOCK_VERTS`]
+/// vertices plus their concatenated sorted neighbour lists.
+#[derive(Clone, Debug)]
+struct CsrBlock {
+    /// `block_len + 1` local offsets into `nbrs`.
+    offsets: Vec<usize>,
+    nbrs: Vec<Vertex>,
+}
+
+impl CsrBlock {
+    fn empty(len: usize) -> CsrBlock {
+        CsrBlock {
+            offsets: vec![0; len + 1],
+            nbrs: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn neighbors(&self, local: usize) -> &[Vertex] {
+        &self.nbrs[self.offsets[local]..self.offsets[local + 1]]
+    }
+}
+
+fn empty_blocks(n: usize) -> Vec<Arc<CsrBlock>> {
+    let mut blocks = Vec::with_capacity(n.div_ceil(BLOCK_VERTS));
+    let mut start = 0;
+    while start < n {
+        let len = (n - start).min(BLOCK_VERTS);
+        blocks.push(Arc::new(CsrBlock::empty(len)));
+        start += len;
+    }
+    blocks
+}
+
+/// Immutable view of the graph at one epoch.  Readers resolve a vertex
+/// through the (sorted) overlay first, then its CSR block; both are
+/// shared with the writer and with other epochs at the `Arc` level, so a
+/// snapshot costs pointer clones, never adjacency bytes.  Implements
+/// [`crate::graph::AdjacencyGraph`], so every TTT-family enumerator runs
+/// on it unchanged.
+pub struct GraphSnapshot {
+    epoch: u64,
+    n: usize,
+    m: usize,
+    blocks: Arc<Vec<Arc<CsrBlock>>>,
+    /// mutated-since-compaction vertices, sorted by vertex id.
+    overlay: Vec<(Vertex, Arc<Vec<Vertex>>)>,
+}
+
+impl GraphSnapshot {
+    /// The batch boundary this snapshot reflects (0 = initial state).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Sorted neighbour slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        if !self.overlay.is_empty() {
+            if let Ok(i) = self.overlay.binary_search_by_key(&v, |e| e.0) {
+                return &self.overlay[i].1;
+            }
+        }
+        let idx = v as usize;
+        self.blocks[idx >> BLOCK_SHIFT].neighbors(idx & BLOCK_MASK)
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.neighbors(v).len()
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        if u == v {
+            return false;
+        }
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        vset::contains(self.neighbors(a), b)
+    }
+
+    /// Common neighbourhood Γ(u) ∩ Γ(v).
+    pub fn common_neighbors(&self, u: Vertex, v: Vertex) -> Vec<Vertex> {
+        vset::intersect(self.neighbors(u), self.neighbors(v))
+    }
+
+    pub fn is_clique(&self, verts: &[Vertex]) -> bool {
+        for (i, &u) in verts.iter().enumerate() {
+            for &v in &verts[i + 1..] {
+                if u == v || !self.has_edge(u, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Is `clique` a *maximal* clique of this snapshot — i.e. a clique no
+    /// vertex outside it is adjacent to all of?
+    pub fn is_maximal_clique(&self, clique: &[Vertex]) -> bool {
+        if clique.is_empty() || !self.is_clique(clique) {
+            return false;
+        }
+        let mut sorted = clique.to_vec();
+        sorted.sort_unstable();
+        let seed = *sorted
+            .iter()
+            .min_by_key(|&&v| self.degree(v))
+            .expect("clique checked non-empty");
+        'outer: for &w in self.neighbors(seed) {
+            if vset::contains(&sorted, w) {
+                continue;
+            }
+            for &u in &sorted {
+                if !self.has_edge(u, w) {
+                    continue 'outer;
+                }
+            }
+            return false; // w extends the clique
+        }
+        true
+    }
+
+    /// All edges as normalized (u < v) pairs.
+    pub fn edges(&self) -> Vec<Edge> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n as Vertex {
+            for &v in self.neighbors(u) {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize a standalone [`CsrGraph`] — export/verification only;
+    /// the dynamic hot paths never call this (enumeration runs directly
+    /// on the snapshot through `AdjacencyGraph`).
+    pub fn to_csr(&self) -> CsrGraph {
+        CsrGraph::from_edges(self.n, &self.edges())
+    }
+
+    /// Overlay entries not yet compacted into the block array (bench /
+    /// test introspection: 0 means every read hits a CSR block).
+    pub fn overlay_len(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Minimal synthetic snapshot: the edgeless graph on `n` vertices at
+    /// `epoch`.
+    ///
+    /// Concurrency-harness hook (`rust/tests/loom_models.rs` builds
+    /// distinguishable payloads per epoch without running batches);
+    /// hidden from docs because real snapshots come from
+    /// [`SnapshotGraph::publish`].
+    #[doc(hidden)]
+    pub fn synthetic(epoch: u64, n: usize) -> GraphSnapshot {
+        GraphSnapshot {
+            epoch,
+            n,
+            m: 0,
+            blocks: Arc::new(empty_blocks(n)),
+            overlay: Vec::new(),
+        }
+    }
+}
+
+/// The single-writer delta-CSR graph: CSR blocks + mutation overlay.
+/// Mutation is the single-threaded step between batches (Figure 4);
+/// readers hold published [`GraphSnapshot`]s and never touch the writer.
+pub struct SnapshotGraph {
+    n: usize,
+    m: usize,
+    /// epoch of the most recently published snapshot.
+    epoch: u64,
+    blocks: Arc<Vec<Arc<CsrBlock>>>,
+    /// freshly mutated neighbour lists, keyed by vertex.  Entries are
+    /// `Arc`'d so `publish` shares them with snapshots; `Arc::make_mut`
+    /// on the next mutation copies a list only if a snapshot still pins
+    /// it.
+    overlay: HashMap<Vertex, Arc<Vec<Vertex>>, FxBuildHasher>,
+    /// Σ len over overlay lists — the compaction trigger metric.
+    overlay_nbrs: usize,
+    compact_threshold: usize,
+    compactions: u64,
+    cell: Arc<GraphCell>,
+}
+
+impl SnapshotGraph {
+    /// The edgeless graph on `n` vertices; epoch 0 is published
+    /// immediately.
+    pub fn empty(n: usize) -> SnapshotGraph {
+        Self::with_blocks(n, 0, empty_blocks(n))
+    }
+
+    /// Chunk an existing static graph into blocks (one adjacency copy —
+    /// the only one this structure ever makes); epoch 0 is published
+    /// immediately.
+    pub fn from_csr(g: &CsrGraph) -> SnapshotGraph {
+        let n = g.n();
+        let mut blocks = Vec::with_capacity(n.div_ceil(BLOCK_VERTS));
+        let mut start = 0;
+        while start < n {
+            let len = (n - start).min(BLOCK_VERTS);
+            let mut offsets = Vec::with_capacity(len + 1);
+            offsets.push(0usize);
+            let mut nbrs: Vec<Vertex> = Vec::new();
+            for local in 0..len {
+                nbrs.extend_from_slice(g.neighbors((start + local) as Vertex));
+                offsets.push(nbrs.len());
+            }
+            blocks.push(Arc::new(CsrBlock { offsets, nbrs }));
+            start += len;
+        }
+        Self::with_blocks(n, g.m(), blocks)
+    }
+
+    fn with_blocks(n: usize, m: usize, blocks: Vec<Arc<CsrBlock>>) -> SnapshotGraph {
+        let blocks = Arc::new(blocks);
+        let initial = Arc::new(GraphSnapshot {
+            epoch: 0,
+            n,
+            m,
+            blocks: Arc::clone(&blocks),
+            overlay: Vec::new(),
+        });
+        SnapshotGraph {
+            n,
+            m,
+            epoch: 0,
+            blocks,
+            overlay: HashMap::default(),
+            overlay_nbrs: 0,
+            compact_threshold: DEFAULT_COMPACT_THRESHOLD,
+            compactions: 0,
+            cell: Arc::new(GraphCell::new(initial)),
+        }
+    }
+
+    /// Overlay size (total neighbour entries) above which `publish`
+    /// compacts.  0 compacts on every publish (pure-CSR snapshots);
+    /// `usize::MAX` never compacts.
+    pub fn with_compact_threshold(mut self, nbrs: usize) -> SnapshotGraph {
+        self.compact_threshold = nbrs;
+        self
+    }
+
+    pub fn set_compact_threshold(&mut self, nbrs: usize) {
+        self.compact_threshold = nbrs;
+    }
+
+    pub fn compact_threshold(&self) -> usize {
+        self.compact_threshold
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Epoch of the most recently published snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// How many times the overlay has been folded back into the blocks.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Overlay entries (mutated vertices) not yet compacted.
+    pub fn overlay_len(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Total neighbour entries across overlay lists (the compaction
+    /// trigger metric).
+    pub fn overlay_nbrs(&self) -> usize {
+        self.overlay_nbrs
+    }
+
+    /// Sorted neighbour slice of `v` — the writer's own (possibly
+    /// not-yet-published) view.
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        if !self.overlay.is_empty() {
+            if let Some(l) = self.overlay.get(&v) {
+                return l;
+            }
+        }
+        let idx = v as usize;
+        self.blocks[idx >> BLOCK_SHIFT].neighbors(idx & BLOCK_MASK)
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        self.neighbors(v).len()
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
+        if u == v {
+            return false;
+        }
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        vset::contains(self.neighbors(a), b)
+    }
+
+    /// Common neighbourhood Γ(u) ∩ Γ(v).
+    pub fn common_neighbors(&self, u: Vertex, v: Vertex) -> Vec<Vertex> {
+        vset::intersect(self.neighbors(u), self.neighbors(v))
+    }
+
+    pub fn is_clique(&self, verts: &[Vertex]) -> bool {
+        for (i, &u) in verts.iter().enumerate() {
+            for &v in &verts[i + 1..] {
+                if u == v || !self.has_edge(u, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// The mutated list of `v`, materialized into the overlay on first
+    /// touch (one list copy); `Arc::make_mut` re-copies only while a
+    /// published snapshot still pins the entry.
+    fn overlay_list(&mut self, v: Vertex) -> &mut Vec<Vertex> {
+        if !self.overlay.contains_key(&v) {
+            let idx = v as usize;
+            let base = self.blocks[idx >> BLOCK_SHIFT]
+                .neighbors(idx & BLOCK_MASK)
+                .to_vec();
+            self.overlay_nbrs += base.len();
+            self.overlay.insert(v, Arc::new(base));
+        }
+        Arc::make_mut(self.overlay.get_mut(&v).expect("entry just ensured"))
+    }
+
+    /// Insert an undirected edge; true if the graph changed.
+    pub fn insert_edge(&mut self, u: Vertex, v: Vertex) -> bool {
+        let Some((a, b)) = norm_edge(u, v) else {
+            return false;
+        };
+        debug_assert!((b as usize) < self.n, "vertex {b} out of range");
+        if self.has_edge(a, b) {
+            return false;
+        }
+        vset::insert_sorted(self.overlay_list(a), b);
+        vset::insert_sorted(self.overlay_list(b), a);
+        self.overlay_nbrs += 2;
+        self.m += 1;
+        true
+    }
+
+    /// Remove an undirected edge; true if the graph changed.
+    pub fn remove_edge(&mut self, u: Vertex, v: Vertex) -> bool {
+        let Some((a, b)) = norm_edge(u, v) else {
+            return false;
+        };
+        if !self.has_edge(a, b) {
+            return false;
+        }
+        vset::remove_sorted(self.overlay_list(a), b);
+        vset::remove_sorted(self.overlay_list(b), a);
+        self.overlay_nbrs -= 2;
+        self.m -= 1;
+        true
+    }
+
+    /// Insert a batch; returns the edges that were actually new,
+    /// normalized, in batch order.
+    pub fn insert_batch(&mut self, edges: &[Edge]) -> Vec<Edge> {
+        let mut added = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if self.insert_edge(u, v) {
+                added.push(norm_edge(u, v).expect("insert_edge rejects self-loops"));
+            }
+        }
+        added
+    }
+
+    /// Remove a batch; returns the edges that were actually present,
+    /// normalized, in batch order.
+    pub fn remove_batch(&mut self, edges: &[Edge]) -> Vec<Edge> {
+        let mut removed = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if self.remove_edge(u, v) {
+                removed.push(norm_edge(u, v).expect("remove_edge rejects self-loops"));
+            }
+        }
+        removed
+    }
+
+    /// Fold the overlay back into the block array, rebuilding only the
+    /// blocks that contain a mutated vertex.  Snapshots pinned at older
+    /// epochs keep their own `Arc`s to the old blocks, so compaction
+    /// never changes what they read.
+    pub fn compact(&mut self) {
+        if self.overlay.is_empty() {
+            return;
+        }
+        let mut touched: Vec<Vertex> = self.overlay.keys().copied().collect();
+        touched.sort_unstable();
+        // clones the Arc spine (pointer-sized entries) iff a snapshot
+        // still shares it; block payloads are only rebuilt when touched
+        let blocks = Arc::make_mut(&mut self.blocks);
+        let mut i = 0;
+        while i < touched.len() {
+            let bi = (touched[i] as usize) >> BLOCK_SHIFT;
+            let start = bi << BLOCK_SHIFT;
+            let len = (self.n - start).min(BLOCK_VERTS);
+            let mut offsets = Vec::with_capacity(len + 1);
+            offsets.push(0usize);
+            let mut nbrs: Vec<Vertex> = Vec::new();
+            {
+                let old = &blocks[bi];
+                for local in 0..len {
+                    let v = (start + local) as Vertex;
+                    match self.overlay.get(&v) {
+                        Some(l) => nbrs.extend_from_slice(l),
+                        None => nbrs.extend_from_slice(old.neighbors(local)),
+                    }
+                    offsets.push(nbrs.len());
+                }
+            }
+            blocks[bi] = Arc::new(CsrBlock { offsets, nbrs });
+            while i < touched.len() && (touched[i] as usize) >> BLOCK_SHIFT == bi {
+                i += 1;
+            }
+        }
+        self.overlay.clear();
+        self.overlay_nbrs = 0;
+        self.compactions += 1;
+    }
+
+    /// Freeze the current state and publish it as the next epoch.
+    /// Compacts first when the overlay exceeds the threshold.  One call
+    /// per applied batch keeps graph epochs aligned with batch sequence
+    /// numbers.
+    pub fn publish(&mut self) -> Arc<GraphSnapshot> {
+        if self.overlay_nbrs > self.compact_threshold {
+            self.compact();
+        }
+        self.epoch += 1;
+        let snap = Arc::new(self.freeze());
+        self.cell.publish(Arc::clone(&snap));
+        snap
+    }
+
+    /// The most recently published snapshot.
+    pub fn current(&self) -> Arc<GraphSnapshot> {
+        self.cell.load()
+    }
+
+    /// The publish/subscribe cell, for readers that outlive a borrow of
+    /// the writer.
+    pub fn cell(&self) -> &Arc<GraphCell> {
+        &self.cell
+    }
+
+    fn freeze(&self) -> GraphSnapshot {
+        let mut overlay: Vec<(Vertex, Arc<Vec<Vertex>>)> = self
+            .overlay
+            .iter()
+            .map(|(&v, l)| (v, Arc::clone(l)))
+            .collect();
+        overlay.sort_unstable_by_key(|e| e.0);
+        GraphSnapshot {
+            epoch: self.epoch,
+            n: self.n,
+            m: self.m,
+            blocks: Arc::clone(&self.blocks),
+            overlay,
+        }
+    }
+
+    /// All edges as normalized (u < v) pairs — the writer's current view.
+    pub fn edges(&self) -> Vec<Edge> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n as Vertex {
+            for &v in self.neighbors(u) {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize a standalone [`CsrGraph`] — export/verification only;
+    /// the dynamic hot paths never call this.
+    pub fn to_csr(&self) -> CsrGraph {
+        CsrGraph::from_edges(self.n, &self.edges())
+    }
+}
+
+/// Single-writer, many-reader graph-snapshot handoff — the same
+/// copy-on-publish RCU protocol as [`crate::service::SnapshotCell`]: the
+/// epoch tag is stored Release *before* the `Arc` swap under the same
+/// mutex, and readers pair it with an Acquire load, so an observed epoch
+/// is never newer than the payload a subsequent `load` returns.
+pub struct GraphCell {
+    /// epoch of `current`, published with Release.
+    version: AtomicU64,
+    current: Mutex<Arc<GraphSnapshot>>,
+}
+
+impl GraphCell {
+    pub fn new(initial: Arc<GraphSnapshot>) -> Self {
+        GraphCell {
+            version: AtomicU64::new(initial.epoch()),
+            current: Mutex::new(initial),
+        }
+    }
+
+    /// Make `snap` the current snapshot. Writer-only; epochs must be
+    /// monotone.
+    pub fn publish(&self, snap: Arc<GraphSnapshot>) {
+        let mut cur = self.current.lock().unwrap();
+        debug_assert!(snap.epoch() >= cur.epoch(), "graph epochs must not go back");
+        self.version.store(snap.epoch(), Ordering::Release);
+        *cur = snap;
+    }
+
+    /// Epoch of the currently published snapshot (one Acquire load —
+    /// pairs with the Release store in [`publish`](Self::publish)).
+    pub fn published_epoch(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Monitoring-only epoch sample (staleness gauges, bench reporting).
+    /// Relaxed: no data is read through this value — the publish handoff
+    /// itself is the Release store / Acquire load pair above, and anyone
+    /// who needs the payload goes through [`load`](Self::load).
+    pub fn epoch_hint(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
+    }
+
+    /// Fetch the current snapshot (brief mutex hold: one `Arc` clone).
+    pub fn load(&self) -> Arc<GraphSnapshot> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::AdjacencyGraph;
+    use crate::util::rng::Rng;
+
+    fn assert_same_adjacency(s: &SnapshotGraph, g: &CsrGraph) {
+        assert_eq!(s.n(), g.n());
+        assert_eq!(s.m(), g.m());
+        for v in 0..g.n() as Vertex {
+            assert_eq!(s.neighbors(v), g.neighbors(v), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn from_csr_spans_block_boundaries() {
+        // n = 300 spans three 128-vertex blocks, the last partial
+        let g = generators::gnp(300, 0.02, 9);
+        let s = SnapshotGraph::from_csr(&g);
+        assert_same_adjacency(&s, &g);
+        let snap = s.current();
+        assert_eq!(snap.epoch(), 0);
+        for v in [0u32, 127, 128, 255, 256, 299] {
+            assert_eq!(snap.neighbors(v), g.neighbors(v));
+        }
+        assert_eq!(snap.to_csr().edges(), g.edges());
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut g = SnapshotGraph::empty(4);
+        assert!(g.insert_edge(0, 1));
+        assert!(g.insert_edge(1, 2));
+        assert!(!g.insert_edge(1, 0), "duplicate rejected");
+        assert!(!g.insert_edge(2, 2), "self-loop rejected");
+        assert_eq!(g.m(), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.m(), 1);
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(g.neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn batch_apis_report_changes_only() {
+        let mut g = SnapshotGraph::empty(5);
+        g.insert_edge(0, 1);
+        let added = g.insert_batch(&[(1, 0), (2, 3), (3, 2), (4, 4), (0, 4)]);
+        assert_eq!(added, vec![(2, 3), (0, 4)]);
+        assert_eq!(g.m(), 3);
+        let removed = g.remove_batch(&[(3, 2), (2, 3), (1, 4)]);
+        assert_eq!(removed, vec![(2, 3)]);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn tracks_dyngraph_under_random_churn() {
+        let mut rng = Rng::new(17);
+        let n = 160; // two blocks
+        let mut snap = SnapshotGraph::empty(n);
+        let mut dyng = crate::graph::adj::DynGraph::new(n);
+        for step in 0..400 {
+            let u = rng.gen_usize(n) as Vertex;
+            let v = rng.gen_usize(n) as Vertex;
+            if rng.gen_bool(0.7) {
+                assert_eq!(snap.insert_edge(u, v), dyng.insert_edge(u, v), "step {step}");
+            } else {
+                assert_eq!(snap.remove_edge(u, v), dyng.remove_edge(u, v), "step {step}");
+            }
+            if step % 90 == 0 {
+                snap.compact();
+            }
+        }
+        assert_eq!(snap.m(), dyng.m());
+        for v in 0..n as Vertex {
+            assert_eq!(snap.neighbors(v), dyng.neighbors(v), "vertex {v}");
+            assert_eq!(snap.common_neighbors(v, (v + 1) % n as Vertex),
+                       dyng.common_neighbors(v, (v + 1) % n as Vertex));
+        }
+    }
+
+    #[test]
+    fn publish_bumps_epochs_and_pins_old_payloads() {
+        let g0 = generators::gnp(140, 0.05, 3);
+        let mut g = SnapshotGraph::from_csr(&g0).with_compact_threshold(usize::MAX);
+        let s0 = g.current();
+        let adj0: Vec<Vec<Vertex>> =
+            (0..g.n() as Vertex).map(|v| s0.neighbors(v).to_vec()).collect();
+
+        g.insert_batch(&[(0, 130), (1, 131), (0, 1)]);
+        let s1 = g.publish();
+        assert_eq!(s1.epoch(), 1);
+        assert!(s1.overlay_len() > 0, "threshold MAX keeps the overlay");
+        let adj1: Vec<Vec<Vertex>> =
+            (0..g.n() as Vertex).map(|v| s1.neighbors(v).to_vec()).collect();
+
+        // later batches + a forced compaction must not disturb s0 / s1
+        g.remove_batch(&[(0, 1)]);
+        g.insert_batch(&[(2, 70), (3, 71)]);
+        g.compact();
+        let s2 = g.publish();
+        assert_eq!(s2.epoch(), 2);
+        assert_eq!(s2.overlay_len(), 0, "compacted snapshot reads pure CSR");
+        assert_eq!(g.compactions(), 1);
+
+        for v in 0..g.n() as Vertex {
+            assert_eq!(s0.neighbors(v), adj0[v as usize], "epoch 0, vertex {v}");
+            assert_eq!(s1.neighbors(v), adj1[v as usize], "epoch 1, vertex {v}");
+        }
+        assert_eq!(s0.epoch(), 0);
+        assert_eq!(s0.m(), g0.m());
+        assert!(s1.has_edge(0, 1));
+        assert!(!s2.has_edge(0, 1));
+        assert_eq!(g.current().epoch(), 2);
+    }
+
+    #[test]
+    fn zero_threshold_compacts_every_publish() {
+        let mut g = SnapshotGraph::empty(40).with_compact_threshold(0);
+        let mut mirror = crate::graph::adj::DynGraph::new(40);
+        let target = generators::gnp(40, 0.3, 5);
+        for chunk in target.edges().chunks(11) {
+            g.insert_batch(chunk);
+            mirror.insert_batch(chunk);
+            let s = g.publish();
+            assert_eq!(s.overlay_len(), 0);
+            assert_eq!(g.overlay_len(), 0);
+            for v in 0..40u32 {
+                assert_eq!(s.neighbors(v), mirror.neighbors(v));
+            }
+        }
+        assert!(g.compactions() > 0);
+        assert_eq!(g.to_csr().edges(), target.edges());
+    }
+
+    #[test]
+    fn snapshot_clique_checks() {
+        let mut g = SnapshotGraph::empty(4);
+        g.insert_batch(&[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let s = g.publish();
+        assert!(s.is_clique(&[0, 1, 2]));
+        assert!(!s.is_clique(&[0, 1, 3]));
+        assert!(s.is_maximal_clique(&[0, 1, 2]));
+        assert!(!s.is_maximal_clique(&[0, 1]));
+        assert!(s.is_maximal_clique(&[2, 3]));
+        assert!(!s.is_maximal_clique(&[]));
+        assert_eq!(s.common_neighbors(0, 1), vec![2]);
+    }
+
+    #[test]
+    fn adjacency_graph_trait_routes_to_snapshot() {
+        let g0 = generators::gnp(50, 0.2, 11);
+        let writer = SnapshotGraph::from_csr(&g0);
+        let snap = writer.current();
+        fn total_degree<G: AdjacencyGraph + ?Sized>(g: &G) -> usize {
+            (0..g.n() as Vertex).map(|v| g.neighbors(v).len()).sum()
+        }
+        assert_eq!(total_degree(snap.as_ref()), 2 * g0.m());
+        assert_eq!(total_degree(&writer), 2 * g0.m());
+    }
+
+    #[test]
+    fn cell_publishes_monotone_epochs() {
+        let mut g = SnapshotGraph::empty(8);
+        let cell = Arc::clone(g.cell());
+        assert_eq!(cell.published_epoch(), 0);
+        assert_eq!(cell.epoch_hint(), 0);
+        g.insert_edge(0, 1);
+        let s = g.publish();
+        assert_eq!(cell.published_epoch(), 1);
+        assert_eq!(cell.epoch_hint(), 1);
+        assert!(Arc::ptr_eq(&cell.load(), &s));
+        assert_eq!(g.epoch(), 1);
+    }
+
+    #[test]
+    fn empty_graph_edge_cases() {
+        let mut g = SnapshotGraph::empty(0);
+        let s = g.publish();
+        assert_eq!(s.n(), 0);
+        assert_eq!(s.m(), 0);
+        assert!(s.edges().is_empty());
+        let synth = GraphSnapshot::synthetic(7, 3);
+        assert_eq!(synth.epoch(), 7);
+        assert_eq!(synth.neighbors(2), &[] as &[Vertex]);
+        assert!(synth.is_maximal_clique(&[1]), "singleton is maximal when isolated");
+    }
+}

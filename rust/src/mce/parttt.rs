@@ -17,8 +17,7 @@
 use crate::util::sync::Arc;
 
 use crate::coordinator::pool::{ScopeHandle, ThreadPool};
-use crate::graph::csr::CsrGraph;
-use crate::graph::Vertex;
+use crate::graph::{AdjacencyGraph, Vertex};
 use crate::mce::bitkernel;
 use crate::mce::pivot::{choose_pivot, par_pivot};
 use crate::mce::sink::CliqueSink;
@@ -51,9 +50,12 @@ impl Default for ParTttConfig {
 }
 
 /// Enumerate all maximal cliques of `g` into `sink` using the pool.
-pub fn parttt(
+/// Generic over the adjacency source: runs identically on a static
+/// [`crate::graph::csr::CsrGraph`] and on a published
+/// [`crate::graph::snapshot::GraphSnapshot`].
+pub fn parttt<G: AdjacencyGraph + Send + Sync + 'static>(
     pool: &ThreadPool,
-    g: &Arc<CsrGraph>,
+    g: &Arc<G>,
     sink: &Arc<dyn CliqueSink>,
     cfg: ParTttConfig,
 ) {
@@ -69,9 +71,9 @@ pub fn parttt(
 /// Fork the enumeration of the (k, cand, fini) subtree into `scope`.
 /// Shared by ParTTT (root = whole graph) and ParMCE (root = one vertex's
 /// subproblem) — the "additional recursive level of parallelism" of §4.2.
-pub(crate) fn spawn_subtree(
+pub(crate) fn spawn_subtree<G: AdjacencyGraph + Send + Sync + 'static>(
     scope: &ScopeHandle,
-    g: Arc<CsrGraph>,
+    g: Arc<G>,
     k: Vec<Vertex>,
     cand: Vec<Vertex>,
     fini: Vec<Vertex>,
@@ -81,9 +83,9 @@ pub(crate) fn spawn_subtree(
     scope.spawn(move |s| run_task(s, g, k, cand, fini, sink, cfg));
 }
 
-fn run_task(
+fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
     scope: &ScopeHandle,
-    g: Arc<CsrGraph>,
+    g: Arc<G>,
     mut k: Vec<Vertex>,
     cand: Vec<Vertex>,
     fini: Vec<Vertex>,
@@ -158,6 +160,7 @@ fn run_task(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::CsrGraph;
     use crate::graph::generators;
     use crate::mce::oracle;
     use crate::mce::sink::{CollectSink, CountSink};

@@ -9,7 +9,6 @@
 //! O(log n) depth).
 
 use crate::coordinator::pool::ThreadPool;
-use crate::graph::csr::CsrGraph;
 use crate::graph::{AdjacencyGraph, Vertex};
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::{ScopeShare, ScopedPtr};
@@ -67,7 +66,12 @@ pub fn choose_pivot<G: AdjacencyGraph + ?Sized>(g: &G, cand: &[Vertex], fini: &[
 /// borrowed data through [`ScopedPtr`]s; `pool.scope` blocks until
 /// every task completes, so the pointees strictly outlive all
 /// dereferences.
-pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Vertex]) -> Vertex {
+pub fn par_pivot<G: AdjacencyGraph + ?Sized + 'static>(
+    pool: &ThreadPool,
+    g: &G,
+    cand: &[Vertex],
+    fini: &[Vertex],
+) -> Vertex {
     let best = AtomicU64::new(0);
     let total = cand.len() + fini.len();
     debug_assert!(total > 0);
@@ -116,17 +120,26 @@ pub fn par_pivot(pool: &ThreadPool, g: &CsrGraph, cand: &[Vertex], fini: &[Verte
 /// `dynamic::par_imce`).  `Send` is derived from [`ScopedPtr`]'s audited
 /// impls — no per-call-site `unsafe impl` needed; the liveness argument
 /// lives at the single [`ScopeShare::new`] site in [`par_pivot`].
-#[derive(Clone, Copy)]
-struct PivotCtx {
-    g: ScopedPtr<CsrGraph>,
+struct PivotCtx<G: ?Sized> {
+    g: ScopedPtr<G>,
     cand: ScopedPtr<[Vertex]>,
     fini: ScopedPtr<[Vertex]>,
     best: ScopedPtr<AtomicU64>,
 }
 
+// manual impls: a derive would wrongly require `G: Clone`/`G: Copy`,
+// but only the pointers are copied.
+impl<G: ?Sized> Clone for PivotCtx<G> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<G: ?Sized> Copy for PivotCtx<G> {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::CsrGraph;
     use crate::graph::generators;
 
     /// Naive max score for cross-checking.

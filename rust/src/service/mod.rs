@@ -8,11 +8,15 @@
 //! by construction, no reader ever observes a partially-applied batch.
 //!
 //! * [`store`] — interned clique storage (stable ids) + the vertex →
-//!   clique-ids inverted index, maintained incrementally from each
-//!   batch's (Λⁿᵉʷ, Λᵈᵉˡ) change set.
+//!   clique-ids inverted index, both chunked into `Arc`'d COW blocks,
+//!   maintained incrementally from each batch's (Λⁿᵉʷ, Λᵈᵉˡ) change set.
 //! * [`snapshot`] — the immutable [`CliqueSnapshot`] query surface,
 //!   published through [`SnapshotCell`] / cached [`SnapshotReader`]s
-//!   (one atomic load on the steady-state read path).
+//!   (one atomic load on the steady-state read path).  Every snapshot
+//!   pins the exact [`GraphSnapshot`](crate::graph::snapshot::GraphSnapshot)
+//!   epoch its clique set was enumerated on, so adjacency and
+//!   maximality queries answer against *that* graph even after the
+//!   writer moves on.
 //! * [`driver`] — replays a mixed update/query workload on the
 //!   coordinator pool and reports query throughput, update latency and
 //!   epoch lag (`parmce serve-replay`).
@@ -38,6 +42,7 @@ use crate::util::sync::{Arc, Mutex};
 use crate::dynamic::stream::{BatchRecord, EdgeStream};
 use crate::dynamic::BatchResult;
 use crate::graph::csr::CsrGraph;
+use crate::graph::snapshot::GraphSnapshot;
 use crate::graph::{Edge, Vertex};
 use crate::mce::sink::SizeHistogram;
 use crate::session::dynamic::{BatchEvent, BatchObserver, DynAlgo, DynamicSession};
@@ -63,12 +68,12 @@ struct ServiceShared {
 
 impl ServiceShared {
     /// The publish-on-batch observer body: fold the change set into the
-    /// index, freeze, publish. Runs on the writer thread inside
-    /// `apply_batch`/`remove_batch`, so "batch applied" and "epoch
-    /// visible" are one step.
-    fn on_batch(&self, result: &BatchResult) {
+    /// index, pin the post-batch graph epoch, freeze, publish. Runs on
+    /// the writer thread inside `apply_batch`/`remove_batch`, so "batch
+    /// applied" and "epoch visible" are one step.
+    fn on_batch(&self, result: &BatchResult, graph: &Arc<GraphSnapshot>) {
         let mut store = self.store.lock().unwrap();
-        store.apply(result);
+        store.apply(result, graph);
         self.cell.publish(Arc::new(store.freeze()));
     }
 }
@@ -86,7 +91,7 @@ impl CliqueService {
     /// the epoch-0 snapshot; every subsequent batch publishes the next
     /// epoch (epochs count batches *since wrapping*).
     pub fn wrap(mut session: DynamicSession) -> CliqueService {
-        let store = CliqueStore::from_registry(session.graph().n(), session.registry(), 0);
+        let store = CliqueStore::from_registry(session.current_graph(), session.registry(), 0);
         let cell = Arc::new(SnapshotCell::new(Arc::new(store.freeze())));
         let shared = Arc::new(ServiceShared {
             store: Mutex::new(store),
@@ -94,7 +99,7 @@ impl CliqueService {
         });
         let hook = Arc::clone(&shared);
         let observer: BatchObserver =
-            Arc::new(move |ev: &BatchEvent<'_>| hook.on_batch(ev.result));
+            Arc::new(move |ev: &BatchEvent<'_>| hook.on_batch(ev.result, ev.graph));
         session.set_batch_observer(observer);
         CliqueService { session, shared }
     }
@@ -164,7 +169,7 @@ impl CliqueService {
     /// vertex), not ids.
     pub fn rebuilt_snapshot(&self) -> CliqueSnapshot {
         CliqueStore::from_registry(
-            self.session.graph().n(),
+            self.session.current_graph(),
             self.session.registry(),
             self.published_epoch(),
         )
@@ -263,6 +268,7 @@ mod tests {
 
         svc.apply_batch(&[(0, 1), (1, 2), (0, 2)]);
         assert_eq!(svc.published_epoch(), 1);
+        assert_eq!(svc.snapshot().graph_epoch(), 1, "graph epoch rides along");
         let t = svc.handle().cliques_containing(1);
         assert_eq!(t.epoch, 1);
         assert_eq!(t.value.len(), 1);
@@ -331,5 +337,14 @@ mod tests {
         assert!(old.is_maximal_clique(&[0, 1]));
         assert!(!svc.snapshot().is_maximal_clique(&[0, 1]));
         assert_eq!(svc.snapshot().epoch(), 2);
+        // ... and pins the exact graph its answers were computed on,
+        // even across a later removal
+        svc.remove_batch(&[(0, 1)]);
+        assert_eq!(old.graph_epoch(), 1);
+        assert!(old.graph().has_edge(0, 1), "pinned graph keeps the edge");
+        assert!(!svc.snapshot().graph().has_edge(0, 1));
+        assert_eq!(svc.snapshot().graph_epoch(), 3);
+        old.validate().unwrap();
+        svc.snapshot().validate().unwrap();
     }
 }

@@ -3,10 +3,13 @@
 //! A [`CliqueSnapshot`] is a frozen view of the maximal clique set at one
 //! batch boundary: interned clique storage (one `Arc<[Vertex]>` per
 //! clique, shared across epochs), the vertex → clique-id inverted index,
-//! a size-ordered id list and size histogram bins.  Everything a query
-//! needs is inside the snapshot, so readers never touch writer state —
-//! a query answered at epoch *e* is consistent with exactly the graph
-//! after batch *e*, never a partially-applied batch.
+//! a size-ordered id list and size histogram bins — all chunked into
+//! `Arc`'d copy-on-write blocks (`service::store`), so freezing one is
+//! pointer clones only.  Each snapshot also pins the
+//! [`GraphSnapshot`] its clique set was enumerated against, so a query
+//! answered at epoch *e* is consistent with *exactly* the graph after
+//! batch *e* — adjacency checks included — never a partially-applied
+//! batch and never a later graph.
 //!
 //! [`SnapshotCell`] is the single writer → many readers handoff:
 //! `publish` swaps the current `Arc` under a mutex and bumps an atomic
@@ -14,11 +17,14 @@
 //! revalidates with one atomic load, so the steady-state read hot path
 //! (queries between publishes) takes no lock at all.
 
+use crate::graph::snapshot::GraphSnapshot;
 use crate::graph::Vertex;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::{Arc, Mutex};
 use crate::mce::sink::SizeHistogram;
 use crate::util::vset;
+
+use super::store::{PostingIndex, SlotMap};
 
 /// Stable identifier of an interned clique. Ids are assigned once, never
 /// reused; a subsumed clique's id is retired with it.
@@ -28,11 +34,14 @@ pub type CliqueId = u32;
 /// the `Arc` level; all queries are lock-free and allocation-light.
 pub struct CliqueSnapshot {
     pub(crate) epoch: u64,
-    /// id-indexed interned cliques (canonical member order); `None` =
-    /// retired before this epoch.
-    pub(crate) cliques: Vec<Option<Arc<[Vertex]>>>,
+    /// the graph epoch this clique set is exact for (pinned `Arc` — the
+    /// delta-CSR payload is immutable and shared with the graph writer)
+    pub(crate) graph: Arc<GraphSnapshot>,
+    /// id-indexed interned cliques (canonical member order); retired
+    /// slots read as `None`.
+    pub(crate) cliques: SlotMap,
     /// vertex-indexed posting lists of live clique ids, sorted ascending.
-    pub(crate) index: Vec<Arc<Vec<CliqueId>>>,
+    pub(crate) index: PostingIndex,
     /// `size_buckets[s]` = live ids of size-`s` cliques, ascending —
     /// size-ordered walks go bucket-by-bucket from the largest down, and
     /// the bucket lengths are the size histogram.
@@ -41,9 +50,24 @@ pub struct CliqueSnapshot {
 }
 
 impl CliqueSnapshot {
-    /// The batch boundary this snapshot reflects (0 = bootstrap state).
+    /// The batch boundary this snapshot reflects (0 = bootstrap state),
+    /// counting batches since the service wrapped the session.
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// The graph epoch snapshot this clique set was enumerated against —
+    /// adjacency queries about *this* epoch go here, no matter how far
+    /// the writer has advanced since.
+    pub fn graph(&self) -> &Arc<GraphSnapshot> {
+        &self.graph
+    }
+
+    /// Epoch of the pinned graph (batches since the *session* was
+    /// created — distinct from [`epoch`](Self::epoch) when the service
+    /// wrapped an already-running session).
+    pub fn graph_epoch(&self) -> u64 {
+        self.graph.epoch()
     }
 
     /// |C(G)| at this epoch.
@@ -53,18 +77,18 @@ impl CliqueSnapshot {
 
     /// Number of vertices the index covers.
     pub fn n(&self) -> usize {
-        self.index.len()
+        self.index.n()
     }
 
     /// Members of clique `id`, if it is live at this epoch.
     pub fn clique(&self, id: CliqueId) -> Option<&[Vertex]> {
-        self.cliques.get(id as usize).and_then(|c| c.as_deref())
+        self.cliques.get(id as usize).map(|c| &**c)
     }
 
     /// Ids of the live maximal cliques containing `v` (sorted ascending);
     /// empty for out-of-range vertices.
     pub fn ids_containing(&self, v: Vertex) -> &[CliqueId] {
-        self.index.get(v as usize).map(|l| l.as_slice()).unwrap_or(&[])
+        self.index.posting(v)
     }
 
     /// The maximal cliques containing `v`.
@@ -162,20 +186,20 @@ impl CliqueSnapshot {
     pub fn canonical_cliques(&self) -> Vec<Vec<Vertex>> {
         let mut out: Vec<Vec<Vertex>> = self
             .cliques
-            .iter()
-            .filter_map(|c| c.as_ref().map(|a| a.to_vec()))
+            .iter_live()
+            .map(|(_, c)| c.to_vec())
             .collect();
         out.sort();
         out
     }
 
     /// Full structural self-check (tests / debugging): index ↔ storage
-    /// agreement, posting-list order, by-size order, bin totals.
+    /// agreement, posting-list order, by-size order, bin totals, and
+    /// every live clique maximal in the *pinned* graph epoch.
     pub fn validate(&self) -> Result<(), String> {
         let mut live = 0usize;
         let mut bins: Vec<u64> = Vec::new();
-        for (id, c) in self.cliques.iter().enumerate() {
-            let Some(c) = c else { continue };
+        for (id, c) in self.cliques.iter_live() {
             live += 1;
             if bins.len() <= c.len() {
                 bins.resize(c.len() + 1, 0);
@@ -187,18 +211,26 @@ impl CliqueSnapshot {
                     return Err(format!("clique {id} missing from index[{v}]"));
                 }
             }
+            if !self.graph.is_maximal_clique(c) {
+                return Err(format!(
+                    "clique {id} {:?} is not maximal in pinned graph epoch {}",
+                    c.as_ref(),
+                    self.graph.epoch()
+                ));
+            }
         }
         if live != self.live {
             return Err(format!("live count {} != stored {}", live, self.live));
         }
-        for (v, posting) in self.index.iter().enumerate() {
+        for v in 0..self.index.n() as Vertex {
+            let posting = self.index.posting(v);
             if !posting.windows(2).all(|w| w[0] < w[1]) {
                 return Err(format!("index[{v}] not sorted"));
             }
             for &id in posting.iter() {
                 match self.clique(id) {
                     None => return Err(format!("index[{v}] holds retired id {id}")),
-                    Some(c) if c.binary_search(&(v as Vertex)).is_err() => {
+                    Some(c) if c.binary_search(&v).is_err() => {
                         return Err(format!("index[{v}] holds non-member clique {id}"))
                     }
                     _ => {}
@@ -241,29 +273,33 @@ impl CliqueSnapshot {
 
     #[inline]
     fn intern(&self, id: CliqueId) -> Arc<[Vertex]> {
-        Arc::clone(self.cliques[id as usize].as_ref().expect("posting id must be live"))
+        Arc::clone(self.cliques.get(id as usize).expect("posting id must be live"))
     }
 
-    /// Minimal synthetic snapshot: `n` single-vertex cliques at `epoch`.
+    /// Minimal synthetic snapshot: `n` single-vertex cliques at `epoch`,
+    /// pinned to the matching edgeless [`GraphSnapshot::synthetic`]
+    /// (singletons are exactly its maximal cliques, so `validate`
+    /// passes).
     ///
     /// Concurrency-harness hook (`rust/tests/loom_models.rs` builds
-    /// distinguishable snapshots per epoch without a graph); hidden from
-    /// docs because the fields stay `pub(crate)` and real snapshots come
-    /// from [`crate::service::CliqueService`].
+    /// distinguishable snapshots per epoch without a session); hidden
+    /// from docs because the fields stay `pub(crate)` and real snapshots
+    /// come from [`crate::service::CliqueService`].
     #[doc(hidden)]
     pub fn synthetic(epoch: u64, n: usize) -> CliqueSnapshot {
-        let cliques: Vec<Option<Arc<[Vertex]>>> = (0..n)
-            .map(|v| Some(Arc::from(vec![v as Vertex].into_boxed_slice())))
-            .collect();
-        let index = (0..n)
-            .map(|id| Arc::new(vec![id as CliqueId]))
-            .collect();
+        let mut cliques = SlotMap::new();
+        let mut index = PostingIndex::new(n);
+        for v in 0..n {
+            cliques.push(vec![v as Vertex].into());
+            index.push_id(v as Vertex, v as CliqueId);
+        }
         let buckets = vec![
             Arc::new(Vec::new()),
             Arc::new((0..n as CliqueId).collect::<Vec<_>>()),
         ];
         CliqueSnapshot {
             epoch,
+            graph: Arc::new(GraphSnapshot::synthetic(epoch, n)),
             cliques,
             index,
             size_buckets: Arc::new(buckets),
@@ -350,20 +386,34 @@ impl SnapshotReader {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::snapshot::SnapshotGraph;
+    use crate::graph::Edge;
+
+    fn graph(n: usize, edges: &[Edge]) -> Arc<GraphSnapshot> {
+        SnapshotGraph::from_csr(&CsrGraph::from_edges(n, edges)).current()
+    }
 
     fn tiny_snapshot() -> CliqueSnapshot {
-        // cliques: 0 = {0,1,2}, 1 = {1,3} (live), 2 retired
-        let c0: Arc<[Vertex]> = vec![0, 1, 2].into();
-        let c1: Arc<[Vertex]> = vec![1, 3].into();
+        // graph: triangle {0,1,2} + edge (1,3); its maximal cliques are
+        // exactly the live entries: 0 = {0,1,2}, 1 = {1,3}; id 2 was
+        // interned and later retired
+        let mut cliques = SlotMap::new();
+        cliques.push(vec![0, 1, 2].into());
+        cliques.push(vec![1, 3].into());
+        cliques.push(vec![0, 1].into()); // subsumed, retired below
+        cliques.clear(2);
+        let mut index = PostingIndex::new(4);
+        index.push_id(0, 0);
+        index.push_id(1, 0);
+        index.push_id(1, 1);
+        index.push_id(2, 0);
+        index.push_id(3, 1);
         CliqueSnapshot {
             epoch: 7,
-            cliques: vec![Some(c0), Some(c1), None],
-            index: vec![
-                Arc::new(vec![0]),
-                Arc::new(vec![0, 1]),
-                Arc::new(vec![0]),
-                Arc::new(vec![1]),
-            ],
+            graph: graph(4, &[(0, 1), (0, 2), (1, 2), (1, 3)]),
+            cliques,
+            index,
             size_buckets: Arc::new(vec![
                 Arc::new(vec![]),
                 Arc::new(vec![]),
@@ -380,6 +430,7 @@ mod tests {
         assert!(s.validate().is_ok(), "{:?}", s.validate());
         assert_eq!(s.epoch(), 7);
         assert_eq!(s.count(), 2);
+        assert_eq!(s.n(), 4);
         assert_eq!(s.ids_containing(1), &[0, 1]);
         assert_eq!(s.ids_containing(9), &[] as &[CliqueId]);
         assert_eq!(s.ids_containing_all(&[1, 3]), vec![1]);
@@ -400,6 +451,10 @@ mod tests {
             s.canonical_cliques(),
             vec![vec![0, 1, 2], vec![1, 3]]
         );
+        // the pinned graph answers adjacency for this exact epoch
+        assert_eq!(s.graph_epoch(), 0);
+        assert!(s.graph().has_edge(1, 3));
+        assert!(!s.graph().has_edge(0, 3));
     }
 
     #[test]
@@ -408,7 +463,7 @@ mod tests {
         s.live = 3;
         assert!(s.validate().is_err());
         let mut s = tiny_snapshot();
-        s.index[0] = Arc::new(vec![0, 2]); // retired id in posting
+        s.index.push_id(0, 2); // retired id in posting
         assert!(s.validate().is_err());
         let mut s = tiny_snapshot();
         // id 0 (size 3) filed under bucket 2, id 1 (size 2) under 3
@@ -418,6 +473,10 @@ mod tests {
             Arc::new(vec![0]),
             Arc::new(vec![1]),
         ]);
+        assert!(s.validate().is_err());
+        let mut s = tiny_snapshot();
+        // wrong pinned graph: {0,1,2} is no clique of the edgeless graph
+        s.graph = Arc::new(GraphSnapshot::synthetic(0, 4));
         assert!(s.validate().is_err());
     }
 

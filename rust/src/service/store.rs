@@ -4,31 +4,191 @@
 //! Every clique is interned once (`Arc<[Vertex]>`, canonical member
 //! order) and addressed by a stable [`CliqueId`]; a batch's change set
 //! (Λⁿᵉʷ, Λᵈᵉˡ) updates only the touched posting lists and per-size
-//! buckets — never a rebuild.  `freeze` then publishes by
-//! copying at the pointer level: untouched posting lists, clique data
-//! and size buckets are all shared with previous snapshots
-//! (`Arc` copy-on-write via `make_mut`), so publish cost is pointer
-//! clones, not clique bytes.  Ids are never reused, so the id-indexed
-//! slot table grows with *total interned* cliques over the service's
-//! lifetime (retired slots stay `None`) — the price of id stability
-//! under remove/re-insert churn; live-set queries are unaffected.
+//! buckets — never a rebuild.  Both the id-slot table ([`SlotMap`]) and
+//! the per-vertex inverted index ([`PostingIndex`]) are chunked into
+//! `Arc`'d blocks, so `freeze` publishes by pointer clones alone: a
+//! batch deep-copies only the blocks it touched (`Arc::make_mut`
+//! copy-on-write), and every untouched block is shared with all prior
+//! snapshots.  Ids are never reused, so the slot table grows with
+//! *total interned* cliques over the service's lifetime (retired slots
+//! stay `None`) — the price of id stability under remove/re-insert
+//! churn; live-set queries are unaffected.
+//!
+//! The store also pins the [`GraphSnapshot`] each clique set is exact
+//! for: `apply` swaps in the batch's post-mutation graph epoch, and
+//! `freeze` carries it into the snapshot, so a reader holding an old
+//! snapshot can answer maximality queries against the *exact* graph its
+//! clique set was enumerated on, regardless of later batches.
 
 use std::collections::HashMap;
 use crate::util::sync::Arc;
 
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::BatchResult;
+use crate::graph::snapshot::GraphSnapshot;
 use crate::graph::Vertex;
 use crate::util::chashmap::FxBuildHasher;
 
 use super::snapshot::{CliqueId, CliqueSnapshot};
 
+/// Slots per [`SlotMap`] block.
+pub(crate) const SLOT_BLOCK: usize = 512;
+/// Vertices per [`PostingIndex`] block.
+pub(crate) const POSTING_BLOCK: usize = 256;
+
+/// Chunked id → interned-clique slot table.  Append-only ids; retired
+/// slots are cleared to `None` but never reused.  Blocks are `Arc`'d so
+/// a clone (the `freeze` path) copies `len / SLOT_BLOCK` pointers, and a
+/// mutation deep-copies exactly the one block holding the touched slot.
+#[derive(Clone)]
+pub(crate) struct SlotMap {
+    blocks: Arc<Vec<Arc<Vec<Option<Arc<[Vertex]>>>>>>,
+    len: usize,
+}
+
+impl SlotMap {
+    pub fn new() -> Self {
+        SlotMap {
+            blocks: Arc::new(Vec::new()),
+            len: 0,
+        }
+    }
+
+    /// Total slots ever assigned (retired slots included) — the next
+    /// fresh id.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// The clique in slot `i`, if live.
+    pub fn get(&self, i: usize) -> Option<&Arc<[Vertex]>> {
+        if i >= self.len {
+            return None;
+        }
+        self.blocks[i / SLOT_BLOCK][i % SLOT_BLOCK].as_ref()
+    }
+
+    /// Fill the next slot (id = previous [`len`](Self::len)) with `c`.
+    pub fn push(&mut self, c: Arc<[Vertex]>) {
+        let blocks = Arc::make_mut(&mut self.blocks);
+        if self.len % SLOT_BLOCK == 0 {
+            blocks.push(Arc::new(Vec::with_capacity(SLOT_BLOCK)));
+        }
+        let last = blocks.last_mut().expect("block just ensured");
+        Arc::make_mut(last).push(Some(c));
+        self.len += 1;
+    }
+
+    /// Retire slot `i`; its id stays burned.
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len, "clearing unassigned slot {i}");
+        let blocks = Arc::make_mut(&mut self.blocks);
+        Arc::make_mut(&mut blocks[i / SLOT_BLOCK])[i % SLOT_BLOCK] = None;
+    }
+
+    /// `(id, clique)` over live slots, ascending id.
+    pub fn iter_live(&self) -> impl Iterator<Item = (usize, &Arc<[Vertex]>)> + '_ {
+        self.blocks.iter().enumerate().flat_map(|(bi, block)| {
+            block
+                .iter()
+                .enumerate()
+                .filter_map(move |(i, slot)| slot.as_ref().map(|c| (bi * SLOT_BLOCK + i, c)))
+        })
+    }
+}
+
+/// Chunked vertex → clique-ids inverted index.  Three `Arc` layers
+/// (spine → block → posting list) all copy-on-write, so one posting
+/// update deep-copies a single list plus its 256-entry block of
+/// pointers; everything else stays shared with published snapshots.
+#[derive(Clone)]
+pub(crate) struct PostingIndex {
+    blocks: Arc<Vec<Arc<Vec<Arc<Vec<CliqueId>>>>>>,
+    n: usize,
+}
+
+impl PostingIndex {
+    pub fn new(n: usize) -> Self {
+        let mut idx = PostingIndex {
+            blocks: Arc::new(Vec::new()),
+            n: 0,
+        };
+        if n > 0 {
+            idx.ensure((n - 1) as Vertex);
+        }
+        idx
+    }
+
+    /// Number of vertices the index covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Live clique ids containing `v`, ascending; empty for
+    /// out-of-range vertices.
+    pub fn posting(&self, v: Vertex) -> &[CliqueId] {
+        let vi = v as usize;
+        if vi >= self.n {
+            return &[];
+        }
+        self.blocks[vi / POSTING_BLOCK][vi % POSTING_BLOCK].as_slice()
+    }
+
+    /// Grow coverage to include `v`.
+    fn ensure(&mut self, v: Vertex) {
+        let vi = v as usize;
+        if vi < self.n {
+            return;
+        }
+        let blocks = Arc::make_mut(&mut self.blocks);
+        while blocks.len() * POSTING_BLOCK <= vi {
+            // every fresh slot shares one empty posting until its first
+            // write — a new block is POSTING_BLOCK pointer copies
+            blocks.push(Arc::new(vec![Arc::new(Vec::new()); POSTING_BLOCK]));
+        }
+        self.n = vi + 1;
+    }
+
+    /// Append `id` to `v`'s posting (ids arrive ascending, so push
+    /// keeps the list sorted).
+    pub fn push_id(&mut self, v: Vertex, id: CliqueId) {
+        self.ensure(v);
+        let vi = v as usize;
+        let blocks = Arc::make_mut(&mut self.blocks);
+        let block = Arc::make_mut(&mut blocks[vi / POSTING_BLOCK]);
+        Arc::make_mut(&mut block[vi % POSTING_BLOCK]).push(id);
+    }
+
+    /// Remove `id` from `v`'s posting; false if absent.
+    pub fn remove_id(&mut self, v: Vertex, id: CliqueId) -> bool {
+        let vi = v as usize;
+        if vi >= self.n {
+            return false;
+        }
+        let blocks = Arc::make_mut(&mut self.blocks);
+        let block = Arc::make_mut(&mut blocks[vi / POSTING_BLOCK]);
+        let list = Arc::make_mut(&mut block[vi % POSTING_BLOCK]);
+        match list.binary_search(&id) {
+            Ok(p) => {
+                list.remove(p);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
 pub(crate) struct CliqueStore {
+    /// Batches applied since this store was created (counts from the
+    /// wrap point — distinct from the pinned graph's own epoch, which
+    /// counts batches since the *session* was created).
     epoch: u64,
-    cliques: Vec<Option<Arc<[Vertex]>>>,
+    /// The graph epoch snapshot the live clique set is exact for.
+    graph: Arc<GraphSnapshot>,
+    cliques: SlotMap,
     /// canonical members → id, for Λᵈᵉˡ retirement (writer-private).
     by_key: HashMap<Arc<[Vertex]>, CliqueId, FxBuildHasher>,
-    index: Vec<Arc<Vec<CliqueId>>>,
+    index: PostingIndex,
     /// `size_buckets[s]` = live ids of size-`s` cliques, ascending.
     /// Fresh ids are maximal, so `add` is an O(1) push; `retire` is a
     /// binary-search remove within one bucket; `top_k_largest` walks
@@ -40,21 +200,24 @@ pub(crate) struct CliqueStore {
 }
 
 impl CliqueStore {
-    pub fn new(n: usize, epoch: u64) -> Self {
+    pub fn new(graph: Arc<GraphSnapshot>, epoch: u64) -> Self {
+        let index = PostingIndex::new(graph.n());
         CliqueStore {
             epoch,
-            cliques: Vec::new(),
+            graph,
+            cliques: SlotMap::new(),
             by_key: HashMap::default(),
-            index: (0..n).map(|_| Arc::new(Vec::new())).collect(),
+            index,
             size_buckets: Arc::new(Vec::new()),
             live: 0,
         }
     }
 
     /// Build from the live registry contents (bootstrap or from-scratch
-    /// rebuild verification).
-    pub fn from_registry(n: usize, registry: &CliqueRegistry, epoch: u64) -> Self {
-        let mut store = CliqueStore::new(n, epoch);
+    /// rebuild verification); `graph` is the epoch snapshot the
+    /// registry's C(G) was enumerated on.
+    pub fn from_registry(graph: Arc<GraphSnapshot>, registry: &CliqueRegistry, epoch: u64) -> Self {
+        let mut store = CliqueStore::new(graph, epoch);
         // deterministic id assignment in (size desc, canonical) order —
         // stable across engine variants, and every bucket fills in
         // ascending-id order as a side effect
@@ -72,22 +235,26 @@ impl CliqueStore {
     }
 
     /// Apply one batch's change set and advance the epoch: retire Λᵈᵉˡ,
-    /// intern Λⁿᵉʷ. Both lists are canonical and disjoint (the IMCE
-    /// invariants), so order within the batch does not matter.
-    pub fn apply(&mut self, result: &BatchResult) {
+    /// intern Λⁿᵉʷ, pin `graph` (the post-batch graph epoch the change
+    /// set was computed against).  Both lists are canonical and disjoint
+    /// (the IMCE invariants), so order within the batch does not matter.
+    pub fn apply(&mut self, result: &BatchResult, graph: &Arc<GraphSnapshot>) {
         for c in &result.subsumed {
             self.retire(c);
         }
         for c in &result.new_cliques {
             self.add(c);
         }
+        self.graph = Arc::clone(graph);
         self.epoch += 1;
     }
 
-    /// Freeze the current state into an immutable snapshot.
+    /// Freeze the current state into an immutable snapshot: pointer
+    /// clones of the chunked spines — no clique bytes, no posting lists.
     pub fn freeze(&self) -> CliqueSnapshot {
         CliqueSnapshot {
             epoch: self.epoch,
+            graph: Arc::clone(&self.graph),
             cliques: self.cliques.clone(),
             index: self.index.clone(),
             size_buckets: Arc::clone(&self.size_buckets),
@@ -104,13 +271,10 @@ impl CliqueStore {
         let interned: Arc<[Vertex]> = c.into();
         let prev = self.by_key.insert(Arc::clone(&interned), id);
         debug_assert!(prev.is_none(), "clique {c:?} interned twice");
-        self.cliques.push(Some(interned));
+        self.cliques.push(interned);
         for &v in c {
-            if self.index.len() <= v as usize {
-                self.index.resize_with(v as usize + 1, || Arc::new(Vec::new()));
-            }
             // fresh ids are maximal, so push preserves the sort
-            Arc::make_mut(&mut self.index[v as usize]).push(id);
+            self.index.push_id(v, id);
         }
         let buckets = Arc::make_mut(&mut self.size_buckets);
         if buckets.len() <= c.len() {
@@ -136,15 +300,10 @@ impl CliqueStore {
             Err(_) => debug_assert!(false, "size bucket {} missing id {id}", c.len()),
         }
         for &v in c {
-            let list = Arc::make_mut(&mut self.index[v as usize]);
-            match list.binary_search(&id) {
-                Ok(p) => {
-                    list.remove(p);
-                }
-                Err(_) => debug_assert!(false, "index[{v}] missing id {id}"),
-            }
+            let removed = self.index.remove_id(v, id);
+            debug_assert!(removed, "index[{v}] missing id {id}");
         }
-        self.cliques[id as usize] = None;
+        self.cliques.clear(id as usize);
         self.live -= 1;
     }
 }
@@ -153,7 +312,10 @@ impl CliqueStore {
 mod tests {
     use super::*;
     use crate::dynamic::registry::CliqueRegistry;
+    use crate::graph::csr::CsrGraph;
     use crate::graph::generators;
+    use crate::graph::snapshot::SnapshotGraph;
+    use crate::graph::Edge;
 
     fn batch(new: &[&[Vertex]], gone: &[&[Vertex]]) -> BatchResult {
         BatchResult {
@@ -162,18 +324,28 @@ mod tests {
         }
     }
 
+    fn graph(n: usize, edges: &[Edge]) -> Arc<GraphSnapshot> {
+        SnapshotGraph::from_csr(&CsrGraph::from_edges(n, edges)).current()
+    }
+
     #[test]
     fn incremental_deltas_keep_the_index_exact() {
-        let mut s = CliqueStore::new(5, 0);
-        s.apply(&batch(&[&[0, 1, 2], &[2, 3]], &[]));
+        // graph 1: triangle {0,1,2} plus the pendant edge (2,3)
+        let g1 = graph(5, &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        // graph 2: + (2,4),(3,4) — {2,3} grows into {2,3,4}
+        let g2 = graph(5, &[(0, 1), (0, 2), (1, 2), (2, 3), (2, 4), (3, 4)]);
+
+        let mut s = CliqueStore::new(Arc::clone(&g1), 0);
+        s.apply(&batch(&[&[0, 1, 2], &[2, 3], &[4]], &[]), &g1);
         assert_eq!(s.epoch(), 1);
         let snap = s.freeze();
         snap.validate().unwrap();
-        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.count(), 3);
         assert_eq!(snap.ids_containing(2).len(), 2);
+        assert_eq!(snap.graph_epoch(), g1.epoch());
 
-        // {2,3} absorbed into {2,3,4}; {0,1,2} stays
-        s.apply(&batch(&[&[2, 3, 4]], &[&[2, 3]]));
+        // {2,3} absorbed into {2,3,4}; singleton {4} too; {0,1,2} stays
+        s.apply(&batch(&[&[2, 3, 4]], &[&[2, 3], &[4]]), &g2);
         let snap = s.freeze();
         snap.validate().unwrap();
         assert_eq!(snap.epoch(), 2);
@@ -183,22 +355,31 @@ mod tests {
         );
         assert!(snap.is_maximal_clique(&[4, 2, 3]));
         assert!(!snap.is_maximal_clique(&[2, 3]));
+        assert!(snap.graph().has_edge(3, 4), "snapshot pins the new graph");
     }
 
     #[test]
     fn frozen_snapshots_are_isolated_from_later_writes() {
-        let mut s = CliqueStore::new(4, 0);
-        s.apply(&batch(&[&[0, 1], &[1, 2, 3]], &[]));
+        // graph 1: path edge (0,1) + triangle {1,2,3}
+        let g1 = graph(4, &[(0, 1), (1, 2), (1, 3), (2, 3)]);
+        // graph 2: + (0,2) — {0,1} grows into {0,1,2}
+        let g2 = graph(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]);
+
+        let mut s = CliqueStore::new(Arc::clone(&g1), 0);
+        s.apply(&batch(&[&[0, 1], &[1, 2, 3]], &[]), &g1);
         let before = s.freeze();
-        s.apply(&batch(&[&[0, 1, 2]], &[&[0, 1]]));
+        s.apply(&batch(&[&[0, 1, 2]], &[&[0, 1]]), &g2);
         let after = s.freeze();
-        // the old snapshot still answers from its own epoch
+        // the old snapshot still answers from its own epoch — clique set
+        // AND pinned graph
         assert_eq!(before.epoch(), 1);
         assert_eq!(before.count(), 2);
         assert!(before.is_maximal_clique(&[0, 1]));
+        assert!(!before.graph().has_edge(0, 2));
         assert_eq!(after.epoch(), 2);
         assert!(!after.is_maximal_clique(&[0, 1]));
         assert!(after.is_maximal_clique(&[0, 1, 2]));
+        assert!(after.graph().has_edge(0, 2));
         before.validate().unwrap();
         after.validate().unwrap();
     }
@@ -208,10 +389,46 @@ mod tests {
         let g = generators::gnp(18, 0.4, 2);
         let reg = CliqueRegistry::from_graph(&g);
         let want = crate::mce::oracle::maximal_cliques(&g);
-        let snap = CliqueStore::from_registry(g.n(), &reg, 5).freeze();
+        let gs = SnapshotGraph::from_csr(&g).current();
+        let snap = CliqueStore::from_registry(gs, &reg, 5).freeze();
         snap.validate().unwrap();
         assert_eq!(snap.epoch(), 5);
         assert_eq!(snap.canonical_cliques(), want);
         assert_eq!(reg.len(), want.len(), "from_registry must not drain");
+    }
+
+    #[test]
+    fn chunked_structures_span_block_boundaries() {
+        // enough cliques to cross SLOT_BLOCK and enough vertices to
+        // cross POSTING_BLOCK, exercising block allocation + COW edges
+        let n = POSTING_BLOCK + 40;
+        let total = SLOT_BLOCK + 30;
+        let g = graph(n, &[]); // edgeless; singletons are maximal
+        let mut s = CliqueStore::new(Arc::clone(&g), 0);
+        // intern `total` singletons (recycling vertices past n-1 is not
+        // needed: keep ids and vertices distinct where possible)
+        for i in 0..total {
+            let v = (i % n) as Vertex;
+            if s.by_key.contains_key(&[v][..]) {
+                // duplicate singleton: retire it first so interning stays
+                // unique (the store invariant)
+                s.retire(&[v]);
+            }
+            s.add(&[v]);
+        }
+        assert_eq!(s.cliques.len(), total);
+        let snap = s.freeze();
+        // every live posting resolves to a live slot in the right block
+        for v in 0..n as Vertex {
+            for &id in snap.ids_containing(v) {
+                assert_eq!(snap.clique(id), Some(&[v][..]));
+            }
+        }
+        // retired slots (the re-interned duplicates) read as None
+        let retired = total - n.min(total);
+        let live_ids: usize = (0..s.cliques.len())
+            .filter(|&i| s.cliques.get(i).is_some())
+            .count();
+        assert_eq!(live_ids, total - retired);
     }
 }

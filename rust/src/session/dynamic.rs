@@ -1,11 +1,16 @@
 //! [`DynamicSession`]: incremental maximal clique maintenance behind one
 //! `apply_batch` verb.
 //!
-//! Wraps the mutable [`DynGraph`], the concurrent [`CliqueRegistry`] and
-//! the IMCE / ParIMCE batch engines (paper §5) so callers choose an
-//! algorithm once and stream edge batches — the Figure 4 pipeline —
-//! without hand-wiring pools or registries.  The decremental reduction
-//! (§5.3) rides along as [`DynamicSession::remove_batch`].
+//! Wraps the epoch-snapshotted [`SnapshotGraph`], the concurrent
+//! [`CliqueRegistry`] and the IMCE / ParIMCE batch engines (paper §5) so
+//! callers choose an algorithm once and stream edge batches — the
+//! Figure 4 pipeline — without hand-wiring pools or registries.  Every
+//! applied batch publishes one graph epoch; [`current_graph`] hands out
+//! the published `Arc<GraphSnapshot>` with no adjacency rebuild.  The
+//! decremental reduction (§5.3) rides along as
+//! [`DynamicSession::remove_batch`].
+//!
+//! [`current_graph`]: DynamicSession::current_graph
 
 use crate::util::sync::Arc;
 use std::time::Instant;
@@ -16,8 +21,8 @@ use crate::dynamic::par_imce::par_imce_batch_with_cutoff;
 use crate::dynamic::registry::CliqueRegistry;
 use crate::dynamic::stream::{imce_remove_batch, BatchRecord, EdgeStream};
 use crate::dynamic::BatchResult;
-use crate::graph::adj::DynGraph;
 use crate::graph::csr::CsrGraph;
+use crate::graph::snapshot::{GraphSnapshot, SnapshotGraph};
 use crate::graph::{Edge, Vertex};
 use crate::mce::bitkernel::DEFAULT_BITSET_CUTOFF;
 
@@ -65,15 +70,28 @@ pub enum BatchKind {
 }
 
 /// One applied batch, as seen by a [`BatchObserver`]: the change set plus
-/// its position in the session's batch sequence.  `seq` equals
+/// its position in the session's batch sequence and the graph snapshot
+/// the change set was computed against.  `seq` equals
 /// [`DynamicSession::batches_applied`] at notification time, so an
 /// observer that publishes per-batch snapshots gets a dense epoch counter
-/// for free.
+/// for free; for sessions constructed at graph epoch 0 (all of them),
+/// `graph.epoch() == seq as u64`.
 pub struct BatchEvent<'a> {
     pub kind: BatchKind,
     /// 1-based batch sequence number within this session.
     pub seq: usize,
     pub result: &'a BatchResult,
+    /// The post-batch graph epoch snapshot — exactly the graph the
+    /// engine enumerated `result` against.  Observers that serve queries
+    /// clone the `Arc` and pin it next to the clique set.
+    pub graph: &'a Arc<GraphSnapshot>,
+}
+
+impl BatchEvent<'_> {
+    /// Epoch of the post-batch graph snapshot.
+    pub fn graph_epoch(&self) -> u64 {
+        self.graph.epoch()
+    }
 }
 
 /// Hook fired after *every* applied batch (insert or remove), including
@@ -86,7 +104,7 @@ pub type BatchObserver = Arc<dyn Fn(&BatchEvent<'_>) + Send + Sync>;
 /// A dynamic-graph session: the graph, its maximal clique set C(G), and
 /// the chosen batch engine. Every mutation keeps the registry exact.
 pub struct DynamicSession {
-    graph: DynGraph,
+    graph: SnapshotGraph,
     registry: CliqueRegistry,
     algo: DynAlgo,
     threads: usize,
@@ -107,7 +125,7 @@ impl DynamicSession {
             registry.insert_canonical(&[v]);
         }
         DynamicSession {
-            graph: DynGraph::new(n),
+            graph: SnapshotGraph::empty(n),
             registry,
             algo,
             threads: algo.default_threads(),
@@ -133,15 +151,20 @@ impl DynamicSession {
     /// otherwise sequential TTT is used.
     pub fn from_graph_threads(g: &CsrGraph, algo: DynAlgo, threads: usize) -> DynamicSession {
         let threads = threads.max(1);
+        // one adjacency copy: the snapshot writer chunks the CSR, then
+        // the bootstrap enumerates straight off the published epoch-0
+        // snapshot (previously this path copied the graph twice)
+        let graph = SnapshotGraph::from_csr(g);
+        let snap = graph.current();
         let (registry, pool) = if threads > 1 {
             let pool = ThreadPool::new(threads);
-            let registry = CliqueRegistry::from_graph_parallel(g, &pool);
+            let registry = CliqueRegistry::from_graph_parallel(&snap, &pool);
             (registry, Some(pool))
         } else {
-            (CliqueRegistry::from_graph(g), None)
+            (CliqueRegistry::from_graph(snap.as_ref()), None)
         };
         DynamicSession {
-            graph: DynGraph::from_csr(g),
+            graph,
             registry,
             algo,
             threads,
@@ -187,6 +210,14 @@ impl DynamicSession {
         self.bitset_cutoff
     }
 
+    /// Overlay size (total neighbour entries) above which the graph
+    /// compacts its delta overlay back into CSR blocks at the next
+    /// publish; see [`SnapshotGraph::with_compact_threshold`].
+    pub fn with_graph_compact_threshold(mut self, nbrs: usize) -> DynamicSession {
+        self.graph.set_compact_threshold(nbrs);
+        self
+    }
+
     pub fn algo(&self) -> DynAlgo {
         self.algo
     }
@@ -203,10 +234,12 @@ impl DynamicSession {
 
     fn notify(&self, kind: BatchKind, result: &BatchResult) {
         if let Some(obs) = &self.observer {
+            let graph = self.graph.current();
             obs(&BatchEvent {
                 kind,
                 seq: self.batches_applied,
                 result,
+                graph: &graph,
             });
         }
     }
@@ -293,7 +326,7 @@ impl DynamicSession {
         self.registry.len()
     }
 
-    pub fn graph(&self) -> &DynGraph {
+    pub fn graph(&self) -> &SnapshotGraph {
         &self.graph
     }
 
@@ -301,7 +334,19 @@ impl DynamicSession {
         &self.registry
     }
 
-    /// Immutable CSR snapshot of the current graph.
+    /// The most recently published graph snapshot — the exact graph the
+    /// last batch's change set was enumerated against.  An `Arc` clone;
+    /// no adjacency is rebuilt or copied.
+    pub fn current_graph(&self) -> Arc<GraphSnapshot> {
+        self.graph.current()
+    }
+
+    /// Materialize the current graph as a standalone [`CsrGraph`] —
+    /// export/verification only (tests cross-check against from-scratch
+    /// enumeration).  Live readers want [`current_graph`]
+    /// (no O(n + m) rebuild).
+    ///
+    /// [`current_graph`]: Self::current_graph
     pub fn csr(&self) -> CsrGraph {
         self.graph.to_csr()
     }
@@ -316,7 +361,7 @@ impl DynamicSession {
     }
 
     /// Tear down into the raw graph + registry.
-    pub fn into_parts(self) -> (DynGraph, CliqueRegistry) {
+    pub fn into_parts(self) -> (SnapshotGraph, CliqueRegistry) {
         (self.graph, self.registry)
     }
 }
@@ -412,6 +457,9 @@ mod tests {
             Arc::new(Mutex::new(Vec::new()));
         let sink = Arc::clone(&log);
         s.set_batch_observer(Arc::new(move |ev: &BatchEvent<'_>| {
+            // the event's snapshot is the post-batch graph epoch, aligned
+            // with the session sequence (constructed at epoch 0)
+            assert_eq!(ev.graph_epoch(), ev.seq as u64);
             sink.lock().unwrap().push((
                 ev.kind,
                 ev.seq,

@@ -1,0 +1,195 @@
+//! Delta-CSR equivalence: a `SnapshotGraph` driven through randomized
+//! mixed insert/remove batch traces must stay indistinguishable from the
+//! legacy `DynGraph` — identical adjacency after every batch, identical
+//! per-batch clique change sets (IMCE and ParIMCE vs an oracle diff of
+//! from-scratch enumerations), and every published epoch's snapshot must
+//! remain byte-identical after later batches and forced compactions.
+//!
+//! Each trace runs at both compaction extremes: `usize::MAX` (the overlay
+//! is never folded, so reads always take the overlay-first path) and `0`
+//! (every publish compacts, exercising the COW block rewrite).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::registry::CliqueRegistry;
+use parmce::dynamic::stream::imce_remove_batch;
+use parmce::dynamic::{imce_batch, par_imce_batch, BatchResult};
+use parmce::graph::adj::DynGraph;
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::generators;
+use parmce::graph::snapshot::{GraphSnapshot, SnapshotGraph};
+use parmce::graph::{Edge, Vertex};
+use parmce::mce::oracle;
+use parmce::util::rng::Rng;
+
+enum Engine<'p> {
+    Sequential,
+    Parallel(&'p ThreadPool),
+}
+
+fn oracle_set(g: &CsrGraph) -> BTreeSet<Vec<Vertex>> {
+    oracle::maximal_cliques(g).into_iter().collect()
+}
+
+/// Sample a batch of up to `k` distinct edges from the universe: absent
+/// edges when inserting, present edges when removing.
+fn sample_batch(
+    rng: &mut Rng,
+    universe: &[Edge],
+    present: &BTreeSet<Edge>,
+    insert: bool,
+    k: usize,
+) -> Vec<Edge> {
+    let mut pool: Vec<Edge> = universe
+        .iter()
+        .copied()
+        .filter(|e| present.contains(e) != insert)
+        .collect();
+    rng.shuffle(&mut pool);
+    pool.truncate(k);
+    pool
+}
+
+/// Drive one randomized trace and check every invariant per batch.
+fn run_trace(engine: Engine<'_>, compact_threshold: usize, seed: u64) {
+    let n = 26usize;
+    let target = generators::gnp(n, 0.4, seed ^ 0x9e37);
+    let universe = target.edges();
+    assert!(universe.len() > 40, "fixture too sparse to be interesting");
+
+    let mut rng = Rng::new(seed);
+    let mut graph = SnapshotGraph::empty(n).with_compact_threshold(compact_threshold);
+    let mut mirror = DynGraph::new(n);
+    let registry = CliqueRegistry::new();
+    for v in 0..n as Vertex {
+        registry.insert_canonical(&[v]); // C(empty graph) = the singletons
+    }
+
+    let mut present: BTreeSet<Edge> = BTreeSet::new();
+    let mut before = oracle_set(&mirror.to_csr());
+    // every published epoch, pinned together with the adjacency it served
+    let mut pinned: Vec<(Arc<GraphSnapshot>, Vec<Vec<Vertex>>)> = Vec::new();
+    let mut batches = 0u64;
+
+    for step in 0..16 {
+        let insert = present.len() == universe.len()
+            || (present.len() < universe.len() / 4)
+            || rng.gen_bool(0.6);
+        let insert = insert && present.len() < universe.len();
+        let k = 1 + rng.gen_usize(7);
+        let batch = sample_batch(&mut rng, &universe, &present, insert, k);
+        if batch.is_empty() {
+            continue;
+        }
+
+        // legacy mirror first: it is the independent source of truth
+        if insert {
+            mirror.insert_batch(&batch);
+            present.extend(batch.iter().copied());
+        } else {
+            for &(u, v) in &batch {
+                mirror.remove_edge(u, v);
+                present.remove(&(u, v));
+            }
+        }
+
+        let result: BatchResult = if insert {
+            match engine {
+                Engine::Sequential => imce_batch(&mut graph, &registry, &batch).0,
+                Engine::Parallel(pool) => par_imce_batch(pool, &mut graph, &registry, &batch).0,
+            }
+        } else {
+            imce_remove_batch(&mut graph, &registry, &batch)
+        };
+        batches += 1;
+
+        // adjacency equivalence, writer view and published snapshot alike
+        let snap = graph.current();
+        assert_eq!(graph.epoch(), batches, "one publish per batch (step {step})");
+        assert_eq!(snap.epoch(), batches);
+        assert_eq!(graph.m(), mirror.m(), "edge count diverged at step {step}");
+        for v in 0..n as Vertex {
+            assert_eq!(
+                graph.neighbors(v),
+                mirror.neighbors(v),
+                "writer adjacency of {v} diverged at step {step}"
+            );
+            assert_eq!(
+                snap.neighbors(v),
+                mirror.neighbors(v),
+                "snapshot adjacency of {v} diverged at step {step}"
+            );
+        }
+
+        // clique change set equivalence against the oracle diff
+        let after = oracle_set(&mirror.to_csr());
+        let got_new: BTreeSet<Vec<Vertex>> = result.new_cliques.iter().cloned().collect();
+        let got_sub: BTreeSet<Vec<Vertex>> = result.subsumed.iter().cloned().collect();
+        let want_new: BTreeSet<Vec<Vertex>> = after.difference(&before).cloned().collect();
+        let want_sub: BTreeSet<Vec<Vertex>> = before.difference(&after).cloned().collect();
+        assert_eq!(got_new, want_new, "Λnew wrong at step {step} (insert={insert})");
+        assert_eq!(got_sub, want_sub, "Λdel wrong at step {step} (insert={insert})");
+        assert_eq!(registry.len(), after.len(), "registry size at step {step}");
+        for c in &after {
+            assert!(registry.contains_canonical(c), "registry lost {c:?} at step {step}");
+        }
+
+        let adjacency: Vec<Vec<Vertex>> = (0..n as Vertex)
+            .map(|v| snap.neighbors(v).to_vec())
+            .collect();
+        pinned.push((snap, adjacency));
+        before = after;
+    }
+
+    assert!(batches >= 8, "trace too short to exercise the overlay");
+    if compact_threshold == 0 {
+        // every publish with a non-empty overlay folds it into the blocks
+        assert!(
+            graph.compactions() >= batches / 2,
+            "threshold 0 barely compacted: {} compactions over {batches} batches",
+            graph.compactions()
+        );
+        assert_eq!(graph.overlay_len(), 0, "threshold 0 leaves no overlay behind");
+    } else {
+        assert_eq!(graph.compactions(), 0, "usize::MAX threshold must never compact");
+    }
+
+    // a final forced compaction must not disturb any pinned epoch
+    graph.compact();
+    let _ = graph.publish();
+    for (i, (snap, adjacency)) in pinned.iter().enumerate() {
+        assert_eq!(snap.epoch(), (i + 1) as u64, "pinned epochs are dense");
+        for v in 0..n as Vertex {
+            assert_eq!(
+                snap.neighbors(v),
+                adjacency[v as usize].as_slice(),
+                "pinned epoch {} changed retroactively at vertex {v}",
+                snap.epoch()
+            );
+        }
+    }
+}
+
+#[test]
+fn imce_trace_matches_legacy_overlay_only() {
+    run_trace(Engine::Sequential, usize::MAX, 11);
+}
+
+#[test]
+fn imce_trace_matches_legacy_compact_every_batch() {
+    run_trace(Engine::Sequential, 0, 12);
+}
+
+#[test]
+fn par_imce_trace_matches_legacy_overlay_only() {
+    let pool = ThreadPool::new(3);
+    run_trace(Engine::Parallel(&pool), usize::MAX, 13);
+}
+
+#[test]
+fn par_imce_trace_matches_legacy_compact_every_batch() {
+    let pool = ThreadPool::new(3);
+    run_trace(Engine::Parallel(&pool), 0, 14);
+}

@@ -5,8 +5,8 @@
 use parmce::coordinator::pool::ThreadPool;
 use parmce::dynamic::registry::CliqueRegistry;
 use parmce::dynamic::stream::{imce_remove_batch, replay, EdgeStream, Engine};
-use parmce::graph::adj::DynGraph;
 use parmce::graph::datasets::{Dataset, Scale};
+use parmce::graph::snapshot::SnapshotGraph;
 use parmce::mce::sink::CountSink;
 use parmce::mce::ttt;
 
@@ -79,14 +79,14 @@ fn grow_then_shrink_roundtrip() {
 fn change_size_extremes_from_paper_section5() {
     // O(1) change: near-complete graph completion
     let g = parmce::graph::generators::complete_minus_edge(12);
-    let mut graph = DynGraph::from_csr(&g);
+    let mut graph = SnapshotGraph::from_csr(&g);
     let registry = CliqueRegistry::from_graph(&g);
     let (r, _) = parmce::dynamic::imce_batch(&mut graph, &registry, &[(0, 1)]);
     assert_eq!(r.change_size(), 3, "paper §5: exactly 3");
 
     // exponential change: Moon–Moser + one edge
     let g = parmce::graph::generators::moon_moser(4); // 81 cliques
-    let mut graph = DynGraph::from_csr(&g);
+    let mut graph = SnapshotGraph::from_csr(&g);
     let registry = CliqueRegistry::from_graph(&g);
     let (r, _) = parmce::dynamic::imce_batch(&mut graph, &registry, &[(0, 1)]);
     // 27 new ({0,1} × one per other part³), 54 subsumed (all with 0 or 1)

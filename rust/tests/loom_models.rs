@@ -24,12 +24,16 @@
 //!   win accounting under maximal stripe contention;
 //! * SnapshotCell publish — a reader never observes a published version
 //!   newer than the snapshot payload it loads;
+//! * GraphCell publish — the same RCU handoff for delta-CSR graph
+//!   snapshots: an observed graph epoch is never newer than the payload a
+//!   subsequent load returns;
 //! * sharded-sink merge-at-scope-join — per-worker shard counts merge to
 //!   the exact emit total once the scope has joined.
 
 #![cfg(loom)]
 
 use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::snapshot::{GraphCell, GraphSnapshot};
 use parmce::mce::sink::{CliqueSink, ShardedCountSink};
 use parmce::service::{CliqueSnapshot, SnapshotCell};
 use parmce::util::chashmap::ConcurrentSet;
@@ -170,6 +174,45 @@ fn snapshot_cell_version_never_leads_payload() {
                         snap.epoch()
                     );
                     assert!(e >= last, "published_epoch went backwards");
+                    last = e;
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+    });
+}
+
+#[test]
+fn graph_cell_epoch_never_leads_payload() {
+    model(|| {
+        // the graph-side twin of the SnapshotCell model: the batch writer
+        // publishes graph epochs 1..=3 while an enumeration-side reader
+        // samples published_epoch() then loads; the epoch it observed must
+        // never be newer than the snapshot payload it gets (Release store
+        // before the Arc swap under the same mutex, paired Acquire load)
+        let cell = Arc::new(GraphCell::new(Arc::new(GraphSnapshot::synthetic(0, 2))));
+        let writer = {
+            let cell = Arc::clone(&cell);
+            std::thread::spawn(move || {
+                for e in 1..=3u64 {
+                    cell.publish(Arc::new(GraphSnapshot::synthetic(e, 2)));
+                }
+            })
+        };
+        let reader = {
+            let cell = Arc::clone(&cell);
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..6 {
+                    let e = cell.published_epoch();
+                    let snap = cell.load();
+                    assert!(
+                        snap.epoch() >= e,
+                        "reader saw graph epoch {e} but payload epoch {}",
+                        snap.epoch()
+                    );
+                    assert!(e >= last, "published graph epoch went backwards");
                     last = e;
                 }
             })

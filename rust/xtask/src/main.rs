@@ -64,6 +64,10 @@ const RELAXED_ALLOWLIST: &[(&str, &str)] = &[
         "used/peak accounting; the budget is advisory, not a publication edge",
     ),
     (
+        "rust/src/graph/snapshot.rs",
+        "epoch_hint is a monitoring-only staleness probe; the publish handoff is the Release store + Acquire load pair in GraphCell",
+    ),
+    (
         "rust/src/service/driver.rs",
         "visibility-latency sampling boards and reader totals; read after join",
     ),
