@@ -1,0 +1,104 @@
+//! Bench: telemetry overhead guard (ISSUE 8 satellite).
+//!
+//! Two numbers matter:
+//!
+//! 1. **Raw metric cost** — a `Counter::add` is one Relaxed `fetch_add`
+//!    on a cache-padded per-worker shard; `Histogram::record` adds one
+//!    bucket index computation.  Measured here per-op.
+//! 2. **End-to-end TTT cost** — the instrumented sequential/parallel
+//!    enumerators on a dense fixture.  Run this bench twice to compare:
+//!
+//!    ```text
+//!    cargo bench --bench telemetry
+//!    cargo bench --bench telemetry --features telemetry-off
+//!    ```
+//!
+//!    Under `telemetry-off` every metric type is zero-sized and every
+//!    method an empty inline body, so the second run is the true
+//!    zero-cost baseline; the first shows the enabled-but-unread price
+//!    (budget: single-digit ns per emitted clique, invisible next to
+//!    the Tomita pivot loop).
+//! `cargo bench --bench telemetry`
+
+use std::sync::Arc;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::generators;
+use parmce::mce::sink::{CliqueSink, ShardedCountSink};
+use parmce::mce::{parttt, ttt};
+use parmce::telemetry::{Counter, Histogram, SpanTimer};
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let enabled = !cfg!(feature = "telemetry-off");
+    println!(
+        "telemetry feature state: {}",
+        if enabled { "ENABLED" } else { "telemetry-off" }
+    );
+
+    // --- raw metric primitives (per-op cost) ------------------------------
+    let ops = 1_000_000u64;
+    let counter = Counter::new();
+    let ns = b.bench("telemetry/counter_add/1M", || {
+        for i in 0..ops {
+            counter.add(i & 1);
+        }
+    });
+    println!("  -> {:.2}ns per Counter::add", ns as f64 / ops as f64);
+
+    let hist = Histogram::new();
+    let ns = b.bench("telemetry/histogram_record/1M", || {
+        for i in 0..ops {
+            hist.record(i);
+        }
+    });
+    println!("  -> {:.2}ns per Histogram::record", ns as f64 / ops as f64);
+
+    let ns = b.bench("telemetry/span_timer/1M", || {
+        let mut acc = 0u64;
+        for _ in 0..ops {
+            let t = SpanTimer::start();
+            acc = acc.wrapping_add(t.elapsed_ns());
+        }
+        acc
+    });
+    println!("  -> {:.2}ns per SpanTimer round-trip", ns as f64 / ops as f64);
+
+    // --- instrumented TTT / ParTTT on a dense fixture ---------------------
+    // Dense G(n,p) maximizes cliques-per-edge, i.e. maximizes how often
+    // the instrumented emit/hand-off paths run relative to real work.
+    let g = Arc::new(generators::gnp(300, 0.25, 42));
+
+    let sink = ShardedCountSink::new(1);
+    b.bench("telemetry/ttt/gnp300_p25", || {
+        ttt::ttt(&g, &sink);
+    });
+
+    for threads in [2usize, 4] {
+        let pool = ThreadPool::new(threads);
+        let sink: Arc<dyn CliqueSink> = Arc::new(ShardedCountSink::new(threads));
+        b.bench(format!("telemetry/parttt/gnp300_p25/t{threads}"), || {
+            parttt::parttt(&pool, &g, &sink, Default::default());
+        });
+    }
+
+    // Absolute sanity: the global registry agrees the runs happened (only
+    // meaningful in the enabled build).
+    if enabled {
+        let snap = parmce::telemetry::snapshot();
+        let tasks = snap
+            .counter(parmce::telemetry::names::PARTTT_TASKS_SPAWNED)
+            .unwrap_or(0);
+        let handoffs = snap
+            .counter(parmce::telemetry::names::BITKERNEL_HANDOFFS)
+            .unwrap_or(0);
+        println!("  -> registry saw {tasks} ParTTT tasks, {handoffs} bitkernel hand-offs");
+    }
+
+    b.dump_json(if enabled {
+        "results/bench_telemetry_enabled.json"
+    } else {
+        "results/bench_telemetry_off.json"
+    });
+}

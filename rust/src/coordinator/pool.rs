@@ -18,10 +18,21 @@
 
 use std::collections::VecDeque;
 
+use crate::telemetry;
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Telemetry hook for every successful dequeue (own pop, injector pop, or
+/// steal) — pairs with the enqueue-side `add(1)` in `spawn_internal` so
+/// the depth gauge reads the live backlog.
+#[inline]
+fn note_dequeue() {
+    let t = telemetry::global();
+    t.pool_jobs_dequeued.inc();
+    t.pool_queue_depth.sub(1);
+}
 
 /// Shared pool state.
 ///
@@ -46,6 +57,15 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 ///   the check-then-park protocol obviously monotone.
 /// * **`steals`/`spawned`** are observability counters, `Relaxed` by
 ///   design (allowlisted in `cargo xtask lint-invariants`).
+/// * **Telemetry mirrors** — the [`crate::telemetry`] registry's
+///   `pool_jobs_spawned` / `pool_jobs_dequeued` / `pool_wakeups` counters
+///   and the `pool_queue_depth` gauge shadow `spawned`/`pending` with the
+///   same `Relaxed` argument (observability, never synchronization; the
+///   queue mutex publishes job payloads).  The depth gauge pairs one
+///   `add(1)` per enqueue with one `sub(1)` per dequeue, so a sweep reads
+///   the instantaneous backlog across every live pool; per-worker busy
+///   time is accumulated around job execution in `worker_loop`, where the
+///   thread-local worker slot routes the add to that worker's shard.
 struct PoolState {
     /// per-worker deques: owner pushes/pops the back, thieves pop the front
     queues: Vec<Mutex<VecDeque<Job>>>,
@@ -179,12 +199,14 @@ impl ThreadPool {
         if let Some(idx) = own {
             if let Some(j) = st.queues[idx].lock().unwrap().pop_back() {
                 st.pending.fetch_sub(1, Ordering::Relaxed);
+                note_dequeue();
                 return Some(j);
             }
         }
         // 2. injector, FIFO
         if let Some(j) = st.injector.lock().unwrap().pop_front() {
             st.pending.fetch_sub(1, Ordering::Relaxed);
+            note_dequeue();
             return Some(j);
         }
         // 3. steal: FIFO from victims, round-robin
@@ -198,6 +220,7 @@ impl ThreadPool {
             if let Some(j) = st.queues[victim].lock().unwrap().pop_front() {
                 st.pending.fetch_sub(1, Ordering::Relaxed);
                 st.steals.fetch_add(1, Ordering::Relaxed);
+                note_dequeue();
                 return Some(j);
             }
         }
@@ -232,7 +255,13 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
         // fast path: find work
         let job = find_job_worker(&state, idx);
         match job {
-            Some(j) => j(),
+            Some(j) => {
+                // busy-time span: this thread IS worker `idx`, so the
+                // counter add routes to that worker's shard
+                let span = telemetry::SpanTimer::start();
+                j();
+                telemetry::global().pool_worker_busy_ns.add(span.elapsed_ns());
+            }
             None => {
                 if state.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -246,6 +275,8 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
                         .sleep_cv
                         .wait_timeout(guard, std::time::Duration::from_millis(1))
                         .unwrap();
+                    // parked worker resumed (notify or timeout)
+                    telemetry::global().pool_wakeups.inc();
                 }
             }
         }
@@ -256,11 +287,13 @@ fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     // own deque LIFO
     if let Some(j) = state.queues[idx].lock().unwrap().pop_back() {
         state.pending.fetch_sub(1, Ordering::Relaxed);
+        note_dequeue();
         return Some(j);
     }
     // injector
     if let Some(j) = state.injector.lock().unwrap().pop_front() {
         state.pending.fetch_sub(1, Ordering::Relaxed);
+        note_dequeue();
         return Some(j);
     }
     // steal round-robin
@@ -270,6 +303,7 @@ fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
         if let Some(j) = state.queues[victim].lock().unwrap().pop_front() {
             state.pending.fetch_sub(1, Ordering::Relaxed);
             state.steals.fetch_add(1, Ordering::Relaxed);
+            note_dequeue();
             return Some(j);
         }
     }
@@ -368,6 +402,9 @@ impl ThreadPool {
     fn spawn_internal(&self, job: Job) {
         let state = &self.state;
         state.spawned.fetch_add(1, Ordering::Relaxed);
+        let t = telemetry::global();
+        t.pool_jobs_spawned.inc();
+        t.pool_queue_depth.add(1);
         match self.current_worker() {
             Some(idx) => state.queues[idx].lock().unwrap().push_back(job),
             None => state.injector.lock().unwrap().push_back(job),

@@ -66,4 +66,5 @@ pub mod mce;
 pub mod runtime;
 pub mod service;
 pub mod session;
+pub mod telemetry;
 pub mod util;

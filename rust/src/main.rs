@@ -6,9 +6,11 @@
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
 //!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
 //!                    [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]
+//!                    [--metrics-out FILE] [--metrics-every MS]
 //!   parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]
 //!                       [--threads N] [--readers R] [--max-batches M]
 //!                       [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]
+//!                       [--metrics-out FILE] [--metrics-every MS]
 //!   parmce stats [--dataset NAME] [--scale S]
 //!   parmce perf [--scale S]
 //!   parmce artifacts-check
@@ -78,6 +80,29 @@ fn parse_algo_spec(a: &str) -> Result<(Algo, RankStrategy, bool)> {
         },
     };
     Ok(spec)
+}
+
+/// `--metrics-out FILE`: dump the process-cumulative telemetry registry
+/// (JSON when FILE ends in `.json`, Prometheus text exposition otherwise;
+/// `cargo xtask check-prom` validates the latter in CI).
+fn write_metrics(args: &[String]) -> Result<()> {
+    if let Some(path) = flag(args, "--metrics-out") {
+        let snap = parmce::telemetry::snapshot();
+        std::fs::write(&path, parmce::telemetry::render_for_path(&snap, &path))?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+/// `--metrics-every MS`: start the live sampler thread (a one-line
+/// progress report on stderr each period); stops when the handle drops.
+fn start_sampler(args: &[String]) -> Result<Option<parmce::telemetry::Sampler>> {
+    Ok(match flag(args, "--metrics-every") {
+        Some(ms) => Some(parmce::telemetry::Sampler::start(Duration::from_millis(
+            ms.parse()?,
+        ))),
+        None => None,
+    })
 }
 
 fn parse_rank(args: &[String], default: RankStrategy) -> Result<RankStrategy> {
@@ -154,6 +179,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 builder = builder.ranking(Arc::new(ranking));
             }
             let session = builder.build()?;
+            let sampler = start_sampler(args)?;
             // --out FILE streams every clique to disk instead of counting
             let report = match flag(args, "--out") {
                 Some(out) => {
@@ -193,6 +219,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                     fmt_count(report.cliques)
                 ),
             }
+            drop(sampler); // stop + join before the final registry sweep
+            write_metrics(args)?;
             Ok(())
         }
         Some("serve-replay") => {
@@ -256,8 +284,11 @@ fn dispatch(args: &[String]) -> Result<()> {
             // a dedicated reader pool: the session's ParIMCE pool must not
             // be occupied by long-lived query loops
             let pool = ThreadPool::new(readers.max(1));
+            let sampler = start_sampler(args)?;
             let report = serve_replay(&mut svc, &stream, &pool, &cfg);
+            drop(sampler);
             println!("{}", report.summary());
+            write_metrics(args)?;
             anyhow::ensure!(
                 report.consistency_violations == 0,
                 "snapshot isolation violated"
@@ -341,9 +372,15 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
                  \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
                  \x20                  [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]\n\
+                 \x20                  [--metrics-out FILE] [--metrics-every MS]\n\
                  \x20 parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]\n\
                  \x20                     [--threads N] [--readers R] [--max-batches M]\n\
                  \x20                     [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]\n\
+                 \x20                     [--metrics-out FILE] [--metrics-every MS]\n\
+                 \n\
+                 \x20 --metrics-out writes the telemetry registry at exit (.json = JSON dump,\n\
+                 \x20 anything else = Prometheus text exposition); --metrics-every MS prints a\n\
+                 \x20 live progress line to stderr each period.\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
                  \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\

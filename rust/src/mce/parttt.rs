@@ -22,6 +22,8 @@ use crate::mce::bitkernel;
 use crate::mce::pivot::{choose_pivot, par_pivot};
 use crate::mce::sink::CliqueSink;
 use crate::mce::ttt;
+use crate::telemetry;
+use crate::telemetry::SubCell;
 use crate::util::vset;
 
 #[derive(Clone, Copy, Debug)]
@@ -64,13 +66,29 @@ pub fn parttt<G: AdjacencyGraph + Send + Sync + 'static>(
     }
     let cand: Vec<Vertex> = (0..g.n() as Vertex).collect();
     pool.scope(|s| {
-        spawn_subtree(s, Arc::clone(g), Vec::new(), cand, Vec::new(), Arc::clone(sink), cfg);
+        spawn_subtree(
+            s,
+            Arc::clone(g),
+            Vec::new(),
+            cand,
+            Vec::new(),
+            Arc::clone(sink),
+            cfg,
+            None,
+        );
     });
 }
 
 /// Fork the enumeration of the (k, cand, fini) subtree into `scope`.
 /// Shared by ParTTT (root = whole graph) and ParMCE (root = one vertex's
 /// subproblem) — the "additional recursive level of parallelism" of §4.2.
+///
+/// `cell`, when present, accumulates per-root skew data
+/// ([`crate::telemetry::SubCell`]): each task adds its own exclusive
+/// execution time (children time themselves), so the cell's total is the
+/// CPU work of the whole subtree regardless of which workers ran it.
+/// Clique attribution rides the sink (see
+/// [`crate::telemetry::SubCellSink`]), not this parameter.
 pub(crate) fn spawn_subtree<G: AdjacencyGraph + Send + Sync + 'static>(
     scope: &ScopeHandle,
     g: Arc<G>,
@@ -79,11 +97,36 @@ pub(crate) fn spawn_subtree<G: AdjacencyGraph + Send + Sync + 'static>(
     fini: Vec<Vertex>,
     sink: Arc<dyn CliqueSink>,
     cfg: ParTttConfig,
+    cell: Option<Arc<SubCell>>,
 ) {
-    scope.spawn(move |s| run_task(s, g, k, cand, fini, sink, cfg));
+    telemetry::global().parttt_tasks_spawned.inc();
+    scope.spawn(move |s| run_task(s, g, k, cand, fini, sink, cfg, cell));
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
+    scope: &ScopeHandle,
+    g: Arc<G>,
+    k: Vec<Vertex>,
+    cand: Vec<Vertex>,
+    fini: Vec<Vertex>,
+    sink: Arc<dyn CliqueSink>,
+    cfg: ParTttConfig,
+    cell: Option<Arc<SubCell>>,
+) {
+    // Subproblem timing is explicit opt-in (independent of the
+    // `telemetry-off` feature), so read the clock directly rather than
+    // through the feature-gated SpanTimer; `cell` is None on every
+    // untimed run and this costs nothing.
+    let t0 = cell.as_ref().map(|_| std::time::Instant::now());
+    run_task_inner(scope, g, k, cand, fini, sink, cfg, &cell);
+    if let (Some(cell), Some(t0)) = (&cell, t0) {
+        cell.add_ns(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_task_inner<G: AdjacencyGraph + Send + Sync + 'static>(
     scope: &ScopeHandle,
     g: Arc<G>,
     mut k: Vec<Vertex>,
@@ -91,6 +134,7 @@ fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
     fini: Vec<Vertex>,
     sink: Arc<dyn CliqueSink>,
     cfg: ParTttConfig,
+    cell: &Option<Arc<SubCell>>,
 ) {
     if cand.is_empty() {
         if fini.is_empty() {
@@ -102,11 +146,13 @@ fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
     // entirely in the bit-parallel kernel (sequentially, in-task —
     // parallel spawning still happens above this point)
     if cfg.bitset_cutoff > 0 && cand.len() + fini.len() <= cfg.bitset_cutoff {
+        telemetry::global().bitkernel_handoffs.inc();
         bitkernel::enumerate_subproblem(g.as_ref(), &mut k, &cand, &fini, sink.as_ref());
         return;
     }
     // granularity control: small subproblems run sequentially in-task
     if cand.len() + fini.len() <= cfg.seq_cutoff {
+        telemetry::global().parttt_seq_cutovers.inc();
         ttt::ttt_from_with_cutoff(
             g.as_ref(),
             &mut k,
@@ -122,6 +168,7 @@ fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
     // par_pivot borrows cand/fini directly; no per-call Arc clones on
     // the recursion hot path.
     let pivot = if cand.len() + fini.len() >= cfg.par_pivot_min {
+        telemetry::global().parttt_par_pivots.inc();
         par_pivot(scope.pool(), g.as_ref(), &cand, &fini)
     } else {
         choose_pivot(g.as_ref(), &cand, &fini)
@@ -153,6 +200,7 @@ fn run_task<G: AdjacencyGraph + Send + Sync + 'static>(
             fini_q,
             Arc::clone(&sink),
             cfg,
+            cell.clone(),
         );
     }
 }

@@ -93,6 +93,10 @@ fn rec_pooled<G: AdjacencyGraph + ?Sized>(
 ) {
     // dense hand-off: finish small working sets in bitset space
     if bitset_cutoff > 0 && cand.len() + fini.len() <= bitset_cutoff {
+        // one relaxed add against an entire kernel invocation — the
+        // hand-off count is the number the cutoff-sweep recipe in
+        // EXPERIMENTS.md tunes against
+        crate::telemetry::global().bitkernel_handoffs.inc();
         bitkernel::enumerate_subproblem(g, k, cand, fini, sink);
         return;
     }

@@ -14,6 +14,7 @@
 use std::time::Instant;
 
 use crate::coordinator::pool::ThreadPool;
+use crate::telemetry::{self, TelemetrySnapshot};
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::util::sync::{Arc, Mutex};
 use crate::dynamic::stream::EdgeStream;
@@ -82,6 +83,10 @@ pub struct DriverReport {
     pub epochs_observed: usize,
     /// Mean publish → first-observation delay over observed epochs.
     pub mean_visibility_ns: u64,
+    /// Telemetry delta over the replay window (global-registry sweep at
+    /// run end minus the sweep at run start); `None` only on a
+    /// default-constructed report.
+    pub telemetry: Option<Arc<TelemetrySnapshot>>,
 }
 
 impl DriverReport {
@@ -215,6 +220,7 @@ pub fn serve_replay(
     let churned = cfg.churn_every.map(|k| n_batches / k.max(1)).unwrap_or(0);
     let events = n_batches + 2 * churned;
 
+    let tel_before = telemetry::snapshot();
     let base_epoch = service.published_epoch();
     let board = Arc::new(VisBoard::new(base_epoch, events));
     let stop = Arc::new(AtomicBool::new(false));
@@ -272,6 +278,7 @@ pub fn serve_replay(
     let (observed, mean_vis) = board.visibility();
     report.epochs_observed = observed;
     report.mean_visibility_ns = mean_vis;
+    report.telemetry = Some(Arc::new(telemetry::snapshot().delta(&tel_before)));
     report
 }
 
@@ -313,6 +320,7 @@ fn run_reader(
 ) -> ReaderTotals {
     let mut rng = Rng::new(seed);
     let mut local = ReaderTotals::default();
+    let tel = telemetry::global();
     // do-while: every reader task completes at least one query round
     // even if it is first scheduled after the writer finished
     loop {
@@ -322,6 +330,9 @@ fn run_reader(
         local.lag_samples += 1;
         local.lag_sum += lag;
         local.max_lag = local.max_lag.max(lag);
+        tel.service_epoch_lag_sum.add(lag);
+        tel.service_epoch_lag_samples.inc();
+        tel.service_epoch_lag_max.set_max(lag);
 
         let snap = Arc::clone(reader.current());
         board.mark_seen(snap.epoch(), t0.elapsed().as_nanos() as u64);
@@ -361,6 +372,7 @@ fn run_reader(
                 }
             }
             local.queries += 1;
+            tel.service_queries.inc();
         }
         if stop.load(Ordering::Acquire) {
             break;
@@ -408,6 +420,17 @@ mod tests {
         assert_eq!(snap.canonical_cliques(), want);
         let line = report.summary();
         assert!(line.contains("violations 0"), "{line}");
+
+        // the embedded telemetry delta reconciles with the report totals
+        // (≥: the registry is process-global, parallel tests can add)
+        let d = report.telemetry.as_ref().expect("driver attaches telemetry");
+        if !cfg!(feature = "telemetry-off") {
+            use crate::telemetry::names;
+            assert!(d.counter(names::SERVICE_QUERIES).unwrap() >= report.queries);
+            assert!(d.counter(names::SERVICE_PUBLISHES).unwrap() >= report.updates as u64);
+            assert!(d.counter(names::SERVICE_EPOCH_LAG_SAMPLES).unwrap() >= report.lag_samples);
+            assert!(d.gauge(names::SERVICE_EPOCH_LAG_MAX).unwrap() >= report.max_epoch_lag);
+        }
     }
 
     #[test]

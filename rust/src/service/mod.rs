@@ -75,6 +75,9 @@ impl ServiceShared {
         let mut store = self.store.lock().unwrap();
         store.apply(result, graph);
         self.cell.publish(Arc::new(store.freeze()));
+        let t = crate::telemetry::global();
+        t.service_publishes.inc();
+        t.service_published_epoch.set(self.cell.published_epoch());
     }
 }
 

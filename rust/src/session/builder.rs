@@ -20,7 +20,8 @@ use crate::coordinator::stats::Subproblem;
 use crate::graph::csr::CsrGraph;
 use crate::graph::datasets::{Dataset, Scale};
 use crate::graph::{Edge, Vertex};
-use crate::mce::parmce::{subproblems_timed, trace, trace_parttt};
+use crate::mce::parmce::{parmce_with_subproblems, subproblems_timed, trace, trace_parttt};
+use crate::mce::ParMceConfig;
 use crate::mce::ranking::{RankStrategy, Ranking};
 use crate::mce::sink::{
     CliqueSink, CountSink, NullSink, ShardedCollectSink, ShardedHistogramSink, SizeHistogram,
@@ -389,7 +390,7 @@ impl MceSession {
     /// Run `algo` into a caller-provided sink.
     pub fn run_with_sink(&self, algo: Algo, sink: &Arc<dyn CliqueSink>) -> RunReport {
         let report = algo.enumerator().enumerate(&self.ctx, &self.g, sink);
-        self.ctx.record(report);
+        self.ctx.record(report.clone());
         report
     }
 
@@ -407,6 +408,24 @@ impl MceSession {
     /// ablations that test non-paper orderings.
     pub fn subproblems_with(&self, ranking: &Ranking) -> Vec<Subproblem> {
         subproblems_timed(&self.g, ranking)
+    }
+
+    /// Per-vertex subproblem skew measured from a real *parallel* ParMCE
+    /// run: each root carries a [`crate::telemetry::SubCell`] that its
+    /// whole task tree feeds (cliques via the sink wrapper, CPU time per
+    /// task), so the Figure-2 skew analysis
+    /// ([`crate::coordinator::stats::share_curve`]) can be driven by
+    /// production scheduling instead of the sequential
+    /// [`subproblems`](Self::subproblems) methodology.  Not cached (each
+    /// call re-measures under current load); uses the session's rank
+    /// strategy and ParTTT config.
+    pub fn subproblems_parallel(&self) -> Vec<Subproblem> {
+        let ranking = self.ctx.ranking(&self.g, self.ctx.rank_strategy());
+        let sink: Arc<dyn CliqueSink> = Arc::new(NullSink::new());
+        let cfg = ParMceConfig {
+            parttt: self.ctx.parttt_config(),
+        };
+        parmce_with_subproblems(self.ctx.pool(), &self.g, &ranking, &sink, cfg)
     }
 
     /// Measured ParMCE task tree under `strategy` for the scheduler
@@ -546,6 +565,38 @@ mod tests {
             .build()
             .unwrap();
         assert!(Arc::ptr_eq(&s.ranking(RankStrategy::Triangle), &pre));
+    }
+
+    #[test]
+    fn parallel_subproblem_capture_counts_every_clique() {
+        let g = generators::gnp(24, 0.35, 6);
+        let s = MceSession::builder().graph(g).threads(3).build().unwrap();
+        let want = s.count(Algo::Ttt).cliques;
+        let subs = s.subproblems_parallel();
+        assert_eq!(subs.len(), s.graph().n());
+        assert_eq!(subs.iter().map(|p| p.cliques).sum::<u64>(), want);
+    }
+
+    #[test]
+    fn reports_carry_a_telemetry_delta() {
+        let g = generators::gnp(20, 0.4, 9);
+        let s = MceSession::builder().graph(g).threads(2).build().unwrap();
+        let report = s.count(Algo::ParTtt);
+        let snap = report.telemetry.as_ref().expect("run harness attaches telemetry");
+        // under telemetry-off the delta exists but reads zero
+        if cfg!(feature = "telemetry-off") {
+            assert_eq!(
+                snap.counter(crate::telemetry::names::CLIQUES_EMITTED),
+                Some(0)
+            );
+        } else {
+            // the window's own emits are visible (other parallel tests may
+            // add more, but never subtract)
+            assert!(
+                snap.counter(crate::telemetry::names::CLIQUES_EMITTED).unwrap()
+                    >= report.cliques
+            );
+        }
     }
 
     #[test]

@@ -253,6 +253,7 @@ impl DynamicSession {
     /// As [`apply_batch`](Self::apply_batch), also returning per-task
     /// phase timings for the scheduler simulation (Figures 8/9).
     pub fn apply_batch_timed(&mut self, edges: &[Edge]) -> (BatchResult, BatchTimings) {
+        let batch_span = crate::telemetry::SpanTimer::start();
         let (result, timings) = match self.algo {
             DynAlgo::Imce => imce_batch_with_cutoff(
                 &mut self.graph,
@@ -277,16 +278,35 @@ impl DynamicSession {
         self.batches_applied += 1;
         self.total_new += result.new_cliques.len() as u64;
         self.total_subsumed += result.subsumed.len() as u64;
+        // per-batch phase telemetry: both engines (and every replay-driven
+        // batch) flow through this one choke point
+        let t = crate::telemetry::global();
+        t.dynamic_batches.inc();
+        t.dynamic_new_cliques.add(result.new_cliques.len() as u64);
+        t.dynamic_subsumed_cliques.add(result.subsumed.len() as u64);
+        t.dynamic_batch_ns.record(batch_span.elapsed_ns());
+        for &ns in &timings.new_task_ns {
+            t.dynamic_new_task_ns.record(ns);
+        }
+        for &ns in &timings.sub_task_ns {
+            t.dynamic_sub_task_ns.record(ns);
+        }
         self.notify(BatchKind::Insert, &result);
         (result, timings)
     }
 
     /// Apply one batch of edge removals (§5.3 decremental reduction).
     pub fn remove_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        let batch_span = crate::telemetry::SpanTimer::start();
         let result = imce_remove_batch(&mut self.graph, &self.registry, edges);
         self.batches_applied += 1;
         self.total_new += result.new_cliques.len() as u64;
         self.total_subsumed += result.subsumed.len() as u64;
+        let t = crate::telemetry::global();
+        t.dynamic_batches.inc();
+        t.dynamic_new_cliques.add(result.new_cliques.len() as u64);
+        t.dynamic_subsumed_cliques.add(result.subsumed.len() as u64);
+        t.dynamic_batch_ns.record(batch_span.elapsed_ns());
         self.notify(BatchKind::Remove, &result);
         result
     }
@@ -496,6 +516,29 @@ mod tests {
             count.load(crate::util::sync::atomic::Ordering::SeqCst),
             records.len()
         );
+    }
+
+    #[test]
+    fn batches_feed_dynamic_telemetry() {
+        use crate::telemetry::{names, snapshot};
+        let before = snapshot();
+        let target = generators::gnp(10, 0.5, 9);
+        let mut s = DynamicSession::from_empty(10, DynAlgo::Imce);
+        let mut applied = 0u64;
+        for chunk in target.edges().chunks(6) {
+            s.apply_batch(chunk);
+            applied += 1;
+        }
+        let d = snapshot().delta(&before);
+        if cfg!(feature = "telemetry-off") {
+            assert_eq!(d.counter(names::DYNAMIC_BATCHES), Some(0));
+        } else {
+            // other tests may run batches concurrently: at least ours
+            assert!(d.counter(names::DYNAMIC_BATCHES).unwrap() >= applied);
+            assert!(d.counter(names::DYNAMIC_NEW_CLIQUES).unwrap() > 0);
+            let h = d.histogram(names::DYNAMIC_BATCH_NS).unwrap();
+            assert!(h.count() >= applied);
+        }
     }
 
     #[test]

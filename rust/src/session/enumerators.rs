@@ -19,6 +19,7 @@ use crate::mce::parmce::parmce;
 use crate::mce::parttt::parttt;
 use crate::mce::sink::{CliqueSink, CountSink, ShardedCountSink, TeeSink};
 use crate::mce::{ttt, ParMceConfig};
+use crate::telemetry;
 use crate::util::membudget::BudgetError;
 
 use super::context::ExecContext;
@@ -152,22 +153,30 @@ pub trait Enumerator: Send + Sync {
 /// Every run of every algorithm goes through this shim, which makes it
 /// the one emit that can never be opted out of — so it counts through a
 /// worker-sharded counter rather than a shared atomic, keeping the
-/// mandatory part of the emit hot path off shared cache lines.
+/// mandatory part of the emit hot path off shared cache lines.  The
+/// telemetry `cliques_emitted` counter is bumped here too (same sharded
+/// discipline; the registry reference is cached at construction so the
+/// emit path never touches the `OnceLock`).
 struct CountedSink {
     inner: Arc<dyn CliqueSink>,
     emitted: ShardedCountSink,
+    cliques_metric: &'static telemetry::Counter,
 }
 
 impl CliqueSink for CountedSink {
     #[inline]
     fn emit(&self, clique: &[Vertex]) {
         self.emitted.emit(clique);
+        self.cliques_metric.inc();
         self.inner.emit(clique);
     }
 }
 
 /// Shared run harness: wrap the sink in a sharded counter, honor the
-/// cancellation flag, time the run, assemble the report.
+/// cancellation flag, time the run, assemble the report — including the
+/// telemetry delta over the run's window (the global registry swept
+/// before and after; subtraction isolates this run from everything the
+/// process did earlier).
 fn run_counted(
     algo: Algo,
     ctx: &ExecContext,
@@ -177,19 +186,24 @@ fn run_counted(
     let counted = Arc::new(CountedSink {
         inner: Arc::clone(sink),
         emitted: ShardedCountSink::new(ctx.threads()),
+        cliques_metric: &telemetry::global().cliques_emitted,
     });
     let as_dyn: Arc<dyn CliqueSink> = Arc::clone(&counted);
+    let before = telemetry::snapshot();
     let t0 = Instant::now();
     let outcome = if ctx.is_cancelled() {
         RunOutcome::Cancelled
     } else {
         f(&as_dyn)
     };
+    let wall = t0.elapsed();
+    let delta = telemetry::snapshot().delta(&before);
     RunReport {
         algo,
         cliques: counted.emitted.count(),
-        wall: t0.elapsed(),
+        wall,
         outcome,
+        telemetry: Some(Arc::new(delta)),
     }
 }
 

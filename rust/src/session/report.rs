@@ -9,6 +9,9 @@
 
 use std::time::Duration;
 
+use crate::telemetry::TelemetrySnapshot;
+use crate::util::sync::Arc;
+
 use super::enumerators::Algo;
 
 /// How an enumeration run ended.
@@ -28,7 +31,7 @@ pub enum RunOutcome {
 
 /// What one enumeration run did: which algorithm, how many cliques
 /// reached the sink, how long it took, and how it ended.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RunReport {
     pub algo: Algo,
     /// Cliques that reached the sink. On a non-`Completed` outcome this
@@ -36,6 +39,12 @@ pub struct RunReport {
     pub cliques: u64,
     pub wall: Duration,
     pub outcome: RunOutcome,
+    /// Telemetry delta over this run's window (global-registry sweep at
+    /// run end minus the sweep at run start): pool scheduling, ParTTT
+    /// cutover/hand-off counts, per-worker busy time.  `None` only when
+    /// a report is synthesized outside the run harness.  Shared via
+    /// `Arc` so reports stay cheap to clone.
+    pub telemetry: Option<Arc<TelemetrySnapshot>>,
 }
 
 impl RunReport {
@@ -93,12 +102,13 @@ mod tests {
             cliques: 3,
             wall: Duration::from_millis(1500),
             outcome: RunOutcome::Completed,
+            telemetry: None,
         };
         assert!(r.completed());
         assert!((r.secs() - 1.5).abs() < 1e-9);
         let oom = RunReport {
             outcome: RunOutcome::OutOfMemory,
-            ..r
+            ..r.clone()
         };
         assert!(!oom.completed());
         assert!((r.cliques_per_sec() - 2.0).abs() < 1e-9);

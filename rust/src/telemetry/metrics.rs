@@ -1,0 +1,438 @@
+//! Metric primitives: sharded counters, gauges, bucketed histograms.
+//!
+//! The hot-path contract mirrors [`crate::mce::sink::sharded`]: each pool
+//! worker owns a cache-padded shard (routed by
+//! [`crate::coordinator::pool::current_worker_slot`]), increments are
+//! `Relaxed` `fetch_add`s on a private cache line, and a snapshot *sweeps*
+//! all shards with `Acquire` loads.  The sweep is a racy lower bound while
+//! workers are still running; it is exact once the enumeration scope has
+//! joined, because the pool's `WaitGroup` (`done` → `Release`, `wait` →
+//! `Acquire`) orders every shard write before the sweeping thread's loads.
+//! The loom model `telemetry_counter_sweep_exact_after_join` in
+//! `rust/tests/loom_models.rs` pins exactly this protocol.
+//!
+//! Under the `telemetry-off` cargo feature every type here is a zero-sized
+//! no-op with the identical API, so instrumentation call sites compile to
+//! nothing — no shard arrays exist, no atomics are touched, and
+//! [`SpanTimer`] never reads the clock.
+
+#[cfg(not(feature = "telemetry-off"))]
+use crate::mce::sink::CachePadded;
+#[cfg(not(feature = "telemetry-off"))]
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+/// Worker shards per metric.  Fixed (the global registry outlives any one
+/// pool), sized to cover every realistic pool width; workers with a slot
+/// at or beyond this route to the shared *external* shard — a routing
+/// hint, never a correctness assumption, exactly like the sharded sinks.
+pub const WORKER_SHARDS: usize = 32;
+
+/// Total shards: one per worker slot plus the external shard that
+/// non-pool threads (and out-of-range slots) fall back to.
+pub const TOTAL_SHARDS: usize = WORKER_SHARDS + 1;
+
+#[cfg(not(feature = "telemetry-off"))]
+#[inline]
+fn shard_index(n_shards: usize) -> usize {
+    let external = n_shards - 1;
+    match crate::coordinator::pool::current_worker_slot() {
+        Some(i) if i < external => i,
+        _ => external,
+    }
+}
+
+// --- counter ---------------------------------------------------------------
+
+/// Monotone counter, sharded per worker.  `add` is one `Relaxed`
+/// `fetch_add` on the caller's own cache line.
+pub struct Counter {
+    #[cfg(not(feature = "telemetry-off"))]
+    shards: Box<[CachePadded<AtomicU64>]>,
+}
+
+impl Counter {
+    /// Registry-sized counter ([`TOTAL_SHARDS`] shards).
+    pub fn new() -> Self {
+        Self::with_shards(TOTAL_SHARDS)
+    }
+
+    /// Explicit shard count (tests and the loom sweep model). Must be ≥ 1;
+    /// the last shard is the external fallback.
+    pub fn with_shards(n: usize) -> Self {
+        #[cfg(feature = "telemetry-off")]
+        {
+            let _ = n;
+            Counter {}
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            assert!(n >= 1, "a sharded counter needs at least one shard");
+            Counter {
+                shards: (0..n).map(|_| CachePadded(AtomicU64::new(0))).collect(),
+            }
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = n;
+        #[cfg(not(feature = "telemetry-off"))]
+        self.shards[shard_index(self.shards.len())]
+            .0
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sweep all shards (`Acquire` loads) and return the total.  Exact
+    /// after a happens-before point (scope join, run end); a monotone
+    /// lower bound while writers are live.
+    pub fn value(&self) -> u64 {
+        self.per_shard().iter().sum()
+    }
+
+    /// Per-shard sweep — index `i < WORKER_SHARDS` is worker `i`'s shard,
+    /// the last entry is the external shard.  Empty under `telemetry-off`.
+    pub fn per_shard(&self) -> Vec<u64> {
+        #[cfg(feature = "telemetry-off")]
+        {
+            Vec::new()
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            self.shards
+                .iter()
+                .map(|s| s.0.load(Ordering::Acquire))
+                .collect()
+        }
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+// --- gauge -----------------------------------------------------------------
+
+/// Instantaneous value (queue depth, current epoch, max lag).  A single
+/// atomic — gauges are read as often as written, so sharding would only
+/// move the cost to the sweep.
+pub struct Gauge {
+    #[cfg(not(feature = "telemetry-off"))]
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge {
+            #[cfg(not(feature = "telemetry-off"))]
+            value: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = n;
+        #[cfg(not(feature = "telemetry-off"))]
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = n;
+        #[cfg(not(feature = "telemetry-off"))]
+        self.value.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set(&self, n: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = n;
+        #[cfg(not(feature = "telemetry-off"))]
+        self.value.store(n, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `n` if `n` is larger (high-water marks).
+    #[inline]
+    pub fn set_max(&self, n: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = n;
+        #[cfg(not(feature = "telemetry-off"))]
+        self.value.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        #[cfg(feature = "telemetry-off")]
+        {
+            0
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            self.value.load(Ordering::Acquire)
+        }
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+// --- histogram -------------------------------------------------------------
+
+/// Power-of-two histogram buckets: bucket `i` counts values whose bit
+/// length is `i` (bucket 0 holds zero), i.e. upper bound `2^i - 1`;
+/// the last bucket absorbs everything larger (`+Inf`).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Bucket index for a recorded value.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (`None` = `+Inf`).
+pub fn bucket_bound(i: usize) -> Option<u64> {
+    if i + 1 >= HIST_BUCKETS {
+        None
+    } else {
+        Some((1u64 << i) - 1)
+    }
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+struct HistShard {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl Default for HistShard {
+    fn default() -> Self {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Distribution metric (batch latencies, task durations), sharded like
+/// [`Counter`]: `record` is two `Relaxed` adds on the caller's own shard.
+pub struct Histogram {
+    #[cfg(not(feature = "telemetry-off"))]
+    shards: Box<[CachePadded<HistShard>]>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        #[cfg(feature = "telemetry-off")]
+        {
+            Histogram {}
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            Histogram {
+                shards: (0..TOTAL_SHARDS)
+                    .map(|_| CachePadded(HistShard::default()))
+                    .collect(),
+            }
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        #[cfg(feature = "telemetry-off")]
+        let _ = v;
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            let shard = &self.shards[shard_index(self.shards.len())].0;
+            shard.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+            shard.sum.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Sweep: per-bucket counts (length [`HIST_BUCKETS`]) and the value
+    /// sum, merged across shards with `Acquire` loads.
+    pub fn sweep(&self) -> (Vec<u64>, u64) {
+        #[cfg(feature = "telemetry-off")]
+        {
+            (vec![0; HIST_BUCKETS], 0)
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            let mut buckets = vec![0u64; HIST_BUCKETS];
+            let mut sum = 0u64;
+            for shard in self.shards.iter() {
+                for (acc, b) in buckets.iter_mut().zip(shard.0.buckets.iter()) {
+                    *acc += b.load(Ordering::Acquire);
+                }
+                // value sums wrap like the atomics they mirror
+                sum = sum.wrapping_add(shard.0.sum.load(Ordering::Acquire));
+            }
+            (buckets, sum)
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.sweep().0.iter().sum()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+// --- span timer ------------------------------------------------------------
+
+/// Lightweight span timer for busy-time attribution: start, do work, add
+/// `elapsed_ns` to a counter.  Compiles to nothing (never reads the
+/// clock) under `telemetry-off`.
+pub struct SpanTimer {
+    #[cfg(not(feature = "telemetry-off"))]
+    start: std::time::Instant,
+}
+
+impl SpanTimer {
+    #[inline]
+    pub fn start() -> Self {
+        SpanTimer {
+            #[cfg(not(feature = "telemetry-off"))]
+            start: std::time::Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        #[cfg(feature = "telemetry-off")]
+        {
+            0
+        }
+        #[cfg(not(feature = "telemetry-off"))]
+        {
+            self.start.elapsed().as_nanos() as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(not(feature = "telemetry-off"))]
+    mod enabled {
+        use super::*;
+        use crate::coordinator::pool::ThreadPool;
+        use crate::util::sync::Arc;
+
+        #[test]
+        #[cfg_attr(miri, ignore)] // spawns a real pool; loom owns this protocol
+        fn counter_totals_are_exact_after_join() {
+            let pool = ThreadPool::new(4);
+            let c = Arc::new(Counter::new());
+            pool.scope(|s| {
+                for _ in 0..100 {
+                    let c = Arc::clone(&c);
+                    s.spawn(move |_| c.add(3));
+                }
+            });
+            assert_eq!(c.value(), 300);
+            assert_eq!(c.per_shard().iter().sum::<u64>(), 300);
+        }
+
+        #[test]
+        fn external_threads_use_the_last_shard() {
+            let c = Counter::new();
+            c.add(7);
+            let shards = c.per_shard();
+            assert_eq!(shards[TOTAL_SHARDS - 1], 7);
+            assert!(shards[..TOTAL_SHARDS - 1].iter().all(|&v| v == 0));
+        }
+
+        #[test]
+        fn gauge_add_sub_set_max() {
+            let g = Gauge::new();
+            g.add(5);
+            g.sub(2);
+            assert_eq!(g.get(), 3);
+            g.set(10);
+            g.set_max(7);
+            assert_eq!(g.get(), 10);
+            g.set_max(12);
+            assert_eq!(g.get(), 12);
+        }
+
+        #[test]
+        fn histogram_buckets_and_sum() {
+            let h = Histogram::new();
+            for v in [0u64, 1, 2, 3, 4, 1000, u64::MAX] {
+                h.record(v);
+            }
+            let (buckets, sum) = h.sweep();
+            assert_eq!(buckets.iter().sum::<u64>(), 7);
+            assert_eq!(sum, 0u64.wrapping_add(1 + 2 + 3 + 4 + 1000).wrapping_add(u64::MAX));
+            assert_eq!(buckets[0], 1, "zero lands in bucket 0");
+            assert_eq!(buckets[1], 1, "one lands in bucket 1");
+            assert_eq!(buckets[HIST_BUCKETS - 1], 1, "u64::MAX lands in +Inf");
+            assert_eq!(h.count(), 7);
+        }
+
+        #[test]
+        fn bucket_bounds_cover_indices() {
+            assert_eq!(bucket_bound(0), Some(0));
+            assert_eq!(bucket_bound(1), Some(1));
+            assert_eq!(bucket_bound(2), Some(3));
+            assert_eq!(bucket_bound(HIST_BUCKETS - 1), None);
+            // every value's bucket bound (when finite) is >= the value
+            for v in [0u64, 1, 5, 1 << 20, (1 << 38) + 1] {
+                let i = bucket_index(v);
+                if let Some(b) = bucket_bound(i) {
+                    assert!(b >= v, "v={v} bucket {i} bound {b}");
+                }
+            }
+        }
+
+        #[test]
+        fn span_timer_measures_nonzero() {
+            let t = SpanTimer::start();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert!(t.elapsed_ns() > 0);
+        }
+    }
+
+    #[cfg(feature = "telemetry-off")]
+    mod disabled {
+        use super::*;
+
+        #[test]
+        fn metric_types_are_zero_sized_noops() {
+            // true zero cost: no shard arrays exist, nothing to touch
+            assert_eq!(std::mem::size_of::<Counter>(), 0);
+            assert_eq!(std::mem::size_of::<Gauge>(), 0);
+            assert_eq!(std::mem::size_of::<Histogram>(), 0);
+            assert_eq!(std::mem::size_of::<SpanTimer>(), 0);
+            let c = Counter::new();
+            c.add(5);
+            assert_eq!(c.value(), 0);
+            assert!(c.per_shard().is_empty());
+            let g = Gauge::new();
+            g.add(3);
+            g.set_max(9);
+            assert_eq!(g.get(), 0);
+            let h = Histogram::new();
+            h.record(42);
+            assert_eq!(h.count(), 0);
+            assert_eq!(SpanTimer::start().elapsed_ns(), 0);
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! Live telemetry: sharded runtime metrics with a metrics export surface.
+//!
+//! The paper's own evidence for parallel MCE's hard problems — subproblem
+//! skew (Fig. 2), scheduler load balance (§4.2) — is exactly what a
+//! production clique service must see *while running*, not rebuild
+//! offline.  This module is the always-on layer: a [`Registry`] of named
+//! counters, gauges and histograms instrumenting the load-bearing seams
+//! (pool scheduling, ParTTT spawn/cutover/kernel hand-off, IMCE batch
+//! phases, service publish/read), exported three ways:
+//!
+//! * [`TelemetrySnapshot`] embedded in
+//!   [`RunReport`](crate::session::RunReport) and the serve-replay
+//!   [`DriverReport`](crate::service::DriverReport) (per-run deltas of
+//!   the process-wide registry);
+//! * Prometheus text exposition / JSON behind `--metrics-out` on the
+//!   `enumerate` and `serve-replay` CLI commands;
+//! * a periodic [`Sampler`] thread printing cliques/sec, queue depth and
+//!   worker utilization during long runs (`--metrics-every`).
+//!
+//! **Cost contract.** Counters are cache-padded per-worker shards (the
+//! [`crate::mce::sink::sharded`] pattern): enabled-but-unread cost on the
+//! TTT hot path is one `Relaxed` `fetch_add` on a private cache line.
+//! Snapshots sweep shards with `Acquire` loads — exact after a
+//! happens-before point (scope join / run end), a monotone lower bound
+//! while workers run; the loom model
+//! `telemetry_counter_sweep_exact_after_join` pins the protocol.  The
+//! `telemetry-off` cargo feature compiles every metric to a zero-sized
+//! no-op for true zero cost (`benches/telemetry.rs` measures both).
+//!
+//! All synchronization goes through [`crate::util::sync`], so the loom
+//! shim can perturb the shard-sweep protocol like every other concurrent
+//! structure in the crate.
+
+pub mod metrics;
+pub mod sampler;
+pub mod snapshot;
+pub mod subprob;
+
+pub use metrics::{Counter, Gauge, Histogram, SpanTimer, HIST_BUCKETS, WORKER_SHARDS};
+pub use sampler::Sampler;
+pub use snapshot::{CounterSample, GaugeSample, HistogramSample, TelemetrySnapshot};
+pub use subprob::{SubCell, SubCellSink};
+
+use crate::util::sync::OnceLock;
+
+/// Canonical metric names (the README "Metric reference" table mirrors
+/// this list) — use these for [`TelemetrySnapshot::counter`] /
+/// [`TelemetrySnapshot::gauge`] lookups instead of string literals.
+pub mod names {
+    pub const POOL_JOBS_SPAWNED: &str = "parmce_pool_jobs_spawned_total";
+    pub const POOL_JOBS_DEQUEUED: &str = "parmce_pool_jobs_dequeued_total";
+    pub const POOL_WAKEUPS: &str = "parmce_pool_wakeups_total";
+    pub const POOL_QUEUE_DEPTH: &str = "parmce_pool_queue_depth";
+    pub const POOL_WORKER_BUSY_NS: &str = "parmce_pool_worker_busy_ns_total";
+    pub const CLIQUES_EMITTED: &str = "parmce_cliques_emitted_total";
+    pub const PARTTT_TASKS_SPAWNED: &str = "parmce_parttt_tasks_spawned_total";
+    pub const PARTTT_SEQ_CUTOVERS: &str = "parmce_parttt_seq_cutovers_total";
+    pub const PARTTT_PAR_PIVOTS: &str = "parmce_parttt_par_pivots_total";
+    pub const BITKERNEL_HANDOFFS: &str = "parmce_bitkernel_handoffs_total";
+    pub const DYNAMIC_BATCHES: &str = "parmce_dynamic_batches_total";
+    pub const DYNAMIC_NEW_CLIQUES: &str = "parmce_dynamic_new_cliques_total";
+    pub const DYNAMIC_SUBSUMED: &str = "parmce_dynamic_subsumed_cliques_total";
+    pub const DYNAMIC_BATCH_NS: &str = "parmce_dynamic_batch_ns";
+    pub const DYNAMIC_NEW_TASK_NS: &str = "parmce_dynamic_new_task_ns";
+    pub const DYNAMIC_SUB_TASK_NS: &str = "parmce_dynamic_sub_task_ns";
+    pub const SERVICE_PUBLISHES: &str = "parmce_service_publishes_total";
+    pub const SERVICE_QUERIES: &str = "parmce_service_queries_total";
+    pub const SERVICE_PUBLISHED_EPOCH: &str = "parmce_service_published_epoch";
+    pub const SERVICE_EPOCH_LAG_SUM: &str = "parmce_service_epoch_lag_sum_total";
+    pub const SERVICE_EPOCH_LAG_SAMPLES: &str = "parmce_service_epoch_lag_samples_total";
+    pub const SERVICE_EPOCH_LAG_MAX: &str = "parmce_service_epoch_lag_max";
+}
+
+/// The process-wide metric registry.  One instance lives behind
+/// [`global`]; hot paths reach their metric as a direct field access, so
+/// "registration" is compile-time and the emit path never hashes a name.
+pub struct Registry {
+    // --- pool scheduling (coordinator/pool.rs) ---
+    pub pool_jobs_spawned: Counter,
+    pub pool_jobs_dequeued: Counter,
+    pub pool_wakeups: Counter,
+    pub pool_queue_depth: Gauge,
+    /// Exported per worker shard (`worker="i"` labels).
+    pub pool_worker_busy_ns: Counter,
+    // --- enumeration kernels (mce/) ---
+    pub cliques_emitted: Counter,
+    pub parttt_tasks_spawned: Counter,
+    pub parttt_seq_cutovers: Counter,
+    pub parttt_par_pivots: Counter,
+    pub bitkernel_handoffs: Counter,
+    // --- dynamic pipeline (dynamic/, session/dynamic.rs) ---
+    pub dynamic_batches: Counter,
+    pub dynamic_new_cliques: Counter,
+    pub dynamic_subsumed_cliques: Counter,
+    pub dynamic_batch_ns: Histogram,
+    pub dynamic_new_task_ns: Histogram,
+    pub dynamic_sub_task_ns: Histogram,
+    // --- clique service (service/) ---
+    pub service_publishes: Counter,
+    pub service_queries: Counter,
+    pub service_published_epoch: Gauge,
+    pub service_epoch_lag_sum: Counter,
+    pub service_epoch_lag_samples: Counter,
+    pub service_epoch_lag_max: Gauge,
+}
+
+impl Registry {
+    fn new() -> Self {
+        Registry {
+            pool_jobs_spawned: Counter::new(),
+            pool_jobs_dequeued: Counter::new(),
+            pool_wakeups: Counter::new(),
+            pool_queue_depth: Gauge::new(),
+            pool_worker_busy_ns: Counter::new(),
+            cliques_emitted: Counter::new(),
+            parttt_tasks_spawned: Counter::new(),
+            parttt_seq_cutovers: Counter::new(),
+            parttt_par_pivots: Counter::new(),
+            bitkernel_handoffs: Counter::new(),
+            dynamic_batches: Counter::new(),
+            dynamic_new_cliques: Counter::new(),
+            dynamic_subsumed_cliques: Counter::new(),
+            dynamic_batch_ns: Histogram::new(),
+            dynamic_new_task_ns: Histogram::new(),
+            dynamic_sub_task_ns: Histogram::new(),
+            service_publishes: Counter::new(),
+            service_queries: Counter::new(),
+            service_published_epoch: Gauge::new(),
+            service_epoch_lag_sum: Counter::new(),
+            service_epoch_lag_samples: Counter::new(),
+            service_epoch_lag_max: Gauge::new(),
+        }
+    }
+
+    /// Sweep every metric into an owned [`TelemetrySnapshot`].  Under
+    /// `telemetry-off` every sample reads zero (and counter shard
+    /// breakdowns are empty) — the export surface keeps working, it just
+    /// has nothing to say.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let c = |name, help, per_worker, counter: &Counter| CounterSample {
+            name,
+            help,
+            per_worker,
+            total: counter.value(),
+            shards: counter.per_shard(),
+        };
+        let g = |name, help, gauge: &Gauge| GaugeSample {
+            name,
+            help,
+            value: gauge.get(),
+        };
+        TelemetrySnapshot {
+            counters: vec![
+                c(
+                    names::POOL_JOBS_SPAWNED,
+                    "Jobs submitted to the work-stealing pool.",
+                    false,
+                    &self.pool_jobs_spawned,
+                ),
+                c(
+                    names::POOL_JOBS_DEQUEUED,
+                    "Jobs taken off a deque or the injector (own pop, injector pop, or steal).",
+                    false,
+                    &self.pool_jobs_dequeued,
+                ),
+                c(
+                    names::POOL_WAKEUPS,
+                    "Parked worker wakeups (notify or park timeout).",
+                    false,
+                    &self.pool_wakeups,
+                ),
+                c(
+                    names::POOL_WORKER_BUSY_NS,
+                    "Nanoseconds each pool worker spent executing jobs.",
+                    true,
+                    &self.pool_worker_busy_ns,
+                ),
+                c(
+                    names::CLIQUES_EMITTED,
+                    "Maximal cliques emitted through counted session sinks.",
+                    false,
+                    &self.cliques_emitted,
+                ),
+                c(
+                    names::PARTTT_TASKS_SPAWNED,
+                    "ParTTT/ParMCE subtree tasks forked onto the pool.",
+                    false,
+                    &self.parttt_tasks_spawned,
+                ),
+                c(
+                    names::PARTTT_SEQ_CUTOVERS,
+                    "ParTTT tasks that fell below seq_cutoff and ran sequential TTT in-task.",
+                    false,
+                    &self.parttt_seq_cutovers,
+                ),
+                c(
+                    names::PARTTT_PAR_PIVOTS,
+                    "Pivot selections computed in parallel (ParPivot, above par_pivot_min).",
+                    false,
+                    &self.parttt_par_pivots,
+                ),
+                c(
+                    names::BITKERNEL_HANDOFFS,
+                    "Subproblems handed off to the dense bit-parallel kernel.",
+                    false,
+                    &self.bitkernel_handoffs,
+                ),
+                c(
+                    names::DYNAMIC_BATCHES,
+                    "Edge batches applied by IMCE/ParIMCE.",
+                    false,
+                    &self.dynamic_batches,
+                ),
+                c(
+                    names::DYNAMIC_NEW_CLIQUES,
+                    "Cliques added to the maintained set by dynamic batches.",
+                    false,
+                    &self.dynamic_new_cliques,
+                ),
+                c(
+                    names::DYNAMIC_SUBSUMED,
+                    "Cliques retired (subsumed or invalidated) by dynamic batches.",
+                    false,
+                    &self.dynamic_subsumed_cliques,
+                ),
+                c(
+                    names::SERVICE_PUBLISHES,
+                    "Snapshot publishes by the clique service (one per applied batch).",
+                    false,
+                    &self.service_publishes,
+                ),
+                c(
+                    names::SERVICE_QUERIES,
+                    "Queries answered by serve-replay readers.",
+                    false,
+                    &self.service_queries,
+                ),
+                c(
+                    names::SERVICE_EPOCH_LAG_SUM,
+                    "Sum of reader epoch-lag samples (published epoch minus reader epoch).",
+                    false,
+                    &self.service_epoch_lag_sum,
+                ),
+                c(
+                    names::SERVICE_EPOCH_LAG_SAMPLES,
+                    "Number of reader epoch-lag samples.",
+                    false,
+                    &self.service_epoch_lag_samples,
+                ),
+            ],
+            gauges: vec![
+                g(
+                    names::POOL_QUEUE_DEPTH,
+                    "Jobs currently queued (deques + injector) across live pools.",
+                    &self.pool_queue_depth,
+                ),
+                g(
+                    names::SERVICE_PUBLISHED_EPOCH,
+                    "Latest epoch published by the clique service.",
+                    &self.service_published_epoch,
+                ),
+                g(
+                    names::SERVICE_EPOCH_LAG_MAX,
+                    "Largest reader epoch lag observed.",
+                    &self.service_epoch_lag_max,
+                ),
+            ],
+            histograms: vec![
+                snapshot::histogram_sample(
+                    names::DYNAMIC_BATCH_NS,
+                    "Wall time per dynamic batch (apply + maintain), nanoseconds.",
+                    self.dynamic_batch_ns.sweep(),
+                ),
+                snapshot::histogram_sample(
+                    names::DYNAMIC_NEW_TASK_NS,
+                    "Per-task time in the new-clique phase of a dynamic batch, nanoseconds.",
+                    self.dynamic_new_task_ns.sweep(),
+                ),
+                snapshot::histogram_sample(
+                    names::DYNAMIC_SUB_TASK_NS,
+                    "Per-task time in the subsumed-clique phase of a dynamic batch, nanoseconds.",
+                    self.dynamic_sub_task_ns.sweep(),
+                ),
+            ],
+        }
+    }
+}
+
+/// The process-wide registry (created on first touch).
+pub fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Sweep the global registry — shorthand for `global().snapshot()`.
+pub fn snapshot() -> TelemetrySnapshot {
+    global().snapshot()
+}
+
+/// Render a snapshot for a `--metrics-out` path: JSON when the path ends
+/// in `.json`, Prometheus text exposition otherwise.
+pub fn render_for_path(snap: &TelemetrySnapshot, path: &str) -> String {
+    if path.ends_with(".json") {
+        snap.to_json().to_string_pretty()
+    } else {
+        snap.to_prometheus()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = global() as *const Registry;
+        let b = global() as *const Registry;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn snapshot_contains_every_named_metric() {
+        let s = snapshot();
+        for name in [
+            names::POOL_JOBS_SPAWNED,
+            names::POOL_JOBS_DEQUEUED,
+            names::POOL_WAKEUPS,
+            names::POOL_WORKER_BUSY_NS,
+            names::CLIQUES_EMITTED,
+            names::PARTTT_TASKS_SPAWNED,
+            names::PARTTT_SEQ_CUTOVERS,
+            names::PARTTT_PAR_PIVOTS,
+            names::BITKERNEL_HANDOFFS,
+            names::DYNAMIC_BATCHES,
+            names::DYNAMIC_NEW_CLIQUES,
+            names::DYNAMIC_SUBSUMED,
+            names::SERVICE_PUBLISHES,
+            names::SERVICE_QUERIES,
+            names::SERVICE_EPOCH_LAG_SUM,
+            names::SERVICE_EPOCH_LAG_SAMPLES,
+        ] {
+            assert!(s.counter(name).is_some(), "missing counter {name}");
+        }
+        for name in [
+            names::POOL_QUEUE_DEPTH,
+            names::SERVICE_PUBLISHED_EPOCH,
+            names::SERVICE_EPOCH_LAG_MAX,
+        ] {
+            assert!(s.gauge(name).is_some(), "missing gauge {name}");
+        }
+        for name in [
+            names::DYNAMIC_BATCH_NS,
+            names::DYNAMIC_NEW_TASK_NS,
+            names::DYNAMIC_SUB_TASK_NS,
+        ] {
+            assert!(s.histogram(name).is_some(), "missing histogram {name}");
+        }
+    }
+
+    #[test]
+    fn exports_render_without_panicking() {
+        let s = snapshot();
+        let prom = s.to_prometheus();
+        assert!(prom.contains("# TYPE parmce_pool_jobs_spawned_total counter"));
+        let json = render_for_path(&s, "metrics.json");
+        assert!(crate::util::json::parse(&json).is_ok());
+        let prom2 = render_for_path(&s, "metrics.prom");
+        assert_eq!(prom, prom2);
+    }
+
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn delta_isolates_a_window() {
+        let before = snapshot();
+        global().cliques_emitted.add(5);
+        let after = snapshot();
+        let d = after.delta(&before);
+        // another test may add concurrently — the delta is at least ours
+        assert!(d.counter(names::CLIQUES_EMITTED).unwrap() >= 5);
+    }
+}

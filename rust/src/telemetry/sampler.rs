@@ -1,0 +1,165 @@
+//! Periodic live sampler: a background thread that sweeps the global
+//! registry and prints a one-line progress report (cliques/sec, queue
+//! depth, worker utilization) — the `--metrics-every` CLI surface for
+//! watching long enumerations and replays in flight.
+//!
+//! The thread only *reads* the registry (snapshot sweeps), so it never
+//! perturbs the hot paths beyond cache traffic.  It parks in short slices
+//! to react to [`Sampler::stop`] promptly even with long periods.
+
+use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
+
+use super::{names, snapshot, TelemetrySnapshot};
+
+/// Handle to a running sampler thread; stops and joins on drop.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Start sampling every `period` (clamped to ≥ 10ms), printing to
+    /// stderr.
+    pub fn start(period: Duration) -> Sampler {
+        let period = period.max(Duration::from_millis(10));
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("parmce-telemetry-sampler".into())
+            .spawn(move || run(&flag, period))
+            .expect("spawn telemetry sampler");
+        Sampler {
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    /// Stop the thread and wait for it to exit.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run(stop: &AtomicBool, period: Duration) {
+    let t0 = Instant::now();
+    let mut prev = snapshot();
+    let mut prev_at = t0;
+    loop {
+        // park in small slices so stop() returns quickly
+        let wake = Instant::now() + period;
+        while Instant::now() < wake {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10).min(period));
+        }
+        let now = Instant::now();
+        let snap = snapshot();
+        eprintln!(
+            "[telemetry] {}",
+            format_tick(&snap, &prev, now - prev_at, now - t0)
+        );
+        prev = snap;
+        prev_at = now;
+    }
+}
+
+/// One progress line from two consecutive sweeps.  Public (crate-visible
+/// via the module) so the unit tests can pin the arithmetic without a
+/// real thread.
+pub(crate) fn format_tick(
+    snap: &TelemetrySnapshot,
+    prev: &TelemetrySnapshot,
+    dt: Duration,
+    since_start: Duration,
+) -> String {
+    let dt_s = dt.as_secs_f64().max(1e-9);
+    let cliques = snap.counter(names::CLIQUES_EMITTED).unwrap_or(0);
+    let d_cliques = cliques.saturating_sub(prev.counter(names::CLIQUES_EMITTED).unwrap_or(0));
+    let d_busy = snap
+        .counter(names::POOL_WORKER_BUSY_NS)
+        .unwrap_or(0)
+        .saturating_sub(prev.counter(names::POOL_WORKER_BUSY_NS).unwrap_or(0));
+    let depth = snap.gauge(names::POOL_QUEUE_DEPTH).unwrap_or(0);
+    // worker-equivalents of CPU consumed over the window (4 workers fully
+    // busy → 4.0)
+    let utilization = d_busy as f64 / (dt_s * 1e9);
+    format!(
+        "t={:.1}s cliques={} (+{:.0}/s) queue_depth={} workers_busy={:.2}x",
+        since_start.as_secs_f64(),
+        cliques,
+        d_cliques as f64 / dt_s,
+        depth,
+        utilization
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{CounterSample, GaugeSample};
+
+    fn snap(cliques: u64, busy_ns: u64, depth: u64) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            counters: vec![
+                CounterSample {
+                    name: names::CLIQUES_EMITTED,
+                    help: "",
+                    per_worker: false,
+                    total: cliques,
+                    shards: vec![],
+                },
+                CounterSample {
+                    name: names::POOL_WORKER_BUSY_NS,
+                    help: "",
+                    per_worker: true,
+                    total: busy_ns,
+                    shards: vec![],
+                },
+            ],
+            gauges: vec![GaugeSample {
+                name: names::POOL_QUEUE_DEPTH,
+                help: "",
+                value: depth,
+            }],
+            histograms: vec![],
+        }
+    }
+
+    #[test]
+    fn tick_line_reports_rates() {
+        let line = format_tick(
+            &snap(3000, 2_000_000_000, 7),
+            &snap(1000, 0, 0),
+            Duration::from_secs(1),
+            Duration::from_secs(5),
+        );
+        assert!(line.contains("cliques=3000"), "{line}");
+        assert!(line.contains("(+2000/s)"), "{line}");
+        assert!(line.contains("queue_depth=7"), "{line}");
+        assert!(line.contains("workers_busy=2.00x"), "{line}");
+    }
+
+    #[test]
+    fn sampler_starts_and_stops_cleanly() {
+        let s = Sampler::start(Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(5));
+        s.stop(); // must join without hanging even mid-period
+    }
+}

@@ -1,0 +1,338 @@
+//! Point-in-time metric snapshots and the two export encodings.
+//!
+//! A [`TelemetrySnapshot`] is plain owned data — taking one sweeps every
+//! registered metric ([`super::Registry::snapshot`]) and detaches from the
+//! live shards, so snapshots can be embedded in reports, diffed
+//! ([`TelemetrySnapshot::delta`]) and serialized long after the run.
+//!
+//! Exports:
+//! * [`to_prometheus`](TelemetrySnapshot::to_prometheus) — text exposition
+//!   format (`# HELP` / `# TYPE` + samples; histograms as cumulative
+//!   `_bucket{le=...}` series with `_sum`/`_count`), validated in CI by
+//!   `cargo xtask check-prom`;
+//! * [`to_json`](TelemetrySnapshot::to_json) — a [`crate::util::json`]
+//!   dump with per-shard counter breakdowns.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::metrics::{bucket_bound, HIST_BUCKETS};
+
+/// One swept counter. `shards[i]` is worker `i`'s shard (last entry =
+/// external threads); empty under `telemetry-off`.
+#[derive(Clone, Debug)]
+pub struct CounterSample {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Export one labeled series per worker shard (busy-ns attribution)
+    /// instead of a single total.
+    pub per_worker: bool,
+    pub total: u64,
+    pub shards: Vec<u64>,
+}
+
+/// One swept gauge.
+#[derive(Clone, Debug)]
+pub struct GaugeSample {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub value: u64,
+}
+
+/// One swept histogram: per-bucket (non-cumulative) counts, value sum.
+#[derive(Clone, Debug)]
+pub struct HistogramSample {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+}
+
+impl HistogramSample {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+}
+
+/// A full sweep of the registry at one instant.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    pub counters: Vec<CounterSample>,
+    pub gauges: Vec<GaugeSample>,
+    pub histograms: Vec<HistogramSample>,
+}
+
+impl TelemetrySnapshot {
+    /// Total of the named counter, if present.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|c| c.name == name).map(|c| c.total)
+    }
+
+    /// Value of the named gauge, if present.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|g| g.name == name).map(|g| g.value)
+    }
+
+    /// The named histogram sample, if present.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSample> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    /// What happened between `earlier` and `self`: counters and histogram
+    /// buckets subtract (saturating — the registry is global, so an
+    /// unrelated concurrent run can only make deltas larger, never
+    /// negative); gauges keep the later instantaneous value.  This is how
+    /// a per-run view is carved out of process-wide cumulative metrics.
+    pub fn delta(&self, earlier: &TelemetrySnapshot) -> TelemetrySnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|c| {
+                let prev = earlier.counters.iter().find(|p| p.name == c.name);
+                let shards = match prev {
+                    Some(p) if p.shards.len() == c.shards.len() => c
+                        .shards
+                        .iter()
+                        .zip(p.shards.iter())
+                        .map(|(now, was)| now.saturating_sub(*was))
+                        .collect(),
+                    _ => c.shards.clone(),
+                };
+                CounterSample {
+                    total: c.total.saturating_sub(prev.map_or(0, |p| p.total)),
+                    shards,
+                    ..c.clone()
+                }
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|h| {
+                let prev = earlier.histograms.iter().find(|p| p.name == h.name);
+                let buckets = match prev {
+                    Some(p) if p.buckets.len() == h.buckets.len() => h
+                        .buckets
+                        .iter()
+                        .zip(p.buckets.iter())
+                        .map(|(now, was)| now.saturating_sub(*was))
+                        .collect(),
+                    _ => h.buckets.clone(),
+                };
+                HistogramSample {
+                    buckets,
+                    sum: h.sum.wrapping_sub(prev.map_or(0, |p| p.sum)),
+                    ..h.clone()
+                }
+            })
+            .collect();
+        TelemetrySnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            histograms,
+        }
+    }
+
+    /// Prometheus text exposition (version 0.0.4).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for c in &self.counters {
+            let _ = writeln!(out, "# HELP {} {}", c.name, c.help);
+            let _ = writeln!(out, "# TYPE {} counter", c.name);
+            if c.per_worker && !c.shards.is_empty() {
+                let external = c.shards.len() - 1;
+                for (i, &v) in c.shards.iter().enumerate() {
+                    if v == 0 {
+                        continue; // idle worker slots would drown the dump
+                    }
+                    if i == external {
+                        let _ = writeln!(out, "{}{{worker=\"external\"}} {v}", c.name);
+                    } else {
+                        let _ = writeln!(out, "{}{{worker=\"{i}\"}} {v}", c.name);
+                    }
+                }
+            } else {
+                let _ = writeln!(out, "{} {}", c.name, c.total);
+            }
+        }
+        for g in &self.gauges {
+            let _ = writeln!(out, "# HELP {} {}", g.name, g.help);
+            let _ = writeln!(out, "# TYPE {} gauge", g.name);
+            let _ = writeln!(out, "{} {}", g.name, g.value);
+        }
+        for h in &self.histograms {
+            let _ = writeln!(out, "# HELP {} {}", h.name, h.help);
+            let _ = writeln!(out, "# TYPE {} histogram", h.name);
+            let mut cum = 0u64;
+            for (i, &b) in h.buckets.iter().enumerate() {
+                cum += b;
+                match bucket_bound(i) {
+                    // skip interior zero-count buckets: cumulative series
+                    // stay correct, the dump stays readable
+                    Some(le) if b > 0 => {
+                        let _ = writeln!(out, "{}_bucket{{le=\"{le}\"}} {cum}", h.name);
+                    }
+                    _ => {}
+                }
+            }
+            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {cum}", h.name);
+            let _ = writeln!(out, "{}_sum {}", h.name, h.sum);
+            let _ = writeln!(out, "{}_count {cum}", h.name);
+        }
+        out
+    }
+
+    /// JSON dump (counter shard breakdowns included).  Values above 2^53
+    /// lose precision — [`crate::util::json`] numbers are `f64`.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "counters",
+                Json::arr(self.counters.iter().map(|c| {
+                    Json::obj([
+                        ("name", Json::str(c.name)),
+                        ("total", Json::num(c.total as f64)),
+                        (
+                            "shards",
+                            Json::arr(c.shards.iter().map(|&v| Json::num(v as f64))),
+                        ),
+                    ])
+                })),
+            ),
+            (
+                "gauges",
+                Json::arr(self.gauges.iter().map(|g| {
+                    Json::obj([
+                        ("name", Json::str(g.name)),
+                        ("value", Json::num(g.value as f64)),
+                    ])
+                })),
+            ),
+            (
+                "histograms",
+                Json::arr(self.histograms.iter().map(|h| {
+                    Json::obj([
+                        ("name", Json::str(h.name)),
+                        ("count", Json::num(h.count() as f64)),
+                        ("sum", Json::num(h.sum as f64)),
+                        (
+                            "buckets",
+                            Json::arr(h.buckets.iter().map(|&v| Json::num(v as f64))),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Build a histogram sample from a sweep (shared by the registry).
+pub(super) fn histogram_sample(
+    name: &'static str,
+    help: &'static str,
+    sweep: (Vec<u64>, u64),
+) -> HistogramSample {
+    debug_assert!(sweep.0.len() == HIST_BUCKETS || sweep.0.is_empty());
+    HistogramSample {
+        name,
+        help,
+        buckets: sweep.0,
+        sum: sweep.1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            counters: vec![
+                CounterSample {
+                    name: "parmce_test_total",
+                    help: "a counter",
+                    per_worker: false,
+                    total: 10,
+                    shards: vec![4, 6],
+                },
+                CounterSample {
+                    name: "parmce_test_busy_ns_total",
+                    help: "per-worker",
+                    per_worker: true,
+                    total: 9,
+                    shards: vec![9, 0],
+                },
+            ],
+            gauges: vec![GaugeSample {
+                name: "parmce_test_depth",
+                help: "a gauge",
+                value: 3,
+            }],
+            histograms: vec![{
+                let mut buckets = vec![0u64; HIST_BUCKETS];
+                buckets[1] = 2;
+                buckets[3] = 1;
+                HistogramSample {
+                    name: "parmce_test_ns",
+                    help: "a histogram",
+                    buckets,
+                    sum: 9,
+                }
+            }],
+        }
+    }
+
+    #[test]
+    fn lookup_helpers() {
+        let s = sample();
+        assert_eq!(s.counter("parmce_test_total"), Some(10));
+        assert_eq!(s.counter("missing"), None);
+        assert_eq!(s.gauge("parmce_test_depth"), Some(3));
+        assert_eq!(s.histogram("parmce_test_ns").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn delta_subtracts_counters_keeps_gauges() {
+        let earlier = sample();
+        let mut later = sample();
+        later.counters[0].total = 25;
+        later.counters[0].shards = vec![10, 15];
+        later.gauges[0].value = 1;
+        later.histograms[0].buckets[1] = 5;
+        later.histograms[0].sum = 21;
+        let d = later.delta(&earlier);
+        assert_eq!(d.counter("parmce_test_total"), Some(15));
+        assert_eq!(d.counters[0].shards, vec![6, 9]);
+        assert_eq!(d.gauge("parmce_test_depth"), Some(1), "gauge keeps later value");
+        assert_eq!(d.histogram("parmce_test_ns").unwrap().buckets[1], 3);
+        assert_eq!(d.histogram("parmce_test_ns").unwrap().sum, 12);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE parmce_test_total counter"));
+        assert!(text.contains("parmce_test_total 10"));
+        // per-worker counter: labeled series, zero shards skipped
+        assert!(text.contains("parmce_test_busy_ns_total{worker=\"0\"} 9"));
+        assert!(!text.contains("worker=\"external\"} 0"));
+        assert!(text.contains("# TYPE parmce_test_depth gauge"));
+        // histogram: cumulative buckets + sum/count
+        assert!(text.contains("parmce_test_ns_bucket{le=\"1\"} 2"));
+        assert!(text.contains("parmce_test_ns_bucket{le=\"7\"} 3"));
+        assert!(text.contains("parmce_test_ns_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("parmce_test_ns_sum 9"));
+        assert!(text.contains("parmce_test_ns_count 3"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = sample().to_json();
+        let back = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back, j);
+        let counters = back.get("counters").unwrap().as_arr().unwrap();
+        assert_eq!(counters.len(), 2);
+        assert_eq!(counters[0].get("total").unwrap().as_f64(), Some(10.0));
+    }
+}

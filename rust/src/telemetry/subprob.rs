@@ -1,0 +1,109 @@
+//! Per-subproblem skew capture for *parallel* runs (paper Fig. 2).
+//!
+//! `parmce::subproblems_timed` measures per-vertex subproblem cost
+//! sequentially; this module lets ParMCE attribute the same quantities —
+//! cliques and nanoseconds per root vertex — while the real parallel
+//! schedule runs.  Each root gets one [`SubCell`]: every ParTTT task
+//! working under that root adds its own execution time (children time
+//! themselves, so the sum is total CPU work for the root, not wall
+//! clock), and a [`SubCellSink`] wrapper counts the root's emitted
+//! cliques on the way into the real sink.
+//!
+//! Increments are `Relaxed`: cells are only read after the enumeration
+//! scope joins, which orders every task's adds before the read (the same
+//! sweep argument as [`super::metrics`]).  Not gated by `telemetry-off`:
+//! capture is explicit opt-in (`MceSession::subproblems_parallel`), and
+//! the un-instrumented path pays one `Option` branch per spawned task.
+
+use crate::coordinator::stats::Subproblem;
+use crate::graph::Vertex;
+use crate::mce::sink::CliqueSink;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
+
+/// Accumulator for one root vertex's subproblem.
+pub struct SubCell {
+    vertex: Vertex,
+    cliques: AtomicU64,
+    ns: AtomicU64,
+}
+
+impl SubCell {
+    pub fn new(vertex: Vertex) -> Self {
+        SubCell {
+            vertex,
+            cliques: AtomicU64::new(0),
+            ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add_cliques(&self, n: u64) {
+        self.cliques.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_ns(&self, n: u64) {
+        self.ns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Read out the record. Exact once the enumeration scope has joined.
+    pub fn to_subproblem(&self) -> Subproblem {
+        Subproblem {
+            vertex: self.vertex,
+            cliques: self.cliques.load(Ordering::Acquire),
+            ns: self.ns.load(Ordering::Acquire),
+        }
+    }
+}
+
+/// Sink wrapper that attributes every emitted clique to a root's
+/// [`SubCell`] before forwarding to the real sink.  Created once per root
+/// and cloned (as `Arc<dyn CliqueSink>`) into the root's whole task tree.
+pub struct SubCellSink {
+    inner: Arc<dyn CliqueSink>,
+    cell: Arc<SubCell>,
+}
+
+impl SubCellSink {
+    pub fn new(inner: Arc<dyn CliqueSink>, cell: Arc<SubCell>) -> Self {
+        SubCellSink { inner, cell }
+    }
+}
+
+impl CliqueSink for SubCellSink {
+    #[inline]
+    fn emit(&self, clique: &[Vertex]) {
+        self.cell.add_cliques(1);
+        self.inner.emit(clique);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mce::sink::CountSink;
+
+    #[test]
+    fn cell_accumulates_and_reads_back() {
+        let cell = SubCell::new(7);
+        cell.add_cliques(2);
+        cell.add_cliques(1);
+        cell.add_ns(500);
+        let s = cell.to_subproblem();
+        assert_eq!(s.vertex, 7);
+        assert_eq!(s.cliques, 3);
+        assert_eq!(s.ns, 500);
+    }
+
+    #[test]
+    fn sink_counts_and_forwards() {
+        let inner = Arc::new(CountSink::new());
+        let cell = Arc::new(SubCell::new(0));
+        let sink = SubCellSink::new(inner.clone(), cell.clone());
+        sink.emit(&[0, 1, 2]);
+        sink.emit(&[0, 3]);
+        assert_eq!(inner.count(), 2, "cliques still reach the real sink");
+        assert_eq!(cell.to_subproblem().cliques, 2);
+    }
+}

@@ -28,7 +28,10 @@
 //!   snapshots: an observed graph epoch is never newer than the payload a
 //!   subsequent load returns;
 //! * sharded-sink merge-at-scope-join — per-worker shard counts merge to
-//!   the exact emit total once the scope has joined.
+//!   the exact emit total once the scope has joined;
+//! * telemetry counter sweep — Relaxed per-shard adds from pool tasks
+//!   sweep (Acquire) to the exact total after the scope join, the
+//!   protocol every registry metric relies on.
 
 #![cfg(loom)]
 
@@ -239,5 +242,30 @@ fn sharded_sink_merges_exactly_at_scope_join() {
         });
         // after the join the per-shard Relaxed counters must merge exactly
         assert_eq!(sink.count(), 12, "shard merge lost emits");
+    });
+}
+
+#[test]
+fn telemetry_counter_sweep_exact_after_join() {
+    model(|| {
+        // the registry metric protocol: Relaxed fetch_adds on per-worker
+        // shards, Acquire sweep on snapshot.  While tasks run the sweep is
+        // a lower bound; after the scope join (WaitGroup done=Release /
+        // wait=Acquire) every shard write happens-before the sweep, so the
+        // total must be exact — a loss here means a metric dropped counts
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(parmce::telemetry::Counter::with_shards(3));
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&c);
+                s.spawn(move |_| {
+                    for _ in 0..3 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 12, "telemetry sweep lost increments");
+        assert_eq!(c.per_shard().iter().sum::<u64>(), 12);
     });
 }

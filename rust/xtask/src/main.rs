@@ -1,10 +1,17 @@
-//! Repo-local tooling. One command today:
+//! Repo-local tooling. Two commands today:
 //!
 //! ```text
 //! cargo xtask lint-invariants [--root <repo-root>]
+//! cargo xtask check-prom <file>
 //! ```
 //!
-//! Enforces the crate's concurrency-correctness invariants (ISSUE 6) over
+//! `check-prom` validates a Prometheus text-exposition dump produced by
+//! `parmce enumerate/serve-replay --metrics-out` (metric/label name
+//! syntax, TYPE declarations, histogram bucket monotonicity) — the CI
+//! gate for the telemetry export surface.
+//!
+//! `lint-invariants` enforces the crate's concurrency-correctness
+//! invariants (ISSUE 6) over
 //! `rust/src` (+ `rust/tests` for the SAFETY rule):
 //!
 //! 1. **unsafe-needs-safety** — every `unsafe` keyword site (block, fn,
@@ -37,7 +44,19 @@ const SYNC_LAYER_FILES: &[&str] = &["rust/src/util/sync.rs", "rust/src/util/loom
 const RELAXED_ALLOWLIST: &[(&str, &str)] = &[
     (
         "rust/src/coordinator/pool.rs",
-        "pending-counter decrement is a wakeup hint (mutex publishes jobs); steal/spawn stats",
+        "pending-counter decrement is a wakeup hint (mutex publishes jobs); steal/spawn stats; \
+         telemetry mirrors (depth gauge, dequeue/wakeup counters) inherit the same argument — \
+         see the PoolState memory-ordering contract",
+    ),
+    (
+        "rust/src/telemetry/metrics.rs",
+        "per-worker metric shards: Relaxed adds on private cache lines, Acquire sweep on \
+         snapshot; exact only after a happens-before point (scope join), loom-modeled in \
+         telemetry_counter_sweep_exact_after_join",
+    ),
+    (
+        "rust/src/telemetry/subprob.rs",
+        "per-root subproblem accumulators; read only after the enumeration scope joins",
     ),
     (
         "rust/src/mce/pivot.rs",
@@ -98,6 +117,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cmd = None;
     let mut root = None;
+    let mut operands = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -112,6 +132,7 @@ fn main() -> ExitCode {
                 return ExitCode::SUCCESS;
             }
             c if cmd.is_none() => cmd = Some(c.to_string()),
+            operand if !operand.starts_with('-') => operands.push(operand.to_string()),
             other => {
                 eprintln!("xtask: unexpected argument `{other}`");
                 return ExitCode::FAILURE;
@@ -146,11 +167,270 @@ fn main() -> ExitCode {
                 }
             }
         }
+        Some("check-prom") => {
+            let Some(file) = operands.first() else {
+                eprintln!("usage: cargo xtask check-prom <exposition-file>");
+                return ExitCode::FAILURE;
+            };
+            let src = match std::fs::read_to_string(file) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("check-prom: cannot read {file}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            match check_prometheus(&src) {
+                Ok(stats) => {
+                    println!(
+                        "check-prom: {file} ok ({} metrics, {} samples)",
+                        stats.metrics, stats.samples
+                    );
+                    ExitCode::SUCCESS
+                }
+                Err(errors) => {
+                    for e in &errors {
+                        eprintln!("{file}: {e}");
+                    }
+                    eprintln!("check-prom: {} error(s)", errors.len());
+                    ExitCode::FAILURE
+                }
+            }
+        }
         _ => {
-            eprintln!("usage: cargo xtask lint-invariants [--root <repo-root>] [--explain-allowlist]");
+            eprintln!(
+                "usage: cargo xtask lint-invariants [--root <repo-root>] [--explain-allowlist]\n       cargo xtask check-prom <exposition-file>"
+            );
             ExitCode::FAILURE
         }
     }
+}
+
+/// Summary returned by a clean [`check_prometheus`] pass.
+struct PromStats {
+    metrics: usize,
+    samples: usize,
+}
+
+/// Validate a Prometheus text-exposition document: metric/label name
+/// syntax, `# TYPE` declarations preceding their samples, parseable
+/// values, and histogram structure (`le` labels, a `+Inf` bucket whose
+/// cumulative count equals `_count`, monotone buckets).
+///
+/// This is deliberately a *format* checker, not a scrape simulator — it
+/// gates the `--metrics-out` export surface in CI without needing a
+/// Prometheus binary in the container.
+fn check_prometheus(src: &str) -> Result<PromStats, Vec<String>> {
+    let mut errors = Vec::new();
+    // metric name -> declared type
+    let mut types: Vec<(String, String)> = Vec::new();
+    let mut samples = 0usize;
+    // histogram bookkeeping: (metric, +Inf seen, last cumulative, count value)
+    let mut hist: Vec<(String, Option<u64>, Option<u64>, Option<u64>)> = Vec::new();
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.splitn(2, ' ');
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("").trim();
+            if !is_metric_name(name) {
+                errors.push(format!("line {lineno}: bad metric name in TYPE: `{name}`"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                errors.push(format!("line {lineno}: unknown metric type `{kind}`"));
+            }
+            if types.iter().any(|(n, _)| n == name) {
+                errors.push(format!("line {lineno}: duplicate TYPE for `{name}`"));
+            }
+            types.push((name.to_string(), kind.to_string()));
+            if kind == "histogram" {
+                hist.push((name.to_string(), None, None, None));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !is_metric_name(name) {
+                errors.push(format!("line {lineno}: bad metric name in HELP: `{name}`"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+
+        // sample line: name[{labels}] value
+        let (name_labels, value_str) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => {
+                errors.push(format!("line {lineno}: sample has no value: `{line}`"));
+                continue;
+            }
+        };
+        let value = parse_prom_value(value_str);
+        if value.is_none() {
+            errors.push(format!("line {lineno}: unparseable value `{value_str}`"));
+        }
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => match rest.strip_suffix('}') {
+                Some(body) => (n, parse_labels(body, lineno, &mut errors)),
+                None => {
+                    errors.push(format!("line {lineno}: unterminated label set"));
+                    (n, Vec::new())
+                }
+            },
+            None => (name_labels, Vec::new()),
+        };
+        if !is_metric_name(name) {
+            errors.push(format!("line {lineno}: bad sample metric name `{name}`"));
+            continue;
+        }
+        samples += 1;
+
+        // Resolve against a TYPE declaration: exact match, or a histogram
+        // series suffix.
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| name.strip_suffix(s))
+            .filter(|b| types.iter().any(|(n, k)| n == b && k == "histogram"));
+        let declared = base.or_else(|| {
+            types
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(n, _)| n.as_str())
+        });
+        let Some(base_name) = declared else {
+            errors.push(format!(
+                "line {lineno}: sample `{name}` has no preceding TYPE declaration"
+            ));
+            continue;
+        };
+
+        if let Some(entry) = hist.iter_mut().find(|(n, ..)| n == base_name) {
+            let cum = value.map(|v| v as u64);
+            if name.ends_with("_bucket") {
+                let le = labels.iter().find(|(k, _)| k == "le").map(|(_, v)| v.as_str());
+                match le {
+                    None => errors.push(format!(
+                        "line {lineno}: histogram bucket for `{base_name}` missing `le` label"
+                    )),
+                    Some("+Inf") => entry.1 = cum,
+                    Some(_) => {
+                        if let (Some(prev), Some(cur)) = (entry.2, cum) {
+                            if cur < prev {
+                                errors.push(format!(
+                                    "line {lineno}: histogram `{base_name}` buckets not cumulative ({cur} < {prev})"
+                                ));
+                            }
+                        }
+                        entry.2 = cum;
+                    }
+                }
+            } else if name.ends_with("_count") {
+                entry.3 = cum;
+            }
+        }
+    }
+
+    for (name, inf, _, count) in &hist {
+        match (inf, count) {
+            (None, _) => errors.push(format!("histogram `{name}` has no `+Inf` bucket")),
+            (Some(i), Some(c)) if i != c => errors.push(format!(
+                "histogram `{name}`: +Inf bucket {i} != _count {c}"
+            )),
+            _ => {}
+        }
+    }
+
+    if errors.is_empty() {
+        Ok(PromStats {
+            metrics: types.len(),
+            samples,
+        })
+    } else {
+        Err(errors)
+    }
+}
+
+fn is_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn is_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_prom_value(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        other => other.parse().ok(),
+    }
+}
+
+/// Parse `k="v",k2="v2"` label bodies; escape sequences `\\`, `\"`, `\n`
+/// are accepted inside values.
+fn parse_labels(body: &str, lineno: usize, errors: &mut Vec<String>) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let Some(eq) = rest.find('=') else {
+            errors.push(format!("line {lineno}: label without `=` in `{rest}`"));
+            return out;
+        };
+        let key = rest[..eq].trim().to_string();
+        if !is_label_name(&key) {
+            errors.push(format!("line {lineno}: bad label name `{key}`"));
+        }
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            errors.push(format!("line {lineno}: label value for `{key}` not quoted"));
+            return out;
+        }
+        rest = &rest[1..];
+        let mut value = String::new();
+        let mut chars = rest.char_indices();
+        let mut end = None;
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, e @ ('\\' | '"'))) => value.push(e),
+                    Some((_, 'n')) => value.push('\n'),
+                    _ => {
+                        errors.push(format!("line {lineno}: bad escape in label `{key}`"));
+                    }
+                },
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                other => value.push(other),
+            }
+        }
+        let Some(end) = end else {
+            errors.push(format!("line {lineno}: unterminated label value for `{key}`"));
+            return out;
+        };
+        out.push((key, value));
+        rest = &rest[end + 1..];
+        rest = rest.strip_prefix(',').unwrap_or(rest).trim_start();
+    }
+    out
 }
 
 /// Repo root relative to this crate (rust/xtask → ../..).
@@ -484,5 +764,80 @@ mod tests {
         std::fs::remove_dir_all(&root).unwrap();
         assert_eq!(violations.len(), 1, "{violations:?}");
         assert_eq!(violations[0].rule, "unsafe-needs-safety");
+    }
+
+    // --- check-prom ---
+
+    #[test]
+    fn valid_exposition_passes() {
+        let src = "\
+# HELP parmce_cliques_emitted_total Maximal cliques emitted.
+# TYPE parmce_cliques_emitted_total counter
+parmce_cliques_emitted_total 42
+# TYPE parmce_pool_worker_busy_ns_total counter
+parmce_pool_worker_busy_ns_total{worker=\"0\"} 100
+parmce_pool_worker_busy_ns_total{worker=\"external\"} 7
+# TYPE parmce_pool_queue_depth gauge
+parmce_pool_queue_depth 0
+# TYPE parmce_dynamic_batch_ns histogram
+parmce_dynamic_batch_ns_bucket{le=\"1023\"} 1
+parmce_dynamic_batch_ns_bucket{le=\"2047\"} 3
+parmce_dynamic_batch_ns_bucket{le=\"+Inf\"} 4
+parmce_dynamic_batch_ns_sum 5000
+parmce_dynamic_batch_ns_count 4
+";
+        let stats = check_prometheus(src).expect("valid exposition");
+        assert_eq!(stats.metrics, 4);
+        assert_eq!(stats.samples, 9);
+    }
+
+    #[test]
+    fn sample_without_type_declaration_fails() {
+        let err = check_prometheus("parmce_orphan_total 1\n").unwrap_err();
+        assert!(err[0].contains("no preceding TYPE"), "{err:?}");
+    }
+
+    #[test]
+    fn bad_names_values_and_labels_fail() {
+        let err = check_prometheus("# TYPE 9bad counter\n").unwrap_err();
+        assert!(err.iter().any(|e| e.contains("bad metric name")), "{err:?}");
+        let err =
+            check_prometheus("# TYPE ok counter\nok notanumber\n").unwrap_err();
+        assert!(err.iter().any(|e| e.contains("unparseable value")), "{err:?}");
+        let err =
+            check_prometheus("# TYPE ok counter\nok{9bad=\"v\"} 1\n").unwrap_err();
+        assert!(err.iter().any(|e| e.contains("bad label name")), "{err:?}");
+        let err = check_prometheus("# TYPE ok counter\nok{l=unquoted} 1\n").unwrap_err();
+        assert!(err.iter().any(|e| e.contains("not quoted")), "{err:?}");
+        let err = check_prometheus("# TYPE ok wrongkind\n").unwrap_err();
+        assert!(err.iter().any(|e| e.contains("unknown metric type")), "{err:?}");
+    }
+
+    #[test]
+    fn histogram_structure_is_enforced() {
+        // missing +Inf bucket
+        let err = check_prometheus(
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n",
+        )
+        .unwrap_err();
+        assert!(err.iter().any(|e| e.contains("no `+Inf` bucket")), "{err:?}");
+        // non-cumulative buckets
+        let err = check_prometheus(
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"3\"} 2\nh_bucket{le=\"+Inf\"} 5\nh_sum 9\nh_count 5\n",
+        )
+        .unwrap_err();
+        assert!(err.iter().any(|e| e.contains("not cumulative")), "{err:?}");
+        // +Inf disagrees with _count
+        let err = check_prometheus(
+            "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 4\nh_sum 9\nh_count 5\n",
+        )
+        .unwrap_err();
+        assert!(err.iter().any(|e| e.contains("!= _count")), "{err:?}");
+    }
+
+    #[test]
+    fn label_escapes_parse() {
+        let src = "# TYPE ok counter\nok{l=\"a\\\\b\\\"c\\nd\"} 1\n";
+        assert!(check_prometheus(src).is_ok());
     }
 }
