@@ -15,14 +15,45 @@
 //! measure.  The API mirrors what ParTTT/ParMCE need: fork-only tasks
 //! joined by a [`ScopeHandle`] wait-group (tasks never block, so pool
 //! threads cannot deadlock).
+//!
+//! **Panic safety (ISSUE 9).**  Every job runs inside `catch_unwind`: a
+//! panicking subproblem can neither kill its worker thread nor strand its
+//! scope.  The first panic payload per scope is captured in the wait-group
+//! and re-raised on the *caller* thread at scope join ([`ThreadPool::scope`])
+//! or returned as a value ([`ThreadPool::scope_catch`], which the session
+//! layer maps to `RunOutcome::Panicked`); sibling tasks always drain first,
+//! so the `ScopeShare` borrow contract holds even on the unwind path.  All
+//! locks go through the poison-immune [`plock`]/[`pwait_timeout`] seam —
+//! with unwinds caught at the job boundary, `std`'s lock poisoning would
+//! only convert one contained panic into a cascade.  Worker-thread spawn
+//! failure (real, or injected at the `pool-spawn` failpoint) degrades to a
+//! smaller pool — down to zero workers, where the scope caller's help loop
+//! (`try_run_one`) still drains every job sequentially.
 
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
 
 use crate::telemetry;
+use crate::util::failpoints;
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use crate::util::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::{plock, pwait_timeout, Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// First panic payload captured from a fire-and-forget job (scope jobs
+/// record into their wait-group instead).  Only diagnostic: the job had no
+/// join point, so there is nowhere to re-raise.
+fn note_job_panic() {
+    telemetry::global().pool_jobs_panicked.inc();
+}
+
+/// Run one job inside the unwind boundary shared by workers and helping
+/// scope callers.  Returns the payload instead of unwinding so a worker
+/// thread survives any job.
+fn run_job_caught(job: Job) -> Result<(), Box<dyn Any + Send>> {
+    panic::catch_unwind(AssertUnwindSafe(job))
+}
 
 /// Telemetry hook for every successful dequeue (own pop, injector pop, or
 /// steal) — pairs with the enqueue-side `add(1)` in `spawn_internal` so
@@ -110,7 +141,13 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spin up `n` worker threads (n ≥ 1).
+    /// Spin up `n` worker threads (n ≥ 1 requested).
+    ///
+    /// Thread-spawn failure is not fatal: each worker that cannot start
+    /// (OS limit, or the `pool-spawn` failpoint) is logged and counted in
+    /// `pool_spawn_failures`, and the pool runs with the workers it got —
+    /// in the limit with zero, where every scope degrades to sequential
+    /// execution on the caller thread via its help loop.
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let state = Arc::new(PoolState {
@@ -123,20 +160,41 @@ impl ThreadPool {
             steals: AtomicU64::new(0),
             spawned: AtomicU64::new(0),
         });
-        let threads = (0..n)
-            .map(|idx| {
-                let st = Arc::clone(&state);
+        let mut threads = Vec::with_capacity(n);
+        for idx in 0..n {
+            let st = Arc::clone(&state);
+            let spawned = if failpoints::hit(failpoints::Site::PoolSpawn) {
+                Err(std::io::Error::other(
+                    "failpoint pool-spawn: injected spawn failure",
+                ))
+            } else {
                 std::thread::Builder::new()
                     .name(format!("parmce-worker-{idx}"))
                     .spawn(move || worker_loop(st, idx))
-                    .expect("spawn worker")
-            })
-            .collect();
+            };
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    telemetry::global().pool_spawn_failures.inc();
+                    eprintln!(
+                        "parmce: failed to spawn worker {idx} ({e}); \
+                         continuing with {} of {n} workers",
+                        threads.len()
+                    );
+                }
+            }
+        }
         ThreadPool {
             state,
             threads: Arc::new(threads),
             n_threads: n,
         }
+    }
+
+    /// Worker threads actually running (≤ [`num_threads`](Self::num_threads)
+    /// when some spawns failed).
+    pub fn live_workers(&self) -> usize {
+        self.threads.len()
     }
 
     pub fn num_threads(&self) -> usize {
@@ -153,8 +211,16 @@ impl ThreadPool {
 
     /// Submit a job. From a worker thread it lands on that worker's deque
     /// (LIFO, depth-first); otherwise on the injector.
+    ///
+    /// Fire-and-forget: a panic in `job` is contained at the executing
+    /// worker (counted in `pool_jobs_panicked`) but not reported anywhere —
+    /// use [`scope`](Self::scope)/[`scope_catch`](Self::scope_catch) when
+    /// the caller needs to observe failure.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
-        self.spawn_internal(Box::new(job));
+        self.spawn_internal(Box::new(move || {
+            let _ = failpoints::hit(failpoints::Site::PoolDequeue);
+            job();
+        }));
     }
 
     /// Worker index if the current thread belongs to *this* pool (the
@@ -173,20 +239,52 @@ impl ThreadPool {
 
     /// Run `f` with a scope handle; returns when every task spawned through
     /// the handle (transitively) has completed.
+    ///
+    /// If any task (or `f` itself) panicked, the first captured payload is
+    /// re-raised here on the caller thread — *after* the join, so sibling
+    /// tasks have drained and every `ScopedPtr` borrow is dead.
     pub fn scope(&self, f: impl FnOnce(&ScopeHandle)) {
+        if let Err(payload) = self.scope_catch(f) {
+            panic::resume_unwind(payload);
+        }
+    }
+
+    /// [`scope`](Self::scope) that returns the first panic payload as a
+    /// value instead of unwinding — the session layer's entry point for
+    /// converting worker panics into `RunOutcome::Panicked` (ISSUE 9).
+    ///
+    /// The join is unconditional: even when `f` panics before returning,
+    /// every already-spawned task completes before this returns (the
+    /// `ScopeShare` lifetime contract does not bend on the unwind path).
+    pub fn scope_catch(
+        &self,
+        f: impl FnOnce(&ScopeHandle),
+    ) -> Result<(), Box<dyn Any + Send>> {
         let handle = ScopeHandle {
             pool: self.clone(),
             wg: Arc::new(WaitGroup::new()),
         };
-        f(&handle);
+        let caller = panic::catch_unwind(AssertUnwindSafe(|| f(&handle)));
         handle.wg.wait(|| self.try_run_one());
+        match caller {
+            Err(payload) => Err(payload),
+            Ok(()) => match handle.wg.take_panic() {
+                Some(payload) => Err(payload),
+                None => Ok(()),
+            },
+        }
     }
 
     /// Try to execute one pending job on the current thread (used by the
     /// scope waiter so a blocked caller contributes instead of idling).
     fn try_run_one(&self) -> bool {
         if let Some(job) = self.find_job(None) {
-            job();
+            // Panics are already contained per-job (scope jobs record into
+            // their wait-group); a stray payload from a fire-and-forget
+            // job must not unwind into the waiting caller.
+            if run_job_caught(job).is_err() {
+                note_job_panic();
+            }
             true
         } else {
             false
@@ -197,14 +295,14 @@ impl ThreadPool {
         let st = &self.state;
         // 1. own deque, LIFO
         if let Some(idx) = own {
-            if let Some(j) = st.queues[idx].lock().unwrap().pop_back() {
+            if let Some(j) = plock(&st.queues[idx]).pop_back() {
                 st.pending.fetch_sub(1, Ordering::Relaxed);
                 note_dequeue();
                 return Some(j);
             }
         }
         // 2. injector, FIFO
-        if let Some(j) = st.injector.lock().unwrap().pop_front() {
+        if let Some(j) = plock(&st.injector).pop_front() {
             st.pending.fetch_sub(1, Ordering::Relaxed);
             note_dequeue();
             return Some(j);
@@ -217,7 +315,7 @@ impl ThreadPool {
             if Some(victim) == own {
                 continue;
             }
-            if let Some(j) = st.queues[victim].lock().unwrap().pop_front() {
+            if let Some(j) = plock(&st.queues[victim]).pop_front() {
                 st.pending.fetch_sub(1, Ordering::Relaxed);
                 st.steals.fetch_add(1, Ordering::Relaxed);
                 note_dequeue();
@@ -259,7 +357,12 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
                 // busy-time span: this thread IS worker `idx`, so the
                 // counter add routes to that worker's shard
                 let span = telemetry::SpanTimer::start();
-                j();
+                // unwind boundary: the worker thread outlives any
+                // panicking job (scope jobs also record the payload into
+                // their wait-group inside `j` itself)
+                if run_job_caught(j).is_err() {
+                    note_job_panic();
+                }
                 telemetry::global().pool_worker_busy_ns.add(span.elapsed_ns());
             }
             None => {
@@ -267,14 +370,15 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
                     return;
                 }
                 // sleep until notified (timeout guards lost wakeups)
-                let guard = state.sleep_lock.lock().unwrap();
+                let guard = plock(&state.sleep_lock);
                 if state.pending.load(Ordering::Acquire) == 0
                     && !state.shutdown.load(Ordering::SeqCst)
                 {
-                    let _ = state
-                        .sleep_cv
-                        .wait_timeout(guard, std::time::Duration::from_millis(1))
-                        .unwrap();
+                    let _ = pwait_timeout(
+                        &state.sleep_cv,
+                        guard,
+                        std::time::Duration::from_millis(1),
+                    );
                     // parked worker resumed (notify or timeout)
                     telemetry::global().pool_wakeups.inc();
                 }
@@ -285,13 +389,13 @@ fn worker_loop(state: Arc<PoolState>, idx: usize) {
 
 fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     // own deque LIFO
-    if let Some(j) = state.queues[idx].lock().unwrap().pop_back() {
+    if let Some(j) = plock(&state.queues[idx]).pop_back() {
         state.pending.fetch_sub(1, Ordering::Relaxed);
         note_dequeue();
         return Some(j);
     }
     // injector
-    if let Some(j) = state.injector.lock().unwrap().pop_front() {
+    if let Some(j) = plock(&state.injector).pop_front() {
         state.pending.fetch_sub(1, Ordering::Relaxed);
         note_dequeue();
         return Some(j);
@@ -300,7 +404,7 @@ fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     let n = state.queues.len();
     for off in 1..n {
         let victim = (idx + off) % n;
-        if let Some(j) = state.queues[victim].lock().unwrap().pop_front() {
+        if let Some(j) = plock(&state.queues[victim]).pop_front() {
             state.pending.fetch_sub(1, Ordering::Relaxed);
             state.steals.fetch_add(1, Ordering::Relaxed);
             note_dequeue();
@@ -310,11 +414,16 @@ fn find_job_worker(state: &Arc<PoolState>, idx: usize) -> Option<Job> {
     None
 }
 
-/// Wait-group: counts outstanding tasks in a scope.
+/// Wait-group: counts outstanding tasks in a scope, and holds the first
+/// panic payload any of them produced (re-raised or returned at join).
 struct WaitGroup {
     count: AtomicUsize,
     lock: Mutex<()>,
     cv: Condvar,
+    /// First panic payload from any task in the scope.  Later panics are
+    /// dropped (counted in `pool_jobs_panicked`): one fault explains the
+    /// run, and payload 1 is causally first by this mutex's order.
+    first_panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 impl WaitGroup {
@@ -323,7 +432,19 @@ impl WaitGroup {
             count: AtomicUsize::new(0),
             lock: Mutex::new(()),
             cv: Condvar::new(),
+            first_panic: Mutex::new(None),
         }
+    }
+
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = plock(&self.first_panic);
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        plock(&self.first_panic).take()
     }
 
     fn add(&self) {
@@ -341,7 +462,7 @@ impl WaitGroup {
         // sequence and the final Acquire load synchronizes with *all* of
         // them, not just the last (audited by `pool_scope_runs_all_tasks`).
         if self.count.fetch_sub(1, Ordering::Release) == 1 {
-            let _g = self.lock.lock().unwrap();
+            let _g = plock(&self.lock);
             self.cv.notify_all();
         }
     }
@@ -355,14 +476,11 @@ impl WaitGroup {
             if help() {
                 continue; // made progress, re-check
             }
-            let guard = self.lock.lock().unwrap();
+            let guard = plock(&self.lock);
             if self.count.load(Ordering::Acquire) == 0 {
                 return;
             }
-            let _ = self
-                .cv
-                .wait_timeout(guard, std::time::Duration::from_millis(1))
-                .unwrap();
+            let _ = pwait_timeout(&self.cv, guard, std::time::Duration::from_millis(1));
         }
     }
 }
@@ -378,11 +496,24 @@ pub struct ScopeHandle {
 impl ScopeHandle {
     /// Spawn a task tracked by this scope. The task receives a clone of the
     /// handle so it can fork further subtasks into the same scope.
+    ///
+    /// A panicking task is caught right here — the payload lands in the
+    /// scope's wait-group (first wins) and `done()` still runs, so the
+    /// join can never hang on a lost decrement.  The `pool-dequeue`
+    /// failpoint fires inside the same boundary, making an injected panic
+    /// indistinguishable from a real one.
     pub fn spawn(&self, f: impl FnOnce(&ScopeHandle) + Send + 'static) {
         self.wg.add();
         let child = self.clone();
         self.pool.spawn_internal(Box::new(move || {
-            f(&child);
+            let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                let _ = failpoints::hit(failpoints::Site::PoolDequeue);
+                f(&child);
+            }));
+            if let Err(payload) = result {
+                note_job_panic();
+                child.wg.record_panic(payload);
+            }
             child.wg.done();
         }));
     }
@@ -406,8 +537,8 @@ impl ThreadPool {
         t.pool_jobs_spawned.inc();
         t.pool_queue_depth.add(1);
         match self.current_worker() {
-            Some(idx) => state.queues[idx].lock().unwrap().push_back(job),
-            None => state.injector.lock().unwrap().push_back(job),
+            Some(idx) => plock(&state.queues[idx]).push_back(job),
+            None => plock(&state.injector).push_back(job),
         }
         state.pending.fetch_add(1, Ordering::Release);
         state.sleep_cv.notify_one();
@@ -522,14 +653,14 @@ mod tests {
                     assert_eq!(slot, s2.worker_id());
                     if let Some(idx) = slot {
                         assert!(idx < 3, "slot {idx} out of range");
-                        seen.lock().unwrap().push(idx);
+                        plock(&seen).push(idx);
                     }
                 });
             }
         });
         // tasks may also run on the blocked caller; whatever did run on
         // workers must have reported valid indices
-        for &idx in seen.lock().unwrap().iter() {
+        for &idx in plock(&seen).iter() {
             assert!(idx < 3);
         }
     }
@@ -585,6 +716,171 @@ mod tests {
             });
             assert_eq!(counter.load(Ordering::Relaxed), 4 * (8 + 1), "n={n}");
         }
+    }
+
+    #[test]
+    fn panicking_task_surfaces_at_join_after_siblings_drain() {
+        let pool = ThreadPool::new(4);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let result = pool.scope_catch(|s| {
+            for i in 0..50 {
+                let ran = Arc::clone(&ran);
+                s.spawn(move |_| {
+                    if i == 17 {
+                        panic!("task 17 exploded");
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        let payload = result.expect_err("scope must report the panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "task 17 exploded");
+        // every sibling drained before the join returned
+        assert_eq!(ran.load(Ordering::SeqCst), 49);
+    }
+
+    #[test]
+    fn scope_reraises_task_panic_on_caller() {
+        let pool = ThreadPool::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|_| panic!("boom"));
+            });
+        }))
+        .expect_err("scope must re-raise");
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"boom"));
+        // the pool survives: locks unpoisoned, workers alive
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..20 {
+                let c = Arc::clone(&counter);
+                s.spawn(move |_| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn panicking_caller_closure_still_joins_spawned_tasks() {
+        // ScopeShare soundness on the unwind path: tasks spawned before
+        // the caller closure panics must complete before scope_catch
+        // returns the payload.
+        let pool = ThreadPool::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let result = pool.scope_catch(|s| {
+            for _ in 0..10 {
+                let ran = Arc::clone(&ran);
+                s.spawn(move |_| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            panic!("caller gave up");
+        });
+        assert!(result.is_err());
+        assert_eq!(ran.load(Ordering::SeqCst), 10, "join must precede unwind");
+    }
+
+    #[test]
+    fn first_panic_wins_across_many() {
+        let pool = ThreadPool::new(3);
+        let result = pool.scope_catch(|s| {
+            for _ in 0..8 {
+                s.spawn(|_| panic!("one of many"));
+            }
+        });
+        let payload = result.expect_err("at least one panic must surface");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"one of many"));
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn injected_spawn_failure_degrades_to_smaller_pool() {
+        use crate::util::failpoints as fp;
+        let _x = fp::exclusive();
+        // every spawn fails: zero workers, but scopes still complete on
+        // the caller's help loop
+        fp::clear();
+        fp::configure(
+            fp::Site::PoolSpawn,
+            fp::SiteConfig {
+                action: fp::Action::ReturnError,
+                trigger: fp::Trigger::Always,
+                seed: 0,
+            },
+        );
+        let pool = ThreadPool::new(4);
+        fp::clear();
+        assert_eq!(pool.live_workers(), 0);
+        assert_eq!(pool.num_threads(), 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..30 {
+                let c = Arc::clone(&counter);
+                s.spawn(move |_| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
+        drop(pool);
+
+        // exactly the second spawn fails: 3 of 4 workers survive
+        fp::configure(
+            fp::Site::PoolSpawn,
+            fp::SiteConfig {
+                action: fp::Action::ReturnError,
+                trigger: fp::Trigger::OnHit(2),
+                seed: 0,
+            },
+        );
+        let pool = ThreadPool::new(4);
+        fp::clear();
+        assert_eq!(pool.live_workers(), 3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..30 {
+                let c = Arc::clone(&counter);
+                s.spawn(move |_| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn injected_dequeue_panic_is_contained() {
+        use crate::util::failpoints as fp;
+        let _x = fp::exclusive();
+        fp::clear();
+        fp::configure(
+            fp::Site::PoolDequeue,
+            fp::SiteConfig {
+                action: fp::Action::Panic,
+                trigger: fp::Trigger::OnHit(5),
+                seed: 0,
+            },
+        );
+        let pool = ThreadPool::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let result = pool.scope_catch(|s| {
+            for _ in 0..20 {
+                let ran = Arc::clone(&ran);
+                s.spawn(move |_| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        fp::clear();
+        let payload = result.expect_err("injected panic must surface at join");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert_eq!(msg, "failpoint pool-dequeue: injected panic");
+        assert_eq!(ran.load(Ordering::SeqCst), 19, "siblings drain");
     }
 
     #[test]

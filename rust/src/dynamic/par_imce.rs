@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use crate::util::sync::{Arc, Mutex, ScopeShare, ScopedPtr};
+use crate::util::sync::{plock, Arc, Mutex, ScopeShare, ScopedPtr};
 
 use crate::coordinator::pool::ThreadPool;
 use crate::dynamic::imce::{subsumption_candidates, BatchTimings};
@@ -99,9 +99,9 @@ pub fn par_imce_batch_with_cutoff(
                     let found = sink.into_sorted_cliques();
                     let ns = t0.elapsed().as_nanos() as u64;
                     if !found.is_empty() {
-                        new_cliques.lock().unwrap().extend(found);
+                        plock(new_cliques).extend(found);
                     }
-                    timings.lock().unwrap().new_task_ns.push(ns);
+                    plock(timings).new_task_ns.push(ns);
                 });
             }
         });
@@ -140,9 +140,9 @@ pub fn par_imce_batch_with_cutoff(
                     }
                     let ns = t0.elapsed().as_nanos() as u64;
                     if !local.is_empty() {
-                        subsumed.lock().unwrap().extend(local);
+                        plock(subsumed).extend(local);
                     }
-                    timings.lock().unwrap().sub_task_ns.push(ns);
+                    plock(timings).sub_task_ns.push(ns);
                 });
             }
         });

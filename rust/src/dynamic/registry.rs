@@ -12,7 +12,7 @@
 //! [`canonical`] twice.
 
 use crate::coordinator::pool::ThreadPool;
-use crate::util::sync::{Arc, Mutex};
+use crate::util::sync::{plock, Arc, Mutex};
 
 use crate::graph::{AdjacencyGraph, Vertex};
 use crate::mce::sink::{CallbackSink, CliqueSink};
@@ -171,7 +171,7 @@ pub struct RegistryCollectSink<'a> {
 impl CliqueSink for RegistryCollectSink<'_> {
     fn emit(&self, clique: &[Vertex]) {
         self.registry.insert(clique);
-        self.collected.lock().unwrap().push(clique.to_vec());
+        plock(&self.collected).push(clique.to_vec());
     }
 }
 

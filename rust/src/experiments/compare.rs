@@ -32,11 +32,13 @@ fn peco_sim_secs(subs: &[Subproblem], p: usize) -> f64 {
 
 /// Render a budget/deadline-aware run as a paper-style table cell.
 fn outcome_cell(r: RunReport) -> String {
-    match r.outcome {
+    match &r.outcome {
         RunOutcome::Completed => fmt_secs(r.secs()),
         RunOutcome::OutOfMemory => format!("OOM in {}", fmt_secs(r.secs())),
         RunOutcome::TimedOut => format!("timeout ({})", fmt_secs(r.secs())),
         RunOutcome::Cancelled => "cancelled".into(),
+        RunOutcome::Panicked { site, .. } => format!("panicked at {site}"),
+        RunOutcome::SinkFailed { .. } => "sink failed".into(),
     }
 }
 

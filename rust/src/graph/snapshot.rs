@@ -32,8 +32,9 @@ use std::collections::HashMap;
 use crate::graph::csr::CsrGraph;
 use crate::graph::{norm_edge, Edge, Vertex};
 use crate::util::chashmap::FxBuildHasher;
+use crate::util::failpoints;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::{Arc, Mutex};
+use crate::util::sync::{plock, Arc, Mutex};
 use crate::util::vset;
 
 /// log₂ of the block width: 128 vertices per CSR block — small enough
@@ -594,7 +595,12 @@ impl GraphCell {
     /// Make `snap` the current snapshot. Writer-only; epochs must be
     /// monotone.
     pub fn publish(&self, snap: Arc<GraphSnapshot>) {
-        let mut cur = self.current.lock().unwrap();
+        // `graph-publish` failpoint: `panic`/`delay` model a writer
+        // dying or stalling inside the publish window; `error` is a
+        // no-op here (publishing an already-frozen snapshot cannot
+        // fail organically)
+        let _ = failpoints::hit(failpoints::Site::GraphPublish);
+        let mut cur = plock(&self.current);
         debug_assert!(snap.epoch() >= cur.epoch(), "graph epochs must not go back");
         self.version.store(snap.epoch(), Ordering::Release);
         *cur = snap;
@@ -616,7 +622,7 @@ impl GraphCell {
 
     /// Fetch the current snapshot (brief mutex hold: one `Arc` clone).
     pub fn load(&self) -> Arc<GraphSnapshot> {
-        Arc::clone(&self.current.lock().unwrap())
+        Arc::clone(&plock(&self.current))
     }
 }
 

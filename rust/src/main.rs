@@ -6,11 +6,11 @@
 //!   parmce enumerate --dataset NAME [--algo A] [--threads N] [--scale S]
 //!                    [--rank degree|degen|tri] [--budget-kb N] [--deadline-ms M]
 //!                    [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]
-//!                    [--metrics-out FILE] [--metrics-every MS]
+//!                    [--metrics-out FILE] [--metrics-every MS] [--fail-spec SPEC]
 //!   parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]
 //!                       [--threads N] [--readers R] [--max-batches M]
 //!                       [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]
-//!                       [--metrics-out FILE] [--metrics-every MS]
+//!                       [--metrics-out FILE] [--metrics-every MS] [--fail-spec SPEC]
 //!   parmce stats [--dataset NAME] [--scale S]
 //!   parmce perf [--scale S]
 //!   parmce artifacts-check
@@ -29,6 +29,12 @@ use parmce::util::table::fmt_count;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // PARMCE_FAIL_SPEC arms the failpoint registry before any subcommand
+    // runs; a spec on a build without the feature is a startup error.
+    if let Err(e) = parmce::util::failpoints::init_from_env() {
+        eprintln!("error: PARMCE_FAIL_SPEC: {e}");
+        std::process::exit(1);
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -105,6 +111,43 @@ fn start_sampler(args: &[String]) -> Result<Option<parmce::telemetry::Sampler>> 
     })
 }
 
+/// `--fail-spec SPEC`: arm the deterministic failpoint registry (ISSUE 9
+/// chaos testing).  Errors on a malformed spec, and — loudly, rather than
+/// silently not injecting — on builds without the `failpoints` feature.
+fn arm_failpoints(args: &[String]) -> Result<()> {
+    if let Some(spec) = flag(args, "--fail-spec") {
+        parmce::util::failpoints::configure_from_spec(&spec)
+            .map_err(|e| anyhow!("--fail-spec: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Report a faulted run on stderr (partial progress first, so CI smoke
+/// tests can assert on it) and convert it to a nonzero exit.
+fn fault_to_error(outcome: &RunOutcome, partial: Option<&parmce::session::PartialProgress>) -> Result<()> {
+    match outcome {
+        RunOutcome::Panicked { site, message } => {
+            if let Some(p) = partial {
+                eprintln!(
+                    "partial: {} cliques emitted, {} batches applied, {} bytes flushed",
+                    p.cliques_emitted, p.batches_applied, p.bytes_flushed
+                );
+            }
+            bail!("run panicked at failpoint site `{site}`: {message}")
+        }
+        RunOutcome::SinkFailed { message } => {
+            if let Some(p) = partial {
+                eprintln!(
+                    "partial: {} cliques emitted, {} batches applied, {} bytes flushed",
+                    p.cliques_emitted, p.batches_applied, p.bytes_flushed
+                );
+            }
+            bail!("output sink failed: {message}")
+        }
+        _ => Ok(()),
+    }
+}
+
 fn parse_rank(args: &[String], default: RankStrategy) -> Result<RankStrategy> {
     Ok(match flag(args, "--rank").as_deref() {
         None => default,
@@ -135,6 +178,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("--dataset required"))?;
             let d = parse_dataset(&dataset)?;
             let scale = parse_scale(args)?;
+            arm_failpoints(args)?;
             let algo_str = flag(args, "--algo").unwrap_or_else(|| "parmce-degree".into());
             let (algo, default_rank, pjrt) = parse_algo_spec(&algo_str)?;
             let rank = parse_rank(args, default_rank)?;
@@ -206,7 +250,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
                 None => session.run().report,
             };
-            match report.outcome {
+            match &report.outcome {
                 RunOutcome::Completed => println!(
                     "{} maximal cliques in {:.3}s ({:.0} cliques/s)",
                     fmt_count(report.cliques),
@@ -221,7 +265,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             drop(sampler); // stop + join before the final registry sweep
             write_metrics(args)?;
-            Ok(())
+            fault_to_error(&report.outcome, report.partial.as_ref())
         }
         Some("serve-replay") => {
             // the serving pipeline: replay a dynamic stream while reader
@@ -235,6 +279,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("--dataset required"))?;
             let d = parse_dataset(&dataset)?;
             let scale = parse_scale(args)?;
+            arm_failpoints(args)?;
             let algo = match flag(args, "--algo").as_deref() {
                 None => DynAlgo::ParImce,
                 Some(a) => DynAlgo::parse(a)
@@ -293,7 +338,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 report.consistency_violations == 0,
                 "snapshot isolation violated"
             );
-            Ok(())
+            fault_to_error(&report.outcome, report.partial.as_ref())
         }
         Some("stats") => {
             let scale = parse_scale(args)?;
@@ -372,15 +417,20 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 parmce enumerate --dataset NAME [--algo A] [--rank id|degree|degen|tri]\n\
                  \x20                  [--threads N] [--scale S] [--budget-kb N] [--deadline-ms M]\n\
                  \x20                  [--bitset-cutoff W] [--out FILE [--format ndjson|text|binary]]\n\
-                 \x20                  [--metrics-out FILE] [--metrics-every MS]\n\
+                 \x20                  [--metrics-out FILE] [--metrics-every MS] [--fail-spec SPEC]\n\
                  \x20 parmce serve-replay --dataset NAME [--algo imce|parimce] [--batch N]\n\
                  \x20                     [--threads N] [--readers R] [--max-batches M]\n\
                  \x20                     [--churn K] [--seed X] [--scale S] [--bitset-cutoff W]\n\
-                 \x20                     [--metrics-out FILE] [--metrics-every MS]\n\
+                 \x20                     [--metrics-out FILE] [--metrics-every MS] [--fail-spec SPEC]\n\
                  \n\
                  \x20 --metrics-out writes the telemetry registry at exit (.json = JSON dump,\n\
                  \x20 anything else = Prometheus text exposition); --metrics-every MS prints a\n\
                  \x20 live progress line to stderr each period.\n\
+                 \x20 --fail-spec arms deterministic fault injection (builds with\n\
+                 \x20 `--features failpoints` only): comma-separated site=action[:prob][:@K][:seed],\n\
+                 \x20 actions panic|error|delay(ms), sites pool-spawn, pool-dequeue, sink-emit,\n\
+                 \x20 sink-merge, sink-flush, membudget-charge, graph-publish, service-freeze,\n\
+                 \x20 dynamic-apply; PARMCE_FAIL_SPEC in the environment does the same.\n\
                  \x20 parmce stats [--dataset NAME] [--scale S]\n\
                  \x20 parmce perf [--scale S]\n\
                  \x20 parmce artifacts-check\n\

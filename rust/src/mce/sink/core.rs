@@ -9,7 +9,7 @@
 
 use crate::graph::Vertex;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::Mutex;
+use crate::util::sync::{plock, Mutex};
 
 /// Receiver for enumerated maximal cliques. Implementations must tolerate
 /// concurrent `emit` calls from multiple worker threads.
@@ -89,7 +89,7 @@ impl CollectSink {
     }
 
     pub fn len(&self) -> usize {
-        self.cliques.lock().unwrap().len()
+        plock(&self.cliques).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -99,7 +99,7 @@ impl CollectSink {
 
 impl CliqueSink for CollectSink {
     fn emit(&self, clique: &[Vertex]) {
-        self.cliques.lock().unwrap().push(clique.to_vec());
+        plock(&self.cliques).push(clique.to_vec());
     }
 }
 

@@ -29,4 +29,4 @@ pub use self::sharded::{
     ShardedCollectSink, ShardedCountSink, ShardedHistogramSink, ShardedSink,
 };
 pub use self::stats::SizeHistogram;
-pub use self::writer::{StreamWriterSink, WriterConfig, WriterFormat, WriterStats};
+pub use self::writer::{SinkError, StreamWriterSink, WriterConfig, WriterFormat, WriterStats};

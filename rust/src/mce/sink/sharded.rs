@@ -16,8 +16,9 @@
 
 use crate::coordinator::pool::{current_worker_slot, ThreadPool};
 use crate::graph::Vertex;
+use crate::util::failpoints;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::Mutex;
+use crate::util::sync::{plock, Mutex};
 
 use super::core::CliqueSink;
 use super::stats::SizeHistogram;
@@ -95,6 +96,11 @@ impl<S: Shard> ShardedSink<S> {
     }
 
     pub fn into_shards(self) -> Vec<S> {
+        // `sink-merge` failpoint: merges run after the enumeration scope
+        // joins, so an injected fault here models post-run aggregation
+        // failures.  The `error` action is a no-op at this site (merging
+        // is infallible); `panic`/`delay` apply.
+        let _ = failpoints::hit(failpoints::Site::SinkMerge);
         self.shards.into_vec().into_iter().map(|c| c.0).collect()
     }
 }
@@ -146,7 +152,7 @@ pub struct CollectShard(Mutex<Vec<Vec<Vertex>>>);
 
 impl Shard for CollectShard {
     fn absorb(&self, clique: &[Vertex]) {
-        self.0.lock().unwrap().push(clique.to_vec());
+        plock(&self.0).push(clique.to_vec());
     }
 }
 
@@ -156,7 +162,7 @@ impl CollectShard {
     }
 
     pub fn len(&self) -> usize {
-        self.0.lock().unwrap().len()
+        plock(&self.0).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -208,7 +214,7 @@ pub struct HistShard(Mutex<LocalHist>);
 impl Shard for HistShard {
     fn absorb(&self, clique: &[Vertex]) {
         let s = clique.len();
-        let mut h = self.0.lock().unwrap();
+        let mut h = plock(&self.0);
         if s >= h.bins.len() {
             h.bins.resize(s + 1, 0);
         }
@@ -276,7 +282,7 @@ mod tests {
                     // emits land in the slot observed here (None = the
                     // scope caller helping out → external shard)
                     if let Some(slot) = current_worker_slot() {
-                        *observed.lock().unwrap().entry(slot).or_insert(0u64) += 10;
+                        *plock(&observed).entry(slot).or_insert(0u64) += 10;
                     }
                     for _ in 0..10 {
                         s.emit(&[7]);
@@ -286,7 +292,7 @@ mod tests {
         });
         assert_eq!(s.count(), 2000);
         let shards: Vec<u64> = s.shards().map(CountShard::get).collect();
-        let observed = observed.lock().unwrap();
+        let observed = plock(&observed);
         // on a starved single-vCPU machine the scope caller's help loop
         // can drain every task before a worker wakes; `observed` is then
         // empty and the accounting below degenerates to "all external"

@@ -12,12 +12,14 @@
 //! enumeration into a truncated file plus an honest `dropped` count in
 //! [`WriterStats`] instead of a filled disk.
 
+use std::fmt;
 use std::io::{self, Write};
 use std::path::Path;
 
 use crate::graph::Vertex;
+use crate::util::failpoints;
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::util::sync::Mutex;
+use crate::util::sync::{plock, Mutex};
 
 use super::core::CliqueSink;
 use super::sharded::{route_slot, shard_count, CachePadded};
@@ -94,9 +96,49 @@ pub struct WriterStats {
     pub dropped: u64,
 }
 
+/// Structured failure report for a [`StreamWriterSink`]: the I/O error
+/// plus exactly how much output had already landed safely — overall and
+/// per worker shard — so a mid-run disk failure degrades to accounted
+/// partial output instead of a panic in a pool worker (ISSUE 9).
+#[derive(Clone, Debug)]
+pub struct SinkError {
+    pub kind: io::ErrorKind,
+    pub message: String,
+    /// Writer counters at report time.
+    pub stats: WriterStats,
+    /// Bytes each shard had successfully flushed to the output before
+    /// the failure (index = worker slot; last = the external shard for
+    /// non-pool threads).
+    pub per_worker_bytes: Vec<u64>,
+}
+
+impl fmt::Display for SinkError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let flushed: u64 = self.per_worker_bytes.iter().sum();
+        write!(
+            f,
+            "clique writer failed ({:?}): {}; {} bytes flushed of {} accepted \
+             ({} cliques, {} dropped)",
+            self.kind, self.message, flushed, self.stats.bytes, self.stats.cliques,
+            self.stats.dropped
+        )
+    }
+}
+
+impl std::error::Error for SinkError {}
+
+impl From<SinkError> for io::Error {
+    fn from(e: SinkError) -> io::Error {
+        io::Error::new(e.kind, e.to_string())
+    }
+}
+
 /// Buffered, sharded clique writer. See the module docs.
 pub struct StreamWriterSink {
     shards: Box<[CachePadded<Mutex<Vec<u8>>>]>,
+    /// Bytes each shard has successfully flushed to `out` (the
+    /// per-worker accounting carried by [`SinkError`]).
+    shard_flushed: Box<[CachePadded<AtomicU64>]>,
     out: Mutex<Box<dyn Write + Send>>,
     cfg: WriterConfig,
     cliques: AtomicU64,
@@ -130,6 +172,9 @@ impl StreamWriterSink {
             shards: (0..shard_count(workers))
                 .map(|_| CachePadded(Mutex::new(Vec::new())))
                 .collect(),
+            shard_flushed: (0..shard_count(workers))
+                .map(|_| CachePadded(AtomicU64::new(0)))
+                .collect(),
             out: Mutex::new(Box::new(w)),
             cfg,
             cliques: AtomicU64::new(0),
@@ -155,51 +200,72 @@ impl StreamWriterSink {
         }
     }
 
+    /// Bytes each shard has flushed to the output so far (index = worker
+    /// slot; last = external shard).
+    pub fn per_worker_bytes(&self) -> Vec<u64> {
+        self.shard_flushed
+            .iter()
+            .map(|c| c.0.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Drain every shard buffer to the output and flush it. Call after
     /// the enumeration scope has joined.
     ///
     /// An I/O failure is *sticky*: once any write fails, this (and
     /// [`finish`](Self::finish)) keep returning the error on every later
     /// call — a truncated file can never be mistaken for a clean run.
-    pub fn flush_all(&self) -> io::Result<()> {
-        for shard in self.shards.iter() {
-            let mut buf = shard.0.lock().unwrap();
-            self.write_out(&mut buf);
+    /// The [`SinkError`] carries the stats and per-worker flushed bytes
+    /// at report time, so callers can account the partial output.
+    pub fn flush_all(&self) -> Result<(), SinkError> {
+        for (slot, shard) in self.shards.iter().enumerate() {
+            let mut buf = plock(&shard.0);
+            self.write_out(slot, &mut buf);
         }
         if !self.failed.load(Ordering::Relaxed) {
-            if let Err(e) = self.out.lock().unwrap().flush() {
+            if let Err(e) = plock(&self.out).flush() {
                 self.record_error(e);
             }
         }
         // report without consuming: io::Error is not Clone, so re-wrap
         // the stored failure each time
-        match &*self.io_error.lock().unwrap() {
-            Some(e) => Err(io::Error::new(e.kind(), e.to_string())),
+        match &*plock(&self.io_error) {
+            Some(e) => Err(SinkError {
+                kind: e.kind(),
+                message: e.to_string(),
+                stats: self.stats(),
+                per_worker_bytes: self.per_worker_bytes(),
+            }),
             None => Ok(()),
         }
     }
 
     /// Flush everything and return the final stats.
-    pub fn finish(self) -> io::Result<WriterStats> {
+    pub fn finish(self) -> Result<WriterStats, SinkError> {
         self.flush_all()?;
         Ok(self.stats())
     }
 
-    #[inline]
-    fn local(&self) -> &Mutex<Vec<u8>> {
-        &self.shards[route_slot(self.shards.len())].0
-    }
-
-    /// Append `buf` to the shared output and clear it.
-    fn write_out(&self, buf: &mut Vec<u8>) {
+    /// Append `buf` (shard `slot`'s buffer) to the shared output and
+    /// clear it.
+    fn write_out(&self, slot: usize, buf: &mut Vec<u8>) {
         if buf.is_empty() {
             return;
         }
+        // `sink-flush` failpoint: `error` injects a sticky I/O failure
+        // exactly where a full disk or closed pipe would surface one
+        if failpoints::hit(failpoints::Site::SinkFlush) {
+            self.record_error(io::Error::other(
+                "failpoint sink-flush: injected I/O error",
+            ));
+        }
         if !self.failed.load(Ordering::Relaxed) {
-            let result = self.out.lock().unwrap().write_all(buf);
+            let n = buf.len() as u64;
+            let result = plock(&self.out).write_all(buf);
             match result {
                 Ok(()) => {
                     self.flushes.fetch_add(1, Ordering::Relaxed);
+                    self.shard_flushed[slot].0.fetch_add(n, Ordering::Relaxed);
                 }
                 Err(e) => self.record_error(e),
             }
@@ -209,7 +275,7 @@ impl StreamWriterSink {
 
     fn record_error(&self, e: io::Error) {
         self.failed.store(true, Ordering::Relaxed);
-        let mut slot = self.io_error.lock().unwrap();
+        let mut slot = plock(&self.io_error);
         if slot.is_none() {
             *slot = Some(e);
         }
@@ -239,15 +305,15 @@ impl CliqueSink for StreamWriterSink {
             self.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        let shard = self.local();
-        let mut buf = shard.lock().unwrap();
+        let slot = route_slot(self.shards.len());
+        let mut buf = plock(&self.shards[slot].0);
         let before = buf.len();
         encode(self.cfg.format, clique, &mut buf);
         let n = (buf.len() - before) as u64;
         self.cliques.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(n, Ordering::Relaxed);
         if buf.len() >= self.cfg.buffer_bytes {
-            self.write_out(&mut buf);
+            self.write_out(slot, &mut buf);
         }
     }
 }
@@ -436,6 +502,48 @@ mod tests {
             100
         );
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_run_io_error_surfaces_structured_sink_error() {
+        // a writer that dies after 10 bytes — the "disk full mid-run"
+        // case that used to have no story beyond panicking in a worker
+        struct FailingWriter {
+            wrote: usize,
+            cap: usize,
+        }
+        impl Write for FailingWriter {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.wrote + buf.len() > self.cap {
+                    return Err(io::Error::other("disk full (simulated)"));
+                }
+                self.wrote += buf.len();
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let w = StreamWriterSink::from_writer(
+            FailingWriter { wrote: 0, cap: 10 },
+            2,
+            WriterConfig {
+                format: WriterFormat::Text,
+                buffer_bytes: 4,
+                ..WriterConfig::default()
+            },
+        );
+        for i in 0..50u32 {
+            w.emit(&[i, i + 1]); // must not panic, ever
+        }
+        let err = w.finish().expect_err("the write failure must surface");
+        assert!(err.message.contains("disk full"), "{err}");
+        assert_eq!(err.per_worker_bytes.len(), 3, "2 workers + external shard");
+        let flushed: u64 = err.per_worker_bytes.iter().sum();
+        assert!(flushed <= 10, "only pre-failure bytes count as flushed");
+        assert!(err.stats.dropped > 0, "post-failure emits drop, counted");
+        // sticky: a second report carries the same failure
+        assert!(err.to_string().contains("clique writer failed"));
     }
 
     #[test]

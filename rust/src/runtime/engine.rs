@@ -16,7 +16,7 @@
 mod real {
     use std::collections::HashMap;
     use std::path::{Path, PathBuf};
-    use crate::util::sync::Mutex;
+    use crate::util::sync::{plock, Mutex};
 
     use anyhow::{anyhow, bail, Context, Result};
 
@@ -64,7 +64,7 @@ mod real {
         }
 
         fn ensure_compiled(&self, name: &str) -> Result<()> {
-            let mut execs = self.execs.lock().unwrap();
+            let mut execs = plock(&self.execs);
             if execs.contains_key(name) {
                 return Ok(());
             }
@@ -99,7 +99,7 @@ mod real {
                 }
                 literals.push(xla::Literal::vec1(data).reshape(shape)?);
             }
-            let execs = self.execs.lock().unwrap();
+            let execs = plock(&self.execs);
             let exe = execs.get(name).expect("compiled above");
             let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
             drop(execs);

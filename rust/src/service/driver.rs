@@ -11,12 +11,13 @@
 //! Optional churn re-removes and re-inserts every k-th batch, driving
 //! the §5.3 decremental path through the same serving pipeline.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::pool::ThreadPool;
+use crate::session::report::{PartialProgress, RunOutcome};
 use crate::telemetry::{self, TelemetrySnapshot};
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::util::sync::{Arc, Mutex};
+use crate::util::sync::{plock, Arc, Mutex};
 use crate::dynamic::stream::EdgeStream;
 use crate::graph::{Edge, Vertex};
 use crate::util::rng::Rng;
@@ -39,6 +40,17 @@ pub struct DriverConfig {
     /// exercises `remove_batch` under concurrent reads (net no-op).
     pub churn_every: Option<usize>,
     pub seed: u64,
+    /// Per-query latency deadline: queries that take longer are counted
+    /// in [`DriverReport::query_timeouts`] (the query still completes —
+    /// readers are synchronous — but the SLO breach is recorded).
+    pub query_deadline: Option<Duration>,
+    /// Retry attempts for an update rejected at admission (transient
+    /// publish/IO failures, e.g. the `dynamic-apply` failpoint) before
+    /// the update is dropped and counted in
+    /// [`DriverReport::failed_updates`].
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub retry_backoff: Duration,
 }
 
 impl Default for DriverConfig {
@@ -50,6 +62,9 @@ impl Default for DriverConfig {
             queries_per_round: 8,
             churn_every: None,
             seed: 0x5eed,
+            query_deadline: None,
+            max_retries: 3,
+            retry_backoff: Duration::from_millis(1),
         }
     }
 }
@@ -87,6 +102,21 @@ pub struct DriverReport {
     /// run end minus the sweep at run start); `None` only on a
     /// default-constructed report.
     pub telemetry: Option<Arc<TelemetrySnapshot>>,
+    /// How the replay ended: `Completed`, or `Panicked` when the writer
+    /// or a reader task died mid-run (the scope drained, readers were
+    /// stopped, and the report still carries everything measured up to
+    /// the fault — ISSUE 9).
+    pub outcome: RunOutcome,
+    /// Progress at the fault; populated (possibly with zeros) whenever
+    /// [`outcome`](Self::outcome) is not `Completed`, `None` on success.
+    pub partial: Option<PartialProgress>,
+    /// Update retry attempts performed (admission failures retried with
+    /// backoff).
+    pub retries: u64,
+    /// Updates dropped after exhausting [`DriverConfig::max_retries`].
+    pub failed_updates: usize,
+    /// Queries that exceeded [`DriverConfig::query_deadline`].
+    pub query_timeouts: u64,
 }
 
 impl DriverReport {
@@ -198,6 +228,18 @@ struct ReaderTotals {
     lag_sum: u64,
     max_lag: u64,
     violations: u64,
+    query_timeouts: u64,
+}
+
+/// Sets the readers' stop flag when dropped — *including* on unwind, so
+/// a writer panic inside the replay scope can never leave reader loops
+/// spinning forever waiting for a stop that would not come (ISSUE 9).
+struct StopGuard(Arc<AtomicBool>);
+
+impl Drop for StopGuard {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Release);
+    }
 }
 
 /// Replay `stream` through `service` while `cfg.readers` query tasks on
@@ -230,7 +272,13 @@ pub fn serve_replay(
 
     let mut report = DriverReport::default();
 
-    pool.scope(|s| {
+    // `scope_catch` instead of `scope`: a panic in the writer closure or
+    // in any reader task is caught at the scope join instead of
+    // propagating, so the replay always returns a report (ISSUE 9).
+    let joined = pool.scope_catch(|s| {
+        // dropped on every exit from this closure — normal return *or*
+        // unwind — so reader loops always see the stop flag
+        let _stop_on_exit = StopGuard(Arc::clone(&stop));
         for r in 0..cfg.readers {
             let reader = handle.reader();
             let board = Arc::clone(&board);
@@ -238,52 +286,70 @@ pub fn serve_replay(
             let totals = Arc::clone(&totals);
             let seed = cfg.seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let queries_per_round = cfg.queries_per_round.max(1);
+            let deadline = cfg.query_deadline;
             s.spawn(move |_| {
-                let local = run_reader(reader, board, stop, seed, queries_per_round, t0);
-                let mut t = totals.lock().unwrap();
+                let local =
+                    run_reader(reader, board, stop, seed, queries_per_round, deadline, t0);
+                let mut t = plock(&totals);
                 t.queries += local.queries;
                 t.lag_samples += local.lag_samples;
                 t.lag_sum += local.lag_sum;
                 t.max_lag = t.max_lag.max(local.max_lag);
                 t.violations += local.violations;
+                t.query_timeouts += local.query_timeouts;
             });
         }
 
         // --- the writer: one batch per epoch on this thread ---------------
         let mut epoch = base_epoch;
         for (i, batch) in stream.batches(batch_size).take(n_batches).enumerate() {
-            apply_update(service, batch, false, &mut report, &mut epoch, &board, t0);
+            apply_update(service, batch, false, &mut report, &mut epoch, &board, t0, cfg);
             report.edges_streamed += batch.len();
             if let Some(k) = cfg.churn_every {
                 if (i + 1) % k.max(1) == 0 {
                     // tear the batch back out, then re-serve it (net no-op)
-                    apply_update(service, batch, true, &mut report, &mut epoch, &board, t0);
-                    apply_update(service, batch, false, &mut report, &mut epoch, &board, t0);
+                    apply_update(service, batch, true, &mut report, &mut epoch, &board, t0, cfg);
+                    apply_update(service, batch, false, &mut report, &mut epoch, &board, t0, cfg);
                 }
             }
         }
-        stop.store(true, Ordering::Release);
     });
 
     report.wall_ns = t0.elapsed().as_nanos() as u64;
     let final_snap = service.snapshot();
     report.final_epoch = final_snap.epoch();
     report.final_cliques = final_snap.count();
-    let t = totals.lock().unwrap();
+    let t = plock(&totals);
     report.queries = t.queries;
     report.lag_samples = t.lag_samples;
     report.lag_sum = t.lag_sum;
     report.max_epoch_lag = t.max_lag;
     report.consistency_violations = t.violations;
+    report.query_timeouts = t.query_timeouts;
+    drop(t);
     let (observed, mean_vis) = board.visibility();
     report.epochs_observed = observed;
     report.mean_visibility_ns = mean_vis;
     report.telemetry = Some(Arc::new(telemetry::snapshot().delta(&tel_before)));
+    if let Err(payload) = joined {
+        report.outcome = RunOutcome::from_panic(payload.as_ref());
+    }
+    if report.outcome != RunOutcome::Completed {
+        report.partial = Some(PartialProgress {
+            cliques_emitted: report.final_cliques as u64,
+            batches_applied: report.updates as u64,
+            bytes_flushed: 0,
+        });
+    }
     report
 }
 
 /// One timed update event: apply (or remove) a batch, account for it,
-/// and stamp the publish time of the epoch it produced.
+/// and stamp the publish time of the epoch it produced.  An update
+/// rejected at admission (transient failure) is retried with doubling
+/// backoff up to [`DriverConfig::max_retries`] times, then dropped and
+/// counted — the epoch sequence simply skips it.
+#[allow(clippy::too_many_arguments)]
 fn apply_update(
     svc: &mut CliqueService,
     edges: &[Edge],
@@ -292,12 +358,32 @@ fn apply_update(
     epoch: &mut u64,
     board: &VisBoard,
     t0: Instant,
+    cfg: &DriverConfig,
 ) {
     let tb = Instant::now();
-    if remove {
-        svc.remove_batch(edges);
-    } else {
-        svc.apply_batch(edges);
+    let mut backoff = cfg.retry_backoff;
+    let mut attempt = 0u32;
+    loop {
+        let result = if remove {
+            svc.try_remove_batch(edges)
+        } else {
+            svc.try_apply_batch(edges)
+        };
+        match result {
+            Ok(_) => break,
+            Err(_) if attempt < cfg.max_retries => {
+                attempt += 1;
+                report.retries += 1;
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+            }
+            Err(_) => {
+                // dropped: nothing was mutated or published, the session
+                // still sits at the previous batch boundary
+                report.failed_updates += 1;
+                return;
+            }
+        }
     }
     let ns = tb.elapsed().as_nanos() as u64;
     // the observer publishes at the tail of apply/remove, so stamping
@@ -316,6 +402,7 @@ fn run_reader(
     stop: Arc<AtomicBool>,
     seed: u64,
     queries_per_round: usize,
+    query_deadline: Option<Duration>,
     t0: Instant,
 ) -> ReaderTotals {
     let mut rng = Rng::new(seed);
@@ -338,6 +425,7 @@ fn run_reader(
         board.mark_seen(snap.epoch(), t0.elapsed().as_nanos() as u64);
         let n = snap.n().max(1) as u64;
         for _ in 0..queries_per_round {
+            let tq = query_deadline.map(|_| Instant::now());
             match rng.gen_range(6) {
                 0 => {
                     let v = rng.gen_range(n) as Vertex;
@@ -373,6 +461,13 @@ fn run_reader(
             }
             local.queries += 1;
             tel.service_queries.inc();
+            // per-query deadline: readers are synchronous, so a breach
+            // is recorded (SLO accounting) rather than aborted mid-query
+            if let (Some(deadline), Some(tq)) = (query_deadline, tq) {
+                if tq.elapsed() > deadline {
+                    local.query_timeouts += 1;
+                }
+            }
         }
         if stop.load(Ordering::Acquire) {
             break;
@@ -401,6 +496,7 @@ mod tests {
             churn_every: Some(3),
             seed: 7,
             max_batches: None,
+            ..DriverConfig::default()
         };
         let report = serve_replay(&mut svc, &stream, &pool, &cfg);
 
@@ -411,6 +507,10 @@ mod tests {
         assert_eq!(report.consistency_violations, 0);
         assert!(report.queries > 0, "readers must have run");
         assert!(report.lag_samples > 0);
+        assert_eq!(report.outcome, RunOutcome::Completed);
+        assert!(report.partial.is_none(), "no fault, no partial report");
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.failed_updates, 0);
 
         // churn is a net no-op: final state equals the full graph's C(G)
         let want = oracle::maximal_cliques(&g);
@@ -446,10 +546,19 @@ mod tests {
             queries_per_round: 2,
             churn_every: None,
             seed: 1,
+            // an unmeetable deadline: every measured query breaches it,
+            // which pins the SLO accounting without slowing the run
+            query_deadline: Some(Duration::ZERO),
+            ..DriverConfig::default()
         };
         let report = serve_replay(&mut svc, &stream, &pool, &cfg);
         assert_eq!(report.updates, 3);
         assert_eq!(report.final_epoch, 3);
         assert_eq!(report.edges_streamed, 12.min(stream.edges.len()));
+        assert!(
+            report.query_timeouts > 0,
+            "a zero deadline must record breaches ({} queries)",
+            report.queries
+        );
     }
 }

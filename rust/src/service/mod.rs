@@ -37,7 +37,8 @@ pub mod driver;
 pub mod snapshot;
 mod store;
 
-use crate::util::sync::{Arc, Mutex};
+use crate::util::failpoints;
+use crate::util::sync::{plock, Arc, Mutex};
 
 use crate::dynamic::stream::{BatchRecord, EdgeStream};
 use crate::dynamic::BatchResult;
@@ -45,7 +46,9 @@ use crate::graph::csr::CsrGraph;
 use crate::graph::snapshot::GraphSnapshot;
 use crate::graph::{Edge, Vertex};
 use crate::mce::sink::SizeHistogram;
-use crate::session::dynamic::{BatchEvent, BatchObserver, DynAlgo, DynamicSession};
+use crate::session::dynamic::{
+    BatchApplyError, BatchEvent, BatchObserver, DynAlgo, DynamicSession,
+};
 
 pub use driver::{serve_replay, DriverConfig, DriverReport};
 pub use snapshot::{CliqueId, CliqueSnapshot, SnapshotCell, SnapshotReader};
@@ -72,12 +75,32 @@ impl ServiceShared {
     /// the writer thread inside `apply_batch`/`remove_batch`, so "batch
     /// applied" and "epoch visible" are one step.
     fn on_batch(&self, result: &BatchResult, graph: &Arc<GraphSnapshot>) {
-        let mut store = self.store.lock().unwrap();
+        let mut store = plock(&self.store);
         store.apply(result, graph);
-        self.cell.publish(Arc::new(store.freeze()));
+        // `service-freeze` failpoint: the `error` action models a
+        // transient freeze/publish failure — retried with doubling
+        // backoff, then the publish is *skipped*: readers stay on the
+        // previous epoch, which is still internally consistent (the
+        // next successful publish carries the accumulated state, since
+        // the store itself already applied the batch).  `panic`
+        // propagates to the writer thread.
+        let mut published = false;
+        for attempt in 0u32..3 {
+            if failpoints::hit(failpoints::Site::ServiceFreeze) {
+                std::thread::sleep(std::time::Duration::from_millis(1 << attempt));
+                continue;
+            }
+            self.cell.publish(Arc::new(store.freeze()));
+            published = true;
+            break;
+        }
         let t = crate::telemetry::global();
-        t.service_publishes.inc();
-        t.service_published_epoch.set(self.cell.published_epoch());
+        if published {
+            t.service_publishes.inc();
+            t.service_published_epoch.set(self.cell.published_epoch());
+        } else {
+            t.service_publish_failures.inc();
+        }
     }
 }
 
@@ -137,6 +160,19 @@ impl CliqueService {
     /// Apply one removal batch (§5.3); publishes likewise.
     pub fn remove_batch(&mut self, edges: &[Edge]) -> BatchResult {
         self.session.remove_batch(edges)
+    }
+
+    /// Fallible [`apply_batch`](Self::apply_batch): a rejected batch
+    /// mutates nothing and publishes nothing — the serve-replay driver
+    /// retries these with backoff (ISSUE 9).
+    pub fn try_apply_batch(&mut self, edges: &[Edge]) -> Result<BatchResult, BatchApplyError> {
+        self.session.try_apply_batch(edges)
+    }
+
+    /// Fallible [`remove_batch`](Self::remove_batch); see
+    /// [`try_apply_batch`](Self::try_apply_batch).
+    pub fn try_remove_batch(&mut self, edges: &[Edge]) -> Result<BatchResult, BatchApplyError> {
+        self.session.try_remove_batch(edges)
     }
 
     /// Replay a stream batch-by-batch, publishing one epoch per batch.

@@ -20,7 +20,7 @@
 use crate::graph::snapshot::GraphSnapshot;
 use crate::graph::Vertex;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::{Arc, Mutex};
+use crate::util::sync::{plock, Arc, Mutex};
 use crate::mce::sink::SizeHistogram;
 use crate::util::vset;
 
@@ -327,7 +327,7 @@ impl SnapshotCell {
     /// Make `snap` the current snapshot. Writer-only; epochs must be
     /// monotone.
     pub fn publish(&self, snap: Arc<CliqueSnapshot>) {
-        let mut cur = self.current.lock().unwrap();
+        let mut cur = plock(&self.current);
         debug_assert!(snap.epoch() >= cur.epoch(), "epochs must not go back");
         self.version.store(snap.epoch(), Ordering::Release);
         *cur = snap;
@@ -340,7 +340,7 @@ impl SnapshotCell {
 
     /// Fetch the current snapshot (brief mutex hold: one `Arc` clone).
     pub fn load(&self) -> Arc<CliqueSnapshot> {
-        Arc::clone(&self.current.lock().unwrap())
+        Arc::clone(&plock(&self.current))
     }
 }
 

@@ -31,7 +31,7 @@ use crate::mce::ParTttConfig;
 
 use super::context::ExecContext;
 use super::enumerators::Algo;
-use super::report::{OutputStats, RunReport};
+use super::report::{OutputStats, PartialProgress, RunOutcome, RunReport};
 
 /// What the session's default [`MceSession::run`] does with emitted
 /// cliques.  Custom sinks go through [`MceSession::run_with_sink`].
@@ -271,9 +271,11 @@ impl MceSession {
 
     /// Run `algo` into the session's configured sink.
     ///
-    /// I/O failures of a [`SinkSpec::Stream`] sink panic here (the
-    /// infallible `run` contract); use [`MceSession::stream_to`] to
-    /// handle them as `Result`s.
+    /// I/O failures of a [`SinkSpec::Stream`] sink do not panic: the run
+    /// degrades to a report with [`RunOutcome::SinkFailed`] whose
+    /// [`RunReport::partial`] accounts what reached the output before
+    /// the fault (ISSUE 9).  Use [`MceSession::stream_to`] when you want
+    /// the failure as a `Result` instead.
     pub fn run_algo(&self, algo: Algo) -> SessionRun {
         match &self.sink {
             SinkSpec::Count => SessionRun {
@@ -300,17 +302,7 @@ impl MceSession {
                     output: None,
                 }
             }
-            SinkSpec::Stream { path, format } => {
-                let (report, stats) = self
-                    .stream_to(algo, path, *format)
-                    .expect("SinkSpec::Stream: clique writer I/O failed");
-                SessionRun {
-                    report,
-                    cliques: None,
-                    histogram: None,
-                    output: Some(output_stats(stats)),
-                }
-            }
+            SinkSpec::Stream { path, format } => self.stream_run(algo, path, *format),
         }
     }
 
@@ -385,6 +377,72 @@ impl MceSession {
             .expect("writer sink still shared after run")
             .finish()?;
         Ok((report, stats))
+    }
+
+    /// [`SinkSpec::Stream`] under the infallible [`run`](Self::run)
+    /// contract: writer failures (create or mid-run I/O) degrade to a
+    /// synthesized [`RunOutcome::SinkFailed`] report carrying
+    /// [`PartialProgress`] instead of panicking.
+    fn stream_run(&self, algo: Algo, path: &Path, format: WriterFormat) -> SessionRun {
+        let cfg = WriterConfig {
+            format,
+            byte_budget: self.ctx.mem_budget_bytes().map(|b| b as u64),
+            ..WriterConfig::default()
+        };
+        let writer = match StreamWriterSink::create(path, self.ctx.threads(), cfg) {
+            Ok(w) => w,
+            Err(e) => {
+                // nothing ran: a zero-progress failed report
+                let report = RunReport {
+                    algo,
+                    cliques: 0,
+                    wall: Duration::ZERO,
+                    outcome: RunOutcome::SinkFailed {
+                        message: format!("clique writer create failed: {e}"),
+                    },
+                    telemetry: None,
+                    partial: Some(PartialProgress::default()),
+                };
+                self.ctx.record(report.clone());
+                return SessionRun {
+                    report,
+                    cliques: None,
+                    histogram: None,
+                    output: None,
+                };
+            }
+        };
+        let writer = Arc::new(writer);
+        let sink: Arc<dyn CliqueSink> = Arc::clone(&writer);
+        let mut report = algo.enumerator().enumerate(&self.ctx, &self.g, &sink);
+        drop(sink);
+        let writer = Arc::into_inner(writer).expect("writer sink still shared after run");
+        let output = match writer.finish() {
+            Ok(stats) => output_stats(stats),
+            Err(e) => {
+                let message = e.to_string();
+                let flushed: u64 = e.per_worker_bytes.iter().sum();
+                let stats = e.stats;
+                // enumeration may itself have failed (e.g. a worker
+                // panic); keep the first fault, it subsumes the sink's
+                if report.outcome == RunOutcome::Completed {
+                    report.outcome = RunOutcome::SinkFailed { message };
+                }
+                report.partial = Some(PartialProgress {
+                    cliques_emitted: report.cliques,
+                    batches_applied: 0,
+                    bytes_flushed: flushed,
+                });
+                output_stats(stats)
+            }
+        };
+        self.ctx.record(report.clone());
+        SessionRun {
+            report,
+            cliques: None,
+            histogram: None,
+            output: Some(output),
+        }
     }
 
     /// Run `algo` into a caller-provided sink.

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 use crate::util::sync::atomic::{AtomicBool, Ordering};
-use crate::util::sync::{Arc, Mutex, OnceLock};
+use crate::util::sync::{plock, Arc, Mutex, OnceLock};
 
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::stats::Subproblem;
@@ -123,7 +123,7 @@ impl ExecContext {
     /// The ranking for `(g, strategy)`, computed once and cached.
     pub fn ranking(&self, g: &Arc<CsrGraph>, strategy: RankStrategy) -> Arc<Ranking> {
         let key = (graph_key(g), strategy);
-        let mut cache = self.rankings.lock().unwrap();
+        let mut cache = plock(&self.rankings);
         if let Some(c) = cache.get(&key) {
             debug_assert!(Arc::ptr_eq(&c.graph, g));
             return Arc::clone(&c.value);
@@ -144,7 +144,7 @@ impl ExecContext {
     /// outside the context).
     pub fn seed_ranking(&self, g: &Arc<CsrGraph>, ranking: Arc<Ranking>) {
         let key = (graph_key(g), ranking.strategy());
-        self.rankings.lock().unwrap().insert(
+        plock(&self.rankings).insert(
             key,
             Cached {
                 graph: Arc::clone(g),
@@ -158,7 +158,7 @@ impl ExecContext {
     /// GP simulation, PECO's flat-task model, and the skew experiments.
     pub fn subproblems(&self, g: &Arc<CsrGraph>, strategy: RankStrategy) -> Arc<Vec<Subproblem>> {
         let key = (graph_key(g), strategy);
-        if let Some(c) = self.subproblems.lock().unwrap().get(&key) {
+        if let Some(c) = plock(&self.subproblems).get(&key) {
             debug_assert!(Arc::ptr_eq(&c.graph, g));
             return Arc::clone(&c.value);
         }
@@ -177,7 +177,7 @@ impl ExecContext {
         strategy: RankStrategy,
         subs: Arc<Vec<Subproblem>>,
     ) {
-        self.subproblems.lock().unwrap().insert(
+        plock(&self.subproblems).insert(
             (graph_key(g), strategy),
             Cached {
                 graph: Arc::clone(g),
@@ -188,12 +188,12 @@ impl ExecContext {
 
     /// Append to the session's run history.
     pub fn record(&self, report: RunReport) {
-        self.history.lock().unwrap().push(report);
+        plock(&self.history).push(report);
     }
 
     /// Every run this context has executed, in order.
     pub fn history(&self) -> Vec<RunReport> {
-        self.history.lock().unwrap().clone()
+        plock(&self.history).clone()
     }
 }
 

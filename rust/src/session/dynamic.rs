@@ -101,6 +101,37 @@ impl BatchEvent<'_> {
 /// advanced to the post-batch C(G).
 pub type BatchObserver = Arc<dyn Fn(&BatchEvent<'_>) + Send + Sync>;
 
+/// A batch that was rejected *before* any mutation: the graph, registry
+/// and epoch counter are exactly as they were after
+/// [`batches_applied`](DynamicSession::batches_applied) batches — the
+/// precise rollback boundary a caller can retry or resume from (ISSUE 9).
+///
+/// Today the only producer is the `dynamic-apply` failpoint
+/// ([`crate::util::failpoints::Site::DynamicApply`], `error` action);
+/// the type is the seam where real admission failures (e.g. a batch
+/// validator) would surface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchApplyError {
+    /// Batches fully applied before the rejected one — the session state
+    /// still reflects exactly this many.
+    pub batches_applied: usize,
+    /// Failure description (failpoint-formatted for injected faults, so
+    /// [`crate::session::RunOutcome::from_panic`] can parse the site).
+    pub message: String,
+}
+
+impl std::fmt::Display for BatchApplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} batches already applied)",
+            self.message, self.batches_applied
+        )
+    }
+}
+
+impl std::error::Error for BatchApplyError {}
+
 /// A dynamic-graph session: the graph, its maximal clique set C(G), and
 /// the chosen batch engine. Every mutation keeps the registry exact.
 pub struct DynamicSession {
@@ -244,6 +275,19 @@ impl DynamicSession {
         }
     }
 
+    /// The `dynamic-apply` admission check, shared by every batch verb.
+    /// Runs *before* any mutation, so a rejected batch leaves the
+    /// session at an exact batch boundary.
+    fn admit_batch(&self) -> Result<(), BatchApplyError> {
+        if crate::util::failpoints::hit(crate::util::failpoints::Site::DynamicApply) {
+            return Err(BatchApplyError {
+                batches_applied: self.batches_applied,
+                message: "failpoint dynamic-apply: injected batch error".to_string(),
+            });
+        }
+        Ok(())
+    }
+
     /// Apply one batch of edge insertions; returns the canonical change
     /// set (Λⁿᵉʷ, Λᵈᵉˡ). The registry advances to C(G + H).
     pub fn apply_batch(&mut self, edges: &[Edge]) -> BatchResult {
@@ -252,7 +296,34 @@ impl DynamicSession {
 
     /// As [`apply_batch`](Self::apply_batch), also returning per-task
     /// phase timings for the scheduler simulation (Figures 8/9).
+    ///
+    /// Panics if the batch is rejected at admission (only possible with
+    /// the `dynamic-apply` failpoint armed); fault-aware callers use
+    /// [`try_apply_batch_timed`](Self::try_apply_batch_timed).
     pub fn apply_batch_timed(&mut self, edges: &[Edge]) -> (BatchResult, BatchTimings) {
+        match self.try_apply_batch_timed(edges) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`apply_batch`](Self::apply_batch): a rejected batch
+    /// mutates nothing and reports the exact boundary in
+    /// [`BatchApplyError::batches_applied`].
+    pub fn try_apply_batch(&mut self, edges: &[Edge]) -> Result<BatchResult, BatchApplyError> {
+        Ok(self.try_apply_batch_timed(edges)?.0)
+    }
+
+    /// Fallible [`apply_batch_timed`](Self::apply_batch_timed).
+    pub fn try_apply_batch_timed(
+        &mut self,
+        edges: &[Edge],
+    ) -> Result<(BatchResult, BatchTimings), BatchApplyError> {
+        self.admit_batch()?;
+        Ok(self.apply_batch_inner(edges))
+    }
+
+    fn apply_batch_inner(&mut self, edges: &[Edge]) -> (BatchResult, BatchTimings) {
         let batch_span = crate::telemetry::SpanTimer::start();
         let (result, timings) = match self.algo {
             DynAlgo::Imce => imce_batch_with_cutoff(
@@ -296,7 +367,22 @@ impl DynamicSession {
     }
 
     /// Apply one batch of edge removals (§5.3 decremental reduction).
+    ///
+    /// Panics if the batch is rejected at admission (only possible with
+    /// the `dynamic-apply` failpoint armed); fault-aware callers use
+    /// [`try_remove_batch`](Self::try_remove_batch).
     pub fn remove_batch(&mut self, edges: &[Edge]) -> BatchResult {
+        match self.try_remove_batch(edges) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`remove_batch`](Self::remove_batch): a rejected batch
+    /// mutates nothing and reports the exact boundary in
+    /// [`BatchApplyError::batches_applied`].
+    pub fn try_remove_batch(&mut self, edges: &[Edge]) -> Result<BatchResult, BatchApplyError> {
+        self.admit_batch()?;
         let batch_span = crate::telemetry::SpanTimer::start();
         let result = imce_remove_batch(&mut self.graph, &self.registry, edges);
         self.batches_applied += 1;
@@ -308,7 +394,7 @@ impl DynamicSession {
         t.dynamic_subsumed_cliques.add(result.subsumed.len() as u64);
         t.dynamic_batch_ns.record(batch_span.elapsed_ns());
         self.notify(BatchKind::Remove, &result);
-        result
+        Ok(result)
     }
 
     /// Stream `stream` through the session in batches, recording
@@ -480,7 +566,7 @@ mod tests {
             // the event's snapshot is the post-batch graph epoch, aligned
             // with the session sequence (constructed at epoch 0)
             assert_eq!(ev.graph_epoch(), ev.seq as u64);
-            sink.lock().unwrap().push((
+            crate::util::sync::plock(&sink).push((
                 ev.kind,
                 ev.seq,
                 ev.result.new_cliques.len(),
@@ -492,7 +578,7 @@ mod tests {
             s.apply_batch(chunk);
         }
         s.remove_batch(&edges[..3.min(edges.len())]);
-        let log = log.lock().unwrap();
+        let log = crate::util::sync::plock(&log);
         assert_eq!(log.len(), s.batches_applied());
         for (i, &(kind, seq, _, _)) in log.iter().enumerate() {
             assert_eq!(seq, i + 1, "dense 1-based sequence");

@@ -23,7 +23,7 @@ use crate::telemetry;
 use crate::util::membudget::BudgetError;
 
 use super::context::ExecContext;
-use super::report::{RunOutcome, RunReport};
+use super::report::{PartialProgress, RunOutcome, RunReport};
 
 /// Every enumeration algorithm the engine can run behind one name.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -166,6 +166,13 @@ struct CountedSink {
 impl CliqueSink for CountedSink {
     #[inline]
     fn emit(&self, clique: &[Vertex]) {
+        // `sink-emit` failpoint: the one emit every run goes through.
+        // `panic` unwinds into the enumerator (contained at the pool job
+        // boundary, or by `run_counted` on the caller thread); `error`
+        // drops this clique on the floor.
+        if crate::util::failpoints::hit(crate::util::failpoints::Site::SinkEmit) {
+            return;
+        }
         self.emitted.emit(clique);
         self.cliques_metric.inc();
         self.inner.emit(clique);
@@ -194,16 +201,31 @@ fn run_counted(
     let outcome = if ctx.is_cancelled() {
         RunOutcome::Cancelled
     } else {
-        f(&as_dyn)
+        // Unwind boundary for the whole run: a panic on the caller thread
+        // (sequential algorithms) or one re-raised by a scope join
+        // (parallel algorithms drain their siblings first) becomes a
+        // structured outcome instead of killing the session (ISSUE 9).
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&as_dyn))) {
+            Ok(outcome) => outcome,
+            Err(payload) => RunOutcome::from_panic(payload.as_ref()),
+        }
     };
     let wall = t0.elapsed();
     let delta = telemetry::snapshot().delta(&before);
+    let cliques = counted.emitted.count();
+    // every non-Completed outcome reports what was already safe: the
+    // cliques that reached the sink before the fault
+    let partial = (outcome != RunOutcome::Completed).then(|| PartialProgress {
+        cliques_emitted: cliques,
+        ..PartialProgress::default()
+    });
     RunReport {
         algo,
-        cliques: counted.emitted.count(),
+        cliques,
         wall,
         outcome,
         telemetry: Some(Arc::new(delta)),
+        partial,
     }
 }
 

@@ -38,9 +38,11 @@ pub mod report;
 
 pub use builder::{MceSession, SessionBuilder, SessionRun, SinkSpec};
 pub use context::ExecContext;
-pub use dynamic::{BatchEvent, BatchKind, BatchObserver, DynAlgo, DynamicSession};
+pub use dynamic::{
+    BatchApplyError, BatchEvent, BatchKind, BatchObserver, DynAlgo, DynamicSession,
+};
 pub use enumerators::{Algo, Enumerator};
-pub use report::{OutputStats, RunOutcome, RunReport};
+pub use report::{OutputStats, PartialProgress, RunOutcome, RunReport};
 
 // the streaming sink vocabulary, re-exported so `SinkSpec::Stream` /
 // `stream_to` callers need only the session module

@@ -15,7 +15,10 @@ use crate::util::sync::Arc;
 use super::enumerators::Algo;
 
 /// How an enumeration run ended.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Not `Copy` since ISSUE 9: [`Panicked`](RunOutcome::Panicked) and
+/// [`SinkFailed`](RunOutcome::SinkFailed) carry the fault description.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RunOutcome {
     /// Every maximal clique was emitted into the sink.
     Completed,
@@ -27,6 +30,72 @@ pub enum RunOutcome {
     TimedOut,
     /// The session's cancellation flag was set before the run started.
     Cancelled,
+    /// A worker (or the run itself) panicked; the pool drained the
+    /// sibling tasks, the first payload was captured at scope join, and
+    /// the run returned instead of hanging or aborting (ISSUE 9).
+    Panicked {
+        /// Failpoint site name when the panic came from an injected
+        /// fault (parsed from the payload's `failpoint <site>:` prefix),
+        /// `"unknown"` for organic panics.
+        site: String,
+        /// The panic payload, when it was a string (the common case).
+        message: String,
+    },
+    /// The output sink reported an I/O failure; everything written
+    /// before the fault is accounted in [`RunReport::partial`] and the
+    /// run's [`OutputStats`].
+    SinkFailed { message: String },
+}
+
+impl Default for RunOutcome {
+    /// `Completed` — so `Default`-constructed reports (e.g. the driver's
+    /// `DriverReport::default()`) start from success and only a caught
+    /// fault overwrites the outcome.
+    fn default() -> Self {
+        RunOutcome::Completed
+    }
+}
+
+impl RunOutcome {
+    /// Build a [`RunOutcome::Panicked`] from a caught unwind payload
+    /// (e.g. [`crate::coordinator::pool::ThreadPool::scope_catch`]).
+    pub fn from_panic(payload: &(dyn std::any::Any + Send)) -> RunOutcome {
+        let message = if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+            (*s).to_string()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        let site = message
+            .strip_prefix("failpoint ")
+            .and_then(|rest| rest.split(':').next())
+            .unwrap_or("unknown")
+            .to_string();
+        RunOutcome::Panicked { site, message }
+    }
+}
+
+/// What had already safely happened when a run ended early — attached to
+/// every non-[`Completed`](RunOutcome::Completed) [`RunReport`] /
+/// `DriverReport` so a fault still yields the partial results that were
+/// produced before it (ISSUE 9 graceful degradation).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PartialProgress {
+    /// Cliques that reached the sink before the fault.
+    pub cliques_emitted: u64,
+    /// Dynamic batches fully applied before the fault (0 for static runs).
+    pub batches_applied: u64,
+    /// Bytes flushed to the output writer before the fault (0 for
+    /// non-streaming sinks).
+    pub bytes_flushed: u64,
+}
+
+impl PartialProgress {
+    /// True when the fault struck before anything at all was produced.
+    pub fn is_empty(&self) -> bool {
+        self.cliques_emitted == 0 && self.batches_applied == 0 && self.bytes_flushed == 0
+    }
 }
 
 /// What one enumeration run did: which algorithm, how many cliques
@@ -45,6 +114,9 @@ pub struct RunReport {
     /// a report is synthesized outside the run harness.  Shared via
     /// `Arc` so reports stay cheap to clone.
     pub telemetry: Option<Arc<TelemetrySnapshot>>,
+    /// Progress made before a fault: populated (possibly with zeros) on
+    /// every non-`Completed` outcome, `None` on success.
+    pub partial: Option<PartialProgress>,
 }
 
 impl RunReport {
@@ -103,6 +175,7 @@ mod tests {
             wall: Duration::from_millis(1500),
             outcome: RunOutcome::Completed,
             telemetry: None,
+            partial: None,
         };
         assert!(r.completed());
         assert!((r.secs() - 1.5).abs() < 1e-9);
@@ -112,6 +185,42 @@ mod tests {
         };
         assert!(!oom.completed());
         assert!((r.cliques_per_sec() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn panic_payload_maps_to_outcome() {
+        let injected: Box<dyn std::any::Any + Send> =
+            Box::new("failpoint sink-emit: injected panic".to_string());
+        match RunOutcome::from_panic(injected.as_ref()) {
+            RunOutcome::Panicked { site, message } => {
+                assert_eq!(site, "sink-emit");
+                assert_eq!(message, "failpoint sink-emit: injected panic");
+            }
+            other => panic!("wrong outcome {other:?}"),
+        }
+        let organic: Box<dyn std::any::Any + Send> = Box::new("index out of bounds");
+        match RunOutcome::from_panic(organic.as_ref()) {
+            RunOutcome::Panicked { site, message } => {
+                assert_eq!(site, "unknown");
+                assert_eq!(message, "index out of bounds");
+            }
+            other => panic!("wrong outcome {other:?}"),
+        }
+        let opaque: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert!(matches!(
+            RunOutcome::from_panic(opaque.as_ref()),
+            RunOutcome::Panicked { ref site, .. } if site == "unknown"
+        ));
+    }
+
+    #[test]
+    fn partial_progress_emptiness() {
+        assert!(PartialProgress::default().is_empty());
+        assert!(!PartialProgress {
+            cliques_emitted: 1,
+            ..Default::default()
+        }
+        .is_empty());
     }
 
     #[test]

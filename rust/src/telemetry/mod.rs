@@ -69,6 +69,9 @@ pub mod names {
     pub const SERVICE_EPOCH_LAG_SUM: &str = "parmce_service_epoch_lag_sum_total";
     pub const SERVICE_EPOCH_LAG_SAMPLES: &str = "parmce_service_epoch_lag_samples_total";
     pub const SERVICE_EPOCH_LAG_MAX: &str = "parmce_service_epoch_lag_max";
+    pub const POOL_SPAWN_FAILURES: &str = "parmce_pool_spawn_failures_total";
+    pub const POOL_JOBS_PANICKED: &str = "parmce_pool_jobs_panicked_total";
+    pub const SERVICE_PUBLISH_FAILURES: &str = "parmce_service_publish_failures_total";
 }
 
 /// The process-wide metric registry.  One instance lives behind
@@ -82,6 +85,12 @@ pub struct Registry {
     pub pool_queue_depth: Gauge,
     /// Exported per worker shard (`worker="i"` labels).
     pub pool_worker_busy_ns: Counter,
+    /// Worker threads that failed to spawn (the pool degrades to fewer
+    /// workers instead of aborting — ISSUE 9).
+    pub pool_spawn_failures: Counter,
+    /// Jobs whose closure panicked; the pool contains the unwind and the
+    /// first payload per scope resurfaces at join (ISSUE 9).
+    pub pool_jobs_panicked: Counter,
     // --- enumeration kernels (mce/) ---
     pub cliques_emitted: Counter,
     pub parttt_tasks_spawned: Counter,
@@ -102,6 +111,9 @@ pub struct Registry {
     pub service_epoch_lag_sum: Counter,
     pub service_epoch_lag_samples: Counter,
     pub service_epoch_lag_max: Gauge,
+    /// Snapshot publishes skipped after exhausting freeze retries
+    /// (readers stay on the previous epoch — ISSUE 9).
+    pub service_publish_failures: Counter,
 }
 
 impl Registry {
@@ -112,6 +124,8 @@ impl Registry {
             pool_wakeups: Counter::new(),
             pool_queue_depth: Gauge::new(),
             pool_worker_busy_ns: Counter::new(),
+            pool_spawn_failures: Counter::new(),
+            pool_jobs_panicked: Counter::new(),
             cliques_emitted: Counter::new(),
             parttt_tasks_spawned: Counter::new(),
             parttt_seq_cutovers: Counter::new(),
@@ -129,6 +143,7 @@ impl Registry {
             service_epoch_lag_sum: Counter::new(),
             service_epoch_lag_samples: Counter::new(),
             service_epoch_lag_max: Gauge::new(),
+            service_publish_failures: Counter::new(),
         }
     }
 
@@ -174,6 +189,18 @@ impl Registry {
                     "Nanoseconds each pool worker spent executing jobs.",
                     true,
                     &self.pool_worker_busy_ns,
+                ),
+                c(
+                    names::POOL_SPAWN_FAILURES,
+                    "Worker threads that failed to spawn (pool degraded to fewer workers).",
+                    false,
+                    &self.pool_spawn_failures,
+                ),
+                c(
+                    names::POOL_JOBS_PANICKED,
+                    "Jobs whose closure panicked (contained by the pool, resurfaced at scope join).",
+                    false,
+                    &self.pool_jobs_panicked,
                 ),
                 c(
                     names::CLIQUES_EMITTED,
@@ -246,6 +273,12 @@ impl Registry {
                     "Number of reader epoch-lag samples.",
                     false,
                     &self.service_epoch_lag_samples,
+                ),
+                c(
+                    names::SERVICE_PUBLISH_FAILURES,
+                    "Snapshot publishes skipped after exhausting freeze retries.",
+                    false,
+                    &self.service_publish_failures,
                 ),
             ],
             gauges: vec![
@@ -326,6 +359,8 @@ mod tests {
             names::POOL_JOBS_DEQUEUED,
             names::POOL_WAKEUPS,
             names::POOL_WORKER_BUSY_NS,
+            names::POOL_SPAWN_FAILURES,
+            names::POOL_JOBS_PANICKED,
             names::CLIQUES_EMITTED,
             names::PARTTT_TASKS_SPAWNED,
             names::PARTTT_SEQ_CUTOVERS,
@@ -338,6 +373,7 @@ mod tests {
             names::SERVICE_QUERIES,
             names::SERVICE_EPOCH_LAG_SUM,
             names::SERVICE_EPOCH_LAG_SAMPLES,
+            names::SERVICE_PUBLISH_FAILURES,
         ] {
             assert!(s.counter(name).is_some(), "missing counter {name}");
         }

@@ -11,7 +11,7 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::hash::{BuildHasher, BuildHasherDefault, Hash, Hasher};
 
-use crate::util::sync::Mutex;
+use crate::util::sync::{plock, Mutex};
 
 /// FxHash-style multiply hasher — fast for the small keys we use.
 #[derive(Default, Clone)]
@@ -89,13 +89,13 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
     /// Insert; returns the previous value if any.
     pub fn insert(&self, key: K, value: V) -> Option<V> {
         let s = self.shard(&key);
-        self.shards[s].lock().unwrap().insert(key, value)
+        plock(&self.shards[s]).insert(key, value)
     }
 
     /// Insert only if vacant; returns true if inserted.
     pub fn insert_if_absent(&self, key: K, value: V) -> bool {
         let s = self.shard(&key);
-        match self.shards[s].lock().unwrap().entry(key) {
+        match plock(&self.shards[s]).entry(key) {
             Entry::Occupied(_) => false,
             Entry::Vacant(e) => {
                 e.insert(value);
@@ -122,7 +122,7 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
         Q: Hash + Eq + ?Sized,
     {
         let s = self.shard_of(key);
-        self.shards[s].lock().unwrap().remove(key)
+        plock(&self.shards[s]).remove(key)
     }
 
     /// [`contains`](Self::contains) through a borrowed form of the key.
@@ -132,7 +132,7 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
         Q: Hash + Eq + ?Sized,
     {
         let s = self.shard_of(key);
-        self.shards[s].lock().unwrap().contains_key(key)
+        plock(&self.shards[s]).contains_key(key)
     }
 
     pub fn get_cloned(&self, key: &K) -> Option<V>
@@ -140,11 +140,11 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
         V: Clone,
     {
         let s = self.shard(key);
-        self.shards[s].lock().unwrap().get(key).cloned()
+        plock(&self.shards[s]).get(key).cloned()
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| plock(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -153,7 +153,7 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
 
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            plock(s).clear();
         }
     }
 
@@ -161,7 +161,7 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
     pub fn drain_all(&self) -> Vec<(K, V)> {
         let mut out = Vec::new();
         for s in &self.shards {
-            out.extend(s.lock().unwrap().drain());
+            out.extend(plock(s).drain());
         }
         out
     }
@@ -169,7 +169,7 @@ impl<K: Hash + Eq, V> ConcurrentMap<K, V> {
     /// Apply `f` to every entry under shard locks.
     pub fn for_each(&self, mut f: impl FnMut(&K, &V)) {
         for s in &self.shards {
-            for (k, v) in s.lock().unwrap().iter() {
+            for (k, v) in plock(s).iter() {
                 f(k, v);
             }
         }

@@ -1,0 +1,487 @@
+//! Deterministic fault injection at the crate's hot seams (ISSUE 9).
+//!
+//! A *failpoint* is a named site threaded through a seam where real
+//! deployments fail — pool job dequeue/spawn, sink emit/merge/flush,
+//! memory-budget reservation, snapshot publish, service freeze, dynamic
+//! batch apply.  Tests and the CLI (`--fail-spec`, `PARMCE_FAIL_SPEC`)
+//! arm a site with an [`Action`]:
+//!
+//! * `panic` — unwind with the message `failpoint <site>: injected panic`
+//!   (the site name is recoverable from the payload, see
+//!   [`crate::session::RunOutcome::Panicked`]);
+//! * `error` — [`hit`] returns `true` and the call site maps that to its
+//!   local error type (an `io::Error`, a `BudgetError`, a batch-apply
+//!   rejection, …);
+//! * `delay(ms)` — sleep at the site, for deadline/backoff paths.
+//!
+//! Firing is **deterministic**: a site fires always, with probability `p`
+//! (seeded splitmix64 over the per-site hit counter — same seed, same
+//! schedule), or exactly on its `K`-th hit (`@K`, for reproducible
+//! mid-run faults).  Spec grammar, comma-separated:
+//!
+//! ```text
+//! site=action[:prob][:@K][:seed]
+//! sink-emit=panic:@100            # panic on the 100th emit
+//! pool-spawn=error                # every worker spawn fails
+//! service-freeze=error:0.5:42     # half of freezes fail, seed 42
+//! dynamic-apply=delay(20)         # 20ms stall per batch apply
+//! ```
+//!
+//! Without the `failpoints` cargo feature the whole registry compiles to
+//! an `#[inline(always)] false`, so the default build carries zero
+//! failpoint branches (acceptance-checked by `benches/`); mirroring the
+//! `telemetry-off` pattern, call sites are identical in both builds.
+
+use std::fmt;
+
+/// Every registered fail-point site.  Adding a site means adding a
+/// variant here, threading a [`hit`] call through the seam, and listing
+/// it in DESIGN.md's failpoint site table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Worker-thread creation in `ThreadPool::new` (`error` simulates OS
+    /// spawn failure; the pool degrades to fewer workers).
+    PoolSpawn,
+    /// Start of every dequeued pool job, inside the unwind-catch
+    /// boundary (`panic`/`delay`; `error` is a no-op — a job cannot be
+    /// dropped without hanging its scope).
+    PoolDequeue,
+    /// `CountedSink::emit` — the per-clique hot path (`error` drops the
+    /// emit).
+    SinkEmit,
+    /// Sharded-sink merge after scope join (`panic`/`delay`).
+    SinkMerge,
+    /// `StreamWriterSink` buffer flush to the underlying writer (`error`
+    /// injects a sticky `io::Error`).
+    SinkFlush,
+    /// `MemBudget::charge` (`error` synthesizes an out-of-budget
+    /// rejection).
+    MembudgetCharge,
+    /// `GraphCell::publish` — the epoch-snapshot publish seam
+    /// (`panic`/`delay`; `error` is a no-op, a skipped graph publish
+    /// would break epoch monotonicity).
+    GraphPublish,
+    /// `ServiceShared::on_batch` freeze/publish (`error` is retried with
+    /// backoff, then degrades to skip-publish).
+    ServiceFreeze,
+    /// `DynamicSession` batch apply/remove entry, before any mutation
+    /// (`error` rejects the batch at an exact boundary).
+    DynamicApply,
+}
+
+impl Site {
+    pub const ALL: [Site; 9] = [
+        Site::PoolSpawn,
+        Site::PoolDequeue,
+        Site::SinkEmit,
+        Site::SinkMerge,
+        Site::SinkFlush,
+        Site::MembudgetCharge,
+        Site::GraphPublish,
+        Site::ServiceFreeze,
+        Site::DynamicApply,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::PoolSpawn => "pool-spawn",
+            Site::PoolDequeue => "pool-dequeue",
+            Site::SinkEmit => "sink-emit",
+            Site::SinkMerge => "sink-merge",
+            Site::SinkFlush => "sink-flush",
+            Site::MembudgetCharge => "membudget-charge",
+            Site::GraphPublish => "graph-publish",
+            Site::ServiceFreeze => "service-freeze",
+            Site::DynamicApply => "dynamic-apply",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|site| site.name() == s)
+    }
+
+    fn index(self) -> usize {
+        Site::ALL
+            .iter()
+            .position(|&s| s == self)
+            .expect("Site::ALL lists every variant")
+    }
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What an armed site does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Unwind with `failpoint <site>: injected panic`.
+    Panic,
+    /// [`hit`] returns `true`; the call site maps it to its local error.
+    ReturnError,
+    /// Sleep this many milliseconds, then behave as a non-fire.
+    Delay(u64),
+}
+
+/// When an armed site fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Every hit.
+    Always,
+    /// Each hit independently with this probability, from the seeded
+    /// per-site counter stream (deterministic across runs).
+    Prob(f64),
+    /// Exactly the `K`-th hit (1-based), once.
+    OnHit(u64),
+}
+
+/// One armed site: the action, its trigger, and the RNG seed for
+/// [`Trigger::Prob`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SiteConfig {
+    pub action: Action,
+    pub trigger: Trigger,
+    pub seed: u64,
+}
+
+/// Parse a full `--fail-spec` string into `(site, config)` pairs.
+///
+/// Compiled in every build so the CLI can *validate* a spec (and report
+/// that the binary lacks the feature) even when injection is compiled
+/// out.
+pub fn parse_spec(spec: &str) -> Result<Vec<(Site, SiteConfig)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site_s, rest) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fail-spec `{part}`: expected site=action"))?;
+        let site = Site::parse(site_s.trim()).ok_or_else(|| {
+            let known: Vec<&str> = Site::ALL.iter().map(|s| s.name()).collect();
+            format!(
+                "fail-spec `{part}`: unknown site `{}` (known: {})",
+                site_s.trim(),
+                known.join(", ")
+            )
+        })?;
+        let mut tokens = rest.split(':');
+        let action_s = tokens.next().unwrap_or("").trim();
+        let action = parse_action(action_s)
+            .ok_or_else(|| format!("fail-spec `{part}`: unknown action `{action_s}` (panic, error, delay(ms))"))?;
+        let mut cfg = SiteConfig {
+            action,
+            trigger: Trigger::Always,
+            seed: 0x9e37_79b9_7f4a_7c15,
+        };
+        for tok in tokens {
+            let tok = tok.trim();
+            if let Some(k) = tok.strip_prefix('@') {
+                let k: u64 = k
+                    .parse()
+                    .map_err(|_| format!("fail-spec `{part}`: bad hit index `{tok}`"))?;
+                if k == 0 {
+                    return Err(format!("fail-spec `{part}`: hit index is 1-based"));
+                }
+                cfg.trigger = Trigger::OnHit(k);
+            } else if tok.contains('.') {
+                let p: f64 = tok
+                    .parse()
+                    .map_err(|_| format!("fail-spec `{part}`: bad probability `{tok}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fail-spec `{part}`: probability `{tok}` not in [0,1]"));
+                }
+                cfg.trigger = Trigger::Prob(p);
+            } else {
+                cfg.seed = tok
+                    .parse()
+                    .map_err(|_| format!("fail-spec `{part}`: bad seed `{tok}`"))?;
+            }
+        }
+        out.push((site, cfg));
+    }
+    Ok(out)
+}
+
+fn parse_action(s: &str) -> Option<Action> {
+    match s {
+        "panic" => Some(Action::Panic),
+        "error" | "return-error" => Some(Action::ReturnError),
+        _ => {
+            let ms = s.strip_prefix("delay(")?.strip_suffix(')')?;
+            ms.trim().parse().ok().map(Action::Delay)
+        }
+    }
+}
+
+// --- enabled arm ----------------------------------------------------------
+
+#[cfg(feature = "failpoints")]
+mod enabled {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+    use crate::util::sync::{plock, Mutex, OnceLock};
+
+    struct State {
+        /// Bitmask of armed sites — the only load on a hit for unarmed
+        /// sites, so an idle registry stays cheap even with the feature
+        /// compiled in.
+        armed: AtomicU32,
+        sites: [Mutex<Option<SiteConfig>>; Site::ALL.len()],
+        counters: [AtomicU64; Site::ALL.len()],
+    }
+
+    fn state() -> &'static State {
+        static STATE: OnceLock<State> = OnceLock::new();
+        STATE.get_or_init(|| State {
+            armed: AtomicU32::new(0),
+            sites: std::array::from_fn(|_| Mutex::new(None)),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    fn splitmix64(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^ (x >> 31)
+    }
+
+    /// Evaluate the site: sleeps for `delay`, unwinds for `panic`,
+    /// returns `true` for `error`.
+    pub fn hit(site: Site) -> bool {
+        let st = state();
+        let bit = 1u32 << site.index();
+        if st.armed.load(Ordering::Acquire) & bit == 0 {
+            return false;
+        }
+        let cfg = match *plock(&st.sites[site.index()]) {
+            Some(cfg) => cfg,
+            None => return false,
+        };
+        // 1-based hit number; SeqCst so `@K` fires exactly once even when
+        // several workers hit the site concurrently.
+        let n = st.counters[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+        let fire = match cfg.trigger {
+            Trigger::Always => true,
+            Trigger::OnHit(k) => n == k,
+            Trigger::Prob(p) => {
+                let draw = splitmix64(cfg.seed ^ n) as f64 / u64::MAX as f64;
+                draw < p
+            }
+        };
+        if !fire {
+            return false;
+        }
+        match cfg.action {
+            Action::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                false
+            }
+            Action::ReturnError => true,
+            Action::Panic => panic!("failpoint {site}: injected panic"),
+        }
+    }
+
+    /// Arm one site (replacing any previous config for it).
+    pub fn configure(site: Site, cfg: SiteConfig) {
+        let st = state();
+        *plock(&st.sites[site.index()]) = Some(cfg);
+        st.counters[site.index()].store(0, Ordering::SeqCst);
+        st.armed
+            .fetch_or(1u32 << site.index(), Ordering::Release);
+    }
+
+    /// Disarm everything and zero the hit counters.
+    pub fn clear() {
+        let st = state();
+        st.armed.store(0, Ordering::Release);
+        for (slot, ctr) in st.sites.iter().zip(st.counters.iter()) {
+            *plock(slot) = None;
+            ctr.store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// Hits recorded at `site` since the last [`configure`]/[`clear`].
+    pub fn hits(site: Site) -> u64 {
+        state().counters[site.index()].load(Ordering::SeqCst)
+    }
+
+    pub fn configure_from_spec(spec: &str) -> Result<(), String> {
+        for (site, cfg) in parse_spec(spec)? {
+            configure(site, cfg);
+        }
+        Ok(())
+    }
+
+    /// The registry is process-global; tests that arm it hold this guard
+    /// so concurrent `#[test]`s cannot cross-arm or clear each other.
+    pub fn exclusive() -> crate::util::sync::MutexGuard<'static, ()> {
+        static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+        plock(GUARD.get_or_init(|| Mutex::new(())))
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use enabled::{clear, configure, configure_from_spec, exclusive, hit, hits};
+
+// --- disabled arm ---------------------------------------------------------
+
+#[cfg(not(feature = "failpoints"))]
+mod disabled {
+    use super::*;
+
+    /// Constant `false`: the compiler folds the branch away, so the
+    /// default build contains zero failpoint branches.
+    #[inline(always)]
+    pub fn hit(_site: Site) -> bool {
+        false
+    }
+
+    /// Validates the spec, then reports that injection is compiled out —
+    /// a silently ignored `--fail-spec` would be worse than an error.
+    pub fn configure_from_spec(spec: &str) -> Result<(), String> {
+        parse_spec(spec)?;
+        Err("this build has no fault injection (rebuild with `--features failpoints`)".into())
+    }
+
+    pub fn configure(_site: Site, _cfg: SiteConfig) {}
+    pub fn clear() {}
+    pub fn hits(_site: Site) -> u64 {
+        0
+    }
+}
+
+#[cfg(not(feature = "failpoints"))]
+pub use disabled::{clear, configure, configure_from_spec, hit, hits};
+
+/// Read `PARMCE_FAIL_SPEC` if set; `Ok(false)` when absent.
+pub fn init_from_env() -> Result<bool, String> {
+    match std::env::var("PARMCE_FAIL_SPEC") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            configure_from_spec(&spec)?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_every_form() {
+        let parsed = parse_spec(
+            "sink-emit=panic:@100, pool-spawn=error, service-freeze=error:0.5:42, dynamic-apply=delay(20)",
+        )
+        .unwrap();
+        assert_eq!(parsed.len(), 4);
+        assert_eq!(parsed[0].0, Site::SinkEmit);
+        assert_eq!(parsed[0].1.action, Action::Panic);
+        assert_eq!(parsed[0].1.trigger, Trigger::OnHit(100));
+        assert_eq!(parsed[1].1.action, Action::ReturnError);
+        assert_eq!(parsed[1].1.trigger, Trigger::Always);
+        assert_eq!(parsed[2].1.trigger, Trigger::Prob(0.5));
+        assert_eq!(parsed[2].1.seed, 42);
+        assert_eq!(parsed[3].1.action, Action::Delay(20));
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(parse_spec("nope=panic").is_err());
+        assert!(parse_spec("sink-emit").is_err());
+        assert!(parse_spec("sink-emit=explode").is_err());
+        assert!(parse_spec("sink-emit=panic:@0").is_err());
+        assert!(parse_spec("sink-emit=panic:1.5").is_err());
+        assert!(parse_spec("sink-emit=delay(x)").is_err());
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in Site::ALL {
+            assert_eq!(Site::parse(site.name()), Some(site));
+        }
+        assert_eq!(Site::parse("bogus"), None);
+    }
+
+    #[cfg(feature = "failpoints")]
+    mod armed {
+        use super::*;
+
+        #[test]
+        fn error_action_fires_on_exact_hit() {
+            let _g = exclusive();
+            clear();
+            configure(
+                Site::MembudgetCharge,
+                SiteConfig {
+                    action: Action::ReturnError,
+                    trigger: Trigger::OnHit(3),
+                    seed: 0,
+                },
+            );
+            let fired: Vec<bool> = (0..5).map(|_| hit(Site::MembudgetCharge)).collect();
+            assert_eq!(fired, vec![false, false, true, false, false]);
+            assert_eq!(hits(Site::MembudgetCharge), 5);
+            clear();
+        }
+
+        #[test]
+        fn prob_schedule_is_deterministic_and_roughly_calibrated() {
+            let _g = exclusive();
+            let run = || {
+                clear();
+                configure(
+                    Site::MembudgetCharge,
+                    SiteConfig {
+                        action: Action::ReturnError,
+                        trigger: Trigger::Prob(0.3),
+                        seed: 7,
+                    },
+                );
+                let v: Vec<bool> = (0..1000).map(|_| hit(Site::MembudgetCharge)).collect();
+                clear();
+                v
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "same seed must give the same schedule");
+            let fires = a.iter().filter(|&&f| f).count();
+            assert!((150..450).contains(&fires), "p=0.3 fired {fires}/1000");
+        }
+
+        #[test]
+        fn panic_action_unwinds_with_site_in_message() {
+            let _g = exclusive();
+            clear();
+            configure(
+                Site::SinkMerge,
+                SiteConfig {
+                    action: Action::Panic,
+                    trigger: Trigger::Always,
+                    seed: 0,
+                },
+            );
+            let err = std::panic::catch_unwind(|| hit(Site::SinkMerge)).unwrap_err();
+            clear();
+            let msg = err
+                .downcast_ref::<String>()
+                .expect("panic payload is a String");
+            assert_eq!(msg, "failpoint sink-merge: injected panic");
+        }
+
+        #[test]
+        fn unarmed_sites_never_fire() {
+            let _g = exclusive();
+            clear();
+            for site in Site::ALL {
+                assert!(!hit(site));
+            }
+        }
+    }
+}

@@ -55,6 +55,14 @@ impl MemBudget {
 
     /// Charge `bytes`; error if the running total would exceed the cap.
     pub fn charge(&self, bytes: usize) -> Result<(), BudgetError> {
+        // `membudget-charge` failpoint: `error` makes this reservation
+        // the one that trips the budget (an injected alloc denial).
+        if crate::util::failpoints::hit(crate::util::failpoints::Site::MembudgetCharge) {
+            return Err(BudgetError::OutOfBudget {
+                attempted: usize::MAX,
+                cap: self.cap,
+            });
+        }
         let prev = self.used.fetch_add(bytes, Ordering::Relaxed);
         let now = prev + bytes;
         self.peak.fetch_max(now, Ordering::Relaxed);

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod bitset;
 pub mod chashmap;
+pub mod failpoints;
 pub mod json;
 #[cfg(loom)]
 pub mod loom_shim;

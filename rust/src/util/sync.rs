@@ -60,6 +60,49 @@ pub mod atomic {
     pub use std::sync::atomic::Ordering;
 }
 
+// --- poison-immune locking -----------------------------------------------
+
+/// Lock `m`, recovering the guard even if another thread panicked while
+/// holding it (ISSUE 9: panic-safe pool).
+///
+/// `std`'s lock poisoning turns one panic into a cascade: every later
+/// `lock().unwrap()` on the same mutex re-panics, so a single failed
+/// subproblem can take down sibling workers, the scope join, and the whole
+/// session.  Our panic-safety contract is enforced structurally instead —
+/// the pool catches unwinds at the job boundary and re-surfaces the first
+/// payload at scope join ([`RunOutcome::Panicked`]
+/// (crate::session::RunOutcome)) — so poison adds no protection here, only
+/// the cascade.  Every crate-internal lock therefore goes through `plock`;
+/// `cargo xtask lint-invariants` (rule `no-lock-unwrap`) forbids
+/// `lock().unwrap()` / `lock().expect(` outside this seam.
+///
+/// The data-consistency caveat is real but bounded: a guard recovered from
+/// a poisoned mutex may see state mid-update.  Crate locks guard
+/// append/swap-shaped state (queues, buffers, snapshot cells) whose
+/// invariants hold between statements, and results from a panicked scope
+/// are only ever reported as partial.
+#[inline]
+pub fn plock<'a, T: ?Sized>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`Condvar::wait_timeout`] with the same poison-immune discipline as
+/// [`plock`]: a panic elsewhere must never cascade into a waiting thread.
+#[inline]
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    match cv.wait_timeout(guard, dur) {
+        Ok(r) => r,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 // --- audited lifetime-erasure surface ------------------------------------
 
 /// Witness that a pool scope pins the lifetime of shared borrows.

@@ -1,0 +1,358 @@
+//! Chaos suite (ISSUE 9): randomized, seeded fault schedules injected at
+//! the failpoint seams, asserting the crate's resilience contract —
+//! **every run returns a structured `RunReport`** (no hang, no abort, no
+//! poisoned-lock cascade), faults carry partial progress, and schedules
+//! that inject nothing leave results bit-identical to the oracle.
+//!
+//! Compiled only with `--features failpoints`; the registry is
+//! process-global, so every test serializes on `failpoints::exclusive()`.
+
+#![cfg(feature = "failpoints")]
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::dynamic::stream::EdgeStream;
+use parmce::graph::generators;
+use parmce::mce::oracle;
+use parmce::service::{serve_replay, CliqueService, DriverConfig};
+use parmce::session::{Algo, DynAlgo, DynamicSession, MceSession, RunOutcome, WriterFormat};
+use parmce::util::failpoints as fp;
+use parmce::util::rng::Rng;
+
+/// Hard cap on any single chaos run: a fault that hangs a join or strands
+/// a reader loop fails loudly here instead of wedging CI.
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+/// Run `f` on its own thread; panic if it neither returns nor panics
+/// within [`WATCHDOG`].  A panic in `f` is re-raised on the caller so
+/// `#[should_panic]`-free tests still report the real failure.
+fn with_watchdog<T: Send + 'static>(f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(v) => {
+            let _ = worker.join();
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => match worker.join() {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) => unreachable!("sender dropped without sending or panicking"),
+        },
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: chaos run did not return within {WATCHDOG:?}")
+        }
+    }
+}
+
+fn arm(site: fp::Site, action: fp::Action, trigger: fp::Trigger, seed: u64) {
+    fp::configure(
+        site,
+        fp::SiteConfig {
+            action,
+            trigger,
+            seed,
+        },
+    );
+}
+
+/// Every algorithm × every fault action, on a randomized (but seeded —
+/// reruns see the same schedule) hit index at the universal `sink-emit`
+/// seam, with `pool-dequeue` armed alongside for the parallel engines.
+/// The single assertion that matters: a `RunReport` always comes back,
+/// and it carries partial progress exactly when the run did not complete.
+#[test]
+fn every_algo_survives_every_fault_action() {
+    let _x = fp::exclusive();
+    let g = generators::gnp(26, 0.3, 9);
+    let actions = [
+        fp::Action::Panic,
+        fp::Action::ReturnError,
+        fp::Action::Delay(1),
+    ];
+    for (ai, &algo) in Algo::ALL.iter().enumerate() {
+        for (bi, &action) in actions.iter().enumerate() {
+            let mut rng = Rng::new(0xC0FFEE ^ ((ai as u64) << 8) ^ bi as u64);
+            // fires somewhere in the first ~40 emits — sometimes mid-run,
+            // sometimes past the end (a schedule that never fires is a
+            // valid schedule and must complete normally)
+            let k = 1 + rng.gen_range(40);
+            fp::clear();
+            arm(fp::Site::SinkEmit, action, fp::Trigger::OnHit(k), k);
+            if action == fp::Action::Panic {
+                arm(
+                    fp::Site::PoolDequeue,
+                    action,
+                    fp::Trigger::OnHit(3 + rng.gen_range(20)),
+                    k,
+                );
+            }
+            let g = g.clone();
+            let report = with_watchdog(move || {
+                let session = MceSession::builder()
+                    .graph(g)
+                    .algo(algo)
+                    .threads(2)
+                    .build()
+                    .unwrap();
+                session.count(algo)
+            });
+            fp::clear();
+            assert_eq!(report.algo, algo);
+            assert_eq!(
+                report.partial.is_some(),
+                report.outcome != RunOutcome::Completed,
+                "{algo:?}/{action:?}: partial must accompany exactly the faulted outcomes \
+                 (got {:?})",
+                report.outcome
+            );
+            if let RunOutcome::Panicked { site, message } = &report.outcome {
+                assert!(
+                    site == "sink-emit" || site == "pool-dequeue",
+                    "{algo:?}: panic attributed to unexpected site {site} ({message})"
+                );
+            }
+        }
+    }
+}
+
+/// Schedules that inject nothing — unarmed, armed-but-never-firing, and
+/// delay-only — must leave every algorithm's clique count identical to
+/// the sequential oracle.
+#[test]
+fn zero_fault_schedules_match_oracle() {
+    let _x = fp::exclusive();
+    let g = generators::gnp(24, 0.3, 17);
+    let want = oracle::maximal_cliques(&g).len() as u64;
+    for &algo in Algo::ALL.iter() {
+        for schedule in 0..3u32 {
+            fp::clear();
+            match schedule {
+                0 => {} // registry empty
+                1 => arm(
+                    // armed but out of reach: the graph has nowhere near
+                    // a million cliques
+                    fp::Site::SinkEmit,
+                    fp::Action::Panic,
+                    fp::Trigger::OnHit(1_000_000),
+                    0,
+                ),
+                _ => arm(
+                    // delay perturbs timing only, never results
+                    fp::Site::SinkEmit,
+                    fp::Action::Delay(1),
+                    fp::Trigger::OnHit(3),
+                    0,
+                ),
+            }
+            let g = g.clone();
+            let report = with_watchdog(move || {
+                let session = MceSession::builder()
+                    .graph(g)
+                    .algo(algo)
+                    .threads(2)
+                    .build()
+                    .unwrap();
+                session.count(algo)
+            });
+            fp::clear();
+            assert_eq!(
+                report.outcome,
+                RunOutcome::Completed,
+                "{algo:?} schedule {schedule}"
+            );
+            assert!(report.partial.is_none(), "{algo:?} schedule {schedule}");
+            assert_eq!(report.cliques, want, "{algo:?} schedule {schedule}");
+        }
+    }
+}
+
+/// ISSUE 9 acceptance: a panic injected mid-enumeration into a 4-thread
+/// ParTTT run yields `RunOutcome::Panicked` with non-empty partial
+/// progress — the cliques emitted before the fault survive the unwind.
+#[test]
+fn parttt_mid_run_panic_yields_partial_progress() {
+    let _x = fp::exclusive();
+    fp::clear();
+    let g = generators::gnp(40, 0.3, 5);
+    assert!(
+        oracle::maximal_cliques(&g).len() > 20,
+        "graph too sparse to panic mid-run"
+    );
+    // hits 1..=9 emit normally, the 10th emit unwinds its worker
+    arm(
+        fp::Site::SinkEmit,
+        fp::Action::Panic,
+        fp::Trigger::OnHit(10),
+        0,
+    );
+    let report = with_watchdog(move || {
+        let session = MceSession::builder()
+            .graph(g)
+            .algo(Algo::ParTtt)
+            .threads(4)
+            .build()
+            .unwrap();
+        session.count(Algo::ParTtt)
+    });
+    fp::clear();
+    match &report.outcome {
+        RunOutcome::Panicked { site, message } => {
+            assert_eq!(site, "sink-emit");
+            assert_eq!(message, "failpoint sink-emit: injected panic");
+        }
+        other => panic!("expected Panicked, got {other:?}"),
+    }
+    let partial = report.partial.as_ref().expect("faulted run carries partial");
+    assert!(
+        !partial.is_empty(),
+        "nine emits preceded the fault, partial must be non-empty: {partial:?}"
+    );
+    assert!(partial.cliques_emitted >= 9);
+    assert_eq!(partial.cliques_emitted, report.cliques);
+}
+
+/// ISSUE 9 acceptance: a panic injected into the serve-replay writer
+/// (at the epoch-publish seam) ends the replay with a `Panicked` outcome
+/// and a partial report — readers stop, the scope drains, nothing hangs.
+#[test]
+fn serve_replay_publish_panic_degrades_gracefully() {
+    let _x = fp::exclusive();
+    fp::clear();
+    let g = generators::gnp(14, 0.4, 21);
+    // the first batch publishes epoch 1 cleanly; the second publish panics
+    arm(
+        fp::Site::GraphPublish,
+        fp::Action::Panic,
+        fp::Trigger::OnHit(2),
+        0,
+    );
+    let report = with_watchdog(move || {
+        let stream = EdgeStream::permuted(&g, 3);
+        let mut svc = CliqueService::from_empty(stream.n, DynAlgo::Imce);
+        let pool = ThreadPool::new(2);
+        let cfg = DriverConfig {
+            batch_size: 5,
+            readers: 2,
+            queries_per_round: 4,
+            seed: 11,
+            ..DriverConfig::default()
+        };
+        serve_replay(&mut svc, &stream, &pool, &cfg)
+    });
+    fp::clear();
+    match &report.outcome {
+        RunOutcome::Panicked { site, .. } => assert_eq!(site, "graph-publish"),
+        other => panic!("expected Panicked, got {other:?}"),
+    }
+    let partial = report.partial.as_ref().expect("faulted replay carries partial");
+    assert_eq!(
+        partial.batches_applied, 1,
+        "exactly the pre-fault batch was applied: {partial:?}"
+    );
+    assert!(!partial.is_empty());
+    assert_eq!(report.updates, 1);
+}
+
+/// A `dynamic-apply` fault rejects a batch *before any mutation*: the
+/// error names the exact boundary, the session still sits on it, and —
+/// once the fault clears — replaying from that boundary converges to the
+/// oracle clique set.
+#[test]
+fn dynamic_batch_fault_reports_exact_boundary() {
+    let _x = fp::exclusive();
+    fp::clear();
+    let g = generators::gnp(16, 0.35, 13);
+    let stream = EdgeStream::permuted(&g, 7);
+    let want = oracle::maximal_cliques(&g).len();
+    // the 3rd admission check rejects its batch
+    arm(
+        fp::Site::DynamicApply,
+        fp::Action::ReturnError,
+        fp::Trigger::OnHit(3),
+        0,
+    );
+    let mut session = DynamicSession::from_empty(stream.n, DynAlgo::Imce);
+    let mut applied = 0usize;
+    let mut pending: Vec<Vec<_>> = Vec::new();
+    for batch in stream.batches(6) {
+        if !pending.is_empty() {
+            pending.push(batch.to_vec());
+            continue;
+        }
+        match session.try_apply_batch(batch) {
+            Ok(_) => applied += 1,
+            Err(e) => {
+                assert_eq!(applied, 2, "fault must strike the third batch");
+                assert_eq!(
+                    e.batches_applied, applied,
+                    "error reports the exact pre-fault boundary"
+                );
+                assert_eq!(e.batches_applied, session.batches_applied());
+                assert!(e.message.contains("dynamic-apply"));
+                assert_eq!(
+                    format!("{e}"),
+                    format!("{} ({} batches already applied)", e.message, e.batches_applied)
+                );
+                pending.push(batch.to_vec());
+            }
+        }
+    }
+    assert!(!pending.is_empty(), "the fault must have fired");
+    fp::clear();
+    // resume from the reported boundary: the rejected batch mutated
+    // nothing, so replaying it (and the rest) reaches the full C(G)
+    for batch in &pending {
+        session.apply_batch(batch);
+    }
+    assert_eq!(session.clique_count(), want);
+    assert_eq!(session.batches_applied(), 2 + pending.len());
+}
+
+/// A sticky I/O fault at the writer's flush seam mid-run: the session
+/// degrades to `RunOutcome::SinkFailed` with the pre-fault byte/clique
+/// accounting instead of panicking or silently truncating output.
+#[test]
+fn stream_sink_flush_fault_degrades_to_sink_failed() {
+    let _x = fp::exclusive();
+    fp::clear();
+    let g = generators::gnp(30, 0.3, 29);
+    let out = std::env::temp_dir().join(format!(
+        "parmce-chaos-{}-flush.ndjson",
+        std::process::id()
+    ));
+    arm(
+        fp::Site::SinkFlush,
+        fp::Action::ReturnError,
+        fp::Trigger::Always,
+        0,
+    );
+    let out_cl = out.clone();
+    let report = with_watchdog(move || {
+        let session = MceSession::builder()
+            .graph(g)
+            .algo(Algo::Ttt)
+            .threads(2)
+            .stream(&out_cl, WriterFormat::Ndjson)
+            .build()
+            .unwrap();
+        session.run().report
+    });
+    fp::clear();
+    let _ = std::fs::remove_file(&out);
+    match &report.outcome {
+        RunOutcome::SinkFailed { message } => {
+            assert!(
+                message.contains("sink-flush") || message.contains("flush"),
+                "sink error should name the flush fault: {message}"
+            );
+        }
+        other => panic!("expected SinkFailed, got {other:?}"),
+    }
+    let partial = report.partial.as_ref().expect("sink fault carries partial");
+    assert_eq!(partial.cliques_emitted, report.cliques);
+    assert!(!partial.is_empty(), "cliques were emitted before the flush fault");
+}

@@ -25,6 +25,12 @@
 //! 3. **no-stray-relaxed** — `Ordering::Relaxed` is allowed only in the
 //!    allowlisted statistics/hint files (see [`RELAXED_ALLOWLIST`]);
 //!    anywhere else it must be justified and allowlisted, or upgraded.
+//! 4. **no-lock-unwrap** (ISSUE 9) — `.lock().unwrap()` / `.lock().expect(`
+//!    may appear only in the sync seam (see [`LOCK_UNWRAP_ALLOWLIST`]).
+//!    Everywhere else locks go through `crate::util::sync::plock`, which
+//!    recovers poisoned guards: panic safety is enforced structurally at
+//!    the pool's job boundary, so poison `unwrap`s would only turn one
+//!    contained panic into a crate-wide cascade.
 //!
 //! The offline toolchain cannot vendor `syn`, so this is a line-oriented
 //! scanner: it strips `//` comments, `/* */` blocks and string literals
@@ -100,6 +106,24 @@ const RELAXED_ALLOWLIST: &[(&str, &str)] = &[
     ),
 ];
 
+/// Files allowed to `.lock().unwrap()` / `.lock().expect(`, each with the
+/// reason (printed by `--explain-allowlist`).  Everything else uses the
+/// poison-immune `plock`/`pwait_timeout` wrappers (ISSUE 9 rule
+/// `no-lock-unwrap`).
+const LOCK_UNWRAP_ALLOWLIST: &[(&str, &str)] = &[
+    (
+        "rust/src/util/sync.rs",
+        "the seam that defines the poison policy: plock/pwait_timeout unwrap \
+         LockResult by recovering the guard, so a raw lock() here is the \
+         implementation, not a bypass",
+    ),
+    (
+        "rust/src/util/loom_shim.rs",
+        "instrumented lock wrappers mirror std's LockResult surface; the shim \
+         is the other half of the sync seam",
+    ),
+];
+
 /// Cap on how many lines above an `unsafe` site are scanned for the
 /// `// SAFETY:` / `# Safety` marker; the scan also stops at the first
 /// code line, so this only bounds runaway doc blocks.
@@ -126,7 +150,12 @@ fn main() -> ExitCode {
                 root = args.get(i).map(PathBuf::from);
             }
             "--explain-allowlist" => {
+                println!("# no-stray-relaxed");
                 for (file, why) in RELAXED_ALLOWLIST {
+                    println!("{file}: {why}");
+                }
+                println!("# no-lock-unwrap");
+                for (file, why) in LOCK_UNWRAP_ALLOWLIST {
                     println!("{file}: {why}");
                 }
                 return ExitCode::SUCCESS;
@@ -535,6 +564,19 @@ fn lint_source(file: &Path, rel: &str, src: &str, full: bool) -> Vec<Violation> 
                     .to_string(),
             });
         }
+        if (code.contains(".lock().unwrap()") || code.contains(".lock().expect("))
+            && !LOCK_UNWRAP_ALLOWLIST.iter().any(|(f, _)| f == &rel)
+        {
+            violations.push(Violation {
+                file: file.to_path_buf(),
+                line: lineno,
+                rule: "no-lock-unwrap",
+                message: "poison-cascading lock acquisition outside the sync seam — use \
+                          `crate::util::sync::plock` (recovers poisoned guards; panic \
+                          safety is enforced at the pool job boundary)"
+                    .to_string(),
+            });
+        }
     }
     violations
 }
@@ -728,8 +770,29 @@ mod tests {
     }
 
     #[test]
+    fn lock_unwrap_flagged_outside_sync_seam() {
+        for src in [
+            "let g = self.shards[i].lock().unwrap();\n",
+            "let g = m.lock().expect(\"poisoned\");\n",
+        ] {
+            let v = lint_str(src, "rust/src/util/chashmap.rs", true);
+            assert_eq!(v.len(), 1, "{src:?} -> {v:?}");
+            assert_eq!(v[0].rule, "no-lock-unwrap");
+            // ... but sanctioned inside the seam that defines the policy
+            assert!(lint_str(src, "rust/src/util/sync.rs", true).is_empty());
+            assert!(lint_str(src, "rust/src/util/loom_shim.rs", true).is_empty());
+        }
+        // plock and into_inner are the sanctioned spellings everywhere
+        let src = "let g = plock(&m);\nlet v = m.into_inner().unwrap();\n";
+        assert!(lint_str(src, "rust/src/util/chashmap.rs", true).is_empty());
+        // mentions in comments/strings don't trip the rule
+        let src = "// forbid .lock().unwrap() here\nlet s = \".lock().expect(\";\n";
+        assert!(lint_str(src, "rust/src/util/chashmap.rs", true).is_empty());
+    }
+
+    #[test]
     fn tests_only_check_safety_rule() {
-        let src = "use std::sync::Mutex;\nx.load(Ordering::Relaxed);\n";
+        let src = "use std::sync::Mutex;\nx.load(Ordering::Relaxed);\nlet g = m.lock().unwrap();\n";
         assert!(lint_str(src, "rust/tests/t.rs", false).is_empty());
         let src = "unsafe { *p }\n";
         assert_eq!(lint_str(src, "rust/tests/t.rs", false).len(), 1);
