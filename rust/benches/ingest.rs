@@ -1,0 +1,62 @@
+//! Bench: the ingest & ranking pipeline (ISSUE 10) — sequential vs
+//! pool-parallel edge-list parsing, CSR construction, triangle counting
+//! and core decomposition at 1–8 threads on the clustered generator.
+//! Every parallel stage is exact-equal to its sequential reference, so
+//! these rows measure wall-clock only.  `cargo bench --bench ingest`
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::{degeneracy, edgelist, generators, triangles};
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // the clustered fixture: dense planted communities over a sparse
+    // background — enough triangle/core mass for ranking to matter
+    let g = generators::planted_cliques(3000, 0.0015, 30, 6, 16, 7);
+    let edges = g.edges();
+    let text = {
+        let mut t = String::with_capacity(edges.len() * 12);
+        for (u, v) in &edges {
+            t.push_str(&format!("{u} {v}\n"));
+        }
+        t
+    };
+
+    b.bench("ingest/parse/seq", || {
+        edgelist::parse_report(text.as_bytes()).unwrap().edges.len()
+    });
+    b.bench("ingest/csr/seq", || CsrGraph::from_edges(g.n(), &edges).m());
+    b.bench("ingest/tri/seq", || triangles::per_vertex(&g).len());
+    b.bench("ingest/degen/seq", || {
+        degeneracy::core_decomposition(&g).degeneracy
+    });
+    b.bench("ingest/rank_tri/seq", || {
+        Ranking::compute(&g, RankStrategy::Triangle).strategy()
+    });
+
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        b.bench(format!("ingest/parse/t{threads}"), || {
+            edgelist::parse_report_parallel(&text, &pool)
+                .unwrap()
+                .edges
+                .len()
+        });
+        b.bench(format!("ingest/csr/t{threads}"), || {
+            CsrGraph::from_edges_parallel(g.n(), &edges, &pool).m()
+        });
+        b.bench(format!("ingest/tri/t{threads}"), || {
+            triangles::per_vertex_parallel(&g, &pool).len()
+        });
+        b.bench(format!("ingest/degen/t{threads}"), || {
+            // cutoff 0: always exercise the level-peeling path
+            degeneracy::core_decomposition_parallel_with_cutoff(&g, &pool, 0).degeneracy
+        });
+        b.bench(format!("ingest/rank_tri/t{threads}"), || {
+            Ranking::compute_parallel(&g, RankStrategy::Triangle, &pool).strategy()
+        });
+    }
+    b.dump_json("results/bench_ingest.json");
+}

@@ -15,6 +15,8 @@ use crate::graph::csr::CsrGraph;
 use crate::graph::{norm_edge, Edge, Vertex};
 use crate::util::vset;
 
+/// Sorted-`Vec` adjacency lists with single-writer mutation — the
+/// reference mirror the delta-CSR snapshot store is checked against.
 #[derive(Clone, Debug, Default)]
 pub struct DynGraph {
     adj: Vec<Vec<Vertex>>,
@@ -22,6 +24,7 @@ pub struct DynGraph {
 }
 
 impl DynGraph {
+    /// The edgeless graph on `n` vertices.
     pub fn new(n: usize) -> Self {
         DynGraph {
             adj: vec![Vec::new(); n],
@@ -29,6 +32,7 @@ impl DynGraph {
         }
     }
 
+    /// Copy a static CSR graph into mutable adjacency lists.
     pub fn from_csr(g: &CsrGraph) -> Self {
         DynGraph {
             adj: (0..g.n()).map(|v| g.neighbors(v as Vertex).to_vec()).collect(),
@@ -36,6 +40,7 @@ impl DynGraph {
         }
     }
 
+    /// Materialize the current graph as a standalone [`CsrGraph`].
     pub fn to_csr(&self) -> CsrGraph {
         let mut edges = Vec::with_capacity(self.m);
         for (u, nbrs) in self.adj.iter().enumerate() {
@@ -48,26 +53,31 @@ impl DynGraph {
         CsrGraph::from_edges(self.n(), &edges)
     }
 
+    /// Number of vertices.
     #[inline]
     pub fn n(&self) -> usize {
         self.adj.len()
     }
 
+    /// Number of undirected edges.
     #[inline]
     pub fn m(&self) -> usize {
         self.m
     }
 
+    /// Sorted neighbour slice of `v`.
     #[inline]
     pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
         &self.adj[v as usize]
     }
 
+    /// Degree of `v`.
     #[inline]
     pub fn degree(&self, v: Vertex) -> usize {
         self.adj[v as usize].len()
     }
 
+    /// Is `{u, v}` an edge? (Binary search on the smaller list.)
     #[inline]
     pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
         if u == v {
@@ -126,6 +136,7 @@ impl DynGraph {
         vset::intersect(self.neighbors(u), self.neighbors(v))
     }
 
+    /// Are `verts` pairwise adjacent?
     pub fn is_clique(&self, verts: &[Vertex]) -> bool {
         for (i, &u) in verts.iter().enumerate() {
             for &v in &verts[i + 1..] {

@@ -4,20 +4,39 @@
 //! shared-memory advantage the paper leans on (§1: one copy of the graph,
 //! no partitioning).  Neighbour lists are sorted, so set algebra on them
 //! uses `util::vset` merge/gallop routines.
+//!
+//! Two constructors build the same graph: [`CsrGraph::from_edges`]
+//! (sequential) and [`CsrGraph::from_edges_parallel`] (the ingest
+//! pipeline's two-pass counting sort over a worker pool).  Both produce
+//! per-vertex **sorted, deduplicated** neighbour lists, so the outputs
+//! are bit-identical regardless of thread count or scatter order.
 
-use crate::graph::{norm_edge, Edge, Vertex};
+use crate::coordinator::pool::ThreadPool;
+use crate::graph::{balanced_ranges, norm_edge, Edge, Vertex};
+use crate::telemetry;
+use crate::util::sync::{plock, Mutex, ScopeShare};
 use crate::util::vset;
 
+/// Compressed-sparse-row adjacency: `offsets[v]..offsets[v+1]` indexes
+/// the sorted neighbour list of `v` inside one flat `nbrs` buffer.
 #[derive(Clone, Debug)]
 pub struct CsrGraph {
     offsets: Vec<usize>,
     nbrs: Vec<Vertex>,
 }
 
+/// Which contiguous vertex range owns vertex `v`, given the exclusive
+/// range end-points in ascending order (empty ranges have `end == start`
+/// of their successor, so lookup goes by end-point, not start-point).
+fn range_of(ends: &[usize], v: usize) -> usize {
+    ends.partition_point(|&e| e <= v)
+}
+
 impl CsrGraph {
     /// Build from an edge list; self-loops and duplicates are dropped,
     /// directions ignored (the paper's preprocessing, §6.1).
     pub fn from_edges(n: usize, edges: &[(Vertex, Vertex)]) -> Self {
+        let span = telemetry::SpanTimer::start();
         let mut norm: Vec<Edge> = edges
             .iter()
             .filter_map(|&(u, v)| norm_edge(u, v))
@@ -53,6 +72,174 @@ impl CsrGraph {
         for v in 0..n {
             nbrs[offsets[v]..offsets[v + 1]].sort_unstable();
         }
+        telemetry::global().ingest_csr_build_ns.record(span.elapsed_ns());
+        CsrGraph { offsets, nbrs }
+    }
+
+    /// [`from_edges`](Self::from_edges) fanned out across `pool` as a
+    /// two-pass counting sort:
+    ///
+    /// 1. per-worker edge chunks are normalized (self-loops dropped,
+    ///    `u < v`) into owned buffers alongside per-worker full-size
+    ///    degree histograms, merged into duplicate-inclusive prefix-sum
+    ///    offsets at the join;
+    /// 2. normalized edges are bucketed by degree-mass-balanced owner
+    ///    vertex range;
+    /// 3. each range scatters into its own slice of the neighbour
+    ///    buffer, then sorts **and dedups** each vertex's list.
+    ///
+    /// The final per-vertex lists are sorted duplicate-free sets, so the
+    /// result is bit-identical to the sequential constructor for every
+    /// thread count and scatter interleaving.  Out-of-range edges raise
+    /// the same panic as the sequential path (re-raised at the join).
+    pub fn from_edges_parallel(n: usize, edges: &[(Vertex, Vertex)], pool: &ThreadPool) -> Self {
+        let span = telemetry::SpanTimer::start();
+        let workers = pool.num_threads().max(1);
+
+        // SAFETY: every reference shared below (`edges`, the per-phase
+        // result mutexes, the shard/offset/end vectors) outlives the
+        // `pool.scope` call that observes it; each scope joins all its
+        // spawned tasks before returning, so no task holds a ScopedPtr
+        // past the borrow's life.
+        #[allow(unsafe_code)]
+        let share = unsafe { ScopeShare::new() };
+
+        // Phase 1: normalize chunks + per-worker degree histograms.
+        struct NormShard {
+            idx: usize,
+            norm: Vec<Edge>,
+            hist: Vec<u32>,
+        }
+        let chunk = edges.len().div_ceil(workers).max(1);
+        let phase1: Mutex<Vec<NormShard>> = Mutex::new(Vec::with_capacity(workers));
+        {
+            let src = share.share(edges);
+            let out = share.share(&phase1);
+            pool.scope(|s| {
+                for (idx, start) in (0..edges.len()).step_by(chunk).enumerate() {
+                    let (src, out) = (src, out);
+                    s.spawn(move |_| {
+                        let edges = src.get();
+                        let slice = &edges[start..(start + chunk).min(edges.len())];
+                        let mut hist = vec![0u32; n];
+                        let mut norm = Vec::with_capacity(slice.len());
+                        for &(u, v) in slice {
+                            if let Some((a, b)) = norm_edge(u, v) {
+                                assert!(
+                                    (b as usize) < n,
+                                    "edge ({a},{b}) out of range for n={n}"
+                                );
+                                hist[a as usize] += 1;
+                                hist[b as usize] += 1;
+                                norm.push((a, b));
+                            }
+                        }
+                        plock(out.get()).push(NormShard { idx, norm, hist });
+                    });
+                }
+            });
+        }
+        let mut shards = std::mem::take(&mut *plock(&phase1));
+        shards.sort_unstable_by_key(|sh| sh.idx);
+
+        // duplicate-inclusive degrees -> provisional scatter offsets
+        let mut tmp_off = Vec::with_capacity(n + 1);
+        tmp_off.push(0usize);
+        for v in 0..n {
+            let d: usize = shards.iter().map(|sh| sh.hist[v] as usize).sum();
+            tmp_off.push(tmp_off[v] + d);
+        }
+        let ranges = balanced_ranges(&tmp_off, workers);
+        let ends: Vec<usize> = ranges.iter().map(|&(_, hi)| hi).collect();
+
+        // Phase 2: bucket (owner, nbr) pairs by destination range.
+        let phase2: Mutex<Vec<(usize, Vec<Vec<(Vertex, Vertex)>>)>> =
+            Mutex::new(Vec::with_capacity(shards.len()));
+        {
+            let shards_p = share.share(shards.as_slice());
+            let ends_p = share.share(ends.as_slice());
+            let out = share.share(&phase2);
+            pool.scope(|s| {
+                for idx in 0..shards.len() {
+                    let (shards_p, ends_p, out) = (shards_p, ends_p, out);
+                    s.spawn(move |_| {
+                        let ends = ends_p.get();
+                        let mut buckets: Vec<Vec<(Vertex, Vertex)>> =
+                            vec![Vec::new(); ends.len()];
+                        for &(a, b) in &shards_p.get()[idx].norm {
+                            buckets[range_of(ends, a as usize)].push((a, b));
+                            buckets[range_of(ends, b as usize)].push((b, a));
+                        }
+                        plock(out.get()).push((idx, buckets));
+                    });
+                }
+            });
+        }
+        let mut bucketed = std::mem::take(&mut *plock(&phase2));
+        bucketed.sort_unstable_by_key(|(idx, _)| *idx);
+
+        // Phase 3: per-range scatter, then per-vertex sort + dedup.
+        struct RangeOut {
+            idx: usize,
+            nbrs: Vec<Vertex>,
+            deg: Vec<u32>,
+        }
+        let phase3: Mutex<Vec<RangeOut>> = Mutex::new(Vec::with_capacity(ranges.len()));
+        {
+            let bucketed_p = share.share(bucketed.as_slice());
+            let tmp_off_p = share.share(tmp_off.as_slice());
+            let out = share.share(&phase3);
+            pool.scope(|s| {
+                for (idx, &(lo, hi)) in ranges.iter().enumerate() {
+                    let (bucketed_p, tmp_off_p, out) = (bucketed_p, tmp_off_p, out);
+                    s.spawn(move |_| {
+                        let tmp_off = tmp_off_p.get();
+                        let base = tmp_off[lo];
+                        let mut buf = vec![0 as Vertex; tmp_off[hi] - base];
+                        let mut cursor: Vec<usize> =
+                            (lo..hi).map(|v| tmp_off[v] - base).collect();
+                        for (_, buckets) in bucketed_p.get() {
+                            for &(owner, nbr) in &buckets[idx] {
+                                let slot = owner as usize - lo;
+                                buf[cursor[slot]] = nbr;
+                                cursor[slot] += 1;
+                            }
+                        }
+                        let mut nbrs = Vec::with_capacity(buf.len());
+                        let mut deg = Vec::with_capacity(hi - lo);
+                        for v in lo..hi {
+                            let list = &mut buf[tmp_off[v] - base..tmp_off[v + 1] - base];
+                            list.sort_unstable();
+                            let before = nbrs.len();
+                            let mut prev = None;
+                            for &x in list.iter() {
+                                if Some(x) != prev {
+                                    nbrs.push(x);
+                                    prev = Some(x);
+                                }
+                            }
+                            deg.push((nbrs.len() - before) as u32);
+                        }
+                        plock(out.get()).push(RangeOut { idx, nbrs, deg });
+                    });
+                }
+            });
+        }
+        let mut range_outs = std::mem::take(&mut *plock(&phase3));
+        range_outs.sort_unstable_by_key(|ro| ro.idx);
+
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        for ro in &range_outs {
+            for &d in &ro.deg {
+                offsets.push(offsets.last().unwrap() + d as usize);
+            }
+        }
+        let mut nbrs = Vec::with_capacity(offsets[n]);
+        for ro in &mut range_outs {
+            nbrs.append(&mut ro.nbrs);
+        }
+        telemetry::global().ingest_csr_build_ns.record(span.elapsed_ns());
         CsrGraph { offsets, nbrs }
     }
 
@@ -74,11 +261,13 @@ impl CsrGraph {
         &self.nbrs[self.offsets[v as usize]..self.offsets[v as usize + 1]]
     }
 
+    /// Number of neighbours of `v`.
     #[inline]
     pub fn degree(&self, v: Vertex) -> usize {
         self.offsets[v as usize + 1] - self.offsets[v as usize]
     }
 
+    /// Adjacency test via binary search on the smaller neighbour list.
     #[inline]
     pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
         let (a, b) = if self.degree(u) <= self.degree(v) {
@@ -89,6 +278,7 @@ impl CsrGraph {
         vset::contains(self.neighbors(a), b)
     }
 
+    /// Iterator over all vertex ids, `0..n`.
     pub fn vertices(&self) -> impl Iterator<Item = Vertex> + '_ {
         0..self.n() as Vertex
     }
@@ -106,10 +296,12 @@ impl CsrGraph {
         out
     }
 
+    /// Largest vertex degree (0 for the empty graph).
     pub fn max_degree(&self) -> usize {
         (0..self.n()).map(|v| self.degree(v as Vertex)).max().unwrap_or(0)
     }
 
+    /// Edge density `2m / n(n-1)` (0 for graphs with fewer than 2 vertices).
     pub fn density(&self) -> f64 {
         let n = self.n() as f64;
         if n < 2.0 {
@@ -237,5 +429,58 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn out_of_range_edge_panics() {
         CsrGraph::from_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics_in_parallel_build() {
+        let pool = ThreadPool::new(2);
+        CsrGraph::from_edges_parallel(2, &[(0, 1), (0, 5)], &pool);
+    }
+
+    #[test]
+    fn parallel_build_matches_sequential() {
+        // messy input: duplicates both ways, self-loops, skewed degrees
+        let mut edges: Vec<Edge> = Vec::new();
+        for v in 1..40u32 {
+            edges.push((0, v)); // hub
+            edges.push((v, 0)); // reversed duplicate
+            edges.push((v, v)); // self-loop
+            edges.push((v, (v % 7) + 40));
+        }
+        let n = 47;
+        let seq = CsrGraph::from_edges(n, &edges);
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let par = CsrGraph::from_edges_parallel(n, &edges, &pool);
+            assert_eq!(par.n(), seq.n(), "threads={threads}");
+            assert_eq!(par.m(), seq.m(), "threads={threads}");
+            for v in 0..n as Vertex {
+                assert_eq!(par.neighbors(v), seq.neighbors(v), "threads={threads} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_handles_degenerate_shapes() {
+        let pool = ThreadPool::new(4);
+        let empty = CsrGraph::from_edges_parallel(0, &[], &pool);
+        assert_eq!(empty.n(), 0);
+        assert_eq!(empty.m(), 0);
+        let isolated = CsrGraph::from_edges_parallel(3, &[], &pool);
+        assert_eq!(isolated.n(), 3);
+        assert_eq!(isolated.m(), 0);
+        assert_eq!(isolated.neighbors(1), &[] as &[Vertex]);
+    }
+
+    #[test]
+    fn range_of_skips_empty_ranges() {
+        // ranges (0,0), (0,2), (2,2), (2,5): lookups must land in the
+        // non-empty range containing v, never an empty predecessor
+        let ends = [0, 2, 2, 5];
+        assert_eq!(range_of(&ends, 0), 1);
+        assert_eq!(range_of(&ends, 1), 1);
+        assert_eq!(range_of(&ends, 2), 3);
+        assert_eq!(range_of(&ends, 4), 3);
     }
 }

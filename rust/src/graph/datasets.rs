@@ -23,14 +23,19 @@ pub enum Scale {
 /// Published Table 3 row (for paper-vs-measured reporting).
 #[derive(Clone, Copy, Debug)]
 pub struct PaperStats {
+    /// |V| as published.
     pub vertices: u64,
+    /// |E| as published.
     pub edges: u64,
     /// None = the paper reports "> 400 billion / did not finish".
     pub maximal_cliques: Option<u64>,
+    /// Average maximal clique size, where reported.
     pub avg_clique_size: Option<f64>,
+    /// Largest maximal clique size, where reported.
     pub max_clique_size: Option<u64>,
 }
 
+/// The eight evaluation graphs of Table 3, as synthetic analogs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dataset {
     /// DBLP-Coauthor: collaboration cliques, some very large (size ≤ 119).
@@ -52,6 +57,7 @@ pub enum Dataset {
     CaCitHepThLike,
 }
 
+/// The five graphs of the static experiments (Tables 4–8).
 pub const STATIC_DATASETS: [Dataset; 5] = [
     Dataset::DblpLike,
     Dataset::OrkutLike,
@@ -60,6 +66,7 @@ pub const STATIC_DATASETS: [Dataset; 5] = [
     Dataset::WikipediaLike,
 ];
 
+/// The five graphs of the dynamic experiments (§6.3, Fig. 8/9).
 pub const DYNAMIC_DATASETS: [Dataset; 5] = [
     Dataset::DblpLike,
     Dataset::FlickrLike,
@@ -69,6 +76,7 @@ pub const DYNAMIC_DATASETS: [Dataset; 5] = [
 ];
 
 impl Dataset {
+    /// CLI spelling (`--dataset` values).
     pub fn name(&self) -> &'static str {
         match self {
             Dataset::DblpLike => "dblp-like",
@@ -82,6 +90,7 @@ impl Dataset {
         }
     }
 
+    /// The dataset's name as printed in the paper.
     pub fn paper_name(&self) -> &'static str {
         match self {
             Dataset::DblpLike => "DBLP-Coauthor",
@@ -95,6 +104,7 @@ impl Dataset {
         }
     }
 
+    /// Every dataset analog, in Table 3 order.
     pub fn all() -> [Dataset; 8] {
         [
             Dataset::DblpLike,

@@ -3,10 +3,26 @@
 //! Used for (a) the degeneracy-based vertex ranking of ParMCE (§4.2) and
 //! (b) the BKDegeneracy baseline of Eppstein–Löffler–Strash (Table 10).
 //! O(n + m) bucket peeling.
+//!
+//! Two entry points: [`core_decomposition`] (sequential bucket peeling)
+//! and [`core_decomposition_parallel`] (frontier-based level peeling à la
+//! ParK, run on the ingest pool).  Both assign the **identical** `core`
+//! array and degeneracy — the parallel path peels whole k-shells level by
+//! level, which is the same fixpoint the sequential running-max peel
+//! computes — and both produce a *valid* degeneracy order (≤ degeneracy
+//! later neighbours per vertex), though the two orders generally differ:
+//! bucket peeling breaks min-degree ties one vertex at a time, level
+//! peeling retires an entire frontier per sub-round (ascending vertex id,
+//! so the parallel order is deterministic for every thread count).
 
+use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
 use crate::graph::Vertex;
+use crate::util::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use crate::util::sync::{plock, Mutex, ScopeShare};
 
+/// Result of peeling a graph to its cores: per-vertex core numbers plus
+/// a degeneracy order and its inverse permutation.
 #[derive(Clone, Debug)]
 pub struct CoreDecomposition {
     /// core number (degeneracy number, paper §4.2) per vertex
@@ -85,6 +101,180 @@ pub fn core_decomposition(g: &CsrGraph) -> CoreDecomposition {
             p
         },
         order: vert,
+        degeneracy,
+    }
+}
+
+/// Below this vertex count [`core_decomposition_parallel`] falls back to
+/// the sequential bucket peel: per-level scan overhead only pays off
+/// once the graph is large enough to amortize the scope joins.
+pub const PAR_PEEL_CUTOFF: usize = 1 << 13;
+
+/// [`core_decomposition`] computed by frontier-based parallel level
+/// peeling (the ParK scheme) on `pool`, with the default
+/// [`PAR_PEEL_CUTOFF`] fallback.
+///
+/// The `core` array and `degeneracy` are identical to the sequential
+/// result; the `order` is a valid degeneracy order (every vertex has at
+/// most `degeneracy` later neighbours) and is deterministic across
+/// thread counts, but differs from the sequential tie-breaking — callers
+/// that need *the* Matula–Beck order must use [`core_decomposition`].
+pub fn core_decomposition_parallel(g: &CsrGraph, pool: &ThreadPool) -> CoreDecomposition {
+    core_decomposition_parallel_with_cutoff(g, pool, PAR_PEEL_CUTOFF)
+}
+
+/// [`core_decomposition_parallel`] with an explicit sequential-fallback
+/// cutoff (tests pass 0 to force the parallel path on small graphs).
+pub fn core_decomposition_parallel_with_cutoff(
+    g: &CsrGraph,
+    pool: &ThreadPool,
+    cutoff: usize,
+) -> CoreDecomposition {
+    let n = g.n();
+    if n == 0 || n < cutoff || pool.num_threads() <= 1 {
+        return core_decomposition(g);
+    }
+    let workers = pool.num_threads();
+
+    // Peel state shared with the workers.  Phase boundaries are scope
+    // joins, so plain Relaxed atomics suffice: `deg[v]` always equals
+    // the number of unpeeled neighbours of an unpeeled `v` at every
+    // join, and fetch_sub's RMW atomicity hands exactly one worker the
+    // `k+1 -> k` crossing of each vertex per level.
+    let deg: Vec<AtomicU32> = (0..n)
+        .map(|v| AtomicU32::new(g.degree(v as Vertex) as u32))
+        .collect();
+    let peeled: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let mut core = vec![0u32; n];
+    let mut order: Vec<Vertex> = Vec::with_capacity(n);
+
+    let vchunk = n.div_ceil(workers).max(1);
+    let scan_ranges: Vec<(usize, usize)> = (0..n)
+        .step_by(vchunk)
+        .map(|lo| (lo, (lo + vchunk).min(n)))
+        .collect();
+
+    // SAFETY: every reference shared below (`g`, `deg`, `peeled`, the
+    // frontier slices and per-phase result mutexes) outlives the
+    // `pool.scope` call that observes it; each scope joins all spawned
+    // tasks before returning, so no task holds a ScopedPtr past the
+    // borrow's life.
+    #[allow(unsafe_code)]
+    let share = unsafe { ScopeShare::new() };
+    let g_p = share.share(g);
+    let deg_p = share.share(deg.as_slice());
+    let peeled_p = share.share(peeled.as_slice());
+
+    let mut remaining = n;
+    let mut degeneracy = 0u32;
+    while remaining > 0 {
+        // Level jump: parallel min-scan over unpeeled vertices; each
+        // range also collects its min-degree vertices so the seed
+        // frontier falls out of the same pass (ranges are concatenated
+        // in ascending order, so the frontier is sorted by id).
+        let scan: Mutex<Vec<(usize, u32, Vec<Vertex>)>> =
+            Mutex::new(Vec::with_capacity(scan_ranges.len()));
+        {
+            let out = share.share(&scan);
+            pool.scope(|s| {
+                for (idx, &(lo, hi)) in scan_ranges.iter().enumerate() {
+                    let (deg_p, peeled_p, out) = (deg_p, peeled_p, out);
+                    s.spawn(move |_| {
+                        let (deg, peeled) = (deg_p.get(), peeled_p.get());
+                        let mut min = u32::MAX;
+                        let mut seed = Vec::new();
+                        for v in lo..hi {
+                            if peeled[v].load(Ordering::Relaxed) {
+                                continue;
+                            }
+                            let d = deg[v].load(Ordering::Relaxed);
+                            if d < min {
+                                min = d;
+                                seed.clear();
+                            }
+                            if d == min {
+                                seed.push(v as Vertex);
+                            }
+                        }
+                        plock(out.get()).push((idx, min, seed));
+                    });
+                }
+            });
+        }
+        let mut shards = std::mem::take(&mut *plock(&scan));
+        shards.sort_unstable_by_key(|(idx, _, _)| *idx);
+        let k = shards.iter().map(|&(_, m, _)| m).min().unwrap_or(u32::MAX);
+        debug_assert_ne!(k, u32::MAX, "unpeeled vertices must remain");
+        let mut frontier: Vec<Vertex> = Vec::new();
+        for (_, m, seed) in shards {
+            if m == k {
+                frontier.extend(seed);
+            }
+        }
+        degeneracy = degeneracy.max(k);
+
+        // Sub-rounds: retire the frontier, then decrement its unpeeled
+        // neighbours in parallel.  A neighbour is collected for the next
+        // sub-round exactly when its degree crosses k+1 -> k: decrements
+        // are unit steps, so the counter passes through every value and
+        // the unique fetch_sub return of k+1 fires once per vertex.
+        while !frontier.is_empty() {
+            for &v in &frontier {
+                core[v as usize] = k;
+                peeled[v as usize].store(true, Ordering::Relaxed);
+            }
+            remaining -= frontier.len();
+            order.extend_from_slice(&frontier);
+
+            let next: Mutex<Vec<(usize, Vec<Vertex>)>> = Mutex::new(Vec::new());
+            let fchunk = frontier.len().div_ceil(workers).max(1);
+            {
+                let f_p = share.share(frontier.as_slice());
+                let out = share.share(&next);
+                pool.scope(|s| {
+                    for (idx, lo) in (0..frontier.len()).step_by(fchunk).enumerate() {
+                        let (g_p, deg_p, peeled_p, f_p, out) =
+                            (g_p, deg_p, peeled_p, f_p, out);
+                        s.spawn(move |_| {
+                            let f = f_p.get();
+                            let (deg, peeled) = (deg_p.get(), peeled_p.get());
+                            let hi = (lo + fchunk).min(f.len());
+                            let mut found = Vec::new();
+                            for &v in &f[lo..hi] {
+                                for &u in g_p.get().neighbors(v) {
+                                    if peeled[u as usize].load(Ordering::Relaxed) {
+                                        continue;
+                                    }
+                                    let prev =
+                                        deg[u as usize].fetch_sub(1, Ordering::Relaxed);
+                                    if prev == k + 1 {
+                                        found.push(u);
+                                    }
+                                }
+                            }
+                            plock(out.get()).push((idx, found));
+                        });
+                    }
+                });
+            }
+            let mut shards = std::mem::take(&mut *plock(&next));
+            shards.sort_unstable_by_key(|(idx, _)| *idx);
+            let mut nf: Vec<Vertex> = shards.into_iter().flat_map(|(_, f)| f).collect();
+            // the crossing *set* is determined by the frontier alone, so
+            // sorting makes the order thread-count-independent
+            nf.sort_unstable();
+            frontier = nf;
+        }
+    }
+
+    let mut pos = vec![0u32; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v as usize] = i as u32;
+    }
+    CoreDecomposition {
+        core,
+        order,
+        pos,
         degeneracy,
     }
 }
@@ -177,5 +367,68 @@ mod tests {
         let g = generators::moon_moser(4); // 12 vertices, each degree 9
         let d = core_decomposition(&g);
         assert_eq!(d.degeneracy, 9);
+    }
+
+    #[test]
+    fn parallel_core_matches_sequential() {
+        let cases = vec![
+            generators::complete(6),
+            CsrGraph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4)]),
+            generators::gnp(200, 0.05, 12),
+            generators::moon_moser(4),
+            CsrGraph::from_edges(4, &[]), // isolated vertices: core 0
+        ];
+        for g in &cases {
+            let seq = core_decomposition(g);
+            for threads in [2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let par = core_decomposition_parallel_with_cutoff(g, &pool, 0);
+                assert_eq!(par.core, seq.core, "threads={threads}");
+                assert_eq!(par.degeneracy, seq.degeneracy, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_order_is_valid_and_thread_count_independent() {
+        let g = generators::gnp(180, 0.07, 31);
+        let base = {
+            let pool = ThreadPool::new(2);
+            core_decomposition_parallel_with_cutoff(&g, &pool, 0)
+        };
+        // validity: ≤ degeneracy later neighbours per vertex
+        for (i, &v) in base.order.iter().enumerate() {
+            let later = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| (base.pos[u as usize] as usize) > i)
+                .count();
+            assert!(later <= base.degeneracy as usize);
+        }
+        // permutation + inverse
+        let mut sorted = base.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..180).collect::<Vec<_>>());
+        for (i, &v) in base.order.iter().enumerate() {
+            assert_eq!(base.pos[v as usize] as usize, i);
+        }
+        // the parallel order is deterministic across thread counts
+        for threads in [4, 8] {
+            let pool = ThreadPool::new(threads);
+            let d = core_decomposition_parallel_with_cutoff(&g, &pool, 0);
+            assert_eq!(d.order, base.order, "threads={threads}");
+            assert_eq!(d.pos, base.pos);
+        }
+    }
+
+    #[test]
+    fn parallel_cutoff_falls_back_to_sequential() {
+        let g = generators::gnp(50, 0.1, 5);
+        let pool = ThreadPool::new(4);
+        let seq = core_decomposition(&g);
+        // below the cutoff the sequential order comes back verbatim
+        let par = core_decomposition_parallel_with_cutoff(&g, &pool, usize::MAX);
+        assert_eq!(par.order, seq.order);
+        assert_eq!(par.core, seq.core);
     }
 }

@@ -3,25 +3,47 @@
 //!
 //! Format: one edge per line, `u v` or `u v t` (timestamp), `#`/`%`
 //! comments, whitespace-separated — covering SNAP and KONECT conventions.
+//!
+//! Two parsing paths share one line grammar and one merge semantics:
+//!
+//! * [`parse_report`] — sequential, streaming from any [`BufRead`].
+//! * [`parse_report_parallel`] — the ingest-pipeline path: the input is
+//!   split into per-worker chunks at newline boundaries, each worker
+//!   scans its chunk into an owned shard of raw records, and the shards
+//!   are merged **in chunk order** on the caller thread.  Interning
+//!   (first-appearance renumbering), synthetic timestamps (a monotone
+//!   accepted-edge counter) and self-loop counting all happen in the
+//!   merge, so the result is byte-identical to the sequential path for
+//!   any thread count — including error reporting, where the earliest
+//!   faulty line wins with the same message.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
 use crate::graph::Vertex;
+use crate::telemetry;
+use crate::util::sync::{plock, Mutex, ScopeShare};
 
+/// One parsed edge with its (possibly synthetic) timestamp.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TimedEdge {
+    /// First endpoint (densely renumbered).
     pub u: Vertex,
+    /// Second endpoint (densely renumbered).
     pub v: Vertex,
+    /// Timestamp: the third field when present, otherwise the number of
+    /// edges accepted before this one.
     pub t: u64,
 }
 
 /// Everything [`parse_report`] extracted from an edge list.
 #[derive(Clone, Debug)]
 pub struct ParseReport {
+    /// Accepted edges in input order (self-loops excluded).
     pub edges: Vec<TimedEdge>,
     /// Dense vertex count (every id that appeared, including self-loop
     /// endpoints).
@@ -30,6 +52,101 @@ pub struct ParseReport {
     /// (`CsrGraph::from_edges`) drops self-loops anyway; skipping them
     /// here keeps dynamic streams consistent with static loads.
     pub self_loops: u64,
+}
+
+/// One accepted data line, before interning: raw ids plus the explicit
+/// timestamp if the line carried one.
+#[derive(Clone, Copy, Debug)]
+struct LineRecord {
+    a: u64,
+    b: u64,
+    t: Option<u64>,
+}
+
+/// Why a data line failed to parse.  Carried out of the worker shards so
+/// the parallel path can rebuild the exact sequential error (message and
+/// source chain) for the earliest faulty line.
+#[derive(Clone, Debug)]
+enum LineFault {
+    MissingFields,
+    BadVertex(std::num::ParseIntError),
+    BadTimestamp(std::num::ParseIntError),
+}
+
+/// The shared line grammar: `Ok(None)` for blank/comment lines,
+/// `Ok(Some(..))` for a data line, `Err` for a malformed one.
+fn classify_line(trimmed: &str) -> std::result::Result<Option<LineRecord>, LineFault> {
+    if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+        return Ok(None);
+    }
+    let mut parts = trimmed.split_whitespace();
+    let (Some(a), Some(b)) = (parts.next(), parts.next()) else {
+        return Err(LineFault::MissingFields);
+    };
+    let a: u64 = a.parse().map_err(LineFault::BadVertex)?;
+    let b: u64 = b.parse().map_err(LineFault::BadVertex)?;
+    let t: Option<u64> = match parts.next() {
+        Some(ts) => Some(ts.parse().map_err(LineFault::BadTimestamp)?),
+        None => None,
+    };
+    Ok(Some(LineRecord { a, b, t }))
+}
+
+/// A [`LineFault`] at 1-based line `lineno`, formatted exactly like the
+/// sequential path's errors.
+fn fault_error(fault: LineFault, lineno: usize) -> anyhow::Error {
+    match fault {
+        LineFault::MissingFields => anyhow!("line {lineno}: expected at least two fields"),
+        LineFault::BadVertex(e) => {
+            anyhow::Error::new(e).context(format!("line {lineno}: bad vertex"))
+        }
+        LineFault::BadTimestamp(e) => {
+            anyhow::Error::new(e).context(format!("line {lineno}: bad timestamp"))
+        }
+    }
+}
+
+/// The merge semantics both parsing paths share: first-appearance
+/// interning, the accepted-edge synthetic timestamp counter, and
+/// self-loop skipping — applied to records **in input order**.
+#[derive(Default)]
+struct Accumulator {
+    ids: std::collections::HashMap<u64, Vertex>,
+    edges: Vec<TimedEdge>,
+    self_loops: u64,
+}
+
+impl Accumulator {
+    fn accept(&mut self, rec: LineRecord) {
+        let t = match rec.t {
+            Some(t) => t,
+            // synthetic timestamp: the number of edges accepted so far
+            None => self.edges.len() as u64,
+        };
+        // intern BEFORE the self-loop check: self-loop endpoints still
+        // claim a dense id (their vertex exists, it just has no edge yet)
+        let next = self.ids.len() as Vertex;
+        let u = *self.ids.entry(rec.a).or_insert(next);
+        let next = self.ids.len() as Vertex;
+        let v = *self.ids.entry(rec.b).or_insert(next);
+        if u == v {
+            self.self_loops += 1;
+            return;
+        }
+        self.edges.push(TimedEdge { u, v, t });
+    }
+
+    fn finish(self) -> ParseReport {
+        let report = ParseReport {
+            n: self.ids.len(),
+            edges: self.edges,
+            self_loops: self.self_loops,
+        };
+        let t = telemetry::global();
+        t.ingest_edges_parsed.add(report.edges.len() as u64);
+        t.ingest_self_loops.add(report.self_loops);
+        report
+    }
 }
 
 /// Parse an edge list from a reader. Vertices are renumbered densely in
@@ -42,45 +159,121 @@ pub struct ParseReport {
 /// in [`ParseReport::self_loops`]); their endpoints still count toward
 /// `n`, matching what the static path's `CsrGraph::from_edges` does.
 pub fn parse_report(reader: impl BufRead) -> Result<ParseReport> {
-    let mut ids = std::collections::HashMap::new();
-    let mut edges: Vec<TimedEdge> = Vec::new();
-    let mut self_loops = 0u64;
-    let mut intern = |raw: u64, ids: &mut std::collections::HashMap<u64, Vertex>| -> Vertex {
-        let next = ids.len() as Vertex;
-        *ids.entry(raw).or_insert(next)
-    };
+    let span = telemetry::SpanTimer::start();
+    let mut acc = Accumulator::default();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line.context("read error")?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
-            continue;
+        match classify_line(line.trim()) {
+            Ok(None) => {}
+            Ok(Some(rec)) => acc.accept(rec),
+            Err(fault) => return Err(fault_error(fault, lineno + 1)),
         }
-        let mut parts = trimmed.split_whitespace();
-        let (Some(a), Some(b)) = (parts.next(), parts.next()) else {
-            bail!("line {}: expected at least two fields", lineno + 1);
-        };
-        let a: u64 = a.parse().with_context(|| format!("line {}: bad vertex", lineno + 1))?;
-        let b: u64 = b.parse().with_context(|| format!("line {}: bad vertex", lineno + 1))?;
-        let t: u64 = match parts.next() {
-            Some(ts) => ts
-                .parse()
-                .with_context(|| format!("line {}: bad timestamp", lineno + 1))?,
-            // synthetic timestamp: the number of edges accepted so far
-            None => edges.len() as u64,
-        };
-        let u = intern(a, &mut ids);
-        let v = intern(b, &mut ids);
-        if u == v {
-            self_loops += 1;
-            continue;
-        }
-        edges.push(TimedEdge { u, v, t });
     }
-    Ok(ParseReport {
-        edges,
-        n: ids.len(),
-        self_loops,
-    })
+    let report = acc.finish();
+    telemetry::global().ingest_parse_ns.record(span.elapsed_ns());
+    Ok(report)
+}
+
+/// One worker's scan of one chunk: accepted records in chunk order, the
+/// number of lines scanned, and the first malformed line if any (local
+/// 0-based index — rebased to a file line number at the merge).
+struct ChunkShard {
+    recs: Vec<LineRecord>,
+    lines: usize,
+    fault: Option<(usize, LineFault)>,
+}
+
+fn parse_chunk(chunk: &str) -> ChunkShard {
+    let mut recs = Vec::new();
+    let mut lines = 0usize;
+    let mut fault = None;
+    for (i, line) in chunk.lines().enumerate() {
+        lines = i + 1;
+        match classify_line(line.trim()) {
+            Ok(None) => {}
+            Ok(Some(rec)) => recs.push(rec),
+            Err(f) => {
+                // stop at the first fault: nothing after the earliest
+                // faulty line can affect the (failed) parse
+                fault = Some((i, f));
+                break;
+            }
+        }
+    }
+    ChunkShard { recs, lines, fault }
+}
+
+/// Split `input` into about `want` byte ranges, each ending just past a
+/// newline (the last may not), so every line lives in exactly one chunk.
+fn chunk_bounds(input: &str, want: usize) -> Vec<(usize, usize)> {
+    let len = input.len();
+    if len == 0 {
+        return Vec::new();
+    }
+    let target = len.div_ceil(want.max(1)).max(1);
+    let bytes = input.as_bytes();
+    let mut bounds = Vec::with_capacity(want.max(1));
+    let mut start = 0usize;
+    while start < len {
+        let mut end = (start + target).min(len);
+        while end < len && bytes[end - 1] != b'\n' {
+            end += 1;
+        }
+        bounds.push((start, end));
+        start = end;
+    }
+    bounds
+}
+
+/// [`parse_report`] with the line scan fanned out across `pool`.
+///
+/// The input is chunked at newline boundaries (one chunk per pool
+/// worker); each worker parses its chunk into an owned [`ChunkShard`],
+/// and the shards are merged in chunk order through the same
+/// [`Accumulator`] the sequential path uses.  The result — renumbering,
+/// synthetic timestamps, self-loop counts, and error messages — is
+/// byte-identical to [`parse_report`] for every thread count.
+pub fn parse_report_parallel(input: &str, pool: &ThreadPool) -> Result<ParseReport> {
+    let span = telemetry::SpanTimer::start();
+    let chunks = chunk_bounds(input, pool.num_threads().max(1));
+    let results: Mutex<Vec<(usize, ChunkShard)>> = Mutex::new(Vec::with_capacity(chunks.len()));
+    // SAFETY: `input` and `results` outlive the `pool.scope` call below,
+    // which joins every spawned task before returning.
+    #[allow(unsafe_code)]
+    let share = unsafe { ScopeShare::new() };
+    let text = share.share(input);
+    let out = share.share(&results);
+    pool.scope(|s| {
+        for (idx, (start, end)) in chunks.iter().copied().enumerate() {
+            let (text, out) = (text, out);
+            s.spawn(move |_| {
+                let shard = parse_chunk(&text.get()[start..end]);
+                plock(out.get()).push((idx, shard));
+            });
+        }
+    });
+    let mut shards = std::mem::take(&mut *plock(&results));
+    shards.sort_unstable_by_key(|(idx, _)| *idx);
+
+    // earliest fault wins: chunks are disjoint ordered line ranges, so the
+    // first chunk carrying a fault holds the globally first faulty line
+    let mut line_base = 0usize;
+    for (_, shard) in &shards {
+        if let Some((local, fault)) = &shard.fault {
+            return Err(fault_error(fault.clone(), line_base + local + 1));
+        }
+        line_base += shard.lines;
+    }
+
+    let mut acc = Accumulator::default();
+    for (_, shard) in shards {
+        for rec in shard.recs {
+            acc.accept(rec);
+        }
+    }
+    let report = acc.finish();
+    telemetry::global().ingest_parse_ns.record(span.elapsed_ns());
+    Ok(report)
 }
 
 /// Parse an edge list from a reader; returns (edges, n). Thin wrapper
@@ -99,22 +292,57 @@ fn warn_self_loops(r: &ParseReport, path: &Path) {
     }
 }
 
-/// Load a static graph from a file.
+/// Load a static graph from a file (sequential parse and CSR build).
 pub fn load_graph(path: impl AsRef<Path>) -> Result<CsrGraph> {
-    let file = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("open {:?}", path.as_ref()))?;
-    let r = parse_report(std::io::BufReader::new(file))?;
-    warn_self_loops(&r, path.as_ref());
+    load_graph_threads(path, 1)
+}
+
+/// Load a static graph from a file with parse and CSR construction
+/// fanned out across `threads` ingest workers (1 = the sequential
+/// [`load_graph`] path; the resulting graph is identical either way).
+pub fn load_graph_threads(path: impl AsRef<Path>, threads: usize) -> Result<CsrGraph> {
+    let path = path.as_ref();
+    if threads <= 1 {
+        let file =
+            std::fs::File::open(path).with_context(|| format!("open {:?}", path))?;
+        let r = parse_report(std::io::BufReader::new(file))?;
+        warn_self_loops(&r, path);
+        let pairs: Vec<(Vertex, Vertex)> = r.edges.iter().map(|e| (e.u, e.v)).collect();
+        return Ok(CsrGraph::from_edges(r.n, &pairs));
+    }
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("open {:?}", path))?;
+    let pool = ThreadPool::new(threads);
+    let r = parse_report_parallel(&text, &pool)?;
+    warn_self_loops(&r, path);
     let pairs: Vec<(Vertex, Vertex)> = r.edges.iter().map(|e| (e.u, e.v)).collect();
-    Ok(CsrGraph::from_edges(r.n, &pairs))
+    Ok(CsrGraph::from_edges_parallel(r.n, &pairs, &pool))
 }
 
 /// Load a dynamic stream (sorted by timestamp, stable).
 pub fn load_stream(path: impl AsRef<Path>) -> Result<(Vec<TimedEdge>, usize)> {
-    let file = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("open {:?}", path.as_ref()))?;
-    let r = parse_report(std::io::BufReader::new(file))?;
-    warn_self_loops(&r, path.as_ref());
+    load_stream_threads(path, 1)
+}
+
+/// [`load_stream`] with the parse fanned out across `threads` ingest
+/// workers; the stable timestamp sort runs on the caller, so the stream
+/// is identical for every thread count.
+pub fn load_stream_threads(
+    path: impl AsRef<Path>,
+    threads: usize,
+) -> Result<(Vec<TimedEdge>, usize)> {
+    let path = path.as_ref();
+    let r = if threads <= 1 {
+        let file =
+            std::fs::File::open(path).with_context(|| format!("open {:?}", path))?;
+        parse_report(std::io::BufReader::new(file))?
+    } else {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("open {:?}", path))?;
+        let pool = ThreadPool::new(threads);
+        parse_report_parallel(&text, &pool)?
+    };
+    warn_self_loops(&r, path);
     let mut edges = r.edges;
     edges.sort_by_key(|e| e.t);
     Ok((edges, r.n))
@@ -229,6 +457,76 @@ mod tests {
         assert_eq!(n, 4);
         let ts: Vec<u64> = edges.iter().map(|e| e.t).collect();
         assert_eq!(ts, vec![3, 7, 9]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn chunk_bounds_cover_input_at_line_boundaries() {
+        let input = "0 1\n22 33\n4 5\n6 7\n8 9";
+        for want in 1..8 {
+            let bounds = chunk_bounds(input, want);
+            assert_eq!(bounds.first().map(|b| b.0), Some(0));
+            assert_eq!(bounds.last().map(|b| b.1), Some(input.len()));
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "chunks must tile the input");
+                assert_eq!(
+                    input.as_bytes()[w[0].1 - 1],
+                    b'\n',
+                    "interior chunk boundaries must sit just past a newline"
+                );
+            }
+        }
+        assert!(chunk_bounds("", 4).is_empty());
+    }
+
+    #[test]
+    fn parallel_parse_matches_sequential() {
+        let input = "# header\n10 20\n7 7\n20 30 5\n\n% mid\n10 30\n30 40\n40 10 2\n9 9 9\n";
+        let seq = parse_report(Cursor::new(input)).unwrap();
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let par = parse_report_parallel(input, &pool).unwrap();
+            assert_eq!(par.edges, seq.edges, "threads={threads}");
+            assert_eq!(par.n, seq.n);
+            assert_eq!(par.self_loops, seq.self_loops);
+        }
+    }
+
+    #[test]
+    fn parallel_parse_reports_the_earliest_fault_identically() {
+        // faults in different chunks: the earliest line must win, with
+        // the sequential path's exact message chain
+        let cases = [
+            "0 1\n1 2\nbogus x\n2 3\n4 oops\n",
+            "0 1\n1\n2 3 zzz\n",
+            "0 1 t\n1 2\n",
+        ];
+        for input in cases {
+            let seq_err = format!("{:#}", parse_report(Cursor::new(input)).unwrap_err());
+            for threads in [2, 4, 8] {
+                let pool = ThreadPool::new(threads);
+                let par_err =
+                    format!("{:#}", parse_report_parallel(input, &pool).unwrap_err());
+                assert_eq!(par_err, seq_err, "threads={threads} input={input:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_loaders_match_sequential_loaders() {
+        let g = crate::graph::generators::gnp(60, 0.15, 11);
+        let dir = std::env::temp_dir().join("parmce_threaded_load_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        write_graph(&g, &path).unwrap();
+        let seq = load_graph(&path).unwrap();
+        let par = load_graph_threads(&path, 4).unwrap();
+        assert_eq!(par.n(), seq.n());
+        assert_eq!(par.edges(), seq.edges());
+        let (es, ns) = load_stream(&path).unwrap();
+        let (ep, np) = load_stream_threads(&path, 4).unwrap();
+        assert_eq!(ns, np);
+        assert_eq!(es, ep);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -1,6 +1,14 @@
 //! Graph substrate: immutable CSR graphs, dynamic adjacency, generators,
 //! synthetic dataset analogs, degeneracy/core decomposition, triangle
 //! counting, and edge-list I/O.
+//!
+//! Everything the enumerators consume flows through here.  The static
+//! path is [`edgelist`] → [`csr::CsrGraph`] → the [`degeneracy`] /
+//! [`triangles`] rankings; the dynamic path snapshots the same CSR into
+//! [`snapshot::SnapshotGraph`] epochs.  Each of those stages has both a
+//! sequential and a pool-parallel implementation with bit-identical
+//! output (see `DESIGN.md`, "Ingest & ranking pipeline").
+#![warn(missing_docs)]
 
 pub mod adj;
 pub mod csr;
@@ -29,6 +37,33 @@ pub fn norm_edge(u: Vertex, v: Vertex) -> Option<Edge> {
     }
 }
 
+/// Split `0..n` items into up to `parts` contiguous ranges of roughly
+/// equal mass, where `prefix` is the exclusive mass prefix sum
+/// (`prefix[i]` = total mass of items before `i`, so `prefix.len() ==
+/// n + 1`).  The ranges tile `0..n` in order; some may be empty when
+/// the mass is skewed.  Shared by the parallel ingest stages to balance
+/// per-worker work by degree/forward mass rather than raw vertex count.
+pub(crate) fn balanced_ranges(prefix: &[usize], parts: usize) -> Vec<(usize, usize)> {
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let parts = parts.max(1);
+    let mut ranges = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for r in 0..parts {
+        let target = total * (r + 1) / parts;
+        let mut hi = lo;
+        while hi < n && prefix[hi] < target {
+            hi += 1;
+        }
+        if r == parts - 1 {
+            hi = n;
+        }
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    ranges
+}
+
 /// Read-only adjacency access with *sorted* neighbour slices — the shape
 /// the TTT-family set algebra needs.  Implemented by the static
 /// [`csr::CsrGraph`], the epoch-snapshotted [`snapshot::GraphSnapshot`] /
@@ -37,9 +72,13 @@ pub fn norm_edge(u: Vertex, v: Vertex) -> Option<Edge> {
 /// them (the incremental algorithms of §5 enumerate inside a graph that
 /// mutates between batches).
 pub trait AdjacencyGraph: Sync {
+    /// Number of vertices.
     fn n(&self) -> usize;
+
+    /// Sorted neighbour slice of `v`.
     fn neighbors(&self, v: Vertex) -> &[Vertex];
 
+    /// Number of neighbours of `v`.
     #[inline]
     fn degree(&self, v: Vertex) -> usize {
         self.neighbors(v).len()
@@ -103,5 +142,26 @@ mod tests {
         assert_eq!(norm_edge(3, 7), Some((3, 7)));
         assert_eq!(norm_edge(7, 3), Some((3, 7)));
         assert_eq!(norm_edge(5, 5), None);
+    }
+
+    #[test]
+    fn balanced_ranges_tile_and_balance() {
+        // uniform mass: every range gets its share
+        let prefix: Vec<usize> = (0..=12).collect();
+        let ranges = balanced_ranges(&prefix, 4);
+        assert_eq!(ranges, vec![(0, 3), (3, 6), (6, 9), (9, 12)]);
+
+        // skewed mass: one heavy item, ranges stay contiguous and tile
+        let prefix = vec![0, 100, 100, 100, 101];
+        let ranges = balanced_ranges(&prefix, 3);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, 4);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+
+        // zero mass and empty domains don't panic
+        assert_eq!(balanced_ranges(&[0, 0, 0], 2).last().unwrap().1, 2);
+        assert_eq!(balanced_ranges(&[0], 3).last().unwrap().1, 0);
     }
 }

@@ -72,6 +72,21 @@ impl CsrBlock {
     }
 }
 
+/// Build block `b` of `g` — the unit of work both [`SnapshotGraph::from_csr`]
+/// paths share, so sequential and parallel construction agree byte for byte.
+fn build_block(g: &CsrGraph, b: usize) -> Arc<CsrBlock> {
+    let start = b * BLOCK_VERTS;
+    let len = (g.n() - start).min(BLOCK_VERTS);
+    let mut offsets = Vec::with_capacity(len + 1);
+    offsets.push(0usize);
+    let mut nbrs: Vec<Vertex> = Vec::new();
+    for local in 0..len {
+        nbrs.extend_from_slice(g.neighbors((start + local) as Vertex));
+        offsets.push(nbrs.len());
+    }
+    Arc::new(CsrBlock { offsets, nbrs })
+}
+
 fn empty_blocks(n: usize) -> Vec<Arc<CsrBlock>> {
     let mut blocks = Vec::with_capacity(n.div_ceil(BLOCK_VERTS));
     let mut start = 0;
@@ -130,11 +145,13 @@ impl GraphSnapshot {
     }
 
     #[inline]
+    /// Degree of `v`.
     pub fn degree(&self, v: Vertex) -> usize {
         self.neighbors(v).len()
     }
 
     #[inline]
+    /// Is `{u, v}` an edge? (Binary search on the smaller list.)
     pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
         if u == v {
             return false;
@@ -152,6 +169,7 @@ impl GraphSnapshot {
         vset::intersect(self.neighbors(u), self.neighbors(v))
     }
 
+    /// Are `verts` pairwise adjacent?
     pub fn is_clique(&self, verts: &[Vertex]) -> bool {
         for (i, &u) in verts.iter().enumerate() {
             for &v in &verts[i + 1..] {
@@ -267,20 +285,49 @@ impl SnapshotGraph {
     /// immediately.
     pub fn from_csr(g: &CsrGraph) -> SnapshotGraph {
         let n = g.n();
-        let mut blocks = Vec::with_capacity(n.div_ceil(BLOCK_VERTS));
-        let mut start = 0;
-        while start < n {
-            let len = (n - start).min(BLOCK_VERTS);
-            let mut offsets = Vec::with_capacity(len + 1);
-            offsets.push(0usize);
-            let mut nbrs: Vec<Vertex> = Vec::new();
-            for local in 0..len {
-                nbrs.extend_from_slice(g.neighbors((start + local) as Vertex));
-                offsets.push(nbrs.len());
-            }
-            blocks.push(Arc::new(CsrBlock { offsets, nbrs }));
-            start += len;
+        let nblocks = n.div_ceil(BLOCK_VERTS);
+        let blocks = (0..nblocks).map(|b| build_block(g, b)).collect();
+        Self::with_blocks(n, g.m(), blocks)
+    }
+
+    /// [`from_csr`](Self::from_csr) with the block construction fanned
+    /// out across `pool` — one task per contiguous run of blocks, each
+    /// built from the shared CSR into owned `Arc`s and reassembled in
+    /// block order at the join.  Blocks are built independently by the
+    /// same [`build_block`] routine, so the snapshot's adjacency bytes
+    /// are identical to the sequential path for every thread count.
+    pub fn from_csr_parallel(g: &CsrGraph, pool: &crate::coordinator::pool::ThreadPool) -> SnapshotGraph {
+        let n = g.n();
+        let nblocks = n.div_ceil(BLOCK_VERTS);
+        let workers = pool.num_threads().max(1);
+        if nblocks <= 1 || workers == 1 {
+            return Self::from_csr(g);
         }
+        let chunk = nblocks.div_ceil(workers).max(1);
+        let results: Mutex<Vec<(usize, Vec<Arc<CsrBlock>>)>> =
+            Mutex::new(Vec::with_capacity(nblocks.div_ceil(chunk)));
+        // SAFETY: `g` and `results` outlive the `pool.scope` call below,
+        // which joins every spawned task before returning.
+        #[allow(unsafe_code)]
+        let share = unsafe { crate::util::sync::ScopeShare::new() };
+        let g_p = share.share(g);
+        let out = share.share(&results);
+        pool.scope(|s| {
+            for (idx, b0) in (0..nblocks).step_by(chunk).enumerate() {
+                let (g_p, out) = (g_p, out);
+                s.spawn(move |_| {
+                    let g = g_p.get();
+                    let b1 = (b0 + chunk).min(nblocks);
+                    let built: Vec<Arc<CsrBlock>> =
+                        (b0..b1).map(|b| build_block(g, b)).collect();
+                    plock(out.get()).push((idx, built));
+                });
+            }
+        });
+        let mut shards = std::mem::take(&mut *plock(&results));
+        shards.sort_unstable_by_key(|(idx, _)| *idx);
+        let blocks: Vec<Arc<CsrBlock>> =
+            shards.into_iter().flat_map(|(_, b)| b).collect();
         Self::with_blocks(n, g.m(), blocks)
     }
 
@@ -314,20 +361,24 @@ impl SnapshotGraph {
         self
     }
 
+    /// In-place [`with_compact_threshold`](Self::with_compact_threshold).
     pub fn set_compact_threshold(&mut self, nbrs: usize) {
         self.compact_threshold = nbrs;
     }
 
+    /// The configured compaction threshold (overlay neighbour entries).
     pub fn compact_threshold(&self) -> usize {
         self.compact_threshold
     }
 
     #[inline]
+    /// Number of vertices.
     pub fn n(&self) -> usize {
         self.n
     }
 
     #[inline]
+    /// Number of undirected edges.
     pub fn m(&self) -> usize {
         self.m
     }
@@ -367,11 +418,13 @@ impl SnapshotGraph {
     }
 
     #[inline]
+    /// Degree of `v`.
     pub fn degree(&self, v: Vertex) -> usize {
         self.neighbors(v).len()
     }
 
     #[inline]
+    /// Is `{u, v}` an edge? (Binary search on the smaller list.)
     pub fn has_edge(&self, u: Vertex, v: Vertex) -> bool {
         if u == v {
             return false;
@@ -389,6 +442,7 @@ impl SnapshotGraph {
         vset::intersect(self.neighbors(u), self.neighbors(v))
     }
 
+    /// Are `verts` pairwise adjacent?
     pub fn is_clique(&self, verts: &[Vertex]) -> bool {
         for (i, &u) in verts.iter().enumerate() {
             for &v in &verts[i + 1..] {
@@ -585,6 +639,7 @@ pub struct GraphCell {
 }
 
 impl GraphCell {
+    /// A cell publishing `initial` as the current epoch.
     pub fn new(initial: Arc<GraphSnapshot>) -> Self {
         GraphCell {
             version: AtomicU64::new(initial.epoch()),

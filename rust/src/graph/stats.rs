@@ -5,18 +5,28 @@ use crate::graph::degeneracy;
 use crate::graph::triangles;
 use crate::util::json::Json;
 
+/// One graph's structural summary (the cheap Table 3 columns).
 #[derive(Clone, Debug)]
 pub struct GraphStats {
+    /// Number of vertices.
     pub n: usize,
+    /// Number of undirected edges.
     pub m: usize,
+    /// Maximum degree.
     pub max_degree: usize,
+    /// Average degree 2m/n.
     pub avg_degree: f64,
+    /// Edge density m / C(n, 2).
     pub density: f64,
+    /// Degeneracy (maximum core number).
     pub degeneracy: u32,
+    /// Total triangle count.
     pub triangles: u64,
 }
 
 impl GraphStats {
+    /// Compute every statistic (one core decomposition + one triangle
+    /// count; no clique enumeration).
     pub fn compute(g: &CsrGraph) -> Self {
         let decomp = degeneracy::core_decomposition(g);
         GraphStats {
@@ -34,6 +44,7 @@ impl GraphStats {
         }
     }
 
+    /// Serialize for the CLI's JSON output.
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("n", Json::num(self.n as f64)),

@@ -9,8 +9,10 @@
 
 use anyhow::Result;
 
+use crate::coordinator::pool::ThreadPool;
 use crate::graph::csr::CsrGraph;
 use crate::graph::{degeneracy, triangles, Vertex};
+use crate::telemetry;
 
 /// Which vertex-ordering metric ParMCE uses (ParMCEDegree / Tri / Degen).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -38,9 +40,12 @@ impl RankStrategy {
 
 /// Pluggable triangle-count provider: CPU forward algorithm, or the
 /// PJRT-executed Pallas kernel (`runtime::tri_rank::PjrtTriangleBackend`).
-/// Ranking computation is a single-threaded pre-pass (the paper computes
-/// rankings sequentially too, §6.2), so implementations need not be Sync —
-/// which lets the Rc-based PJRT client implement it directly.
+/// Backend-based ranking runs as a single-threaded pre-pass on the
+/// session thread (the paper computes rankings sequentially, §6.2), so
+/// implementations need not be Sync — which lets the Rc-based PJRT
+/// client implement it directly.  The ingest pipeline's
+/// [`Ranking::compute_parallel`] bypasses the backend seam and fans the
+/// same exact-equal CPU computation out over the ingest pool instead.
 pub trait TriangleBackend {
     fn per_vertex(&self, g: &CsrGraph) -> Result<Vec<u64>>;
     fn name(&self) -> &'static str;
@@ -79,6 +84,7 @@ impl Ranking {
         strategy: RankStrategy,
         tri: &dyn TriangleBackend,
     ) -> Result<Ranking> {
+        let span = telemetry::SpanTimer::start();
         let metric = match strategy {
             RankStrategy::Id => vec![0; g.n()],
             RankStrategy::Degree => (0..g.n()).map(|v| g.degree(v as Vertex) as u64).collect(),
@@ -89,7 +95,31 @@ impl Ranking {
                 .map(|&c| c as u64)
                 .collect(),
         };
+        telemetry::global().ingest_rank_ns.record(span.elapsed_ns());
         Ok(Ranking { metric, strategy })
+    }
+
+    /// [`compute`](Self::compute) with the metric pre-pass fanned out
+    /// across `pool`: triangle counts via
+    /// [`triangles::per_vertex_parallel`] and degeneracy cores via
+    /// [`degeneracy::core_decomposition_parallel`], both of which equal
+    /// their sequential oracles exactly — so the resulting ranking (and
+    /// therefore every enumeration order built on it) is bit-identical
+    /// to the sequential path for any thread count.
+    pub fn compute_parallel(g: &CsrGraph, strategy: RankStrategy, pool: &ThreadPool) -> Ranking {
+        let span = telemetry::SpanTimer::start();
+        let metric = match strategy {
+            RankStrategy::Id => vec![0; g.n()],
+            RankStrategy::Degree => (0..g.n()).map(|v| g.degree(v as Vertex) as u64).collect(),
+            RankStrategy::Triangle => triangles::per_vertex_parallel(g, pool),
+            RankStrategy::Degeneracy => degeneracy::core_decomposition_parallel(g, pool)
+                .core
+                .iter()
+                .map(|&c| c as u64)
+                .collect(),
+        };
+        telemetry::global().ingest_rank_ns.record(span.elapsed_ns());
+        Ranking { metric, strategy }
     }
 
     /// Construct from an explicit metric vector (ablation studies that
@@ -183,6 +213,25 @@ mod tests {
             // sorted outputs (neighbor order is preserved)
             assert!(cand.windows(2).all(|w| w[0] < w[1]));
             assert!(fini.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn parallel_ranking_equals_sequential() {
+        let g = generators::gnp(120, 0.1, 42);
+        for s in [
+            RankStrategy::Id,
+            RankStrategy::Degree,
+            RankStrategy::Triangle,
+            RankStrategy::Degeneracy,
+        ] {
+            let seq = Ranking::compute(&g, s);
+            for threads in [1, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let par = Ranking::compute_parallel(&g, s, &pool);
+                assert_eq!(par.metric, seq.metric, "{s:?} threads={threads}");
+                assert_eq!(par.strategy(), seq.strategy());
+            }
         }
     }
 

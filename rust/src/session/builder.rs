@@ -54,11 +54,26 @@ pub enum SinkSpec {
 
 /// Builder for [`MceSession`]. All knobs have sensible defaults; only a
 /// graph source is required.
+///
+/// ```
+/// use parmce::session::{Algo, MceSession};
+///
+/// let session = MceSession::builder()
+///     .dataset(parmce::graph::datasets::Dataset::DblpLike,
+///              parmce::graph::datasets::Scale::Tiny)
+///     .threads(2)
+///     .ingest_threads(2) // parallel ranking pre-pass, identical results
+///     .build()
+///     .unwrap();
+/// let report = session.count(Algo::ParMce);
+/// assert!(report.cliques > 0);
+/// ```
 pub struct SessionBuilder {
     graph: Option<Arc<CsrGraph>>,
     algo: Algo,
     rank: RankStrategy,
     threads: usize,
+    ingest_threads: Option<usize>,
     mem_budget: Option<usize>,
     deadline: Duration,
     parttt: ParTttConfig,
@@ -73,6 +88,7 @@ impl Default for SessionBuilder {
             algo: Algo::ParMce,
             rank: RankStrategy::Degree,
             threads: 4,
+            ingest_threads: None,
             mem_budget: None,
             deadline: Duration::from_secs(3600),
             parttt: ParTttConfig::default(),
@@ -83,6 +99,7 @@ impl Default for SessionBuilder {
 }
 
 impl SessionBuilder {
+    /// A builder with all-default knobs (same as [`Default::default`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -126,6 +143,18 @@ impl SessionBuilder {
     /// spawns lazily, so sequential-only sessions never pay for it.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Worker threads for the ingest/ranking pre-pass (parallel CSR
+    /// build, triangle counting, core decomposition).  Defaults to the
+    /// enumeration [`threads`](Self::threads) value, in which case the
+    /// pre-pass reuses the enumeration pool; `1` forces the sequential
+    /// reference path.  The parallel pre-pass is exact-equal to the
+    /// sequential one, so this knob changes wall-clock only, never
+    /// results (see `DESIGN.md`, "Ingest & ranking pipeline").
+    pub fn ingest_threads(mut self, threads: usize) -> Self {
+        self.ingest_threads = Some(threads.max(1));
         self
     }
 
@@ -189,12 +218,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Finalize the builder.  Fails only when no graph source was given.
     pub fn build(self) -> Result<MceSession> {
         let g = self.graph.ok_or_else(|| {
             anyhow!("SessionBuilder: no graph source (use .graph/.graph_arc/.edges/.dataset)")
         })?;
         let ctx = ExecContext::new(
             self.threads,
+            self.ingest_threads.unwrap_or(self.threads),
             self.rank,
             self.mem_budget,
             self.deadline,
@@ -215,6 +246,7 @@ impl SessionBuilder {
 /// Output of one [`MceSession::run`]: the report plus whatever the
 /// configured [`SinkSpec`] materialized.
 pub struct SessionRun {
+    /// The uniform run report (count, wall time, outcome, telemetry).
     pub report: RunReport,
     /// Canonical clique list (`SinkSpec::Collect` only).
     pub cliques: Option<Vec<Vec<Vertex>>>,
@@ -244,22 +276,27 @@ pub struct MceSession {
 }
 
 impl MceSession {
+    /// Entry point: a fresh [`SessionBuilder`].
     pub fn builder() -> SessionBuilder {
         SessionBuilder::new()
     }
 
+    /// The graph every run of this session enumerates.
     pub fn graph(&self) -> &Arc<CsrGraph> {
         &self.g
     }
 
+    /// The shared execution context (pools, caches, limits, history).
     pub fn ctx(&self) -> &ExecContext {
         &self.ctx
     }
 
+    /// The enumeration thread pool (spawned on first use).
     pub fn pool(&self) -> &ThreadPool {
         self.ctx.pool()
     }
 
+    /// The algorithm [`run`](Self::run) defaults to.
     pub fn algo(&self) -> Algo {
         self.algo
     }
@@ -515,6 +552,7 @@ impl MceSession {
         self.ctx.cancel();
     }
 
+    /// Undo [`cancel`](Self::cancel) so the session can run again.
     pub fn clear_cancel(&self) {
         self.ctx.clear_cancel();
     }
@@ -534,6 +572,22 @@ mod tests {
     #[test]
     fn builder_requires_a_graph() {
         assert!(MceSession::builder().build().is_err());
+    }
+
+    #[test]
+    fn ingest_threads_knob_plumbs_to_context() {
+        let g = generators::gnp(10, 0.3, 1);
+        let s = MceSession::builder()
+            .graph(g.clone())
+            .threads(2)
+            .ingest_threads(4)
+            .build()
+            .unwrap();
+        assert_eq!(s.ctx().threads(), 2);
+        assert_eq!(s.ctx().ingest_threads(), 4);
+        // default: ingest pool mirrors the enumeration pool size
+        let d = MceSession::builder().graph(g).threads(3).build().unwrap();
+        assert_eq!(d.ctx().ingest_threads(), 3);
     }
 
     #[test]

@@ -37,9 +37,15 @@ struct Cached<T> {
     value: Arc<T>,
 }
 
+/// Shared per-session execution state: pool(s), limits, caches, and the
+/// cancellation flag.  Built by
+/// [`SessionBuilder`](crate::session::SessionBuilder), shared by every
+/// run verb on the session.
 pub struct ExecContext {
     threads: usize,
+    ingest_threads: usize,
     pool: OnceLock<ThreadPool>,
+    ingest_pool: OnceLock<ThreadPool>,
     rank_strategy: RankStrategy,
     /// `None` = unlimited (baselines run to completion).
     mem_budget_bytes: Option<usize>,
@@ -52,8 +58,12 @@ pub struct ExecContext {
 }
 
 impl ExecContext {
+    /// Assemble a context; `threads` drives the enumeration pool,
+    /// `ingest_threads` the ranking/ingest pre-pass (both clamped to
+    /// ≥ 1; when equal, one pool serves both roles).
     pub fn new(
         threads: usize,
+        ingest_threads: usize,
         rank_strategy: RankStrategy,
         mem_budget_bytes: Option<usize>,
         deadline: Duration,
@@ -61,7 +71,9 @@ impl ExecContext {
     ) -> ExecContext {
         ExecContext {
             threads: threads.max(1),
+            ingest_threads: ingest_threads.max(1),
             pool: OnceLock::new(),
+            ingest_pool: OnceLock::new(),
             rank_strategy,
             mem_budget_bytes,
             deadline,
@@ -78,10 +90,31 @@ impl ExecContext {
         self.pool.get_or_init(|| ThreadPool::new(self.threads))
     }
 
+    /// The pool the ingest/ranking pre-pass runs on, spawned on first
+    /// use.  When `ingest_threads == threads` this is the enumeration
+    /// pool itself (pools are cheaply clonable handles to one worker
+    /// set), so a session never runs two full-size pools.
+    pub fn ingest_pool(&self) -> &ThreadPool {
+        self.ingest_pool.get_or_init(|| {
+            if self.ingest_threads == self.threads {
+                self.pool().clone()
+            } else {
+                ThreadPool::new(self.ingest_threads)
+            }
+        })
+    }
+
+    /// Enumeration pool size.
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Ingest/ranking pool size.
+    pub fn ingest_threads(&self) -> usize {
+        self.ingest_threads
+    }
+
+    /// The vertex-ranking strategy runs default to.
     pub fn rank_strategy(&self) -> RankStrategy {
         self.rank_strategy
     }
@@ -94,14 +127,17 @@ impl ExecContext {
         }
     }
 
+    /// Configured memory cap (`None` = unlimited).
     pub fn mem_budget_bytes(&self) -> Option<usize> {
         self.mem_budget_bytes
     }
 
+    /// Wall-clock deadline each run starts with.
     pub fn deadline(&self) -> Duration {
         self.deadline
     }
 
+    /// Tuning knobs for the ParTTT/ParMCE kernels.
     pub fn parttt_config(&self) -> ParTttConfig {
         self.parttt
     }
@@ -112,15 +148,21 @@ impl ExecContext {
         self.cancelled.store(true, Ordering::SeqCst);
     }
 
+    /// Undo [`cancel`](Self::cancel) so the context can run again.
     pub fn clear_cancel(&self) {
         self.cancelled.store(false, Ordering::SeqCst);
     }
 
+    /// Has [`cancel`](Self::cancel) been called (and not cleared)?
     pub fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::SeqCst)
     }
 
-    /// The ranking for `(g, strategy)`, computed once and cached.
+    /// The ranking for `(g, strategy)`, computed once and cached.  With
+    /// `ingest_threads > 1` the metric pre-pass fans out over the ingest
+    /// pool ([`Ranking::compute_parallel`]), which is exact-equal to the
+    /// sequential computation — the cache holds one canonical ranking
+    /// either way.
     pub fn ranking(&self, g: &Arc<CsrGraph>, strategy: RankStrategy) -> Arc<Ranking> {
         let key = (graph_key(g), strategy);
         let mut cache = plock(&self.rankings);
@@ -128,7 +170,11 @@ impl ExecContext {
             debug_assert!(Arc::ptr_eq(&c.graph, g));
             return Arc::clone(&c.value);
         }
-        let r = Arc::new(Ranking::compute(g, strategy));
+        let r = if self.ingest_threads > 1 {
+            Arc::new(Ranking::compute_parallel(g, strategy, self.ingest_pool()))
+        } else {
+            Arc::new(Ranking::compute(g, strategy))
+        };
         cache.insert(
             key,
             Cached {
@@ -205,6 +251,7 @@ mod tests {
     fn ctx() -> ExecContext {
         ExecContext::new(
             2,
+            1,
             RankStrategy::Degree,
             None,
             Duration::from_secs(60),
@@ -257,6 +304,7 @@ mod tests {
     fn budget_construction_matches_config() {
         let c = ExecContext::new(
             1,
+            1,
             RankStrategy::Degree,
             Some(1000),
             Duration::from_secs(1),
@@ -265,5 +313,51 @@ mod tests {
         let b = c.mem_budget();
         assert_eq!(b.cap(), 1000);
         assert_eq!(ctx().mem_budget().cap(), usize::MAX);
+    }
+
+    #[test]
+    fn parallel_ingest_context_serves_identical_rankings() {
+        let g = Arc::new(generators::gnp(80, 0.15, 9));
+        let seq = ctx();
+        let par = ExecContext::new(
+            2,
+            4,
+            RankStrategy::Degree,
+            None,
+            Duration::from_secs(60),
+            ParTttConfig::default(),
+        );
+        for s in [RankStrategy::Degree, RankStrategy::Triangle, RankStrategy::Degeneracy] {
+            let a = seq.ranking(&g, s);
+            let b = par.ranking(&g, s);
+            for v in 0..80u32 {
+                for w in 0..80u32 {
+                    assert_eq!(a.higher(v, w), b.higher(v, w), "{s:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_pool_is_shared_when_sizes_match() {
+        let c = ExecContext::new(
+            3,
+            3,
+            RankStrategy::Degree,
+            None,
+            Duration::from_secs(60),
+            ParTttConfig::default(),
+        );
+        assert_eq!(c.ingest_pool().num_threads(), c.pool().num_threads());
+        let d = ExecContext::new(
+            2,
+            4,
+            RankStrategy::Degree,
+            None,
+            Duration::from_secs(60),
+            ParTttConfig::default(),
+        );
+        assert_eq!(d.ingest_pool().num_threads(), 4);
+        assert_eq!(d.pool().num_threads(), 2);
     }
 }

@@ -36,6 +36,7 @@ pub enum DynAlgo {
 }
 
 impl DynAlgo {
+    /// Display name used in reports and CLI output.
     pub fn name(&self) -> &'static str {
         match self {
             DynAlgo::Imce => "IMCE",
@@ -43,6 +44,7 @@ impl DynAlgo {
         }
     }
 
+    /// Parse a CLI-style name (`imce`, `parimce`/`par-imce`/`par_imce`).
     pub fn parse(s: &str) -> Option<DynAlgo> {
         match s.to_ascii_lowercase().as_str() {
             "imce" => Some(DynAlgo::Imce),
@@ -77,9 +79,11 @@ pub enum BatchKind {
 /// for free; for sessions constructed at graph epoch 0 (all of them),
 /// `graph.epoch() == seq as u64`.
 pub struct BatchEvent<'a> {
+    /// Insert or remove.
     pub kind: BatchKind,
     /// 1-based batch sequence number within this session.
     pub seq: usize,
+    /// The canonical change set (Λⁿᵉʷ, Λᵈᵉˡ) the batch produced.
     pub result: &'a BatchResult,
     /// The post-batch graph epoch snapshot — exactly the graph the
     /// engine enumerated `result` against.  Observers that serve queries
@@ -134,6 +138,14 @@ impl std::error::Error for BatchApplyError {}
 
 /// A dynamic-graph session: the graph, its maximal clique set C(G), and
 /// the chosen batch engine. Every mutation keeps the registry exact.
+///
+/// ```
+/// use parmce::session::{DynAlgo, DynamicSession};
+///
+/// let mut s = DynamicSession::from_empty(4, DynAlgo::Imce);
+/// s.apply_batch(&[(0, 1), (1, 2), (0, 2)]);
+/// assert_eq!(s.clique_count(), 2); // the triangle {0,1,2} and {3}
+/// ```
 pub struct DynamicSession {
     graph: SnapshotGraph,
     registry: CliqueRegistry,
@@ -182,17 +194,20 @@ impl DynamicSession {
     /// otherwise sequential TTT is used.
     pub fn from_graph_threads(g: &CsrGraph, algo: DynAlgo, threads: usize) -> DynamicSession {
         let threads = threads.max(1);
-        // one adjacency copy: the snapshot writer chunks the CSR, then
-        // the bootstrap enumerates straight off the published epoch-0
-        // snapshot (previously this path copied the graph twice)
-        let graph = SnapshotGraph::from_csr(g);
-        let snap = graph.current();
-        let (registry, pool) = if threads > 1 {
+        // one adjacency copy: the snapshot writer chunks the CSR (in
+        // parallel when a pool is configured — identical blocks either
+        // way), then the bootstrap enumerates straight off the published
+        // epoch-0 snapshot (previously this path copied the graph twice)
+        let (graph, registry, pool) = if threads > 1 {
             let pool = ThreadPool::new(threads);
+            let graph = SnapshotGraph::from_csr_parallel(g, &pool);
+            let snap = graph.current();
             let registry = CliqueRegistry::from_graph_parallel(&snap, &pool);
-            (registry, Some(pool))
+            (graph, registry, Some(pool))
         } else {
-            (CliqueRegistry::from_graph(snap.as_ref()), None)
+            let graph = SnapshotGraph::from_csr(g);
+            let snap = graph.current();
+            (graph, CliqueRegistry::from_graph(snap.as_ref()), None)
         };
         DynamicSession {
             graph,
@@ -237,6 +252,7 @@ impl DynamicSession {
         self
     }
 
+    /// The configured bitset hand-off threshold.
     pub fn bitset_cutoff(&self) -> usize {
         self.bitset_cutoff
     }
@@ -249,6 +265,7 @@ impl DynamicSession {
         self
     }
 
+    /// The batch engine this session applies mutations with.
     pub fn algo(&self) -> DynAlgo {
         self.algo
     }
@@ -259,6 +276,8 @@ impl DynamicSession {
         self.observer = Some(observer);
     }
 
+    /// Remove the per-batch hook installed by
+    /// [`set_batch_observer`](Self::set_batch_observer).
     pub fn clear_batch_observer(&mut self) {
         self.observer = None;
     }
@@ -432,10 +451,12 @@ impl DynamicSession {
         self.registry.len()
     }
 
+    /// The epoch-snapshotted graph the session mutates.
     pub fn graph(&self) -> &SnapshotGraph {
         &self.graph
     }
 
+    /// The exact maximal clique set C(G), kept current by every batch.
     pub fn registry(&self) -> &CliqueRegistry {
         &self.registry
     }
@@ -457,6 +478,7 @@ impl DynamicSession {
         self.graph.to_csr()
     }
 
+    /// How many batches (insert and remove) have been applied.
     pub fn batches_applied(&self) -> usize {
         self.batches_applied
     }

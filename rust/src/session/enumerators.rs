@@ -60,6 +60,7 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Every algorithm, in table order.
     pub const ALL: [Algo; 12] = [
         Algo::Ttt,
         Algo::ParTtt,
@@ -75,10 +76,12 @@ impl Algo {
         Algo::Hashing,
     ];
 
+    /// [`ALL`](Self::ALL) as a slice (iteration convenience).
     pub fn all() -> &'static [Algo] {
         &Self::ALL
     }
 
+    /// Display name used in reports and experiment tables.
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Ttt => "TTT",
@@ -115,6 +118,7 @@ impl Algo {
         })
     }
 
+    /// The [`Enumerator`] adapter that runs this algorithm.
     pub fn enumerator(self) -> Box<dyn Enumerator> {
         match self {
             Algo::Ttt => Box::new(TttEnumerator),
@@ -138,8 +142,10 @@ impl Algo {
 /// algorithm needs beyond the graph (pool, ranking, budget, deadline)
 /// comes from the [`ExecContext`].
 pub trait Enumerator: Send + Sync {
+    /// Display name (matches [`Algo::name`] for the built-in adapters).
     fn name(&self) -> &'static str;
 
+    /// Run the algorithm on `g`, emitting into `sink`.
     fn enumerate(
         &self,
         ctx: &ExecContext,
@@ -236,6 +242,7 @@ fn budget_outcome(err: BudgetError) -> RunOutcome {
     }
 }
 
+/// Adapter for sequential [`Algo::Ttt`].
 pub struct TttEnumerator;
 
 impl Enumerator for TttEnumerator {
@@ -256,6 +263,7 @@ impl Enumerator for TttEnumerator {
     }
 }
 
+/// Adapter for [`Algo::ParTtt`] on the session pool.
 pub struct ParTttEnumerator;
 
 impl Enumerator for ParTttEnumerator {
@@ -276,6 +284,7 @@ impl Enumerator for ParTttEnumerator {
     }
 }
 
+/// Adapter for [`Algo::ParMce`] (rank-decomposed, session ranking).
 pub struct ParMceEnumerator;
 
 impl Enumerator for ParMceEnumerator {
@@ -302,6 +311,7 @@ impl Enumerator for ParMceEnumerator {
     }
 }
 
+/// Adapter for [`Algo::Bk`] (Bron–Kerbosch with pivoting).
 pub struct BkEnumerator;
 
 impl Enumerator for BkEnumerator {
@@ -322,6 +332,7 @@ impl Enumerator for BkEnumerator {
     }
 }
 
+/// Adapter for [`Algo::BkBasic`] (unpivoted Bron–Kerbosch).
 pub struct BkBasicEnumerator;
 
 impl Enumerator for BkBasicEnumerator {
@@ -342,6 +353,7 @@ impl Enumerator for BkBasicEnumerator {
     }
 }
 
+/// Adapter for [`Algo::BkDegeneracy`].
 pub struct BkDegeneracyEnumerator;
 
 impl Enumerator for BkDegeneracyEnumerator {
@@ -362,6 +374,7 @@ impl Enumerator for BkDegeneracyEnumerator {
     }
 }
 
+/// Adapter for [`Algo::Peco`] (rank-partitioned, flat tasks).
 pub struct PecoEnumerator;
 
 impl Enumerator for PecoEnumerator {
@@ -384,6 +397,7 @@ impl Enumerator for PecoEnumerator {
     }
 }
 
+/// Adapter for [`Algo::Peamc`] (deadline-aware).
 pub struct PeamcEnumerator;
 
 impl Enumerator for PeamcEnumerator {
@@ -406,6 +420,7 @@ impl Enumerator for PeamcEnumerator {
     }
 }
 
+/// Adapter for [`Algo::Gp`] (measures, then prices the MPI model).
 pub struct GpEnumerator;
 
 impl Enumerator for GpEnumerator {
@@ -466,6 +481,7 @@ impl Enumerator for GpEnumerator {
     }
 }
 
+/// Adapter for [`Algo::GreedyBb`] (budget- and deadline-aware).
 pub struct GreedyBbEnumerator;
 
 impl Enumerator for GreedyBbEnumerator {
@@ -489,6 +505,7 @@ impl Enumerator for GreedyBbEnumerator {
     }
 }
 
+/// Adapter for [`Algo::CliqueEnumerator`] (budget-aware).
 pub struct CliqueEnumeratorEnumerator;
 
 impl Enumerator for CliqueEnumeratorEnumerator {
@@ -512,6 +529,7 @@ impl Enumerator for CliqueEnumeratorEnumerator {
     }
 }
 
+/// Adapter for [`Algo::Hashing`] (budget-aware).
 pub struct HashingEnumerator;
 
 impl Enumerator for HashingEnumerator {

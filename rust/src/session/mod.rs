@@ -29,6 +29,7 @@
 //! let run = session.run();
 //! assert_eq!(run.report.cliques, session.count(Algo::Ttt).cliques);
 //! ```
+#![warn(missing_docs)]
 
 pub mod builder;
 pub mod context;

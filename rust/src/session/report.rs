@@ -44,7 +44,10 @@ pub enum RunOutcome {
     /// The output sink reported an I/O failure; everything written
     /// before the fault is accounted in [`RunReport::partial`] and the
     /// run's [`OutputStats`].
-    SinkFailed { message: String },
+    SinkFailed {
+        /// Failure description from the writer.
+        message: String,
+    },
 }
 
 impl Default for RunOutcome {
@@ -102,11 +105,14 @@ impl PartialProgress {
 /// reached the sink, how long it took, and how it ended.
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Which algorithm ran.
     pub algo: Algo,
     /// Cliques that reached the sink. On a non-`Completed` outcome this
     /// is the count emitted before the run aborted.
     pub cliques: u64,
+    /// Wall-clock duration of the run.
     pub wall: Duration,
+    /// How the run ended.
     pub outcome: RunOutcome,
     /// Telemetry delta over this run's window (global-registry sweep at
     /// run end minus the sweep at run start): pool scheduling, ParTTT
@@ -120,10 +126,12 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// Did the run emit every clique ([`RunOutcome::Completed`])?
     pub fn completed(&self) -> bool {
         self.outcome == RunOutcome::Completed
     }
 
+    /// Wall time in seconds.
     pub fn secs(&self) -> f64 {
         self.wall.as_secs_f64()
     }

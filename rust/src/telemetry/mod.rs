@@ -72,6 +72,11 @@ pub mod names {
     pub const POOL_SPAWN_FAILURES: &str = "parmce_pool_spawn_failures_total";
     pub const POOL_JOBS_PANICKED: &str = "parmce_pool_jobs_panicked_total";
     pub const SERVICE_PUBLISH_FAILURES: &str = "parmce_service_publish_failures_total";
+    pub const INGEST_EDGES_PARSED: &str = "parmce_ingest_edges_parsed_total";
+    pub const INGEST_SELF_LOOPS: &str = "parmce_ingest_self_loops_total";
+    pub const INGEST_PARSE_NS: &str = "parmce_ingest_parse_ns";
+    pub const INGEST_CSR_BUILD_NS: &str = "parmce_ingest_csr_build_ns";
+    pub const INGEST_RANK_NS: &str = "parmce_ingest_rank_ns";
 }
 
 /// The process-wide metric registry.  One instance lives behind
@@ -114,6 +119,18 @@ pub struct Registry {
     /// Snapshot publishes skipped after exhausting freeze retries
     /// (readers stay on the previous epoch — ISSUE 9).
     pub service_publish_failures: Counter,
+    // --- ingest & ranking pipeline (graph/, mce/ranking.rs) ---
+    /// Edges accepted by edge-list parsing (either path; self-loops
+    /// excluded).
+    pub ingest_edges_parsed: Counter,
+    /// Self-loop edges skipped by edge-list parsing.
+    pub ingest_self_loops: Counter,
+    /// Wall time per edge-list parse, nanoseconds.
+    pub ingest_parse_ns: Histogram,
+    /// Wall time per CSR construction, nanoseconds.
+    pub ingest_csr_build_ns: Histogram,
+    /// Wall time per vertex-ranking computation, nanoseconds.
+    pub ingest_rank_ns: Histogram,
 }
 
 impl Registry {
@@ -144,6 +161,11 @@ impl Registry {
             service_epoch_lag_samples: Counter::new(),
             service_epoch_lag_max: Gauge::new(),
             service_publish_failures: Counter::new(),
+            ingest_edges_parsed: Counter::new(),
+            ingest_self_loops: Counter::new(),
+            ingest_parse_ns: Histogram::new(),
+            ingest_csr_build_ns: Histogram::new(),
+            ingest_rank_ns: Histogram::new(),
         }
     }
 
@@ -280,6 +302,18 @@ impl Registry {
                     false,
                     &self.service_publish_failures,
                 ),
+                c(
+                    names::INGEST_EDGES_PARSED,
+                    "Edges accepted by edge-list parsing (self-loops excluded).",
+                    false,
+                    &self.ingest_edges_parsed,
+                ),
+                c(
+                    names::INGEST_SELF_LOOPS,
+                    "Self-loop edges skipped by edge-list parsing.",
+                    false,
+                    &self.ingest_self_loops,
+                ),
             ],
             gauges: vec![
                 g(
@@ -313,6 +347,21 @@ impl Registry {
                     names::DYNAMIC_SUB_TASK_NS,
                     "Per-task time in the subsumed-clique phase of a dynamic batch, nanoseconds.",
                     self.dynamic_sub_task_ns.sweep(),
+                ),
+                snapshot::histogram_sample(
+                    names::INGEST_PARSE_NS,
+                    "Wall time per edge-list parse, nanoseconds.",
+                    self.ingest_parse_ns.sweep(),
+                ),
+                snapshot::histogram_sample(
+                    names::INGEST_CSR_BUILD_NS,
+                    "Wall time per CSR construction, nanoseconds.",
+                    self.ingest_csr_build_ns.sweep(),
+                ),
+                snapshot::histogram_sample(
+                    names::INGEST_RANK_NS,
+                    "Wall time per vertex-ranking computation, nanoseconds.",
+                    self.ingest_rank_ns.sweep(),
                 ),
             ],
         }
@@ -374,6 +423,8 @@ mod tests {
             names::SERVICE_EPOCH_LAG_SUM,
             names::SERVICE_EPOCH_LAG_SAMPLES,
             names::SERVICE_PUBLISH_FAILURES,
+            names::INGEST_EDGES_PARSED,
+            names::INGEST_SELF_LOOPS,
         ] {
             assert!(s.counter(name).is_some(), "missing counter {name}");
         }
@@ -388,6 +439,9 @@ mod tests {
             names::DYNAMIC_BATCH_NS,
             names::DYNAMIC_NEW_TASK_NS,
             names::DYNAMIC_SUB_TASK_NS,
+            names::INGEST_PARSE_NS,
+            names::INGEST_CSR_BUILD_NS,
+            names::INGEST_RANK_NS,
         ] {
             assert!(s.histogram(name).is_some(), "missing histogram {name}");
         }

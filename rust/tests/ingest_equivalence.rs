@@ -1,0 +1,138 @@
+//! Ingest-pipeline equivalence suite (ISSUE 10): every parallel ingest
+//! stage — edge-list parsing, CSR construction, triangle counting, core
+//! decomposition, ranking — must be byte-identical to its sequential
+//! reference at every thread count, on randomized graphs and on the
+//! parser's awkward corners (non-contiguous ids, self-loops, comments).
+
+use parmce::coordinator::pool::ThreadPool;
+use parmce::graph::csr::CsrGraph;
+use parmce::graph::{degeneracy, edgelist, generators, triangles};
+use parmce::mce::ranking::{RankStrategy, Ranking};
+use parmce::session::{Algo, MceSession};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Render a graph as an edge-list document with noise the parser must
+/// cope with: comments, blank lines, and sprinkled self-loops.
+fn render_noisy(g: &CsrGraph, self_loop_every: usize) -> String {
+    let mut text = String::from("# ingest equivalence fixture\n% percent comments too\n\n");
+    for (i, (u, v)) in g.edges().into_iter().enumerate() {
+        if self_loop_every > 0 && i % self_loop_every == 0 {
+            text.push_str(&format!("{u} {u}\n"));
+        }
+        text.push_str(&format!("{u} {v}\n"));
+    }
+    text
+}
+
+#[test]
+fn parallel_parse_matches_sequential_on_random_graphs() {
+    for seed in [3u64, 17, 99] {
+        let g = generators::gnp(120, 0.08, seed);
+        let text = render_noisy(&g, 7);
+        let seq = edgelist::parse_report(text.as_bytes()).unwrap();
+        for threads in THREADS {
+            let pool = ThreadPool::new(threads);
+            let par = edgelist::parse_report_parallel(&text, &pool).unwrap();
+            assert_eq!(par.n, seq.n, "seed={seed} threads={threads}");
+            assert_eq!(par.self_loops, seq.self_loops);
+            assert_eq!(par.edges, seq.edges, "seed={seed} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn parallel_parse_preserves_first_appearance_interning() {
+    // non-contiguous, descending, and repeated raw ids: interning order
+    // (first appearance) decides the dense id space, so any chunk-order
+    // slip would renumber vertices and change every downstream stage
+    let text = "900 7\n7 900\n42 900\n5 5\n42 7\n900 1000000\n";
+    let seq = edgelist::parse_report(text.as_bytes()).unwrap();
+    assert_eq!(seq.n, 4, "900, 7, 42, 1000000 → four dense ids");
+    assert_eq!(seq.self_loops, 1);
+    for threads in THREADS {
+        let pool = ThreadPool::new(threads);
+        let par = edgelist::parse_report_parallel(text, &pool).unwrap();
+        assert_eq!(par.edges, seq.edges, "threads={threads}");
+        assert_eq!(par.n, seq.n);
+        assert_eq!(par.self_loops, seq.self_loops);
+    }
+}
+
+#[test]
+fn csr_triangles_cores_and_rankings_agree_at_every_width() {
+    let cases = [
+        generators::gnp(150, 0.06, 11),
+        generators::planted_cliques(140, 0.01, 6, 5, 9, 23),
+        generators::barabasi_albert(130, 3, 5),
+    ];
+    for (ci, g) in cases.iter().enumerate() {
+        let edges = g.edges();
+        let tri_seq = triangles::per_vertex(g);
+        let core_seq = degeneracy::core_decomposition(g);
+        for threads in THREADS {
+            let pool = ThreadPool::new(threads);
+            let gp = CsrGraph::from_edges_parallel(g.n(), &edges, &pool);
+            assert_eq!(gp.n(), g.n(), "case={ci} threads={threads}");
+            assert_eq!(gp.m(), g.m());
+            for v in 0..g.n() as u32 {
+                assert_eq!(gp.neighbors(v), g.neighbors(v), "case={ci} v={v}");
+            }
+            assert_eq!(triangles::per_vertex_parallel(g, &pool), tri_seq);
+            // cutoff 0 forces the parallel peeler even on small graphs
+            let core_par = degeneracy::core_decomposition_parallel_with_cutoff(g, &pool, 0);
+            assert_eq!(core_par.core, core_seq.core, "case={ci} threads={threads}");
+            assert_eq!(core_par.degeneracy, core_seq.degeneracy);
+            for s in [RankStrategy::Degree, RankStrategy::Triangle, RankStrategy::Degeneracy] {
+                let a = Ranking::compute(g, s);
+                let b = Ranking::compute_parallel(g, s, &pool);
+                for v in 0..g.n() as u32 {
+                    for w in (v + 1)..g.n() as u32 {
+                        assert_eq!(a.higher(v, w), b.higher(v, w), "{s:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_file_loaders_agree_with_sequential_loaders() {
+    let dir = std::env::temp_dir().join("parmce_ingest_equivalence_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("noisy.edges");
+    let g = generators::planted_cliques(90, 0.02, 4, 5, 8, 31);
+    std::fs::write(&path, render_noisy(&g, 5)).unwrap();
+
+    let g1 = edgelist::load_graph(&path).unwrap();
+    let (s1, n1) = edgelist::load_stream(&path).unwrap();
+    for threads in THREADS {
+        let gt = edgelist::load_graph_threads(&path, threads).unwrap();
+        assert_eq!(gt.n(), g1.n(), "threads={threads}");
+        assert_eq!(gt.edges(), g1.edges(), "threads={threads}");
+        let (st, nt) = edgelist::load_stream_threads(&path, threads).unwrap();
+        assert_eq!(nt, n1);
+        assert_eq!(st, s1, "threads={threads}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn sessions_with_different_ingest_widths_count_identically() {
+    let g = generators::planted_cliques(120, 0.015, 5, 6, 10, 77);
+    let mut counts = Vec::new();
+    for ingest in [1usize, 4] {
+        let s = MceSession::builder()
+            .graph(g.clone())
+            .threads(2)
+            .ingest_threads(ingest)
+            .rank_strategy(RankStrategy::Triangle)
+            .build()
+            .unwrap();
+        let (cliques, report) = s.collect(Algo::ParMce);
+        assert!(report.completed());
+        counts.push((report.cliques, cliques));
+    }
+    assert_eq!(counts[0].0, counts[1].0);
+    assert_eq!(counts[0].1, counts[1].1, "canonical clique lists must match");
+}

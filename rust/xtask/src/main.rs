@@ -93,6 +93,12 @@ const RELAXED_ALLOWLIST: &[(&str, &str)] = &[
         "epoch_hint is a monitoring-only staleness probe; the publish handoff is the Release store + Acquire load pair in GraphCell",
     ),
     (
+        "rust/src/graph/degeneracy.rs",
+        "level-peel degree decrements: crossings are claimed exactly once by the unique \
+         fetch_sub return value, and core/order arrays are written on the caller thread \
+         between scope joins",
+    ),
+    (
         "rust/src/service/driver.rs",
         "visibility-latency sampling boards and reader totals; read after join",
     ),
